@@ -1,0 +1,118 @@
+//! PERF: the L3 encoder/analyzer hot paths — share generation, modular
+//! reduction, shuffle — measured with the benchkit harness.
+//!
+//!     cargo bench --bench encoder_hotpath
+//!
+//! These are the numbers EXPERIMENTS.md §Perf tracks across optimization
+//! iterations: shares/s for the scalar and vector encoders, ChaCha
+//! keystream throughput (the encoder's roofline), Fisher–Yates and
+//! mod-sum throughput.
+
+use cloak_agg::analyzer::Analyzer;
+use cloak_agg::arith::modring::ModRing;
+use cloak_agg::encoder::CloakEncoder;
+use cloak_agg::rng::{uniform::fill_uniform, ChaCha20Rng, Rng, SeedableRng};
+use cloak_agg::shuffler::{FisherYates, Shuffler};
+use cloak_agg::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("encoder_hotpath");
+    let modulus = 159_769_600_000_001u64; // faithful Thm-1 modulus at n=1e5
+    let m = 64usize;
+
+    // ChaCha20 keystream roofline: u64s/s
+    {
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        let mut buf = vec![0u64; 4096];
+        b.run_items("chacha20 keystream (4096 u64)", 4096.0, || {
+            for slot in buf.iter_mut() {
+                *slot = rng.next_u64();
+            }
+            buf[0]
+        });
+    }
+
+    // batched uniform sampling over Z_N
+    {
+        let mut rng = ChaCha20Rng::seed_from_u64(2);
+        let mut buf = vec![0u64; 4096];
+        b.run_items("fill_uniform Z_N (4096)", 4096.0, || {
+            fill_uniform(&mut rng, modulus, &mut buf);
+            buf[0]
+        });
+    }
+
+    // scalar encode: one user, m shares
+    {
+        let enc = CloakEncoder::new(modulus, 1_000_000, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let mut out = vec![0u64; m];
+        b.run_items(&format!("encode scalar (m={m})"), m as f64, || {
+            enc.encode_into(0.37, &mut rng, &mut out);
+            out[m - 1]
+        });
+    }
+
+    // vector encode: 256 coordinates × m shares (the FL layout)
+    {
+        let enc = CloakEncoder::new(modulus, 1_000_000, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(4);
+        let d = 256usize;
+        let xbars: Vec<u64> = (0..d as u64).map(|j| j * 977).collect();
+        let mut out = vec![0u64; d * m];
+        b.run_items(&format!("encode vector (d=256, m={m})"), (d * m) as f64, || {
+            enc.encode_vector_into(&xbars, &mut rng, &mut out);
+            out[0]
+        });
+    }
+
+    // analyzer mod-sum over a big pool
+    {
+        let ring = ModRing::new(modulus);
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        let pool: Vec<u64> = (0..262_144).map(|_| rng.gen_range(modulus)).collect();
+        b.run_items("ring sum (256k messages)", pool.len() as f64, || ring.sum(&pool));
+    }
+
+    // analyzer end-to-end (sum + decision)
+    {
+        let n = 4096;
+        let k = 10 * n as u64;
+        let modulus_small = {
+            let v = 3 * n as u64 * k + 10_001;
+            if v % 2 == 0 {
+                v + 1
+            } else {
+                v
+            }
+        };
+        let ana = Analyzer::new(modulus_small, k, n);
+        let mut rng = ChaCha20Rng::seed_from_u64(6);
+        let pool: Vec<u64> = (0..n * 16).map(|_| rng.gen_range(modulus_small)).collect();
+        b.run_items("analyze (n=4096, m=16)", pool.len() as f64, || ana.analyze(&pool));
+    }
+
+    // Fisher–Yates shuffle throughput
+    {
+        let mut fy = FisherYates::new(ChaCha20Rng::seed_from_u64(7));
+        let mut pool: Vec<u64> = (0..262_144).collect();
+        b.run_items("fisher-yates (256k)", pool.len() as f64, || {
+            fy.shuffle(&mut pool);
+            pool[0]
+        });
+    }
+
+    b.report();
+
+    // Perf gate for EXPERIMENTS.md §Perf: the vector encoder must beat
+    // 10M shares/s/core (the practical target; see DESIGN.md §7).
+    let vec_m = b
+        .results()
+        .iter()
+        .find(|r| r.name.contains("encode vector"))
+        .expect("vector case");
+    let tput = vec_m.throughput().unwrap();
+    println!("\nvector encoder throughput: {:.1}M shares/s", tput / 1e6);
+    assert!(tput > 10.0e6, "vector encode below 10M shares/s: {tput}");
+    println!("encoder_hotpath: OK");
+}

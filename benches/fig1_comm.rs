@@ -1,0 +1,70 @@
+//! FIG1-comm: regenerate Figure 1's communication columns empirically.
+//!
+//!     cargo bench --bench fig1_comm
+//!
+//! Sweeps n ∈ {10^2 … 10^6} at (ε, δ) = (1, 10⁻⁶) and prints, per
+//! protocol, messages/user and message bits — the paper's claim: the
+//! cloak protocol is the only one with BOTH columns polylog(n)
+//! (Balle is O(1) messages but pays n^{1/6} error — see fig1_error).
+
+use cloak_agg::baselines::{
+    balle::BalleProtocol, bonawitz::BonawitzProtocol, cheu::CheuProtocol, AggregationProtocol,
+    CloakProtocol,
+};
+use cloak_agg::report::{fmt_f, Table};
+
+fn main() {
+    let (eps, delta) = (1.0, 1e-6);
+    let ns = [100usize, 1_000, 10_000, 100_000, 1_000_000];
+
+    let mut table = Table::new(
+        "Fig. 1 — communication columns (measured plans), eps=1, delta=1e-6",
+        &["n", "protocol", "msgs/user", "bits/msg", "bits/user"],
+    );
+    let mut cloak_series = Vec::new();
+    let mut cheu_series = Vec::new();
+    for &n in &ns {
+        let rows: Vec<(String, f64, u32)> = vec![
+            {
+                let p = CheuProtocol::new(n, eps, delta, 1);
+                ("cheu [7]".into(), p.messages_per_user(), p.message_bits())
+            },
+            {
+                let p = BalleProtocol::new(n, eps, delta, 2);
+                ("balle [4]".into(), p.messages_per_user(), p.message_bits())
+            },
+            {
+                let p = CloakProtocol::theorem1(n, eps, delta, 3);
+                ("cloak thm1".into(), p.messages_per_user(), p.message_bits())
+            },
+            {
+                let p = BonawitzProtocol::new(n, 10 * n as u64, 4);
+                ("bonawitz [6]".into(), p.messages_per_user(), p.message_bits())
+            },
+        ];
+        for (name, msgs, bits) in rows {
+            if name.starts_with("cloak") {
+                cloak_series.push(msgs);
+            }
+            if name.starts_with("cheu") {
+                cheu_series.push(msgs);
+            }
+            table.row(&[
+                n.to_string(),
+                name,
+                fmt_f(msgs),
+                bits.to_string(),
+                fmt_f(msgs * bits as f64),
+            ]);
+        }
+    }
+    println!("{}", table.emit("fig1_comm.txt"));
+
+    // Shape assertions (who grows how): 10^2 -> 10^6 is 4 decades.
+    let cloak_growth = cloak_series.last().unwrap() / cloak_series.first().unwrap();
+    let cheu_growth = cheu_series.last().unwrap() / cheu_series.first().unwrap();
+    println!("growth 10^2→10^6: cloak ×{cloak_growth:.2} (polylog), cheu ×{cheu_growth:.0} (√n ⇒ ×100)");
+    assert!(cloak_growth < 3.0, "cloak must grow polylog: {cloak_growth}");
+    assert!(cheu_growth > 50.0, "cheu must grow ~√n: {cheu_growth}");
+    println!("fig1_comm: shape OK");
+}

@@ -1,0 +1,76 @@
+//! PERF/FL: full coordinator round throughput — the end-to-end number
+//! the FL driver pays per round (encode ∥ ingest → shuffle → analyze).
+//!
+//!     cargo bench --bench fl_round
+//!
+//! Sweeps (clients, instances) and reports wall-clock, messages/s and the
+//! per-stage budget. The coordinator must stay near-linear in n·d·m and
+//! the shuffle+analyze side must not dominate encode (backpressure sized
+//! correctly).
+
+use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use std::time::Instant;
+
+fn round_secs(clients: usize, instances: usize, m: usize) -> (f64, u64) {
+    let scale = 1u64 << 16;
+    let modulus = {
+        let v = 3 * clients as u64 * scale + 10_001;
+        if v % 2 == 0 {
+            v + 1
+        } else {
+            v
+        }
+    };
+    let plan = ProtocolPlan::custom(
+        clients,
+        1.0,
+        1e-6,
+        NeighborNotion::SumPreserving,
+        modulus,
+        scale,
+        m,
+    );
+    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, instances), 77);
+    let mut rng = SplitMix64::seed_from_u64(5);
+    let inputs: Vec<Vec<f64>> = (0..clients)
+        .map(|_| (0..instances).map(|_| rng.gen_f64()).collect())
+        .collect();
+    let t0 = Instant::now();
+    let result = coord.run_round(&inputs).expect("round");
+    (t0.elapsed().as_secs_f64(), result.traffic.messages)
+}
+
+fn main() {
+    let m = 16usize;
+    let mut table = Table::new(
+        "coordinator round throughput (m=16, Thm 2 regime)",
+        &["clients", "instances", "messages", "secs", "msgs/sec"],
+    );
+    let mut rates = Vec::new();
+    for &(c, d) in &[(16usize, 256usize), (32, 256), (64, 256), (32, 1024), (32, 2688)] {
+        let (secs, msgs) = round_secs(c, d, m);
+        let rate = msgs as f64 / secs;
+        rates.push(rate);
+        table.row(&[
+            c.to_string(),
+            d.to_string(),
+            msgs.to_string(),
+            format!("{secs:.4}"),
+            fmt_f(rate),
+        ]);
+    }
+    println!("{}", table.emit("fl_round.txt"));
+
+    // near-linear scaling: the msgs/s rate must stay within 4x across the
+    // sweep (it grows with batch size as fixed costs amortize).
+    let min_rate = rates.iter().cloned().fold(f64::MAX, f64::min);
+    let max_rate = rates.iter().cloned().fold(0.0f64, f64::max);
+    println!("\nround rate range: {} – {} msgs/s", fmt_f(min_rate), fmt_f(max_rate));
+    assert!(max_rate / min_rate < 6.0, "rate spread {}", max_rate / min_rate);
+    // absolute floor: ≥ 1M messages/s end-to-end on the largest round
+    assert!(*rates.last().unwrap() > 1.0e6, "end-to-end rate {}", rates.last().unwrap());
+    println!("fl_round: OK");
+}

@@ -1,0 +1,86 @@
+//! §3 open problem, probed empirically: "we cannot rule out that
+//! m = O(log_n k) suffices to achieve error 1/k under sum-preserving
+//! changes, using our protocol unchanged."
+//!
+//!     cargo bench --bench open_problem_small_m
+//!
+//! For fixed small N we enumerate the subset-sum distribution of
+//! E(x₁)∪E(x₂) (the Lemma 3 quantity) at decreasing m and measure the
+//! empirical γ — the effective per-swap privacy factor β = (1+γ)/(1−γ).
+//! Two findings the conclusion anticipates: (a) γ degrades gracefully,
+//! not catastrophically, as m shrinks toward log N; (b) correctness
+//! (exact sums) holds for ALL m ≥ 1 — only privacy is at stake, so any
+//! future improvement to Lemma 1 immediately transfers to the protocol
+//! unchanged. Plus an hops-ablation: extra mixnet hops do NOT change the
+//! observable distribution (one honest hop suffices), justifying the
+//! 1-hop default (§Perf iteration 5).
+
+use cloak_agg::encoder::CloakEncoder;
+use cloak_agg::privacy::smoothness::measure;
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{ChaCha20Rng, SeedableRng};
+use cloak_agg::shuffler::mixnet::{permutation_chi2, Mixnet};
+
+fn main() {
+    // ---- part 1: gamma vs m at fixed N ----------------------------------
+    let n_mod = 31u64;
+    let log_n = (n_mod as f64).log2(); // ≈ 4.95
+    let mut table = Table::new(
+        "open problem §3 — empirical gamma as m shrinks (N=31, log2 N ≈ 4.95)",
+        &["m", "m/log2(N)", "mean gamma", "beta=(1+g)/(1-g)", "exact sums"],
+    );
+    let mut gammas = Vec::new();
+    for &m in &[4usize, 5, 6, 8, 10, 12] {
+        let enc = CloakEncoder::new(n_mod, 10, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(1000 + m as u64);
+        let draws = 6;
+        let mut g_acc = 0.0;
+        let mut all_exact = true;
+        for _ in 0..draws {
+            let x1 = 0.4;
+            let x2 = 0.9;
+            let e1 = enc.encode_scalar(x1, &mut rng);
+            let e2 = enc.encode_scalar(x2, &mut rng);
+            // correctness at every m: shares still sum to the inputs
+            all_exact &= enc.ring().sum(&e1) == enc.codec().encode(x1) % n_mod;
+            all_exact &= enc.ring().sum(&e2) == enc.codec().encode(x2) % n_mod;
+            let mut e = e1;
+            e.extend(e2);
+            g_acc += measure(&e, n_mod).gamma.min(10.0);
+        }
+        let gamma = g_acc / draws as f64;
+        gammas.push(gamma);
+        let beta = (1.0 + gamma) / (1.0 - gamma).max(1e-9);
+        table.row(&[
+            m.to_string(),
+            format!("{:.2}", m as f64 / log_n),
+            fmt_f(gamma),
+            if gamma < 1.0 { fmt_f(beta) } else { "∞ (γ≥1)".into() },
+            all_exact.to_string(),
+        ]);
+    }
+    println!("{}", table.emit("open_problem_small_m.txt"));
+    // monotone degradation, no cliff between m=2·log N and m=log N:
+    assert!(gammas.windows(2).all(|w| w[0] >= w[1] * 0.8), "graceful: {gammas:?}");
+    // by m ≈ 2.4·log2(N) the union is already usefully smooth
+    assert!(gammas.last().unwrap() < &0.05);
+    println!(
+        "finding: gamma decays smoothly through m ≈ log2(N)…2.4·log2(N); correctness\n\
+         is m-independent — consistent with the conjecture that smaller m may suffice."
+    );
+
+    // ---- part 2: mixnet hops ablation ------------------------------------
+    let mut t2 = Table::new(
+        "ablation — mixnet hops (uniformity chi², 24 dof, 48k trials)",
+        &["hops", "chi2", "uniform (<64)?"],
+    );
+    for hops in [1usize, 3, 8] {
+        let mut net = Mixnet::honest(42, hops);
+        let (chi2, _dof) = permutation_chi2(&mut net, 48_000);
+        t2.row(&[hops.to_string(), format!("{chi2:.1}"), (chi2 < 64.0).to_string()]);
+        assert!(chi2 < 64.0, "hops={hops} chi2={chi2}");
+    }
+    println!("{}", t2.emit("open_problem_small_m.txt"));
+    println!("ablation: extra hops change nothing observable — 1 honest hop = uniform.");
+    println!("open_problem_small_m: OK");
+}

@@ -1,0 +1,81 @@
+//! SCALE: "total work and communication of our new protocol scales
+//! near-linearly with the number of users" (§1.2) vs Bonawitz's O(n²).
+//!
+//!     cargo bench --bench scalability
+//!
+//! Measures wall-clock of a full aggregation round (encode → shuffle →
+//! analyze) and total simulated bytes for both protocols across n; fits
+//! the growth exponent. Bonawitz's quadratic key exchange blows up by
+//! n ≈ 2000 while the cloak round stays near-linear in n·m.
+
+use cloak_agg::baselines::{bonawitz::BonawitzProtocol, AggregationProtocol, CloakProtocol};
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use std::time::Instant;
+
+fn measure(p: &mut dyn AggregationProtocol, n: usize) -> (f64, u64) {
+    let mut rng = SplitMix64::seed_from_u64(3);
+    let xs: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+    let t0 = Instant::now();
+    let (_, traffic) = p.aggregate(&xs);
+    (t0.elapsed().as_secs_f64(), traffic.bytes)
+}
+
+fn fit_exponent(ns: &[usize], ys: &[f64]) -> f64 {
+    // least-squares slope in log-log space
+    let lx: Vec<f64> = ns.iter().map(|&n| (n as f64).ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|&y| y.max(1e-12).ln()).collect();
+    let mx = lx.iter().sum::<f64>() / lx.len() as f64;
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    let ns = [250usize, 500, 1_000, 2_000, 4_000];
+    let mut table = Table::new(
+        "scalability — one full round, wall-clock and bytes",
+        &["n", "cloak secs", "cloak bytes", "bonawitz secs", "bonawitz bytes"],
+    );
+    let mut cloak_t = Vec::new();
+    let mut bona_t = Vec::new();
+    let mut cloak_b = Vec::new();
+    let mut bona_b = Vec::new();
+    for &n in &ns {
+        let (ct, cb) = measure(&mut CloakProtocol::theorem1(n, 1.0, 1e-6, 1), n);
+        let (bt, bb) = measure(&mut BonawitzProtocol::new(n, 10 * n as u64, 2), n);
+        cloak_t.push(ct);
+        bona_t.push(bt);
+        cloak_b.push(cb as f64);
+        bona_b.push(bb as f64);
+        table.row(&[
+            n.to_string(),
+            format!("{ct:.4}"),
+            fmt_f(cb as f64),
+            format!("{bt:.4}"),
+            fmt_f(bb as f64),
+        ]);
+    }
+    println!("{}", table.emit("scalability.txt"));
+
+    let e_cloak_bytes = fit_exponent(&ns, &cloak_b);
+    let e_bona_bytes = fit_exponent(&ns, &bona_b);
+    let e_cloak_time = fit_exponent(&ns, &cloak_t);
+    let e_bona_time = fit_exponent(&ns, &bona_t);
+    println!(
+        "\nfitted growth exponents (bytes): cloak n^{e_cloak_bytes:.2}, bonawitz n^{e_bona_bytes:.2}"
+    );
+    println!(
+        "fitted growth exponents (time):  cloak n^{e_cloak_time:.2}, bonawitz n^{e_bona_time:.2}"
+    );
+    // communication: cloak near-linear (n·polylog), bonawitz quadratic
+    assert!(e_cloak_bytes < 1.35, "cloak bytes exponent {e_cloak_bytes}");
+    assert!(e_bona_bytes > 1.7, "bonawitz bytes exponent {e_bona_bytes}");
+    // compute: bonawitz grows strictly faster than cloak
+    assert!(
+        e_bona_time > e_cloak_time + 0.3,
+        "bonawitz time must grow faster: {e_bona_time} vs {e_cloak_time}"
+    );
+    println!("scalability: shape OK");
+}

@@ -1,0 +1,101 @@
+//! LEM1 + LEM7-9: empirical γ-smoothness of encoder-pair outputs
+//! (Definition 2, Lemma 1, Corollary 1) and truncated-discrete-Laplace
+//! moment checks (Definition 3, Lemmas 7–9).
+//!
+//!     cargo bench --bench smoothness
+//!
+//! Part 1 enumerates all C(2m, m) subset sums of two encoders' unioned
+//! output for m ∈ {6..12} and reports the measured γ next to Lemma 1's
+//! failure bound: γ falls rapidly with m (at fixed N) exactly as the
+//! lemma predicts. Part 2 sweeps D_{N,p} and compares empirical moments
+//! to the closed forms.
+
+use cloak_agg::encoder::CloakEncoder;
+use cloak_agg::privacy::dlaplace::TruncatedDiscreteLaplace;
+use cloak_agg::privacy::smoothness::{lemma1_failure_bound, measure};
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{ChaCha20Rng, SeedableRng};
+use cloak_agg::util::Welford;
+
+fn main() {
+    // ---- part 1: γ-smoothness vs m --------------------------------------
+    let n_mod = 31u64; // small N so 2^{2m} >> N² (Lemma 1 regime)
+    let mut table = Table::new(
+        "Lemma 1 — empirical gamma of E(x1)∪E(x2) over Z_31",
+        &["m", "C(2m,m)", "measured gamma", "distinct", "Lemma1 bound (gamma=0.5)"],
+    );
+    let mut gammas = Vec::new();
+    for &m in &[6usize, 8, 10, 12] {
+        let enc = CloakEncoder::new(n_mod, 10, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(100 + m as u64);
+        // average gamma over a few draws
+        let mut g_acc = 0.0;
+        let mut subsets = 0u64;
+        let mut distinct_any = false;
+        let draws = 5;
+        for _ in 0..draws {
+            let mut e = enc.encode_scalar(0.4, &mut rng);
+            e.extend(enc.encode_scalar(0.9, &mut rng));
+            let rep = measure(&e, n_mod);
+            g_acc += rep.gamma;
+            subsets = rep.subsets;
+            distinct_any |= rep.distinct;
+        }
+        let gamma = g_acc / draws as f64;
+        gammas.push(gamma);
+        table.row(&[
+            m.to_string(),
+            subsets.to_string(),
+            fmt_f(gamma),
+            distinct_any.to_string(),
+            fmt_f(lemma1_failure_bound(m, n_mod, 0.5)),
+        ]);
+    }
+    println!("{}", table.emit("smoothness.txt"));
+    // γ decreases with m (sampling-noise floor ~ sqrt(N/C(2m,m)))
+    assert!(
+        gammas.last().unwrap() < &gammas[0],
+        "gamma must shrink with m: {gammas:?}"
+    );
+    assert!(gammas.last().unwrap() < &0.05, "m=12 gamma {:.4}", gammas.last().unwrap());
+
+    // ---- part 2: D_{N,p} moments ----------------------------------------
+    let mut t2 = Table::new(
+        "Lemmas 7-9 — truncated discrete Laplace moments",
+        &["N", "p", "mean (≈0)", "empirical var", "Lemma 8 bound", "log-Lipschitz ok"],
+    );
+    for &(n, p) in &[(101u64, 0.5f64), (1001, 0.9), (10_001, 0.99)] {
+        let d = TruncatedDiscreteLaplace::new(n, p);
+        let mut rng = ChaCha20Rng::seed_from_u64(7);
+        let mut w = Welford::default();
+        for _ in 0..100_000 {
+            w.push(d.sample(&mut rng) as f64);
+        }
+        // Lemma 7 spot check: pmf ratios within [p^|t|, p^-|t|]
+        let mut lipschitz_ok = true;
+        for k in [-5i64, 0, 5] {
+            for t in [-3i64, -1, 1, 3] {
+                let a = d.pmf(k + t);
+                let b = d.pmf(k);
+                if b > 0.0 && a > 0.0 {
+                    let ratio = a / b;
+                    let lo = p.powi(t.unsigned_abs() as i32);
+                    let hi = p.powi(-(t.unsigned_abs() as i32));
+                    lipschitz_ok &= ratio >= lo * 0.999 && ratio <= hi * 1.001;
+                }
+            }
+        }
+        assert!(w.variance() <= d.variance() * 1.05);
+        t2.row(&[
+            n.to_string(),
+            p.to_string(),
+            fmt_f(w.mean()),
+            fmt_f(w.variance()),
+            fmt_f(d.variance()),
+            lipschitz_ok.to_string(),
+        ]);
+        assert!(lipschitz_ok);
+    }
+    println!("{}", t2.emit("smoothness.txt"));
+    println!("smoothness: shape OK");
+}

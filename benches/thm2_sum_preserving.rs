@@ -1,0 +1,81 @@
+//! THM2: the zero-noise regime — worst-case error 2^−m′ (i.e. pure
+//! discretization n/k) and exactness of the modular readout.
+//!
+//!     cargo bench --bench thm2_sum_preserving
+//!
+//! Sweeps the message count m and the scale k: the analyzer recovers the
+//! discretized sum EXACTLY for every m ≥ 4 (the error column is entirely
+//! the rounding term, which halves as k doubles — Theorem 2's 2^−m with
+//! m = log2 k in the paper's normalization).
+
+use cloak_agg::analyzer::Analyzer;
+use cloak_agg::encoder::CloakEncoder;
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{ChaCha20Rng, Rng, SeedableRng, SplitMix64};
+use cloak_agg::shuffler::{FisherYates, Shuffler};
+
+fn run_once(n: usize, k: u64, m: usize, seed: u64) -> (f64, f64) {
+    let modulus = {
+        let v = 3 * n as u64 * k + 10_001;
+        if v % 2 == 0 {
+            v + 1
+        } else {
+            v
+        }
+    };
+    let enc = CloakEncoder::new(modulus, k, m);
+    let ana = Analyzer::new(modulus, k, n);
+    let mut data_rng = SplitMix64::seed_from_u64(seed);
+    let xs: Vec<f64> = (0..n).map(|_| data_rng.gen_f64()).collect();
+    let truth: f64 = xs.iter().sum();
+    let mut rng = ChaCha20Rng::seed_from_u64(seed ^ 0xABCD);
+    let mut messages = Vec::with_capacity(n * m);
+    for &x in &xs {
+        messages.extend(enc.encode_scalar(x, &mut rng));
+    }
+    let mut fy = FisherYates::new(ChaCha20Rng::seed_from_u64(seed ^ 0x55));
+    fy.shuffle(&mut messages);
+    let est = ana.analyze(&messages);
+    // error against the *discretized* truth must be 0; against the real
+    // truth it is bounded by n/k.
+    let truth_bar: u64 = xs.iter().map(|&x| (x * k as f64).floor() as u64).sum();
+    let exact_err = (est - truth_bar as f64 / k as f64).abs();
+    let real_err = (est - truth).abs();
+    (exact_err, real_err)
+}
+
+fn main() {
+    let n = 2_000;
+    let mut table = Table::new(
+        "Thm 2 — zero-noise exactness (n=2000)",
+        &["k", "m", "err vs discretized", "err vs real", "bound n/k"],
+    );
+    let mut halving: Vec<f64> = Vec::new();
+    for &(k, m) in &[
+        (1u64 << 8, 4usize),
+        (1 << 10, 8),
+        (1 << 12, 16),
+        (1 << 14, 32),
+        (1 << 16, 64),
+        (1 << 20, 128),
+    ] {
+        let (exact_err, real_err) = run_once(n, k, m, 42 + m as u64);
+        assert!(exact_err < 1e-9, "modular readout must be exact (k={k}, m={m})");
+        assert!(real_err <= n as f64 / k as f64 + 1e-9, "rounding bound violated");
+        halving.push(real_err);
+        table.row(&[
+            k.to_string(),
+            m.to_string(),
+            fmt_f(exact_err),
+            fmt_f(real_err),
+            fmt_f(n as f64 / k as f64),
+        ]);
+    }
+    println!("{}", table.emit("thm2_sum_preserving.txt"));
+    // error decays ~2^-log2(k): across the sweep (k × 2^12) it must shrink
+    // by ≥ 2^8 (rounding is a random variable; give slack)
+    let shrink = halving[0] / halving.last().unwrap().max(1e-12);
+    println!("rounding error shrink over sweep: ×{shrink:.0} (≥256 expected)");
+    assert!(shrink > 256.0, "2^-m decay: {shrink}");
+    println!("thm2_sum_preserving: shape OK");
+}

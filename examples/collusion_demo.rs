@@ -1,0 +1,97 @@
+//! Collusion resilience (§2.5, Lemmas 12–13) — what a coalition of
+//! colluding users + the server actually learns.
+//!
+//!     cargo run --release --example collusion_demo
+//!
+//! 20 users aggregate; coalitions of 0%, 50% and 90% reveal their own
+//! messages. The demo shows (a) the coalition can subtract its own
+//! contribution and learn the *honest residual sum* — which DP permits —
+//! and (b) the honest users' individual values remain hidden: every
+//! honest sub-multiset consistent with the residual sum is (near-)equally
+//! likely, measured by the γ-smoothness of honest share unions.
+
+use cloak_agg::arith::modring::ModRing;
+use cloak_agg::coordinator::{honest_residual_sum, Coordinator, CoordinatorConfig};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::privacy::smoothness;
+use cloak_agg::report::Table;
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+
+fn main() -> anyhow::Result<()> {
+    let n = 20usize;
+    let scale = 100u64;
+    // small modulus so the smoothness measurement can enumerate Z_N, but
+    // still > 3nk as Algorithm 2 requires
+    let modulus = {
+        let v = 3 * n as u64 * scale + 101;
+        if v % 2 == 0 {
+            v + 1
+        } else {
+            v
+        }
+    };
+    let m = 12usize;
+    let plan = ProtocolPlan::custom(n, 1.0, 1e-6, NeighborNotion::SumPreserving, modulus, scale, m);
+    let ring = ModRing::new(modulus);
+
+    let mut rng = SplitMix64::seed_from_u64(5);
+    let xs: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+    let truth_bar: u64 = xs.iter().map(|&x| (x * scale as f64).floor() as u64).sum();
+
+    let mut table = Table::new(
+        "collusion resilience (n=20, Lemma 12 setting)",
+        &["coalition", "honest users", "estimate exact?", "honest residual learned", "honest pair γ-smooth"],
+    );
+
+    for frac in [0.0, 0.5, 0.9] {
+        let colluders = (n as f64 * frac) as usize;
+        let mut coord =
+            Coordinator::new(CoordinatorConfig::new(plan.clone(), 1), 7 + colluders as u64);
+        coord.registry_mut().mark_colluding(
+            &(0..colluders as u32).collect::<Vec<_>>(),
+        );
+        let inputs: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+        let (result, views) = coord.run_round_with_views(&inputs)?;
+
+        // (a) total estimate stays exact regardless of collusion
+        let exact = (result.estimates[0] - truth_bar as f64 / scale as f64).abs() < 1e-9;
+
+        // the coalition removes its own messages -> honest residual sum
+        let total_raw =
+            views.iter().fold(0u64, |acc, v| ring.add(acc, ring.sum(&v.shares)));
+        let residual = honest_residual_sum(ring, total_raw, &views[..colluders]);
+        let want_residual: u64 = xs[colluders..]
+            .iter()
+            .map(|&x| (x * scale as f64).floor() as u64)
+            .sum();
+        assert_eq!(residual, ring.reduce(want_residual), "coalition algebra");
+
+        // (b) privacy of the honest subset: the union of any two honest
+        // users' share multisets is γ-smooth, so their *split* of the
+        // residual is hidden (Lemma 3 applied within the honest subset).
+        let gamma = if n - colluders >= 2 {
+            let mut e = views[colluders].shares.clone();
+            e.extend(views[colluders + 1].shares.iter().copied());
+            let rep = smoothness::measure(&e, modulus);
+            rep.gamma
+        } else {
+            f64::NAN
+        };
+
+        table.row(&[
+            format!("{:.0}%", frac * 100.0),
+            (n - colluders).to_string(),
+            if exact { "yes".into() } else { "NO".into() },
+            format!("{residual} (= Σ honest x̄, allowed by DP)"),
+            format!("γ = {gamma:.3}"),
+        ]);
+    }
+    println!("{}", table.emit("collusion_demo.txt"));
+    println!(
+        "interpretation: the coalition learns only the honest *sum* — every\n\
+         honest user's value stays cloaked (small γ ⇒ subset sums near-uniform,\n\
+         the Lemma 12 bound β^(n-1) applies to the honest subset unchanged)."
+    );
+    println!("collusion_demo: OK");
+    Ok(())
+}

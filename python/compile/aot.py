@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2/L1 computations to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids,
+which the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side (``HloModuleProto::from_text_file``)
+reassigns ids and round-trips cleanly — see /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; Python never executes on the request path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--report]
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, AotConfig
+from .kernels import cloak, modsum
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fl_grad(cfg: AotConfig):
+    mc = cfg.model
+    fn = functools.partial(model.loss_and_grad, cfg=mc)
+    flat = jax.ShapeDtypeStruct((mc.param_count,), jnp.float32)
+    x = jax.ShapeDtypeStruct((mc.batch_size, mc.input_dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((mc.batch_size,), jnp.int32)
+    return jax.jit(fn).lower(flat, x, y)
+
+
+def lower_fl_predict(cfg: AotConfig):
+    mc = cfg.model
+    fn = functools.partial(model.predict, cfg=mc)
+    flat = jax.ShapeDtypeStruct((mc.param_count,), jnp.float32)
+    x = jax.ShapeDtypeStruct((mc.batch_size, mc.input_dim), jnp.float32)
+    # Wrap to return a tuple so every artifact unwraps identically in Rust.
+    return jax.jit(lambda f, xx: (fn(f, xx),)).lower(flat, x)
+
+
+def lower_cloak_encode(cfg: AotConfig):
+    kp = cfg.kernel
+    fn = functools.partial(
+        cloak.cloak_encode_from_seed,
+        modulus=kp.modulus,
+        num_messages=kp.num_messages,
+        interpret=True,
+    )
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    xbar = jax.ShapeDtypeStruct((cfg.encode_dim,), jnp.int32)
+    return jax.jit(lambda s, xb: (fn(s, xb),)).lower(seed, xbar)
+
+
+def lower_cloak_modsum(cfg: AotConfig):
+    kp = cfg.kernel
+    fn = functools.partial(modsum.modsum, modulus=kp.modulus, interpret=True)
+    y = jax.ShapeDtypeStruct((cfg.modsum_rows, cfg.encode_dim), jnp.int32)
+    return jax.jit(lambda yy: (fn(yy),)).lower(y)
+
+
+LOWERINGS = {
+    "fl_grad": lower_fl_grad,
+    "fl_predict": lower_fl_predict,
+    "cloak_encode": lower_cloak_encode,
+    "cloak_modsum": lower_cloak_modsum,
+}
+
+
+def build(out_dir: str, cfg: AotConfig = DEFAULT, report: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = cfg.manifest()
+    manifest["hlo_sha256"] = {}
+    for name, lower in LOWERINGS.items():
+        text = to_hlo_text(lower(cfg))
+        path = os.path.join(out_dir, manifest["artifacts"][name])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["hlo_sha256"][name] = hashlib.sha256(text.encode()).hexdigest()
+        print(f"wrote {path} ({len(text)} chars)")
+    if report:
+        manifest["vmem_reports"] = [
+            cloak.vmem_report(cfg.encode_dim, cfg.kernel.num_messages),
+            modsum.vmem_report(cfg.modsum_rows, cfg.encode_dim),
+        ]
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report", action="store_true", help="include VMEM/BlockSpec report")
+    args = ap.parse_args()
+    build(args.out_dir, DEFAULT, report=args.report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Shared protocol/model configuration for the AOT compile path.
+
+These constants define the *kernel profile* of the Invisibility Cloak
+protocol: the (N, k, m) tuple baked into the Pallas kernels and the FL model
+shapes baked into the HLO artifacts. The Rust coordinator reads the same
+values from ``artifacts/manifest.json`` (written by ``aot.py``) and
+re-validates them against the paper's constraints at plan time.
+
+The paper-faithful regime (Theorems 1-2) picks N ≈ 3kn + 10/δ + 10/ε which
+can exceed 2^31 for large n; the *kernel profile* restricts N < 2^30 so all
+modular arithmetic stays in int32 lanes (see DESIGN.md §Hardware-Adaptation).
+The Rust scalar path supports the full u128 regime.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class KernelProfile:
+    """Protocol constants baked into the Pallas kernels."""
+
+    # Modulus of the message ring Z_N. Odd, > 3*n*k, and < 2^30 so that
+    # x + y < 2^31 for x, y in [0, N): conditional-subtract stays in int32.
+    modulus: int = 536_870_909  # largest prime < 2^29; odd, int32-safe
+    # Fixed-point scale: x_bar = floor(x * k).
+    scale: int = 1 << 16
+    # Messages (shares) per user per scalar.
+    num_messages: int = 16
+
+    def __post_init__(self) -> None:
+        assert self.modulus % 2 == 1, "N must be odd (Algorithm 2)"
+        assert self.modulus < (1 << 30), "kernel profile requires int32-safe N"
+        assert self.num_messages >= 4, "Lemma 1 requires m >= 4"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """FL workload (L2) shapes: a small MLP classifier."""
+
+    input_dim: int = 32
+    hidden_dim: int = 64
+    num_classes: int = 8
+    batch_size: int = 32  # per-client local batch
+
+    @property
+    def param_count(self) -> int:
+        d, h, c = self.input_dim, self.hidden_dim, self.num_classes
+        return d * h + h + h * c + c
+
+
+@dataclass(frozen=True)
+class AotConfig:
+    """Everything baked into artifacts/ — mirrored in manifest.json."""
+
+    kernel: KernelProfile = KernelProfile()
+    model: ModelConfig = ModelConfig()
+    # Static shape of the vectorized encoder artifact: encodes `encode_dim`
+    # scalars at once (the FL driver pads the gradient to a multiple).
+    encode_dim: int = 256
+    # Static row count of the modsum (analyzer) artifact.
+    modsum_rows: int = 4096
+
+    def manifest(self) -> dict:
+        return {
+            "kernel": asdict(self.kernel),
+            "model": asdict(self.model) | {"param_count": self.model.param_count},
+            "encode_dim": self.encode_dim,
+            "modsum_rows": self.modsum_rows,
+            "artifacts": {
+                "fl_grad": "fl_grad.hlo.txt",
+                "fl_predict": "fl_predict.hlo.txt",
+                "cloak_encode": "cloak_encode.hlo.txt",
+                "cloak_modsum": "cloak_modsum.hlo.txt",
+            },
+        }
+
+
+DEFAULT = AotConfig()

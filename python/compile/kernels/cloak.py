@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: batched Invisibility Cloak encoder (Algorithm 1).
+
+Given d quantized scalars ``xbar`` and their d x (m-1) uniform shares, emit
+the d x m share matrix whose last column is the residual share
+
+    y_m = (xbar - sum_{j<m} y_j) mod N .
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * the share axis m sits in the lane dimension, the scalar axis d streams
+    through the grid in blocks of ``block_d`` rows — each (block_d, m) tile
+    is VMEM-resident for exactly one pass;
+  * ``a mod N`` is a lane-parallel conditional subtract (compare+select),
+    never an integer division — the TPU VPU has no div unit;
+  * the running sum is kept < N at every step so int32 never overflows
+    (requires N < 2^30, enforced by ``config.KernelProfile``).
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so real-TPU lowering is a compile-only target here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cloak_kernel(xbar_ref, u_ref, out_ref, *, modulus: int, num_messages: int):
+    """Kernel body for one (block_d, m) tile.
+
+    xbar_ref: int32[block_d]        — quantized inputs for this tile.
+    u_ref:    int32[block_d, m-1]   — uniform shares in [0, N).
+    out_ref:  int32[block_d, m]     — all m shares.
+    """
+    m = num_messages
+    n_mod = jnp.int32(modulus)
+
+    u = u_ref[...]  # (block_d, m-1)
+
+    def body(j, acc):
+        acc = acc + u[:, j]
+        # acc, u < N  =>  acc + u < 2N < 2^31: one conditional subtract
+        # restores acc < N without division.
+        return jnp.where(acc >= n_mod, acc - n_mod, acc)
+
+    total = jax.lax.fori_loop(0, m - 1, body, jnp.zeros_like(xbar_ref[...]))
+    # resid = (xbar - total) mod N, again division-free: diff in (-N, N).
+    diff = xbar_ref[...] - total
+    resid = jnp.where(diff < 0, diff + n_mod, diff)
+
+    out_ref[:, : m - 1] = u
+    out_ref[:, m - 1] = resid
+
+
+def cloak_encode(
+    xbar: jnp.ndarray,
+    uniforms: jnp.ndarray,
+    *,
+    modulus: int,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Encode ``d`` scalars into ``d x m`` shares (Algorithm 1, batched).
+
+    Args:
+      xbar: int32[d] with entries in [0, N).
+      uniforms: int32[d, m-1] with entries in [0, N).
+      modulus: ring modulus N (odd, < 2^30).
+      block_d: rows per grid step; d must be divisible by block_d or smaller.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      int32[d, m]; every row sums to the corresponding xbar mod N.
+    """
+    d = xbar.shape[0]
+    m = uniforms.shape[1] + 1
+    if d <= block_d:
+        block_d = d
+    assert d % block_d == 0, f"d={d} must be a multiple of block_d={block_d}"
+    grid = (d // block_d,)
+
+    kernel = functools.partial(_cloak_kernel, modulus=modulus, num_messages=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d, m - 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m), jnp.int32),
+        interpret=interpret,
+    )(xbar, uniforms)
+
+
+def draw_uniform_shares(key, d: int, num_messages: int, modulus: int) -> jnp.ndarray:
+    """The m-1 uniform Z_N draws per scalar (counter-based threefry)."""
+    return jax.random.randint(
+        key, (d, num_messages - 1), minval=0, maxval=modulus, dtype=jnp.int32
+    )
+
+
+def cloak_encode_from_seed(
+    seed: jnp.ndarray,
+    xbar: jnp.ndarray,
+    *,
+    modulus: int,
+    num_messages: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Seed-to-shares convenience used by the AOT artifact: derive the
+    uniform shares from an int32 seed on-device, then run the kernel."""
+    key = jax.random.PRNGKey(seed)
+    u = draw_uniform_shares(key, xbar.shape[0], num_messages, modulus)
+    return cloak_encode(xbar, u, modulus=modulus, interpret=interpret)
+
+
+def vmem_report(d: int, num_messages: int, block_d: int = 128) -> dict:
+    """Static VMEM footprint estimate for the chosen BlockSpec (bytes).
+
+    interpret=True gives CPU-numpy timings only, so TPU perf is estimated
+    from the tile footprint: one input tile, one uniform tile, one output
+    tile, all int32. Reported by ``aot.py --report`` into DESIGN.md §Perf.
+    """
+    bd = min(block_d, d)
+    tile_in = bd * 4
+    tile_u = bd * (num_messages - 1) * 4
+    tile_out = bd * num_messages * 4
+    total = tile_in + tile_u + tile_out
+    return {
+        "kernel": "cloak_encode",
+        "block_d": bd,
+        "grid": (d + bd - 1) // bd,
+        "vmem_bytes_per_step": total,
+        "vmem_mib": total / (1 << 20),
+        # VPU ops per tile: (m-1) add+select for the sum, 1 sub+select for
+        # the residual => ~2m int32 lane-ops per element.
+        "lane_ops_per_element": 2 * num_messages,
+    }

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: the analyzer's modular reduction (Algorithm 2 core).
+
+Computes ``sum(y, axis=0) mod N`` over the shuffled message matrix
+``y: int32[rows, d]`` — one independent aggregation per column (the FL
+driver aggregates each gradient coordinate as its own protocol instance).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid streams over row blocks; the d axis lives in lanes;
+  * the accumulator is re-reduced mod N after every row, so it stays < N
+    and int32 never overflows (N < 2^30 from the kernel profile);
+  * the partial result is carried across grid steps in the output ref
+    (revisited-output accumulation), so the whole reduction is a single
+    pallas_call with one VMEM-resident accumulator tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _modsum_kernel(y_ref, out_ref, *, modulus: int, block_rows: int):
+    """One grid step: fold ``block_rows`` rows into the running column sums."""
+    n_mod = jnp.int32(modulus)
+    step = pl.program_id(0)
+
+    y = y_ref[...]  # (block_rows, d_block)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(r, acc):
+        acc = acc + y[r, :]
+        return jnp.where(acc >= n_mod, acc - n_mod, acc)
+
+    acc = jax.lax.fori_loop(0, block_rows, body, out_ref[...])
+    out_ref[...] = acc
+
+
+def modsum(
+    y: jnp.ndarray,
+    *,
+    modulus: int,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Column sums of ``y`` mod N.
+
+    Args:
+      y: int32[rows, d], entries in [0, N).
+      modulus: ring modulus N (odd, < 2^30).
+      block_rows: rows folded per grid step (rows must divide evenly or be
+        smaller than one block).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      int32[d] with entries in [0, N).
+    """
+    rows, d = y.shape
+    if rows <= block_rows:
+        block_rows = rows
+    assert rows % block_rows == 0, f"rows={rows} % block_rows={block_rows} != 0"
+    grid = (rows // block_rows,)
+
+    kernel = functools.partial(_modsum_kernel, modulus=modulus, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        # Same output block every step => revisited-output accumulator.
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        interpret=interpret,
+    )(y)
+
+
+def vmem_report(rows: int, d: int, block_rows: int = 256) -> dict:
+    """Static VMEM footprint estimate for the chosen BlockSpec (bytes)."""
+    br = min(block_rows, rows)
+    tile_in = br * d * 4
+    tile_acc = d * 4
+    total = tile_in + tile_acc
+    return {
+        "kernel": "modsum",
+        "block_rows": br,
+        "grid": (rows + br - 1) // br,
+        "vmem_bytes_per_step": total,
+        "vmem_mib": total / (1 << 20),
+        "lane_ops_per_element": 2,  # add + select per element folded
+    }

@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every kernel in this package has an exact, obviously-correct counterpart
+here; pytest + hypothesis assert bit-exact agreement (integer kernels) on
+swept shapes, dtypes and moduli. The Rust encoder cross-checks against the
+same semantics through the integration tests (shared share-stream protocol).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cloak_encode_ref(xbar: jnp.ndarray, uniforms: jnp.ndarray, modulus: int) -> jnp.ndarray:
+    """Reference Invisibility Cloak encoder (Algorithm 1), vectorized.
+
+    Args:
+      xbar: int32[d] — scaled, rounded inputs, each in [0, N).
+      uniforms: int32[d, m-1] — the m-1 uniform shares per scalar, in [0, N).
+      modulus: the ring modulus N.
+
+    Returns:
+      int32[d, m] — all m shares; the last column is the residual
+      y_m = (xbar - sum_j y_j) mod N, so each row sums to xbar (mod N).
+    """
+    # numpy int64 intermediates: this is the oracle, it may be as slow as it
+    # likes — and jax's default int is 32-bit (x64 disabled), which would
+    # silently overflow here.
+    xb = np.asarray(xbar, dtype=np.int64)
+    u = np.asarray(uniforms, dtype=np.int64)
+    s = u.sum(axis=1)
+    resid = np.mod(xb - s, modulus).astype(np.int32)
+    return jnp.asarray(np.concatenate([u.astype(np.int32), resid[:, None]], axis=1))
+
+
+def modsum_ref(y: jnp.ndarray, modulus: int) -> jnp.ndarray:
+    """Reference analyzer reduction (Algorithm 2 core): column sums mod N.
+
+    Args:
+      y: int32[rows, d] — shuffled messages, one aggregation per column.
+      modulus: ring modulus N.
+
+    Returns:
+      int32[d] — sum of each column mod N.
+    """
+    return jnp.asarray(
+        np.mod(np.asarray(y, dtype=np.int64).sum(axis=0), modulus).astype(np.int32)
+    )
+
+
+def analyzer_decision_ref(zbar: np.ndarray, n: int, k: int) -> np.ndarray:
+    """Algorithm 2's clamping rule, as plain numpy (used in model tests).
+
+    zbar in [0, N); returns the estimate of sum(x_i) in [0, n].
+    """
+    zbar = np.asarray(zbar, dtype=np.float64)
+    out = zbar / k
+    out = np.where(zbar > 2 * n * k, 0.0, out)
+    out = np.where((zbar > n * k) & (zbar <= 2 * n * k), float(n), out)
+    return out

@@ -1,0 +1,81 @@
+"""L2: the federated-learning workload — an MLP classifier in JAX.
+
+This is the compute graph the Rust coordinator drives through PJRT: each
+simulated client runs ``loss_and_grad`` on its local batch; the flattened
+gradient is clipped, quantized and aggregated coordinate-wise through the
+Invisibility Cloak protocol (L3 hot path or the L1 Pallas kernels).
+
+Parameters travel as ONE flat f32 vector — the aggregation protocol is
+defined over flat coordinate vectors, so the model owns pack/unpack.
+
+Only used at build time: ``aot.py`` lowers ``loss_and_grad`` / ``predict``
+to HLO text; Python never runs on the request path.
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def shapes(cfg: ModelConfig):
+    """Parameter tensor shapes, in flat-vector order."""
+    d, h, c = cfg.input_dim, cfg.hidden_dim, cfg.num_classes
+    return [("w1", (d, h)), ("b1", (h,)), ("w2", (h, c)), ("b2", (c,))]
+
+
+def unpack(flat: jnp.ndarray, cfg: ModelConfig):
+    """Split the flat parameter vector into named tensors."""
+    out, off = {}, 0
+    for name, shp in shapes(cfg):
+        size = 1
+        for s in shp:
+            size *= s
+        out[name] = flat[off : off + size].reshape(shp)
+        off += size
+    return out
+
+
+def init_params(key, cfg: ModelConfig) -> jnp.ndarray:
+    """He-initialized flat parameter vector."""
+    ks = jax.random.split(key, 2)
+    d, h, c = cfg.input_dim, cfg.hidden_dim, cfg.num_classes
+    w1 = jax.random.normal(ks[0], (d, h)) * jnp.sqrt(2.0 / d)
+    w2 = jax.random.normal(ks[1], (h, c)) * jnp.sqrt(2.0 / h)
+    return jnp.concatenate(
+        [w1.ravel(), jnp.zeros(h), w2.ravel(), jnp.zeros(c)]
+    ).astype(jnp.float32)
+
+
+def logits_fn(flat: jnp.ndarray, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Forward pass: x f32[B, D] -> logits f32[B, C]."""
+    p = unpack(flat, cfg)
+    hbar = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+    return hbar @ p["w2"] + p["b2"]
+
+
+def loss_fn(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Mean softmax cross-entropy; y int32[B] labels."""
+    lg = logits_fn(flat, x, cfg)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def loss_and_grad(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The per-client step the Rust runtime executes: (loss, grad_flat).
+
+    The gradient is L2-clipped HERE (inside the artifact) to ``clip_norm=1``
+    so the value the coordinator quantizes is already bounded — keeping the
+    sensitivity bound of the DP analysis independent of Rust-side logic.
+    """
+    loss, g = jax.value_and_grad(loss_fn)(flat, x, y, cfg)
+    norm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    g = g * jnp.minimum(1.0, 1.0 / norm)
+    return loss, g
+
+
+def predict(flat: jnp.ndarray, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """argmax class prediction, int32[B] — used for server-side eval."""
+    return jnp.argmax(logits_fn(flat, x, cfg), axis=-1).astype(jnp.int32)

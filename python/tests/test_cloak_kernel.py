@@ -1,0 +1,121 @@
+"""Pallas cloak encoder vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes, moduli and share counts; agreement is bit-exact
+(integer kernel). Separate deterministic tests pin the paper's invariants:
+row sums reconstruct xbar mod N, and the first m-1 columns pass through.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cloak
+from compile.kernels.ref import cloak_encode_ref
+from compile.config import DEFAULT
+
+KP = DEFAULT.kernel
+
+
+def _random_case(rng, d, m, modulus):
+    xbar = rng.integers(0, modulus, size=d, dtype=np.int64).astype(np.int32)
+    u = rng.integers(0, modulus, size=(d, m - 1), dtype=np.int64).astype(np.int32)
+    return jnp.asarray(xbar), jnp.asarray(u)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.sampled_from([1, 2, 3, 8, 64, 128, 256]),
+    m=st.integers(min_value=4, max_value=24),
+    modulus=st.sampled_from([5, 97, 12289, 1 << 20, 536_870_909]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref(d, m, modulus, seed):
+    rng = np.random.default_rng(seed)
+    xbar, u = _random_case(rng, d, m, modulus)
+    got = cloak.cloak_encode(xbar, u, modulus=modulus)
+    want = cloak_encode_ref(xbar, u, modulus)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.sampled_from([4, 32, 256]),
+    m=st.integers(min_value=4, max_value=16),
+    modulus=st.sampled_from([101, 65537, 536_870_909]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_row_sums_reconstruct_xbar(d, m, modulus, seed):
+    """Algorithm 1's defining invariant: sum_j y_j = xbar (mod N)."""
+    rng = np.random.default_rng(seed)
+    xbar, u = _random_case(rng, d, m, modulus)
+    y = np.asarray(cloak.cloak_encode(xbar, u, modulus=modulus), dtype=np.int64)
+    np.testing.assert_array_equal(y.sum(axis=1) % modulus, np.asarray(xbar, dtype=np.int64))
+
+
+def test_uniform_columns_pass_through():
+    rng = np.random.default_rng(7)
+    xbar, u = _random_case(rng, 128, KP.num_messages, KP.modulus)
+    y = cloak.cloak_encode(xbar, u, modulus=KP.modulus)
+    np.testing.assert_array_equal(np.asarray(y)[:, :-1], np.asarray(u))
+
+
+def test_block_grid_equivalence():
+    """Tiling must not change results: block_d = d vs block_d < d."""
+    rng = np.random.default_rng(11)
+    xbar, u = _random_case(rng, 512, 8, KP.modulus)
+    a = cloak.cloak_encode(xbar, u, modulus=KP.modulus, block_d=512)
+    b = cloak.cloak_encode(xbar, u, modulus=KP.modulus, block_d=64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_output_range():
+    rng = np.random.default_rng(13)
+    xbar, u = _random_case(rng, 256, KP.num_messages, KP.modulus)
+    y = np.asarray(cloak.cloak_encode(xbar, u, modulus=KP.modulus))
+    assert y.min() >= 0 and y.max() < KP.modulus
+
+
+def test_seeded_encode_reconstructs():
+    """The AOT artifact entry point: seed -> shares, rows still sum to xbar."""
+    d, m = 256, KP.num_messages
+    rng = np.random.default_rng(17)
+    xbar = jnp.asarray(rng.integers(0, KP.modulus, size=d, dtype=np.int64).astype(np.int32))
+    y = np.asarray(
+        cloak.cloak_encode_from_seed(
+            jnp.int32(42), xbar, modulus=KP.modulus, num_messages=m
+        ),
+        dtype=np.int64,
+    )
+    assert y.shape == (d, m)
+    np.testing.assert_array_equal(y.sum(axis=1) % KP.modulus, np.asarray(xbar, dtype=np.int64))
+
+
+def test_seeded_encode_deterministic():
+    d, m = 64, 8
+    xbar = jnp.zeros((d,), jnp.int32)
+    a = cloak.cloak_encode_from_seed(jnp.int32(1), xbar, modulus=KP.modulus, num_messages=m)
+    b = cloak.cloak_encode_from_seed(jnp.int32(1), xbar, modulus=KP.modulus, num_messages=m)
+    c = cloak.cloak_encode_from_seed(jnp.int32(2), xbar, modulus=KP.modulus, num_messages=m)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_share_marginals_look_uniform():
+    """Privacy smoke: each share column's empirical mean ~ N/2 (the
+    'invisibility' property: any m-1 shares are uniform)."""
+    d, m, N = 4096, 8, 536_870_909
+    rng = np.random.default_rng(19)
+    xbar = jnp.zeros((d,), jnp.int32)  # worst case: all-zero inputs
+    u = jnp.asarray(rng.integers(0, N, size=(d, m - 1), dtype=np.int64).astype(np.int32))
+    y = np.asarray(cloak.cloak_encode(xbar, u, modulus=N), dtype=np.float64)
+    resid = y[:, -1]
+    # mean of Uniform[0,N) is N/2 with sd N/sqrt(12 d) ~ 2.4e6 at d=4096
+    assert abs(resid.mean() - N / 2) < 6 * N / np.sqrt(12 * d)
+
+
+def test_vmem_report_sane():
+    r = cloak.vmem_report(4096, 16, block_d=128)
+    assert r["vmem_bytes_per_step"] == 128 * 4 + 128 * 15 * 4 + 128 * 16 * 4
+    assert r["grid"] == 32

@@ -1,0 +1,88 @@
+"""L2 model checks: shapes, gradient correctness (finite differences),
+clipping bound, prediction consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import ModelConfig
+
+CFG = ModelConfig(input_dim=8, hidden_dim=12, num_classes=4, batch_size=16)
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    flat = model.init_params(k1, CFG)
+    x = jax.random.normal(k2, (CFG.batch_size, CFG.input_dim))
+    y = jax.random.randint(k3, (CFG.batch_size,), 0, CFG.num_classes)
+    return flat, x, y
+
+
+def test_param_count(data):
+    flat, _, _ = data
+    assert flat.shape == (CFG.param_count,)
+    assert CFG.param_count == 8 * 12 + 12 + 12 * 4 + 4
+
+
+def test_unpack_roundtrip(data):
+    flat, _, _ = data
+    p = model.unpack(flat, CFG)
+    re = jnp.concatenate([p["w1"].ravel(), p["b1"], p["w2"].ravel(), p["b2"]])
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(flat))
+
+
+def test_loss_finite_and_positive(data):
+    flat, x, y = data
+    loss = model.loss_fn(flat, x, y, CFG)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_grad_matches_finite_differences(data):
+    flat, x, y = data
+    _, g = model.loss_and_grad(flat, x, y, CFG)
+    # undo clipping for the FD comparison
+    raw = jax.grad(model.loss_fn)(flat, x, y, CFG)
+    idx = np.random.default_rng(1).choice(CFG.param_count, size=12, replace=False)
+    eps = 1e-3
+    for i in idx:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        fd = (model.loss_fn(flat + e, x, y, CFG) - model.loss_fn(flat - e, x, y, CFG)) / (2 * eps)
+        assert abs(float(fd) - float(raw[i])) < 5e-3, f"coord {i}"
+
+
+def test_grad_is_clipped(data):
+    flat, x, y = data
+    _, g = model.loss_and_grad(flat, x, y, CFG)
+    assert float(jnp.linalg.norm(g)) <= 1.0 + 1e-5
+
+
+def test_clip_direction_preserved(data):
+    flat, x, y = data
+    _, g = model.loss_and_grad(flat, x, y, CFG)
+    raw = jax.grad(model.loss_fn)(flat, x, y, CFG)
+    cos = float(jnp.dot(g, raw) / (jnp.linalg.norm(g) * jnp.linalg.norm(raw) + 1e-12))
+    assert cos > 0.999
+
+
+def test_predict_matches_logits_argmax(data):
+    flat, x, _ = data
+    pred = model.predict(flat, x, CFG)
+    lg = model.logits_fn(flat, x, CFG)
+    np.testing.assert_array_equal(np.asarray(pred), np.argmax(np.asarray(lg), axis=-1))
+
+
+def test_training_reduces_loss(data):
+    """A few SGD steps on the raw gradient must reduce the loss — the L2
+    graph is actually trainable (the FL driver relies on this)."""
+    flat, x, y = data
+    l0 = float(model.loss_fn(flat, x, y, CFG))
+    cur = flat
+    for _ in range(40):
+        _, g = model.loss_and_grad(cur, x, y, CFG)
+        cur = cur - 0.5 * g
+    l1 = float(model.loss_fn(cur, x, y, CFG))
+    assert l1 < l0 * 0.7, (l0, l1)

@@ -1,0 +1,202 @@
+//! The analyzer — Algorithm 2.
+//!
+//! A_{N,k,n}(y_1, …, y_{mn}): z̄ ← Σ y_i mod N; then the range decision —
+//! if z̄ > 2nk return 0, else if z̄ > nk return n, else return z̄/k. The
+//! decision rule folds pre-randomizer noise that pushed the sum outside
+//! the feasible range [0, nk] back to the nearest feasible output, using
+//! the odd modulus to split the infeasible arc evenly between "wrapped
+//! below 0" (→ 0) and "wrapped above n" (→ n).
+
+use crate::arith::fixed::FixedCodec;
+use crate::arith::modring::ModRing;
+
+/// Analyzer instance for fixed (N, k, n).
+#[derive(Clone, Copy, Debug)]
+pub struct Analyzer {
+    ring: ModRing,
+    codec: FixedCodec,
+    n: usize,
+}
+
+impl Analyzer {
+    /// Panics if N is even. The paper also wants N > 3nk so the three
+    /// decision arcs are disjoint; we check it here.
+    pub fn new(modulus: u64, scale: u64, n: usize) -> Self {
+        let nk = (n as u128) * (scale as u128);
+        assert!(
+            (modulus as u128) > 3 * nk,
+            "Algorithm 2 requires N > 3nk (N={modulus}, nk={nk})"
+        );
+        Analyzer { ring: ModRing::new(modulus), codec: FixedCodec::new(scale), n }
+    }
+
+    /// Like `new` but without the N > 3nk assertion — used by benches that
+    /// deliberately explore infeasible corners.
+    pub fn new_unchecked(modulus: u64, scale: u64, n: usize) -> Self {
+        Analyzer { ring: ModRing::new(modulus), codec: FixedCodec::new(scale), n }
+    }
+
+    pub fn ring(&self) -> ModRing {
+        self.ring
+    }
+
+    /// The raw modular sum z̄ (before the decision rule) — the quantity the
+    /// Theorem 2 path reads out exactly.
+    pub fn raw_sum(&self, messages: &[u64]) -> u64 {
+        self.ring.sum(messages)
+    }
+
+    /// Algorithm 2's decision rule applied to a raw sum.
+    pub fn decide(&self, zbar: u64) -> f64 {
+        let nk = self.n as u64 * self.codec.scale();
+        if zbar > 2 * nk {
+            0.0
+        } else if zbar > nk {
+            self.n as f64
+        } else {
+            self.codec.decode_sum(zbar)
+        }
+    }
+
+    /// Full analyzer: sum then decide.
+    pub fn analyze(&self, messages: &[u64]) -> f64 {
+        self.decide(self.raw_sum(messages))
+    }
+
+    /// Vectorized analyzer over a flat (rows, d) column-major-by-coordinate
+    /// layout: coordinate j's messages are `flat[j*rows..(j+1)*rows]`.
+    pub fn analyze_columns(&self, flat: &[u64], rows: usize) -> Vec<f64> {
+        assert!(rows > 0 && flat.len() % rows == 0);
+        flat.chunks_exact(rows).map(|col| self.analyze(col)).collect()
+    }
+
+    /// Validating analyzer: rejects malformed batches instead of silently
+    /// mis-summing — the failure-injection path the coordinator uses when
+    /// ingesting untrusted transports. Checks every residue is in Z_N and
+    /// the message count is a multiple of m (each user sends exactly m).
+    pub fn analyze_checked(
+        &self,
+        messages: &[u64],
+        num_messages: usize,
+    ) -> Result<f64, AnalyzeError> {
+        if num_messages == 0 || messages.len() % num_messages != 0 {
+            return Err(AnalyzeError::BadCount { len: messages.len(), m: num_messages });
+        }
+        if let Some(pos) = messages.iter().position(|&y| y >= self.ring.modulus()) {
+            return Err(AnalyzeError::OutOfRing { index: pos, value: messages[pos] });
+        }
+        Ok(self.analyze(messages))
+    }
+}
+
+/// Validation failures from [`Analyzer::analyze_checked`].
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AnalyzeError {
+    #[error("message count {len} is not a multiple of m = {m}")]
+    BadCount { len: usize, m: usize },
+    #[error("message at index {index} = {value} is outside Z_N")]
+    OutOfRing { index: usize, value: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::CloakEncoder;
+    use crate::rng::{ChaCha20Rng, SeedableRng};
+    use crate::util::proptest_lite::{forall, Gen};
+
+    #[test]
+    fn decision_rule_cases() {
+        // N=701 > 3*10*20=600? 3nk = 3*10*20 = 600 => need N>600, pick 701.
+        let a = Analyzer::new(701, 20, 10);
+        let nk = 200u64;
+        assert_eq!(a.decide(0), 0.0);
+        assert_eq!(a.decide(nk), 10.0);
+        assert_eq!(a.decide(nk + 1), 10.0); // wrapped above
+        assert_eq!(a.decide(2 * nk), 10.0);
+        assert_eq!(a.decide(2 * nk + 1), 0.0); // wrapped below
+        assert_eq!(a.decide(100), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "N > 3nk")]
+    fn rejects_small_modulus() {
+        Analyzer::new(599, 20, 10);
+    }
+
+    #[test]
+    fn prop_encode_shuffle_analyze_exact() {
+        // Theorem 2 zero-noise path: the analyzer recovers the exact
+        // discretized sum for any inputs, any valid parameters.
+        forall("pipeline exactness", 100, |g: &mut Gen| {
+            let n = g.usize_in(2, 60);
+            let scale = 1 + g.u64_below(100);
+            let m = g.usize_in(4, 12);
+            let min_mod = 3 * n as u64 * scale + 1;
+            let modulus = {
+                let v = min_mod + g.u64_below(1 << 20);
+                if v % 2 == 0 {
+                    v + 1
+                } else {
+                    v
+                }
+            };
+            let enc = CloakEncoder::new(modulus, scale, m);
+            let ana = Analyzer::new(modulus, scale, n);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.seed());
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_unit()).collect();
+            let mut messages = Vec::with_capacity(n * m);
+            let mut truth_bar = 0u64;
+            for &x in &xs {
+                truth_bar += enc.codec().encode(x);
+                messages.extend(enc.encode_scalar(x, &mut rng));
+            }
+            // shuffle must not matter: reverse + interleave
+            messages.reverse();
+            let est = ana.analyze(&messages);
+            assert!((est - truth_bar as f64 / scale as f64).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn analyze_columns_layout() {
+        let a = Analyzer::new(2401, 20, 4); // 3nk=240
+        // two coordinates, 3 messages each
+        let flat = vec![10, 20, 30, 5, 5, 5];
+        let out = a.analyze_columns(&flat, 3);
+        assert_eq!(out, vec![3.0, 0.75]);
+    }
+
+    #[test]
+    fn checked_rejects_malformed_batches() {
+        let a = Analyzer::new(2401, 20, 4);
+        // wrong multiplicity
+        assert_eq!(
+            a.analyze_checked(&[1, 2, 3], 2),
+            Err(AnalyzeError::BadCount { len: 3, m: 2 })
+        );
+        assert_eq!(
+            a.analyze_checked(&[1, 2], 0),
+            Err(AnalyzeError::BadCount { len: 2, m: 0 })
+        );
+        // out-of-ring residue (e.g. a corrupted or hostile transport)
+        assert_eq!(
+            a.analyze_checked(&[1, 2401], 2),
+            Err(AnalyzeError::OutOfRing { index: 1, value: 2401 })
+        );
+        // well-formed batch passes through to the normal analyzer
+        assert_eq!(a.analyze_checked(&[10, 10], 2).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn wraparound_noise_clamps() {
+        // Simulate noise pushing the sum just below zero: z = -3 mod N.
+        let a = Analyzer::new(2401, 20, 4);
+        let ring = a.ring();
+        let zbar = ring.from_i64(-3);
+        assert_eq!(a.decide(zbar), 0.0);
+        // and just above nk:
+        let zbar2 = 4 * 20 + 5;
+        assert_eq!(a.decide(zbar2), 4.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-point codecs: the paper's discretization `x̄ = ⌊x·k⌋`.
+//!
+//! Two codecs:
+//! * [`FixedCodec`] — the paper's unit-interval codec for x ∈ [0, 1]
+//!   (§2.1: inputs are rounded to the nearest lower multiple of 1/k).
+//! * [`SymmetricCodec`] — the FL driver's codec for clipped gradient
+//!   coordinates x ∈ [-c, c], mapped affinely into [0, 1] before
+//!   quantization so aggregation error stays the paper's n/k bound
+//!   (DESIGN.md §3, FL row).
+
+/// Quantizer for x ∈ [0, 1] with scale k: encode(x) = ⌊x·k⌋ ∈ {0, …, k}.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedCodec {
+    scale: u64,
+}
+
+impl FixedCodec {
+    /// `scale` is the paper's k; must be ≥ 1.
+    pub fn new(scale: u64) -> Self {
+        assert!(scale >= 1, "scale k must be >= 1");
+        FixedCodec { scale }
+    }
+
+    pub fn scale(&self) -> u64 {
+        self.scale
+    }
+
+    /// ⌊x·k⌋ with clamping of x into [0, 1] (protocol precondition).
+    pub fn encode(&self, x: f64) -> u64 {
+        let x = x.clamp(0.0, 1.0);
+        let v = (x * self.scale as f64).floor() as u64;
+        v.min(self.scale) // x = 1.0 maps to k
+    }
+
+    /// Decode an aggregated integer sum back to the real scale: z̄/k.
+    pub fn decode_sum(&self, zbar: u64) -> f64 {
+        zbar as f64 / self.scale as f64
+    }
+
+    /// Worst-case per-user rounding error: 1/k.
+    pub fn per_user_error(&self) -> f64 {
+        1.0 / self.scale as f64
+    }
+}
+
+/// Affine codec for x ∈ [-c, c]: maps to u = (x + c) / (2c) ∈ [0,1], then
+/// quantizes with [`FixedCodec`]. Decoding an aggregate of n users undoes
+/// the affine shift: sum(x) = 2c·(sum(u)) − n·c.
+#[derive(Clone, Copy, Debug)]
+pub struct SymmetricCodec {
+    inner: FixedCodec,
+    clip: f64,
+}
+
+impl SymmetricCodec {
+    pub fn new(scale: u64, clip: f64) -> Self {
+        assert!(clip > 0.0);
+        SymmetricCodec { inner: FixedCodec::new(scale), clip }
+    }
+
+    pub fn scale(&self) -> u64 {
+        self.inner.scale()
+    }
+
+    pub fn clip(&self) -> f64 {
+        self.clip
+    }
+
+    /// Quantize one clipped coordinate.
+    pub fn encode(&self, x: f64) -> u64 {
+        let u = (x.clamp(-self.clip, self.clip) + self.clip) / (2.0 * self.clip);
+        self.inner.encode(u)
+    }
+
+    /// Decode the aggregated integer sum of `n` users' coordinates.
+    pub fn decode_sum(&self, zbar: u64, n: usize) -> f64 {
+        2.0 * self.clip * self.inner.decode_sum(zbar) - n as f64 * self.clip
+    }
+
+    /// Worst-case aggregate quantization error for n users: 2c·n/k.
+    pub fn aggregate_error_bound(&self, n: usize) -> f64 {
+        2.0 * self.clip * n as f64 / self.scale() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, Gen};
+
+    #[test]
+    fn encode_bounds() {
+        let c = FixedCodec::new(10);
+        assert_eq!(c.encode(0.0), 0);
+        assert_eq!(c.encode(1.0), 10);
+        assert_eq!(c.encode(0.55), 5);
+        assert_eq!(c.encode(-3.0), 0); // clamped
+        assert_eq!(c.encode(7.0), 10); // clamped
+    }
+
+    #[test]
+    fn decode_inverts_up_to_rounding() {
+        let c = FixedCodec::new(1 << 20);
+        for &x in &[0.0, 0.1, 0.25, 0.5, 0.9999, 1.0] {
+            let err = (c.decode_sum(c.encode(x)) - x).abs();
+            assert!(err <= c.per_user_error(), "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn prop_sum_error_bounded_by_n_over_k() {
+        forall("fixed sum error", 100, |g: &mut Gen| {
+            let k = 1u64 << g.usize_in(8, 24);
+            let c = FixedCodec::new(k);
+            let n = g.usize_in(1, 200);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_unit()).collect();
+            let truth: f64 = xs.iter().sum();
+            let agg: u64 = xs.iter().map(|&x| c.encode(x)).sum();
+            let err = (c.decode_sum(agg) - truth).abs();
+            assert!(err <= n as f64 / k as f64 + 1e-9, "err={err} n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn symmetric_roundtrip() {
+        let c = SymmetricCodec::new(1 << 16, 1.0);
+        // single user (n=1)
+        for &x in &[-1.0, -0.5, 0.0, 0.3, 1.0] {
+            let err = (c.decode_sum(c.encode(x), 1) - x).abs();
+            assert!(err <= 2.0 / (1 << 16) as f64, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn prop_symmetric_aggregate_error() {
+        forall("symmetric agg error", 100, |g: &mut Gen| {
+            let k = 1u64 << g.usize_in(10, 20);
+            let clip = 0.5 + g.f64_unit();
+            let c = SymmetricCodec::new(k, clip);
+            let n = g.usize_in(1, 100);
+            let xs: Vec<f64> = (0..n).map(|_| (g.f64_unit() * 2.0 - 1.0) * clip).collect();
+            let truth: f64 = xs.iter().sum();
+            let agg: u64 = xs.iter().map(|&x| c.encode(x)).sum();
+            let err = (c.decode_sum(agg, n) - truth).abs();
+            assert!(err <= c.aggregate_error_bound(n) + 1e-9, "err={err}");
+        });
+    }
+}

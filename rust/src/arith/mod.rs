@@ -1,0 +1,51 @@
+//! Arithmetic substrate: the message ring Z_N and fixed-point codecs.
+//!
+//! Algorithms 1–2 operate over Z_N for an odd modulus N > 3nk; Theorem 1/2
+//! parameter choices can push N beyond 2^32, so [`modring::ModRing`] keeps a
+//! `u64` modulus with `u128` widening on every multiply/accumulate. The
+//! Pallas kernel path uses a restricted int32-safe profile (N < 2^30); the
+//! planner decides which profile a given (n, ε, δ) fits.
+
+pub mod fixed;
+pub mod modring;
+
+/// Returns the first odd integer strictly greater than `x` (the paper's
+/// "N = first odd integer larger than 3kn + 10/δ + 10/ε").
+pub fn next_odd_above(x: f64) -> u64 {
+    let mut v = x.floor() as u64 + 1;
+    if v % 2 == 0 {
+        v += 1;
+    }
+    v
+}
+
+/// ceil(log2(x)) for x >= 1 — message-size accounting (Fig. 1 columns).
+pub fn ceil_log2(x: u64) -> u32 {
+    debug_assert!(x >= 1);
+    64 - (x - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_odd() {
+        assert_eq!(next_odd_above(4.0), 5);
+        assert_eq!(next_odd_above(5.0), 7);
+        assert_eq!(next_odd_above(5.5), 7);
+        assert_eq!(next_odd_above(6.0), 7);
+        assert_eq!(next_odd_above(0.2), 1);
+    }
+
+    #[test]
+    fn log2_ceil() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1 << 40), 40);
+        assert_eq!(ceil_log2((1 << 40) + 1), 41);
+    }
+}

@@ -1,0 +1,229 @@
+//! The message ring Z_N.
+//!
+//! All protocol messages are residues mod an odd `u64` modulus N. The ring
+//! is a small value type passed around by copy; every operation is
+//! division-free on the hot path except the initial reduction (one `%` per
+//! *foreign* value entering the ring — internal ops use conditional
+//! subtract, matching the L1 kernel's compare+select idiom).
+
+use crate::rng::Rng;
+
+/// Arithmetic over Z_N for odd N (Algorithm 1/2's message space).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModRing {
+    modulus: u64,
+}
+
+impl ModRing {
+    /// Create a ring; panics if `modulus` is 0 or even (Algorithm 2 requires
+    /// odd N so that the analyzer's range decision is unambiguous).
+    pub fn new(modulus: u64) -> Self {
+        assert!(modulus > 0, "modulus must be positive");
+        assert!(modulus % 2 == 1, "Algorithm 2 requires odd N, got {modulus}");
+        ModRing { modulus }
+    }
+
+    #[inline(always)]
+    pub fn modulus(&self) -> u64 {
+        self.modulus
+    }
+
+    /// Reduce an arbitrary u64 into the ring.
+    #[inline(always)]
+    pub fn reduce(&self, x: u64) -> u64 {
+        if x < self.modulus {
+            x
+        } else {
+            x % self.modulus
+        }
+    }
+
+    /// Reduce an u128 (e.g. a large accumulator) into the ring.
+    #[inline(always)]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        (x % self.modulus as u128) as u64
+    }
+
+    /// a + b mod N for a, b already in the ring — division-free.
+    #[inline(always)]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.modulus && b < self.modulus);
+        let (s, carry) = a.overflowing_add(b);
+        // a, b < N <= 2^64-1: sum fits in u64 unless N > 2^63; handle both.
+        if carry || s >= self.modulus {
+            s.wrapping_sub(self.modulus)
+        } else {
+            s
+        }
+    }
+
+    /// a - b mod N for a, b already in the ring — division-free.
+    #[inline(always)]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.modulus && b < self.modulus);
+        if a >= b {
+            a - b
+        } else {
+            a.wrapping_sub(b).wrapping_add(self.modulus)
+        }
+    }
+
+    /// a * b mod N via u128 widening.
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        ((a as u128 * b as u128) % self.modulus as u128) as u64
+    }
+
+    /// -a mod N.
+    #[inline(always)]
+    pub fn neg(&self, a: u64) -> u64 {
+        debug_assert!(a < self.modulus);
+        if a == 0 {
+            0
+        } else {
+            self.modulus - a
+        }
+    }
+
+    /// Map a signed integer (e.g. discrete Laplace noise) into the ring.
+    #[inline]
+    pub fn from_i64(&self, x: i64) -> u64 {
+        let m = self.modulus as i128;
+        let r = (x as i128).rem_euclid(m);
+        r as u64
+    }
+
+    /// Interpret a residue as the *centered* representative in
+    /// `(-(N-1)/2 ..= (N-1)/2)` — the analyzer's signed read-back.
+    #[inline]
+    pub fn to_centered(&self, x: u64) -> i64 {
+        debug_assert!(x < self.modulus);
+        let half = self.modulus / 2; // N odd => (N-1)/2
+        if x <= half {
+            x as i64
+        } else {
+            -((self.modulus - x) as i64)
+        }
+    }
+
+    /// Uniform draw from Z_N (unbiased; Lemire rejection via [`Rng`]).
+    #[inline]
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u64 {
+        rng.gen_range(self.modulus)
+    }
+
+    /// Sum of a slice of in-ring values, division-free inner loop.
+    pub fn sum(&self, xs: &[u64]) -> u64 {
+        let mut acc = 0u64;
+        for &x in xs {
+            acc = self.add(acc, x);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{SeedableRng, SplitMix64};
+    use crate::util::proptest_lite::{forall, Gen};
+
+    #[test]
+    #[should_panic(expected = "odd")]
+    fn even_modulus_rejected() {
+        ModRing::new(10);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let r = ModRing::new(101);
+        for a in 0..101 {
+            for b in 0..101 {
+                let s = r.add(a, b);
+                assert_eq!(r.sub(s, b), a);
+                assert_eq!((a + b) % 101, s);
+            }
+        }
+    }
+
+    #[test]
+    fn add_near_u64_max() {
+        // N just below 2^64: the carry path must be taken.
+        let n = u64::MAX; // 2^64-1 is odd
+        let r = ModRing::new(n);
+        let a = n - 1;
+        let b = n - 2;
+        // (a + b) mod n = (2n - 3) mod n = n - 3
+        assert_eq!(r.add(a, b), n - 3);
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let r = ModRing::new(1_000_000_007);
+        let mut rng = SplitMix64::seed_from_u64(1);
+        for _ in 0..1000 {
+            let a = r.sample(&mut rng);
+            let b = r.sample(&mut rng);
+            assert_eq!(r.mul(a, b), ((a as u128 * b as u128) % 1_000_000_007u128) as u64);
+        }
+    }
+
+    #[test]
+    fn from_i64_negative() {
+        let r = ModRing::new(7);
+        assert_eq!(r.from_i64(-1), 6);
+        assert_eq!(r.from_i64(-7), 0);
+        assert_eq!(r.from_i64(-8), 6);
+        assert_eq!(r.from_i64(13), 6);
+        // 2^63 ≡ 1 (mod 7), so i64::MIN = -2^63 ≡ -1 ≡ 6 (mod 7).
+        assert_eq!(r.from_i64(i64::MIN), 6);
+    }
+
+    #[test]
+    fn centered_representatives() {
+        let r = ModRing::new(7);
+        assert_eq!(r.to_centered(0), 0);
+        assert_eq!(r.to_centered(3), 3);
+        assert_eq!(r.to_centered(4), -3);
+        assert_eq!(r.to_centered(6), -1);
+        // round trip through from_i64
+        for t in -3..=3i64 {
+            assert_eq!(r.to_centered(r.from_i64(t)), t);
+        }
+    }
+
+    #[test]
+    fn prop_sum_matches_u128_reference() {
+        forall("ring sum", 200, |g: &mut Gen| {
+            let n = g.odd_u64(3, 1 << 40);
+            let r = ModRing::new(n);
+            let len = g.usize_in(0, 64);
+            let xs: Vec<u64> = (0..len).map(|_| g.u64_below(n)).collect();
+            let want = (xs.iter().map(|&x| x as u128).sum::<u128>() % n as u128) as u64;
+            assert_eq!(r.sum(&xs), want);
+        });
+    }
+
+    #[test]
+    fn prop_neg_is_additive_inverse() {
+        forall("neg inverse", 200, |g: &mut Gen| {
+            let n = g.odd_u64(3, u64::MAX);
+            let r = ModRing::new(n);
+            let a = g.u64_below(n);
+            assert_eq!(r.add(a, r.neg(a)), 0);
+        });
+    }
+
+    #[test]
+    fn sample_is_in_range_and_covers() {
+        let r = ModRing::new(5);
+        let mut rng = SplitMix64::seed_from_u64(3);
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            let v = r.sample(&mut rng);
+            assert!(v < 5);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

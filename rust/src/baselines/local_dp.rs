@@ -1,0 +1,112 @@
+//! Local-model DP baseline: every user perturbs its own value with
+//! discrete Laplace noise before sending — no shuffler, no trust. The
+//! classic Θ(√n/ε) error anchor that motivates the shuffled model.
+
+use super::AggregationProtocol;
+use crate::arith::ceil_log2;
+use crate::privacy::dlaplace::TruncatedDiscreteLaplace;
+use crate::rng::{derive_seed, ChaCha20Rng};
+use crate::transport::{CostModel, TrafficStats};
+
+/// Local DP with per-user discrete Laplace noise.
+pub struct LocalDpProtocol {
+    n: usize,
+    epsilon: f64,
+    scale: u64,
+    dist: TruncatedDiscreteLaplace,
+    seed: u64,
+    round: u64,
+}
+
+impl LocalDpProtocol {
+    pub fn new(n: usize, epsilon: f64, scale: u64, seed: u64) -> Self {
+        // ε-DP for one value of sensitivity `scale` (the quantized range):
+        // discrete Laplace with p = exp(-ε/scale).
+        let p = (-epsilon / scale as f64).exp();
+        // support wide enough that truncation is negligible
+        let mut support = (scale as f64 * 40.0 / epsilon) as u64 * 2 + 1;
+        if support % 2 == 0 {
+            support += 1;
+        }
+        LocalDpProtocol {
+            n,
+            epsilon,
+            scale,
+            dist: TruncatedDiscreteLaplace::new(support, p),
+            seed,
+            round: 0,
+        }
+    }
+}
+
+impl LocalDpProtocol {
+    /// The per-user ε this instance enforces.
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+}
+
+impl AggregationProtocol for LocalDpProtocol {
+    fn name(&self) -> &'static str {
+        "local DP"
+    }
+
+    fn aggregate(&mut self, xs: &[f64]) -> (f64, TrafficStats) {
+        assert_eq!(xs.len(), self.n);
+        let round = self.round;
+        self.round += 1;
+        let cost = CostModel::default();
+        let mut traffic = TrafficStats::default();
+        let bytes = (self.message_bits() as usize).div_ceil(8);
+        let mut total = 0f64;
+        for (i, &x) in xs.iter().enumerate() {
+            let mut rng =
+                ChaCha20Rng::from_seed_and_stream(derive_seed(self.seed, round), i as u64);
+            let xbar = (x.clamp(0.0, 1.0) * self.scale as f64).floor();
+            let noise = self.dist.sample(&mut rng) as f64;
+            total += xbar + noise;
+            traffic.record_batch(1, bytes, &cost);
+        }
+        ((total / self.scale as f64).clamp(0.0, self.n as f64), traffic)
+    }
+
+    fn messages_per_user(&self) -> f64 {
+        1.0
+    }
+
+    fn message_bits(&self) -> u32 {
+        ceil_log2(self.scale * 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_scales_with_sqrt_n() {
+        let measure = |n: usize| -> f64 {
+            let mut p = LocalDpProtocol::new(n, 1.0, 100, 7);
+            let xs = vec![0.5; n];
+            let truth = 0.5 * n as f64;
+            let mut errs = Vec::new();
+            for _ in 0..8 {
+                let (est, _) = p.aggregate(&xs);
+                errs.push((est - truth).abs());
+            }
+            errs.iter().sum::<f64>() / errs.len() as f64
+        };
+        let e1 = measure(400);
+        let e2 = measure(40_000);
+        // √n growth: 100x users => ~10x error (wide tolerance)
+        assert!(e2 > 3.0 * e1, "e1={e1} e2={e2}");
+        assert!(e2 < 40.0 * e1, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn single_message_per_user() {
+        let mut p = LocalDpProtocol::new(50, 1.0, 100, 8);
+        let (_, t) = p.aggregate(&vec![0.2; 50]);
+        assert_eq!(t.messages, 50);
+    }
+}

@@ -1,0 +1,100 @@
+//! Baseline protocols — every comparison row in Figure 1 plus the secure-
+//! aggregation and DP anchors from §1.2.
+//!
+//! | module | protocol | Fig. 1 row / anchor |
+//! |---|---|---|
+//! | [`cheu`] | Cheu–Smith–Ullman–Zeber–Zhilyaev bit-flipping | row 1 |
+//! | [`balle`] | Balle–Bell–Gascón–Nissim privacy blanket (1 msg) | row 2 |
+//! | [`bonawitz`] | Bonawitz et al. pairwise-mask secure aggregation | §1.2 O(n²) |
+//! | [`local_dp`] | classic local-model discrete Laplace | error anchor |
+//! | [`central_dp`] | trusted-curator Laplace | best-possible anchor |
+//!
+//! All baselines implement [`AggregationProtocol`], so the Fig. 1 benches
+//! sweep one interface.
+
+pub mod balle;
+pub mod bonawitz;
+pub mod central_dp;
+pub mod cheu;
+pub mod local_dp;
+
+use crate::transport::TrafficStats;
+
+/// Uniform interface over aggregation protocols for the benches.
+pub trait AggregationProtocol {
+    /// Human-readable name (report row label).
+    fn name(&self) -> &'static str;
+
+    /// Run one aggregation of `xs` (each in [0,1]); returns the estimate
+    /// of Σ xs and communication accounting.
+    fn aggregate(&mut self, xs: &[f64]) -> (f64, TrafficStats);
+
+    /// Messages sent per user.
+    fn messages_per_user(&self) -> f64;
+
+    /// Bits per message.
+    fn message_bits(&self) -> u32;
+}
+
+/// The Invisibility Cloak pipeline wrapped in the baseline interface.
+pub struct CloakProtocol {
+    pipeline: crate::pipeline::Pipeline,
+}
+
+impl CloakProtocol {
+    pub fn theorem1(n: usize, eps: f64, delta: f64, seed: u64) -> Self {
+        CloakProtocol {
+            pipeline: crate::pipeline::Pipeline::new(
+                crate::params::ProtocolPlan::theorem1(n, eps, delta).unwrap(),
+                seed,
+            ),
+        }
+    }
+
+    pub fn theorem2(n: usize, eps: f64, delta: f64, seed: u64) -> Self {
+        CloakProtocol {
+            pipeline: crate::pipeline::Pipeline::new(
+                crate::params::ProtocolPlan::theorem2(n, eps, delta).unwrap(),
+                seed,
+            ),
+        }
+    }
+}
+
+impl AggregationProtocol for CloakProtocol {
+    fn name(&self) -> &'static str {
+        match self.pipeline.plan().notion {
+            crate::params::NeighborNotion::SingleUser => "cloak (Thm 1)",
+            crate::params::NeighborNotion::SumPreserving => "cloak (Thm 2)",
+        }
+    }
+
+    fn aggregate(&mut self, xs: &[f64]) -> (f64, TrafficStats) {
+        let est = self.pipeline.aggregate(xs).expect("plan n mismatch");
+        (est, self.pipeline.last_traffic)
+    }
+
+    fn messages_per_user(&self) -> f64 {
+        self.pipeline.plan().num_messages as f64
+    }
+
+    fn message_bits(&self) -> u32 {
+        self.pipeline.plan().message_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloak_protocol_implements_interface() {
+        let mut p = CloakProtocol::theorem2(50, 1.0, 1e-4, 1);
+        let xs = vec![0.5; 50];
+        let (est, traffic) = p.aggregate(&xs);
+        assert!((est - 25.0).abs() < 0.2);
+        assert!(traffic.messages > 0);
+        assert!(p.messages_per_user() >= 4.0);
+        assert!(p.message_bits() > 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Hand-rolled CLI (the offline image has no clap). Subcommand +
+//! `--flag value` parsing with typed getters and auto-generated usage.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+/// Parse failure.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("missing subcommand; expected one of: {0}")]
+    MissingCommand(String),
+    #[error("unknown flag '{0}'")]
+    UnknownFlag(String),
+    #[error("flag '{0}' expects a value")]
+    MissingValue(String),
+    #[error("flag '{0}': cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse `argv[1..]`; `allowed` lists the legal flag names (without
+    /// the leading `--`).
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        commands: &[&str],
+        allowed: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut it = argv.into_iter();
+        let command = it.next().ok_or_else(|| CliError::MissingCommand(commands.join(", ")))?;
+        if !commands.contains(&command.as_str()) {
+            return Err(CliError::MissingCommand(commands.join(", ")));
+        }
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| CliError::UnknownFlag(arg.clone()))?
+                .to_string();
+            if !allowed.contains(&name.as_str()) {
+                return Err(CliError::UnknownFlag(name));
+            }
+            let value = it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?;
+            flags.insert(name, value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.clone(), "usize")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone(), "u64"))
+            }
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone(), "f64"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(
+            argv(&["aggregate", "--n", "100", "--eps", "0.5"]),
+            &["aggregate", "fl"],
+            &["n", "eps"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "aggregate");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("eps", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("delta", 1e-6).unwrap(), 1e-6); // default
+    }
+
+    #[test]
+    fn rejects_unknown_command_and_flag() {
+        assert!(matches!(
+            Args::parse(argv(&["nope"]), &["run"], &[]),
+            Err(CliError::MissingCommand(_))
+        ));
+        assert!(matches!(
+            Args::parse(argv(&["run", "--bad", "1"]), &["run"], &["good"]),
+            Err(CliError::UnknownFlag(f)) if f == "bad"
+        ));
+    }
+
+    #[test]
+    fn missing_value_and_bad_parse() {
+        assert!(matches!(
+            Args::parse(argv(&["run", "--x"]), &["run"], &["x"]),
+            Err(CliError::MissingValue(f)) if f == "x"
+        ));
+        let a = Args::parse(argv(&["run", "--x", "abc"]), &["run"], &["x"]).unwrap();
+        assert!(matches!(a.get_usize("x", 0), Err(CliError::BadValue(..))));
+    }
+}

@@ -1,0 +1,133 @@
+//! Message batcher — the coordinator's ingestion stage.
+//!
+//! Encoder workers produce per-client share buffers; the batcher moves
+//! them through a bounded queue (backpressure: producers block when the
+//! analyzer side falls behind) and scatters them into per-instance pools
+//! ready for shuffling. This is the vLLM-router-shaped component: accept,
+//! batch, dispatch.
+
+use crate::util::pool::BoundedQueue;
+
+/// A client's complete contribution for one round: `d × m` residues,
+/// row-major by instance (coordinate).
+#[derive(Clone, Debug)]
+pub struct ClientBatch {
+    pub client_stream: u32,
+    /// Flat shares: instance j's messages are `shares[j*m..(j+1)*m]`.
+    pub shares: Vec<u64>,
+}
+
+/// Per-instance message pools being filled for the current round.
+#[derive(Debug)]
+pub struct InstancePools {
+    /// pools[j] holds all users' messages for aggregation instance j.
+    pools: Vec<Vec<u64>>,
+    num_messages: usize,
+}
+
+impl InstancePools {
+    pub fn new(instances: usize, num_messages: usize, expected_clients: usize) -> Self {
+        InstancePools {
+            pools: (0..instances)
+                .map(|_| Vec::with_capacity(expected_clients * num_messages))
+                .collect(),
+            num_messages,
+        }
+    }
+
+    /// Scatter one client's flat batch into the per-instance pools.
+    pub fn absorb(&mut self, batch: &ClientBatch) {
+        let m = self.num_messages;
+        debug_assert_eq!(batch.shares.len(), self.pools.len() * m);
+        for (j, pool) in self.pools.iter_mut().enumerate() {
+            pool.extend_from_slice(&batch.shares[j * m..(j + 1) * m]);
+        }
+    }
+
+    pub fn instances(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn pool(&self, j: usize) -> &[u64] {
+        &self.pools[j]
+    }
+
+    pub fn pools_mut(&mut self) -> &mut [Vec<u64>] {
+        &mut self.pools
+    }
+
+    pub fn total_messages(&self) -> usize {
+        self.pools.iter().map(Vec::len).sum()
+    }
+}
+
+/// Bounded-queue batcher: producers push [`ClientBatch`]es, one collector
+/// drains into [`InstancePools`].
+pub struct Batcher {
+    queue: BoundedQueue<ClientBatch>,
+}
+
+impl Batcher {
+    /// `capacity` = max in-flight client batches before producers block.
+    pub fn new(capacity: usize) -> Self {
+        Batcher { queue: BoundedQueue::new(capacity) }
+    }
+
+    pub fn sender(&self) -> BoundedQueue<ClientBatch> {
+        self.queue.clone()
+    }
+
+    /// Drain until the queue closes, scattering into fresh pools.
+    pub fn collect(&self, instances: usize, num_messages: usize, expected_clients: usize) -> InstancePools {
+        let mut pools = InstancePools::new(instances, num_messages, expected_clients);
+        while let Some(batch) = self.queue.pop() {
+            pools.absorb(&batch);
+        }
+        pools
+    }
+
+    pub fn close(&self) {
+        self.queue.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_scatters_by_instance() {
+        let mut pools = InstancePools::new(2, 3, 4);
+        pools.absorb(&ClientBatch { client_stream: 0, shares: vec![1, 2, 3, 10, 20, 30] });
+        pools.absorb(&ClientBatch { client_stream: 1, shares: vec![4, 5, 6, 40, 50, 60] });
+        assert_eq!(pools.pool(0), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(pools.pool(1), &[10, 20, 30, 40, 50, 60]);
+        assert_eq!(pools.total_messages(), 12);
+    }
+
+    #[test]
+    fn batcher_end_to_end_with_backpressure() {
+        let batcher = Batcher::new(2); // tiny capacity to force blocking
+        let tx = batcher.sender();
+        let producer = std::thread::spawn(move || {
+            for i in 0..50u32 {
+                let ok = tx.push(ClientBatch {
+                    client_stream: i,
+                    shares: vec![i as u64; 4], // 2 instances × m=2
+                });
+                assert!(ok);
+            }
+            tx.close();
+        });
+        let pools = batcher.collect(2, 2, 50);
+        producer.join().unwrap();
+        assert_eq!(pools.total_messages(), 50 * 4);
+        assert_eq!(pools.pool(0).len(), 100);
+        // multiset preserved per instance
+        let mut seen: Vec<u64> = pools.pool(1).to_vec();
+        seen.sort_unstable();
+        let mut want: Vec<u64> = (0..50).flat_map(|i| [i, i]).collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+}

@@ -1,0 +1,430 @@
+//! The aggregation coordinator — the paper's system contribution as a
+//! deployable service loop.
+//!
+//! One round aggregates `d` independent instances (e.g. every coordinate
+//! of a clipped gradient) across `n` registered clients:
+//!
+//! 1. **Encode (parallel)** — each client quantizes its d-vector,
+//!    pre-randomizes (Theorem 1 plans), and cloak-encodes every coordinate
+//!    (Algorithm 1) into a flat d×m share buffer, on the worker pool.
+//! 2. **Ingest** — client batches flow through the bounded-queue
+//!    [`batcher::Batcher`] (backpressure) into per-instance pools, gated
+//!    by the [`round::RoundState`] machine.
+//! 3. **Shuffle** — each instance pool goes through the mixnet
+//!    ([`crate::shuffler::mixnet::Mixnet`]); only the shuffled multiset
+//!    continues (the privacy boundary).
+//! 4. **Analyze** — Algorithm 2 per instance; results + traffic stats +
+//!    latency metrics are returned.
+//!
+//! The same coordinator serves the FL driver (d = padded gradient dim),
+//! the sketch analytics (d = sketch width), and the benches.
+
+pub mod batcher;
+pub mod registry;
+pub mod round;
+
+use std::time::Instant;
+
+use crate::analyzer::Analyzer;
+use crate::encoder::prerandomizer::PreRandomizer;
+use crate::encoder::CloakEncoder;
+use crate::metrics::Registry as MetricsRegistry;
+use crate::params::{NeighborNotion, ProtocolPlan};
+use crate::rng::{derive_seed, ChaCha20Rng};
+use crate::shuffler::{mixnet::Mixnet, Shuffler};
+use crate::transport::{CostModel, Envelope, TrafficStats};
+use crate::util::pool::ThreadPool;
+
+use batcher::{Batcher, ClientBatch, InstancePools};
+use registry::{ClientId, ClientRegistry};
+use round::RoundState;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Protocol parameters (n is the expected client count).
+    pub plan: ProtocolPlan,
+    /// Aggregation instances per round (gradient dim, sketch width, …).
+    pub instances: usize,
+    /// Worker threads for client-side encoding (0 = all cores).
+    pub workers: usize,
+    /// Mixnet hops.
+    pub mixnet_hops: usize,
+    /// Max in-flight client batches before producers block.
+    pub batch_capacity: usize,
+}
+
+impl CoordinatorConfig {
+    pub fn new(plan: ProtocolPlan, instances: usize) -> Self {
+        // §Perf iteration 5: one mixnet hop by default. One uniform
+        // permutation composed with anything IS a uniform permutation
+        // (shuffler::mixnet tests prove it), so a single honest hop is
+        // distributionally identical to a 3-hop chain while cutting the
+        // shuffle cost — the dominant per-message term — by 3×. Multi-hop
+        // remains available for the collusion demos (`mixnet_hops: 3`).
+        CoordinatorConfig { plan, instances, workers: 0, mixnet_hops: 1, batch_capacity: 256 }
+    }
+}
+
+/// Result of one aggregation round.
+#[derive(Clone, Debug)]
+pub struct RoundResult {
+    pub round_id: u64,
+    /// Analyzer estimate of Σ_i x_i[j] for each instance j.
+    pub estimates: Vec<f64>,
+    /// Clients that actually contributed.
+    pub participants: usize,
+    pub traffic: TrafficStats,
+    pub wall_seconds: f64,
+}
+
+/// Per-client view captured for the collusion analyses (Lemmas 12–13):
+/// the messages a colluding client would reveal to the server.
+#[derive(Clone, Debug)]
+pub struct ClientView {
+    pub client: ClientId,
+    /// Flat d×m shares exactly as sent.
+    pub shares: Vec<u64>,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    registry: ClientRegistry,
+    encoder: CloakEncoder,
+    prerandomizer: PreRandomizer,
+    analyzer: Analyzer,
+    pool: ThreadPool,
+    metrics: MetricsRegistry,
+    rounds_run: u64,
+    shuffle_seed: u64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig, seed: u64) -> Self {
+        let plan = &cfg.plan;
+        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
+        let prerandomizer = match plan.notion {
+            NeighborNotion::SingleUser => {
+                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
+            }
+            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
+        };
+        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
+        let mut registry = ClientRegistry::new(seed);
+        registry.register_many(plan.n);
+        let pool = ThreadPool::new(cfg.workers);
+        Coordinator {
+            cfg,
+            registry,
+            encoder,
+            prerandomizer,
+            analyzer,
+            pool,
+            metrics: MetricsRegistry::new(),
+            rounds_run: 0,
+            shuffle_seed: derive_seed(seed, 0x5348_5546),
+        }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn registry(&self) -> &ClientRegistry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut ClientRegistry {
+        &mut self.registry
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Encode one client's d-vector into a flat d×m share buffer.
+    fn encode_client(&self, client: ClientId, round: u64, values: &[f64]) -> ClientBatch {
+        let d = self.cfg.instances;
+        let m = self.cfg.plan.num_messages;
+        debug_assert_eq!(values.len(), d);
+        let mut rng = self.registry.client_rng(client, round);
+        let mut shares = vec![0u64; d * m];
+        for (j, &x) in values.iter().enumerate() {
+            let xbar = self.encoder.codec().encode(x);
+            let (noised, _) = self.prerandomizer.apply(xbar, &mut rng);
+            self.encoder.encode_quantized_into(noised, &mut rng, &mut shares[j * m..(j + 1) * m]);
+        }
+        ClientBatch { client_stream: client, shares }
+    }
+
+    /// Run one full round. `inputs[i]` is client i's d-vector, every
+    /// coordinate in [0, 1]. Returns per-instance sum estimates.
+    pub fn run_round(&mut self, inputs: &[Vec<f64>]) -> anyhow::Result<RoundResult> {
+        self.run_round_inner(inputs, false).map(|(r, _)| r)
+    }
+
+    /// Like [`run_round`], additionally returning every client's sent
+    /// messages — the collusion benches' raw material. Only for small n.
+    pub fn run_round_with_views(
+        &mut self,
+        inputs: &[Vec<f64>],
+    ) -> anyhow::Result<(RoundResult, Vec<ClientView>)> {
+        let (r, v) = self.run_round_inner(inputs, true)?;
+        Ok((r, v.expect("views requested")))
+    }
+
+    fn run_round_inner(
+        &mut self,
+        inputs: &[Vec<f64>],
+        capture_views: bool,
+    ) -> anyhow::Result<(RoundResult, Option<Vec<ClientView>>)> {
+        let n = self.registry.len();
+        anyhow::ensure!(inputs.len() == n, "expected {n} client inputs, got {}", inputs.len());
+        let d = self.cfg.instances;
+        for (i, v) in inputs.iter().enumerate() {
+            anyhow::ensure!(v.len() == d, "client {i}: expected {d} coordinates, got {}", v.len());
+        }
+        let m = self.cfg.plan.num_messages;
+        let round = self.rounds_run;
+        self.rounds_run += 1;
+        let t0 = Instant::now();
+        let mut state = RoundState::new(round, n);
+        state.begin_collect()?;
+
+        // --- 1+2: parallel encode, ingest through the bounded queue ----
+        let batcher = Batcher::new(self.cfg.batch_capacity);
+        let tx = batcher.sender();
+        let (pools, views) = std::thread::scope(|scope| {
+            // Collector runs on this thread's scope; producers fan out on
+            // the pool inside a spawned task so collect() can drain.
+            let this = &*self;
+            let producer = scope.spawn(move || {
+                let views = std::sync::Mutex::new(if capture_views {
+                    Some(Vec::with_capacity(n))
+                } else {
+                    None
+                });
+                let views_ref = &views;
+                let tx_ref = &tx;
+                // §Perf iteration 4: chunk so every worker gets ≥4 slices
+                // even for small cohorts (a fixed chunk of 8 left most of
+                // the pool idle at n=32 — see EXPERIMENTS.md).
+                let chunk = (n / (this.pool.workers() * 4)).max(1);
+                this.pool.map_indexed(n, chunk, move |i| {
+                    let batch = this.encode_client(i as u32, round, &inputs[i]);
+                    if let Some(vs) = views_ref.lock().unwrap().as_mut() {
+                        vs.push(ClientView { client: batch.client_stream, shares: batch.shares.clone() });
+                    }
+                    tx_ref.push(batch);
+                    0u8
+                });
+                tx_ref.close();
+                views.into_inner().unwrap()
+            });
+            let pools = batcher.collect(d, m, n);
+            let mut views = producer.join().expect("producer panicked");
+            if let Some(vs) = views.as_mut() {
+                // Parallel producers push in nondeterministic order; the
+                // collusion analyses index views by client id.
+                vs.sort_by_key(|v| v.client);
+            }
+            (pools, views)
+        });
+
+        // Round bookkeeping: every client contributed.
+        for i in 0..n as u32 {
+            state.record_contribution(i)?;
+        }
+        anyhow::ensure!(pools.total_messages() == n * d * m, "lost messages in ingestion");
+
+        // --- traffic accounting ----------------------------------------
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
+        let mut traffic = TrafficStats::default();
+        for _ in 0..n {
+            traffic.record_batch(d * m, bytes, &cost);
+        }
+
+        // --- 3: shuffle each instance pool ------------------------------
+        state.begin_shuffle()?;
+        let mut pools: InstancePools = pools;
+        let shuffle_seed = derive_seed(self.shuffle_seed, round);
+        let hops = self.cfg.mixnet_hops;
+        self.pool.for_each_chunk(pools.pools_mut(), 1, |j, chunk| {
+            let mut net = Mixnet::honest(derive_seed(shuffle_seed, j as u64), hops);
+            net.shuffle(&mut chunk[0]);
+        });
+
+        // --- 4: analyze --------------------------------------------------
+        state.begin_analyze()?;
+        let estimates: Vec<f64> =
+            (0..d).map(|j| self.analyzer.analyze(pools.pool(j))).collect();
+        state.finish()?;
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.counter("coordinator.rounds").inc();
+        self.metrics.counter("coordinator.messages").add((n * d * m) as u64);
+        self.metrics.histogram("coordinator.round_seconds").record_ns((wall * 1e9) as u64);
+        Ok((
+            RoundResult {
+                round_id: round,
+                estimates,
+                participants: n,
+                traffic,
+                wall_seconds: wall,
+            },
+            views,
+        ))
+    }
+
+    /// Deterministic shuffle RNG access for tests of the privacy boundary.
+    pub fn shuffle_rng(&self, round: u64, instance: u64) -> ChaCha20Rng {
+        ChaCha20Rng::from_seed_and_stream(derive_seed(self.shuffle_seed, round), instance)
+    }
+}
+
+/// Honest-subset raw sum: what the adversary *cannot* explain away when
+/// colluders reveal their messages (Lemma 12's conditioning step) — used
+/// by the collusion bench and tests.
+pub fn honest_residual_sum(
+    ring: crate::arith::modring::ModRing,
+    total_raw: u64,
+    colluder_views: &[ClientView],
+) -> u64 {
+    let mut acc = total_raw;
+    for v in colluder_views {
+        for &s in &v.shares {
+            acc = ring.sub(acc, ring.reduce(s));
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_plan(n: usize) -> ProtocolPlan {
+        ProtocolPlan::custom(
+            n,
+            1.0,
+            1e-6,
+            NeighborNotion::SumPreserving,
+            next_valid_modulus(n as u64 * 1000),
+            100, // k
+            8,   // m
+        )
+    }
+
+    fn next_valid_modulus(nk3: u64) -> u64 {
+        let mut v = 3 * nk3 + 11;
+        if v % 2 == 0 {
+            v += 1;
+        }
+        v
+    }
+
+    #[test]
+    fn round_recovers_exact_sums_per_instance() {
+        let plan = small_plan(20);
+        let k = plan.scale;
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, 3), 42);
+        let inputs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![i as f64 / 20.0, 0.5, 1.0 - i as f64 / 20.0])
+            .collect();
+        let r = c.run_round(&inputs).unwrap();
+        assert_eq!(r.estimates.len(), 3);
+        for j in 0..3 {
+            let truth_bar: u64 =
+                inputs.iter().map(|v| (v[j] * k as f64).floor() as u64).sum();
+            assert!(
+                (r.estimates[j] - truth_bar as f64 / k as f64).abs() < 1e-9,
+                "instance {j}: {} vs {}",
+                r.estimates[j],
+                truth_bar as f64 / k as f64
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let inputs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 10.0]).collect();
+        let mut c1 = Coordinator::new(CoordinatorConfig::new(small_plan(10), 1), 7);
+        let mut c2 = Coordinator::new(CoordinatorConfig::new(small_plan(10), 1), 7);
+        let r1 = c1.run_round(&inputs).unwrap();
+        let r2 = c2.run_round(&inputs).unwrap();
+        assert_eq!(r1.estimates, r2.estimates);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let mut c = Coordinator::new(CoordinatorConfig::new(small_plan(5), 2), 1);
+        assert!(c.run_round(&vec![vec![0.5; 2]; 4]).is_err(), "wrong n");
+        assert!(c.run_round(&vec![vec![0.5; 3]; 5]).is_err(), "wrong d");
+    }
+
+    #[test]
+    fn traffic_matches_fig1_accounting() {
+        let plan = small_plan(10);
+        let m = plan.num_messages as u64;
+        let bits = plan.message_bits();
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, 4), 3);
+        let r = c.run_round(&vec![vec![0.1; 4]; 10]).unwrap();
+        assert_eq!(r.traffic.messages, 10 * 4 * m);
+        assert_eq!(r.traffic.bytes, 10 * 4 * m * Envelope::wire_bytes(bits) as u64);
+    }
+
+    #[test]
+    fn views_capture_exact_messages() {
+        let plan = small_plan(6);
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan.clone(), 2), 9);
+        let inputs: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 / 6.0, 0.25]).collect();
+        let (r, views) = c.run_round_with_views(&inputs).unwrap();
+        assert_eq!(views.len(), 6);
+        // Each view's per-instance share sum must equal the client's
+        // quantized coordinate (Algorithm 1 invariant), and the global
+        // estimate must equal the sum of per-client sums.
+        let ring = crate::arith::modring::ModRing::new(plan.modulus);
+        let m = plan.num_messages;
+        for v in &views {
+            let i = v.client as usize;
+            for j in 0..2 {
+                let share_sum = ring.sum(&v.shares[j * m..(j + 1) * m]);
+                let want = (inputs[i][j] * plan.scale as f64).floor() as u64;
+                assert_eq!(share_sum, want, "client {i} instance {j}");
+            }
+        }
+        let _ = r;
+    }
+
+    #[test]
+    fn honest_residual_subtracts_colluders() {
+        let plan = small_plan(6);
+        let ring = crate::arith::modring::ModRing::new(plan.modulus);
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan.clone(), 1), 11);
+        let inputs: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 / 6.0]).collect();
+        let (_, views) = c.run_round_with_views(&inputs).unwrap();
+        // total raw sum = sum of all shares
+        let total = views
+            .iter()
+            .fold(0u64, |acc, v| ring.add(acc, ring.sum(&v.shares)));
+        // colluders = clients 0..3 reveal their shares
+        let honest = honest_residual_sum(ring, total, &views[..3]);
+        let want: u64 = inputs[3..]
+            .iter()
+            .map(|v| (v[0] * plan.scale as f64).floor() as u64)
+            .sum();
+        assert_eq!(honest, ring.reduce(want));
+    }
+
+    #[test]
+    fn multi_round_fresh_randomness() {
+        let plan = small_plan(4);
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, 1), 13);
+        let inputs: Vec<Vec<f64>> = vec![vec![0.5]; 4];
+        let (_, v1) = c.run_round_with_views(&inputs).unwrap();
+        let (_, v2) = c.run_round_with_views(&inputs).unwrap();
+        assert_ne!(v1[0].shares, v2[0].shares, "round randomness must differ");
+    }
+}

@@ -1,0 +1,196 @@
+//! Round state machine — the lifecycle of one aggregation round.
+//!
+//!   Configured → Collecting → Shuffling → Analyzing → Done
+//!
+//! Transitions are explicit and checked: the coordinator cannot shuffle
+//! before every expected client contributed (or was declared dropped), and
+//! cannot analyze before shuffling — the ordering the privacy argument
+//! requires (the analyzer must only ever see the *shuffled* multiset).
+
+/// Round lifecycle states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Configured,
+    Collecting,
+    Shuffling,
+    Analyzing,
+    Done,
+}
+
+/// Errors from illegal state transitions.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RoundError {
+    #[error("illegal transition from {0:?}")]
+    IllegalTransition(Phase),
+    #[error("client {0} already contributed this round")]
+    DuplicateContribution(u32),
+    #[error("round still waiting on {0} clients")]
+    Incomplete(usize),
+}
+
+/// Tracks one round's progress.
+#[derive(Debug)]
+pub struct RoundState {
+    pub round_id: u64,
+    phase: Phase,
+    expected: usize,
+    contributed: Vec<bool>,
+    received: usize,
+    dropped: usize,
+}
+
+impl RoundState {
+    pub fn new(round_id: u64, expected_clients: usize) -> Self {
+        RoundState {
+            round_id,
+            phase: Phase::Configured,
+            expected: expected_clients,
+            contributed: vec![false; expected_clients],
+            received: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn begin_collect(&mut self) -> Result<(), RoundError> {
+        if self.phase != Phase::Configured {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        self.phase = Phase::Collecting;
+        Ok(())
+    }
+
+    /// Record a contribution from client `idx` (dense round-local index).
+    pub fn record_contribution(&mut self, idx: u32) -> Result<(), RoundError> {
+        if self.phase != Phase::Collecting {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        let slot = self
+            .contributed
+            .get_mut(idx as usize)
+            .ok_or(RoundError::DuplicateContribution(idx))?;
+        if *slot {
+            return Err(RoundError::DuplicateContribution(idx));
+        }
+        *slot = true;
+        self.received += 1;
+        Ok(())
+    }
+
+    /// Declare a client dropped (device offline). The round can complete
+    /// without it; the analyzer's n is adjusted by the caller.
+    pub fn record_drop(&mut self, idx: u32) -> Result<(), RoundError> {
+        if self.phase != Phase::Collecting {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        let slot = self
+            .contributed
+            .get_mut(idx as usize)
+            .ok_or(RoundError::DuplicateContribution(idx))?;
+        if *slot {
+            return Err(RoundError::DuplicateContribution(idx));
+        }
+        *slot = true;
+        self.dropped += 1;
+        Ok(())
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.expected - self.received - self.dropped
+    }
+
+    pub fn participants(&self) -> usize {
+        self.received
+    }
+
+    pub fn begin_shuffle(&mut self) -> Result<(), RoundError> {
+        if self.phase != Phase::Collecting {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        let missing = self.outstanding();
+        if missing > 0 {
+            return Err(RoundError::Incomplete(missing));
+        }
+        self.phase = Phase::Shuffling;
+        Ok(())
+    }
+
+    pub fn begin_analyze(&mut self) -> Result<(), RoundError> {
+        if self.phase != Phase::Shuffling {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        self.phase = Phase::Analyzing;
+        Ok(())
+    }
+
+    pub fn finish(&mut self) -> Result<(), RoundError> {
+        if self.phase != Phase::Analyzing {
+            return Err(RoundError::IllegalTransition(self.phase));
+        }
+        self.phase = Phase::Done;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path() {
+        let mut r = RoundState::new(0, 3);
+        r.begin_collect().unwrap();
+        for i in 0..3 {
+            r.record_contribution(i).unwrap();
+        }
+        r.begin_shuffle().unwrap();
+        r.begin_analyze().unwrap();
+        r.finish().unwrap();
+        assert_eq!(r.phase(), Phase::Done);
+        assert_eq!(r.participants(), 3);
+    }
+
+    #[test]
+    fn cannot_shuffle_incomplete() {
+        let mut r = RoundState::new(0, 2);
+        r.begin_collect().unwrap();
+        r.record_contribution(0).unwrap();
+        assert_eq!(r.begin_shuffle(), Err(RoundError::Incomplete(1)));
+    }
+
+    #[test]
+    fn duplicate_contribution_rejected() {
+        let mut r = RoundState::new(0, 2);
+        r.begin_collect().unwrap();
+        r.record_contribution(1).unwrap();
+        assert_eq!(r.record_contribution(1), Err(RoundError::DuplicateContribution(1)));
+    }
+
+    #[test]
+    fn drops_allow_completion() {
+        let mut r = RoundState::new(0, 3);
+        r.begin_collect().unwrap();
+        r.record_contribution(0).unwrap();
+        r.record_drop(1).unwrap();
+        r.record_contribution(2).unwrap();
+        r.begin_shuffle().unwrap();
+        assert_eq!(r.participants(), 2);
+    }
+
+    #[test]
+    fn cannot_analyze_before_shuffle() {
+        let mut r = RoundState::new(0, 0);
+        r.begin_collect().unwrap();
+        assert!(matches!(r.begin_analyze(), Err(RoundError::IllegalTransition(Phase::Collecting))));
+    }
+
+    #[test]
+    fn cannot_collect_twice() {
+        let mut r = RoundState::new(0, 0);
+        r.begin_collect().unwrap();
+        assert!(matches!(r.begin_collect(), Err(RoundError::IllegalTransition(_))));
+    }
+}

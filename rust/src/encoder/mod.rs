@@ -1,0 +1,221 @@
+//! The Invisibility Cloak encoder — Algorithm 1.
+//!
+//! `E_{N,k,m}(x)`: quantize x̄ = ⌊x·k⌋, draw m−1 uniform shares over Z_N,
+//! and emit the residual share y_m = (x̄ − Σ y_j) mod N, so the multiset
+//! {y_1, …, y_m} sums to x̄ (mod N) while every proper subset is uniform —
+//! the "invisibility cloak" (§1.3).
+//!
+//! Two call styles:
+//! * [`CloakEncoder::encode_scalar`] — one value, fresh Vec (clear code
+//!   path used by the quickstart and the correctness tests).
+//! * [`CloakEncoder::encode_into`] / [`CloakEncoder::encode_vector_into`] —
+//!   flat-buffer hot path used by the coordinator and benches (zero
+//!   allocation per user; see EXPERIMENTS.md §Perf).
+
+pub mod prerandomizer;
+
+use crate::arith::fixed::FixedCodec;
+use crate::arith::modring::ModRing;
+use crate::rng::Rng;
+
+/// Encoder instance for fixed (N, k, m).
+#[derive(Clone, Copy, Debug)]
+pub struct CloakEncoder {
+    ring: ModRing,
+    codec: FixedCodec,
+    num_messages: usize,
+}
+
+impl CloakEncoder {
+    /// Panics if m < 4 (Lemma 1's precondition) or N is even.
+    pub fn new(modulus: u64, scale: u64, num_messages: usize) -> Self {
+        assert!(num_messages >= 4, "Algorithm 1 requires m >= 4, got {num_messages}");
+        CloakEncoder {
+            ring: ModRing::new(modulus),
+            codec: FixedCodec::new(scale),
+            num_messages,
+        }
+    }
+
+    pub fn ring(&self) -> ModRing {
+        self.ring
+    }
+
+    pub fn codec(&self) -> FixedCodec {
+        self.codec
+    }
+
+    pub fn num_messages(&self) -> usize {
+        self.num_messages
+    }
+
+    /// Encode a *pre-quantized* residue x̄ ∈ Z_N into `out` (len m).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf iteration 2): generation and the modular
+    /// fold run in ONE pass — each uniform share is accumulated the moment
+    /// it is drawn (still in registers), and Lemire's rejection threshold
+    /// is hoisted out of the loop. Single traversal, no re-read.
+    #[inline]
+    pub fn encode_quantized_into<R: Rng>(&self, xbar: u64, rng: &mut R, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.num_messages);
+        let m = self.num_messages;
+        let modulus = self.ring.modulus();
+        let threshold = modulus.wrapping_neg() % modulus; // 2^64 mod N
+        let mut acc = 0u64;
+        for slot in &mut out[..m - 1] {
+            let v = loop {
+                let x = rng.next_u64();
+                let wide = (x as u128) * (modulus as u128);
+                if (wide as u64) >= threshold {
+                    break (wide >> 64) as u64;
+                }
+            };
+            *slot = v;
+            acc = self.ring.add(acc, v);
+        }
+        out[m - 1] = self.ring.sub(self.ring.reduce(xbar), acc);
+    }
+
+    /// Encode one real value x ∈ [0,1] into `out` (len m).
+    #[inline]
+    pub fn encode_into<R: Rng>(&self, x: f64, rng: &mut R, out: &mut [u64]) {
+        self.encode_quantized_into(self.codec.encode(x), rng, out);
+    }
+
+    /// Encode one value, allocating the message vector.
+    pub fn encode_scalar<R: Rng>(&self, x: f64, rng: &mut R) -> Vec<u64> {
+        let mut out = vec![0u64; self.num_messages];
+        self.encode_into(x, rng, &mut out);
+        out
+    }
+
+    /// Encode a slice of already-quantized residues into a flat buffer of
+    /// shape (xs.len(), m) row-major — the FL driver's per-coordinate path.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): iteration 1 tried a fused
+    /// whole-matrix `fill_uniform` + second residual pass — slightly
+    /// *slower* (the (d·m) buffer exceeds L1, so pass 2 re-fetched from
+    /// L2; see the iteration log). Row-at-a-time with the single-pass
+    /// scalar encoder keeps each row in registers/L1 and won.
+    pub fn encode_vector_into<R: Rng>(&self, xbars: &[u64], rng: &mut R, out: &mut [u64]) {
+        let m = self.num_messages;
+        debug_assert_eq!(out.len(), xbars.len() * m);
+        for (row, &xbar) in xbars.iter().enumerate() {
+            self.encode_quantized_into(xbar, rng, &mut out[row * m..(row + 1) * m]);
+        }
+    }
+
+    /// The deterministic residual reconstruction used by tests and the
+    /// Pallas cross-check: given the m−1 uniforms, compute share m.
+    pub fn residual_share(&self, xbar: u64, uniforms: &[u64]) -> u64 {
+        debug_assert_eq!(uniforms.len(), self.num_messages - 1);
+        let acc = self.ring.sum(uniforms);
+        self.ring.sub(self.ring.reduce(xbar), acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaCha20Rng, SeedableRng};
+    use crate::util::proptest_lite::{forall, Gen};
+
+    fn sum_mod(ring: ModRing, ys: &[u64]) -> u64 {
+        ring.sum(ys)
+    }
+
+    #[test]
+    fn shares_sum_to_quantized_input() {
+        let enc = CloakEncoder::new(1_000_003, 1000, 8);
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        for &x in &[0.0, 0.1, 0.5, 0.999, 1.0] {
+            let ys = enc.encode_scalar(x, &mut rng);
+            assert_eq!(ys.len(), 8);
+            assert_eq!(sum_mod(enc.ring(), &ys), enc.codec().encode(x));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "m >= 4")]
+    fn rejects_small_m() {
+        CloakEncoder::new(101, 10, 3);
+    }
+
+    #[test]
+    fn prop_share_sum_invariant() {
+        forall("encoder share-sum", 300, |g: &mut Gen| {
+            let modulus = g.odd_u64(11, 1 << 40);
+            let scale = 1 + g.u64_below(1 << 20);
+            let m = g.usize_in(4, 40);
+            let enc = CloakEncoder::new(modulus, scale, m);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.seed());
+            let x = g.f64_unit();
+            let ys = enc.encode_scalar(x, &mut rng);
+            assert_eq!(enc.ring().sum(&ys), enc.ring().reduce(enc.codec().encode(x)));
+            assert!(ys.iter().all(|&y| y < modulus));
+        });
+    }
+
+    #[test]
+    fn prop_vector_encode_invariants() {
+        // The fused vector path consumes the keystream differently from the
+        // scalar path (one bulk fill, see §Perf iteration 1), so outputs
+        // differ bit-for-bit — but every row must satisfy the Algorithm 1
+        // invariants: in-range shares summing to xbar mod N.
+        forall("vector invariants", 50, |g: &mut Gen| {
+            let modulus = g.odd_u64(101, 1 << 32);
+            let m = g.usize_in(4, 16);
+            let enc = CloakEncoder::new(modulus, 100, m);
+            let d = g.usize_in(1, 32);
+            let xbars: Vec<u64> = g.vec_below(modulus, d);
+            let mut flat = vec![0u64; d * m];
+            let mut r1 = ChaCha20Rng::seed_from_u64(g.seed());
+            enc.encode_vector_into(&xbars, &mut r1, &mut flat);
+            for (row, &xb) in xbars.iter().enumerate() {
+                let slice = &flat[row * m..(row + 1) * m];
+                assert!(slice.iter().all(|&y| y < modulus));
+                assert_eq!(enc.ring().sum(slice), xb, "row {row}");
+            }
+        });
+    }
+
+    #[test]
+    fn residual_share_matches_encode() {
+        let enc = CloakEncoder::new(65537, 100, 6);
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let mut out = vec![0u64; 6];
+        enc.encode_quantized_into(1234, &mut rng, &mut out);
+        assert_eq!(enc.residual_share(1234, &out[..5]), out[5]);
+    }
+
+    #[test]
+    fn first_m_minus_1_shares_are_uniformish() {
+        // The invisibility property: marginals of the uniform shares should
+        // cover the ring; mean ≈ (N−1)/2.
+        let n = 1_000_003u64;
+        let enc = CloakEncoder::new(n, 1000, 8);
+        let mut rng = ChaCha20Rng::seed_from_u64(7);
+        let mut sum = 0f64;
+        let mut count = 0usize;
+        for _ in 0..2000 {
+            let ys = enc.encode_scalar(0.0, &mut rng); // worst case: zero input
+            for &y in &ys[..7] {
+                sum += y as f64;
+                count += 1;
+            }
+        }
+        let mean = sum / count as f64;
+        let want = (n - 1) as f64 / 2.0;
+        let sd = n as f64 / (12f64).sqrt() / (count as f64).sqrt();
+        assert!((mean - want).abs() < 6.0 * sd, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn two_encodings_differ() {
+        let enc = CloakEncoder::new(65537, 100, 6);
+        let mut rng = ChaCha20Rng::seed_from_u64(9);
+        let a = enc.encode_scalar(0.5, &mut rng);
+        let b = enc.encode_scalar(0.5, &mut rng);
+        assert_ne!(a, b, "fresh randomness per encoding");
+    }
+}

@@ -1,0 +1,137 @@
+//! The pre-randomizer for single-user DP (§2.4, Theorem 1).
+//!
+//! Before encoding, each user independently adds noise to its quantized
+//! input with probability q; the noise is a truncated discrete Laplace
+//! draw w ~ D_{N,p} (Definition 3), applied additively in the ring:
+//! x̄ ← (x̄ + w) mod N. With probability ≥ 1 − e^{-qn} at least one user
+//! noised (Lemma 11), which yields the (ε, δ) guarantee.
+//!
+//! The added noise is *not* zero-sum, so the analyzer's estimate carries
+//! the noise of ~qn Laplace terms — the O((1/ε)√log(1/δ)) error of Thm 1.
+
+use crate::arith::modring::ModRing;
+use crate::privacy::dlaplace::TruncatedDiscreteLaplace;
+use crate::rng::Rng;
+
+/// Per-user pre-randomization of the quantized input.
+#[derive(Clone, Debug)]
+pub struct PreRandomizer {
+    ring: ModRing,
+    /// Participation probability q.
+    q: f64,
+    /// Noise distribution D_{N,p}.
+    dist: TruncatedDiscreteLaplace,
+}
+
+impl PreRandomizer {
+    pub fn new(modulus: u64, p: f64, q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "q must be in [0,1], got {q}");
+        PreRandomizer {
+            ring: ModRing::new(modulus),
+            q,
+            dist: TruncatedDiscreteLaplace::new(modulus, p),
+        }
+    }
+
+    /// A pass-through randomizer (Theorem 2 regime: no noise).
+    pub fn disabled(modulus: u64) -> Self {
+        PreRandomizer { ring: ModRing::new(modulus), q: 0.0, dist: TruncatedDiscreteLaplace::new(modulus, 0.5) }
+    }
+
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.q > 0.0
+    }
+
+    /// Apply to a quantized residue: returns (noised value, applied noise).
+    /// The noise is reported so tests/benches can account for it exactly.
+    pub fn apply<R: Rng>(&self, xbar: u64, rng: &mut R) -> (u64, i64) {
+        if self.q > 0.0 && rng.gen_bool(self.q) {
+            let w = self.dist.sample(rng);
+            (self.ring.add(self.ring.reduce(xbar), self.ring.from_i64(w)), w)
+        } else {
+            (self.ring.reduce(xbar), 0)
+        }
+    }
+
+    /// Expected standard deviation of the *total* noise over n users, in
+    /// ring units (the benches plot this next to the measured error).
+    pub fn total_noise_std(&self, n: usize) -> f64 {
+        (self.q * n as f64).sqrt() * self.dist.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaCha20Rng, SeedableRng};
+
+    #[test]
+    fn disabled_is_identity() {
+        let pr = PreRandomizer::disabled(1_000_003);
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        for xbar in [0u64, 17, 999_999] {
+            let (y, w) = pr.apply(xbar, &mut rng);
+            assert_eq!(y, xbar);
+            assert_eq!(w, 0);
+        }
+    }
+
+    #[test]
+    fn q_one_always_noises() {
+        let pr = PreRandomizer::new(1_000_003, 0.9, 1.0);
+        let mut rng = ChaCha20Rng::seed_from_u64(2);
+        let mut nonzero = 0;
+        for _ in 0..200 {
+            let (_, w) = pr.apply(100, &mut rng);
+            if w != 0 {
+                nonzero += 1;
+            }
+        }
+        // p=0.9 => P(w=0) = (1-p)/(1+p-...) ≈ 0.053, so ~190/200 nonzero
+        assert!(nonzero > 150, "{nonzero}");
+    }
+
+    #[test]
+    fn participation_rate_matches_q() {
+        // Track how often the value changes when noise *would* be visible.
+        let pr = PreRandomizer::new(65537, 0.99, 0.3);
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let trials = 20_000;
+        let mut applied = 0;
+        for _ in 0..trials {
+            let (_, w) = pr.apply(0, &mut rng);
+            if w != 0 {
+                applied += 1;
+            }
+        }
+        // q=0.3 minus the small P(w=0 | applied) correction
+        let rate = applied as f64 / trials as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn noised_value_stays_in_ring() {
+        let pr = PreRandomizer::new(101, 0.999, 1.0);
+        let mut rng = ChaCha20Rng::seed_from_u64(4);
+        for xbar in 0..101u64 {
+            let (y, _) = pr.apply(xbar, &mut rng);
+            assert!(y < 101);
+        }
+    }
+
+    #[test]
+    fn noise_consistent_with_report() {
+        // (xbar + w) mod N must equal the returned value.
+        let ring = ModRing::new(65537);
+        let pr = PreRandomizer::new(65537, 0.99, 1.0);
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        for _ in 0..500 {
+            let (y, w) = pr.apply(1234, &mut rng);
+            assert_eq!(y, ring.add(1234, ring.from_i64(w)));
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Synthetic federated dataset — a Gaussian-mixture classification task
+//! partitioned across clients (non-IID by default: each client's mixture
+//! weights are Dirichlet-ish skewed, the realistic federated regime).
+
+use crate::rng::{derive_seed, ChaCha20Rng, Rng, SeedableRng, SplitMix64};
+
+/// A labelled batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Row-major features, shape (len, input_dim).
+    pub x: Vec<f32>,
+    /// Labels in [0, classes).
+    pub y: Vec<i32>,
+}
+
+/// Synthetic Gaussian-mixture task shared by all clients.
+#[derive(Clone, Debug)]
+pub struct SyntheticTask {
+    pub input_dim: usize,
+    pub classes: usize,
+    /// Per-class mean vectors.
+    centers: Vec<Vec<f32>>,
+    /// Within-class noise scale.
+    sigma: f32,
+    seed: u64,
+}
+
+impl SyntheticTask {
+    pub fn new(input_dim: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::seed_from_u64(derive_seed(seed, 0xDA7A));
+        // well-separated unit-norm centers scaled by 2
+        let centers = (0..classes)
+            .map(|_| {
+                let v: Vec<f32> =
+                    (0..input_dim).map(|_| (rng.gen_f64() as f32 - 0.5) * 2.0).collect();
+                let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt().max(1e-6);
+                v.iter().map(|a| 2.0 * a / norm).collect()
+            })
+            .collect();
+        SyntheticTask { input_dim, classes, centers, sigma: 0.6, seed }
+    }
+
+    /// Gaussian-ish noise via sum of uniforms (Irwin–Hall, sd≈1).
+    fn noise<R: Rng>(rng: &mut R) -> f32 {
+        let s: f64 = (0..12).map(|_| rng.gen_f64()).sum::<f64>() - 6.0;
+        s as f32
+    }
+
+    /// Sample one labelled example given a label.
+    fn sample_example<R: Rng>(&self, label: usize, rng: &mut R) -> Vec<f32> {
+        self.centers[label]
+            .iter()
+            .map(|&c| c + self.sigma * Self::noise(rng))
+            .collect()
+    }
+
+    /// A client's local batch. Non-IID: client i is biased toward classes
+    /// (i mod classes) and (i+1 mod classes) with 70% mass.
+    pub fn client_batch(&self, client: usize, round: u64, len: usize) -> Batch {
+        let mut rng = ChaCha20Rng::from_seed_and_stream(
+            derive_seed(self.seed, 0xC11E_0000 + client as u64),
+            round,
+        );
+        let mut x = Vec::with_capacity(len * self.input_dim);
+        let mut y = Vec::with_capacity(len);
+        let fav_a = client % self.classes;
+        let fav_b = (client + 1) % self.classes;
+        for _ in 0..len {
+            let label = if rng.gen_bool(0.7) {
+                if rng.gen_bool(0.5) {
+                    fav_a
+                } else {
+                    fav_b
+                }
+            } else {
+                rng.gen_range(self.classes as u64) as usize
+            };
+            x.extend(self.sample_example(label, &mut rng));
+            y.push(label as i32);
+        }
+        Batch { x, y }
+    }
+
+    /// An IID held-out evaluation batch (same for every caller).
+    pub fn eval_batch(&self, len: usize) -> Batch {
+        let mut rng = ChaCha20Rng::from_seed_and_stream(derive_seed(self.seed, 0xE7A1), 0);
+        let mut x = Vec::with_capacity(len * self.input_dim);
+        let mut y = Vec::with_capacity(len);
+        for _ in 0..len {
+            let label = rng.gen_range(self.classes as u64) as usize;
+            x.extend(self.sample_example(label, &mut rng));
+            y.push(label as i32);
+        }
+        Batch { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let t = SyntheticTask::new(8, 4, 1);
+        let b = t.client_batch(0, 0, 16);
+        assert_eq!(b.x.len(), 16 * 8);
+        assert_eq!(b.y.len(), 16);
+        assert!(b.y.iter().all(|&l| (0..4).contains(&l)));
+    }
+
+    #[test]
+    fn deterministic_per_client_round() {
+        let t = SyntheticTask::new(8, 4, 2);
+        let a = t.client_batch(3, 5, 8);
+        let b = t.client_batch(3, 5, 8);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = t.client_batch(3, 6, 8);
+        assert_ne!(a.x, c.x, "fresh data each round");
+    }
+
+    #[test]
+    fn non_iid_bias_visible() {
+        let t = SyntheticTask::new(8, 4, 3);
+        let b = t.client_batch(0, 0, 400);
+        let fav = b.y.iter().filter(|&&l| l == 0 || l == 1).count();
+        assert!(fav > 250, "favored classes should dominate: {fav}/400");
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-center classification on eval data should beat chance by far
+        let t = SyntheticTask::new(16, 4, 4);
+        let b = t.eval_batch(200);
+        let mut correct = 0;
+        for i in 0..200 {
+            let x = &b.x[i * 16..(i + 1) * 16];
+            let mut best = (f32::MAX, 0usize);
+            for (c, center) in t.centers.iter().enumerate() {
+                let d: f32 = x.iter().zip(center).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == b.y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 120, "separability: {correct}/200");
+    }
+}

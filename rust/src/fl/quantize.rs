@@ -1,0 +1,134 @@
+//! Gradient ↔ protocol-domain codec for federated aggregation.
+//!
+//! The L2 artifact clips the gradient to ‖g‖₂ ≤ 1, so every coordinate is
+//! in [−1, 1]. [`GradientCodec`] maps coordinates affinely into [0, 1],
+//! pads to the coordinator's instance width, and decodes the aggregated
+//! per-coordinate sums back into the *mean* gradient.
+
+use crate::arith::fixed::SymmetricCodec;
+
+/// Clip/quantize/pad codec between f32 gradients and protocol inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct GradientCodec {
+    codec: SymmetricCodec,
+    /// True gradient dimensionality (before padding).
+    dim: usize,
+    /// Padded width (multiple the coordinator aggregates).
+    padded: usize,
+}
+
+impl GradientCodec {
+    pub fn new(dim: usize, pad_to: usize, scale: u64, clip: f64) -> Self {
+        assert!(pad_to >= 1);
+        let padded = dim.div_ceil(pad_to) * pad_to;
+        GradientCodec { codec: SymmetricCodec::new(scale, clip), dim, padded }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn padded(&self) -> usize {
+        self.padded
+    }
+
+    /// Gradient (len `dim`) → protocol coordinates in [0,1] (len `padded`).
+    /// Padding encodes exact zeros, which decode away deterministically.
+    pub fn encode(&self, grad: &[f32]) -> Vec<f64> {
+        assert_eq!(grad.len(), self.dim);
+        let clip = self.codec.clip();
+        let mut out = Vec::with_capacity(self.padded);
+        for &g in grad {
+            let x = (g as f64).clamp(-clip, clip);
+            out.push((x + clip) / (2.0 * clip));
+        }
+        out.resize(self.padded, 0.5); // 0.5 encodes the value 0
+        out
+    }
+
+    /// Aggregated per-coordinate sums (len `padded`) → mean gradient
+    /// (len `dim`), given the number of participants.
+    pub fn decode_mean(&self, sums: &[f64], participants: usize) -> Vec<f32> {
+        assert_eq!(sums.len(), self.padded);
+        assert!(participants > 0);
+        let clip = self.codec.clip();
+        let n = participants as f64;
+        sums[..self.dim]
+            .iter()
+            .map(|&s| ((2.0 * clip * s - n * clip) / n) as f32)
+            .collect()
+    }
+
+    /// Worst-case per-coordinate quantization error of the decoded mean.
+    pub fn mean_error_bound(&self, participants: usize) -> f64 {
+        self.codec.aggregate_error_bound(participants) / participants as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, Gen};
+
+    #[test]
+    fn roundtrip_single_client() {
+        let c = GradientCodec::new(5, 8, 1 << 20, 1.0);
+        assert_eq!(c.padded(), 8);
+        let grad = vec![0.5f32, -1.0, 0.0, 0.25, 1.0];
+        let enc = c.encode(&grad);
+        assert_eq!(enc.len(), 8);
+        // simulate exact aggregation with one client: sums = enc
+        let dec = c.decode_mean(&enc, 1);
+        for (a, b) in grad.iter().zip(&dec) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prop_mean_of_many_clients() {
+        forall("grad codec mean", 30, |g: &mut Gen| {
+            let dim = g.usize_in(1, 20);
+            let n = g.usize_in(1, 12);
+            let c = GradientCodec::new(dim, 8, 1 << 20, 1.0);
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| (g.f64_unit() * 2.0 - 1.0) as f32).collect())
+                .collect();
+            // exact sum of encoded coordinates
+            let mut sums = vec![0.0f64; c.padded()];
+            for gr in &grads {
+                for (s, e) in sums.iter_mut().zip(c.encode(gr)) {
+                    *s += e;
+                }
+            }
+            let mean = c.decode_mean(&sums, n);
+            for j in 0..dim {
+                let want: f64 =
+                    grads.iter().map(|gr| gr[j] as f64).sum::<f64>() / n as f64;
+                assert!((mean[j] as f64 - want).abs() < 1e-4, "{} vs {}", mean[j], want);
+            }
+        });
+    }
+
+    #[test]
+    fn padding_decodes_to_zero_mean_contribution() {
+        let c = GradientCodec::new(3, 8, 1 << 16, 1.0);
+        let enc = c.encode(&[0.0, 0.0, 0.0]);
+        // all padding cells encode 0.5
+        assert!(enc[3..].iter().all(|&e| (e - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let c = GradientCodec::new(2, 2, 1 << 16, 1.0);
+        let enc = c.encode(&[5.0, -7.0]);
+        assert!((enc[0] - 1.0).abs() < 1e-12);
+        assert!(enc[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_bound_shrinks_with_scale() {
+        let lo = GradientCodec::new(4, 4, 1 << 10, 1.0).mean_error_bound(10);
+        let hi = GradientCodec::new(4, 4, 1 << 20, 1.0).mean_error_bound(10);
+        assert!(hi < lo / 500.0);
+    }
+}

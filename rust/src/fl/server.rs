@@ -1,0 +1,79 @@
+//! Server-side model state: flat parameter vector + SGD with momentum.
+//! The server only ever sees the privately-aggregated mean gradient.
+
+/// SGD-with-momentum server optimizer over a flat f32 parameter vector.
+#[derive(Clone, Debug)]
+pub struct ServerState {
+    params: Vec<f32>,
+    velocity: Vec<f32>,
+    pub lr: f32,
+    pub momentum: f32,
+    steps: u64,
+}
+
+impl ServerState {
+    pub fn new(params: Vec<f32>, lr: f32, momentum: f32) -> Self {
+        let velocity = vec![0.0; params.len()];
+        ServerState { params, velocity, lr, momentum, steps: 0 }
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Apply one aggregated mean gradient.
+    pub fn step(&mut self, mean_grad: &[f32]) {
+        assert_eq!(mean_grad.len(), self.params.len());
+        for ((p, v), &g) in self.params.iter_mut().zip(&mut self.velocity).zip(mean_grad) {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+        self.steps += 1;
+    }
+
+    /// Parameter L2 norm (training telemetry).
+    pub fn param_norm(&self) -> f32 {
+        self.params.iter().map(|p| p * p).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // f(p) = 0.5*||p||²; grad = p. Plain SGD must decay the norm.
+        let mut s = ServerState::new(vec![1.0, -2.0, 3.0], 0.1, 0.0);
+        for _ in 0..100 {
+            let g = s.params().to_vec();
+            s.step(&g);
+        }
+        assert!(s.param_norm() < 0.01, "{}", s.param_norm());
+        assert_eq!(s.steps(), 100);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mom: f32| {
+            let mut s = ServerState::new(vec![1.0; 8], 0.02, mom);
+            for _ in 0..50 {
+                let g = s.params().to_vec();
+                s.step(&g);
+            }
+            s.param_norm()
+        };
+        assert!(run(0.9) < run(0.0), "momentum should converge faster here");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut s = ServerState::new(vec![0.0; 4], 0.1, 0.0);
+        s.step(&[1.0; 3]);
+    }
+}

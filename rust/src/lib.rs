@@ -1,0 +1,66 @@
+//! # cloak-agg
+//!
+//! Production-quality reproduction of **"Scalable and Differentially Private
+//! Distributed Aggregation in the Shuffled Model"** (Ghazi, Pagh, Velingker,
+//! 2019) — the *Invisibility Cloak* protocol — as a three-layer
+//! Rust + JAX + Pallas stack (AOT via xla/PJRT).
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordination system: encoder / pre-randomizer
+//!   (Algorithm 1 + §2.4), shuffler (mixnet simulation), analyzer
+//!   (Algorithm 2), round coordinator with batching and backpressure,
+//!   parameter planner for Theorems 1–2, privacy accountant, baselines
+//!   (Cheu et al., Balle et al., Bonawitz et al., local/central DP), and
+//!   linear-sketch analytics built on secure aggregation (§1.2).
+//! * **L2/L1 (build-time Python)** — the federated-learning workload (JAX
+//!   MLP fwd/bwd) and the Pallas cloak/modsum kernels, AOT-lowered to HLO
+//!   text in `artifacts/` and executed from [`runtime`] via PJRT. Python is
+//!   never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cloak_agg::prelude::*;
+//!
+//! // Plan protocol parameters for n users at (eps, delta), Theorem 1 regime.
+//! let plan = ProtocolPlan::theorem1(1_000, 1.0, 1e-6).unwrap();
+//! let mut pipeline = Pipeline::new(plan.clone(), 42);
+//! let xs: Vec<f64> = (0..1_000).map(|i| (i % 7) as f64 / 7.0).collect();
+//! let est = pipeline.aggregate(&xs).unwrap();
+//! let truth: f64 = xs.iter().sum();
+//! assert!((est - truth).abs() < 40.0);
+//! ```
+
+pub mod analyzer;
+pub mod arith;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod encoder;
+pub mod fl;
+pub mod metrics;
+pub mod params;
+pub mod pipeline;
+pub mod privacy;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod shuffler;
+pub mod sketch;
+pub mod transport;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::analyzer::Analyzer;
+    pub use crate::arith::fixed::FixedCodec;
+    pub use crate::arith::modring::ModRing;
+    pub use crate::encoder::prerandomizer::PreRandomizer;
+    pub use crate::encoder::CloakEncoder;
+    pub use crate::params::{NeighborNotion, ProtocolPlan};
+    pub use crate::pipeline::Pipeline;
+    pub use crate::privacy::accountant::PrivacyAccountant;
+    pub use crate::rng::{ChaCha20Rng, Rng, SeedableRng};
+    pub use crate::shuffler::{FisherYates, Shuffler};
+}

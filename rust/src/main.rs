@@ -1,0 +1,212 @@
+//! cloak-agg leader binary.
+//!
+//! Subcommands:
+//!   aggregate  — one-shot private aggregation of synthetic inputs
+//!   fl         — federated training (requires `make artifacts`)
+//!   plan       — print the protocol plan for (n, eps, delta)
+//!   smoke      — load artifacts, run every executable once, verify
+//!
+//! Examples:
+//!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
+//!   cloak-agg fl --clients 16 --rounds 5 --artifacts artifacts
+//!   cloak-agg plan --n 100000 --eps 0.5 --delta 1e-8
+
+use cloak_agg::cli::Args;
+use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::pipeline::Pipeline;
+use cloak_agg::report::{fmt_f, Table};
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use cloak_agg::runtime::Runtime;
+
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke> [--flag value]...
+  aggregate: --n --eps --delta --seed --notion (1|2)
+  fl:        --clients --rounds --eps --delta --artifacts --seed
+  plan:      --n --eps --delta
+  smoke:     --artifacts";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["aggregate", "fl", "plan", "smoke"],
+        &[
+            "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts",
+        ],
+    )?;
+    match args.command.as_str() {
+        "aggregate" => cmd_aggregate(&args),
+        "fl" => cmd_fl(&args),
+        "plan" => cmd_plan(&args),
+        "smoke" => cmd_smoke(&args),
+        _ => unreachable!(),
+    }
+}
+
+fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1000)?;
+    let eps = args.get_f64("eps", 1.0)?;
+    let delta = args.get_f64("delta", 1e-6)?;
+    let seed = args.get_u64("seed", 42)?;
+    let notion = args.get_usize("notion", 1)?;
+    let plan = match notion {
+        1 => ProtocolPlan::theorem1(n, eps, delta)?,
+        2 => ProtocolPlan::theorem2(n, eps, delta)?,
+        other => anyhow::bail!("--notion must be 1 or 2, got {other}"),
+    };
+    println!(
+        "plan: n={n} eps={eps} delta={delta} N={} k={} m={} bits/msg={}",
+        plan.modulus,
+        plan.scale,
+        plan.num_messages,
+        plan.message_bits()
+    );
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let xs: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+    let truth: f64 = xs.iter().sum();
+    let mut pipeline = Pipeline::new(plan, seed);
+    let est = pipeline.aggregate(&xs)?;
+    println!("true sum  = {truth:.4}");
+    println!("estimate  = {est:.4}");
+    println!("abs error = {:.6}", (est - truth).abs());
+    println!(
+        "traffic: {} messages, {} bytes ({} bytes/user)",
+        pipeline.last_traffic.messages,
+        pipeline.last_traffic.bytes,
+        fmt_f(pipeline.last_traffic.bytes_per_user(n))
+    );
+    Ok(())
+}
+
+fn cmd_fl(args: &Args) -> anyhow::Result<()> {
+    let clients = args.get_usize("clients", 16)?;
+    let rounds = args.get_usize("rounds", 5)?;
+    let eps = args.get_f64("eps", 1.0)?;
+    let delta = args.get_f64("delta", 1e-6)?;
+    let seed = args.get_u64("seed", 42)?;
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let rt = Runtime::load(&artifacts)?;
+    let mf = rt.manifest.clone();
+    println!(
+        "runtime up: model d={} batch={} kernel N={} m={}",
+        mf.param_count, mf.batch_size, mf.modulus, mf.num_messages
+    );
+    let task = SyntheticTask::new(mf.input_dim, mf.num_classes, seed);
+    let init = init_params(&mf, seed);
+    let cfg = FlConfig {
+        clients,
+        rounds,
+        eps_round: eps,
+        delta_round: delta,
+        batch_size: mf.batch_size,
+        pad_to: mf.encode_dim,
+        ..FlConfig::default()
+    };
+    let mut driver = FlDriver::new(cfg, &rt, init, seed)?;
+    let mut table = Table::new("federated training", &["round", "loss", "|g|", "eps", "secs"]);
+    for r in 0..rounds {
+        let batches: Vec<_> =
+            (0..clients).map(|c| task.client_batch(c, r as u64, mf.batch_size)).collect();
+        let log = driver.run_round(&batches)?;
+        table.row(&[
+            r.to_string(),
+            format!("{:.4}", log.mean_loss),
+            format!("{:.4}", log.grad_norm),
+            format!("{:.3}", log.eps_spent),
+            format!("{:.2}", log.wall_seconds),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn init_params(mf: &cloak_agg::runtime::Manifest, seed: u64) -> Vec<f32> {
+    // He-ish init matching python/compile/model.py's shapes.
+    let mut rng = SplitMix64::seed_from_u64(seed ^ 0x1217);
+    let mut params = Vec::with_capacity(mf.param_count);
+    let scale1 = (2.0 / mf.input_dim as f64).sqrt();
+    for _ in 0..mf.input_dim * mf.hidden_dim {
+        params.push(((rng.gen_f64() * 2.0 - 1.0) * scale1) as f32);
+    }
+    params.extend(std::iter::repeat(0f32).take(mf.hidden_dim));
+    let scale2 = (2.0 / mf.hidden_dim as f64).sqrt();
+    for _ in 0..mf.hidden_dim * mf.num_classes {
+        params.push(((rng.gen_f64() * 2.0 - 1.0) * scale2) as f32);
+    }
+    params.extend(std::iter::repeat(0f32).take(mf.num_classes));
+    params
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1000)?;
+    let eps = args.get_f64("eps", 1.0)?;
+    let delta = args.get_f64("delta", 1e-6)?;
+    let mut table = Table::new(
+        "protocol plans",
+        &["notion", "N", "k", "m", "bits/msg", "bits/user", "err bound", "feasible"],
+    );
+    for (name, plan) in [
+        ("Thm 1 (single-user)", ProtocolPlan::theorem1(n, eps, delta)?),
+        ("Thm 2 (sum-preserving)", ProtocolPlan::theorem2(n, eps, delta)?),
+    ] {
+        table.row(&[
+            name.into(),
+            plan.modulus.to_string(),
+            plan.scale.to_string(),
+            plan.num_messages.to_string(),
+            plan.message_bits().to_string(),
+            plan.bits_per_user().to_string(),
+            fmt_f(plan.error_bound()),
+            plan.check_feasibility().map(|_| "yes".to_string()).unwrap_or_else(|e| e),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let rt = Runtime::load(&artifacts)?;
+    let mf = rt.manifest.clone();
+    println!("manifest ok: N={} k={} m={}", mf.modulus, mf.scale, mf.num_messages);
+
+    // cloak_encode: rows must sum to xbar mod N
+    let xbar: Vec<i32> = (0..mf.encode_dim as i32).collect();
+    let shares = rt.cloak_encode(7, &xbar)?;
+    let m = mf.num_messages;
+    for (j, &xb) in xbar.iter().enumerate() {
+        let s: i64 = shares[j * m..(j + 1) * m].iter().map(|&v| v as i64).sum();
+        anyhow::ensure!(
+            s.rem_euclid(mf.modulus as i64) == xb as i64,
+            "encode row {j} does not reconstruct"
+        );
+    }
+    println!("cloak_encode ok ({} shares)", shares.len());
+
+    // cloak_modsum
+    let rows = mf.modsum_rows;
+    let y: Vec<i32> = (0..rows * mf.encode_dim).map(|i| (i % 1000) as i32).collect();
+    let sums = rt.cloak_modsum(&y)?;
+    println!("cloak_modsum ok ({} columns)", sums.len());
+
+    // fl_grad + fl_predict
+    let params = init_params(&mf, 1);
+    let x: Vec<f32> = (0..mf.batch_size * mf.input_dim).map(|i| (i % 7) as f32 / 7.0).collect();
+    let yl: Vec<i32> = (0..mf.batch_size).map(|i| (i % mf.num_classes) as i32).collect();
+    let (loss, grad) = rt.fl_grad(&params, &x, &yl)?;
+    anyhow::ensure!(loss.is_finite() && grad.len() == mf.param_count);
+    let norm: f32 = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+    anyhow::ensure!(norm <= 1.0 + 1e-4, "clipped grad norm {norm}");
+    let preds = rt.fl_predict(&params, &x)?;
+    anyhow::ensure!(preds.len() == mf.batch_size);
+    println!("fl_grad ok (loss={loss:.4}, |g|={norm:.4}); fl_predict ok");
+    println!("smoke: ALL OK");
+    Ok(())
+}

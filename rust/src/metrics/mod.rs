@@ -1,0 +1,183 @@
+//! Metrics registry: counters, gauges and latency histograms for the
+//! coordinator and benches. Lock-free on the hot path (atomics); the
+//! histogram uses fixed log-spaced buckets so recording is one atomic add.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with log2-spaced nanosecond buckets covering
+/// 1 ns … ~18 s (64 buckets).
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        let bucket = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the bucket histogram (upper bucket edge).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Named metrics registry shared across components.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: std::sync::Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: std::sync::Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.counters.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::default())).clone()
+    }
+
+    /// Render all metrics as a text block (the CLI's `metrics` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "histogram {name} count={} mean={:.0}ns p50<={}ns p99<={}ns\n",
+                h.count(),
+                h.mean_ns(),
+                h.quantile_ns(0.5),
+                h.quantile_ns(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("x").get(), 5);
+        assert_eq!(r.counter("y").get(), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_ns() > 0.0);
+        assert!(h.quantile_ns(0.5) <= h.quantile_ns(0.99));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn render_contains_metrics() {
+        let r = Registry::new();
+        r.counter("rounds").add(3);
+        r.histogram("lat").record_ns(1000);
+        let text = r.render();
+        assert!(text.contains("counter rounds 3"));
+        assert!(text.contains("histogram lat count=1"));
+    }
+
+    #[test]
+    fn registry_shared_across_clones() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("shared").inc();
+        assert_eq!(r2.counter("shared").get(), 1);
+    }
+}

@@ -1,0 +1,194 @@
+//! Single-shot aggregation pipeline — the library's simplest entry point.
+//!
+//! Wires Algorithm 1 (+ the §2.4 pre-randomizer when the plan is a
+//! Theorem 1 plan), the shuffler and Algorithm 2 into one call:
+//!
+//! ```
+//! use cloak_agg::prelude::*;
+//! let plan = ProtocolPlan::theorem2(50, 1.0, 1e-6).unwrap();
+//! let mut p = Pipeline::new(plan, 7);
+//! let xs = vec![0.5; 50];
+//! let est = p.aggregate(&xs).unwrap();
+//! assert!((est - 25.0).abs() <= 50.0 / 500.0); // n/k rounding only
+//! ```
+//!
+//! The full streaming system (many aggregation instances, batching,
+//! backpressure, PJRT execution) lives in [`crate::coordinator`]; this type
+//! is the reference implementation the integration tests compare it to.
+
+use crate::analyzer::Analyzer;
+use crate::encoder::prerandomizer::PreRandomizer;
+use crate::encoder::CloakEncoder;
+use crate::params::{NeighborNotion, ProtocolPlan};
+use crate::rng::{derive_seed, ChaCha20Rng};
+use crate::shuffler::{FisherYates, Shuffler};
+use crate::transport::{CostModel, Envelope, TrafficStats};
+
+/// One-shot scalar aggregation under a [`ProtocolPlan`].
+pub struct Pipeline {
+    plan: ProtocolPlan,
+    encoder: CloakEncoder,
+    prerandomizer: PreRandomizer,
+    analyzer: Analyzer,
+    seed: u64,
+    rounds_run: u64,
+    /// Communication accounting for the last round.
+    pub last_traffic: TrafficStats,
+}
+
+/// Pipeline failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("expected {expected} inputs (plan n), got {got}")]
+    WrongInputCount { expected: usize, got: usize },
+}
+
+impl Pipeline {
+    pub fn new(plan: ProtocolPlan, seed: u64) -> Self {
+        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
+        let prerandomizer = match plan.notion {
+            NeighborNotion::SingleUser => {
+                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
+            }
+            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
+        };
+        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
+        Pipeline {
+            plan,
+            encoder,
+            prerandomizer,
+            analyzer,
+            seed,
+            rounds_run: 0,
+            last_traffic: TrafficStats::default(),
+        }
+    }
+
+    pub fn plan(&self) -> &ProtocolPlan {
+        &self.plan
+    }
+
+    /// Run one aggregation round over `xs` (one value in [0,1] per user).
+    /// Returns the analyzer's estimate of Σ x_i.
+    pub fn aggregate(&mut self, xs: &[f64]) -> Result<f64, PipelineError> {
+        if xs.len() != self.plan.n {
+            return Err(PipelineError::WrongInputCount { expected: self.plan.n, got: xs.len() });
+        }
+        let m = self.plan.num_messages;
+        let round = self.rounds_run;
+        self.rounds_run += 1;
+
+        // --- user side: pre-randomize + encode -------------------------
+        let mut messages: Vec<u64> = vec![0; xs.len() * m];
+        let mut traffic = TrafficStats::default();
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.plan.message_bits());
+        for (i, &x) in xs.iter().enumerate() {
+            // Every user gets an independent ChaCha stream derived from the
+            // pipeline seed — the same seed-splitting protocol the
+            // coordinator and the Pallas cross-check use.
+            let mut rng =
+                ChaCha20Rng::from_seed_and_stream(derive_seed(self.seed, round), i as u64);
+            let xbar = self.encoder.codec().encode(x);
+            let (noised, _w) = self.prerandomizer.apply(xbar, &mut rng);
+            self.encoder
+                .encode_quantized_into(noised, &mut rng, &mut messages[i * m..(i + 1) * m]);
+            traffic.record_batch(m, bytes, &cost);
+        }
+
+        // --- shuffler ---------------------------------------------------
+        let mut fy = FisherYates::new(ChaCha20Rng::from_seed_and_stream(
+            derive_seed(self.seed ^ 0x5348_5546, round),
+            0,
+        ));
+        fy.shuffle(&mut messages);
+
+        // --- analyzer ---------------------------------------------------
+        self.last_traffic = traffic;
+        Ok(self.analyzer.analyze(&messages))
+    }
+
+    /// Aggregate and also return the raw discretized sum readout (no
+    /// decision clamping) — used by tests/benches in the Theorem 2 regime.
+    pub fn aggregate_exact_bar(&mut self, xs: &[f64]) -> Result<(f64, u64), PipelineError> {
+        let est = self.aggregate(xs)?;
+        Ok((est, (est * self.plan.scale as f64).round() as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, Gen};
+
+    #[test]
+    fn thm2_is_exact_up_to_rounding() {
+        let plan = ProtocolPlan::theorem2(100, 1.0, 1e-6).unwrap();
+        let k = plan.scale;
+        let mut p = Pipeline::new(plan, 1);
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64) / 100.0).collect();
+        let est = p.aggregate(&xs).unwrap();
+        let truth_bar: u64 = xs.iter().map(|&x| (x * k as f64).floor() as u64).sum();
+        assert!((est - truth_bar as f64 / k as f64).abs() < 1e-9, "est={est}");
+    }
+
+    #[test]
+    fn thm1_error_within_bound() {
+        let plan = ProtocolPlan::theorem1(2_000, 1.0, 1e-6).unwrap();
+        let bound = plan.error_bound();
+        let mut p = Pipeline::new(plan, 2);
+        let xs: Vec<f64> = (0..2_000).map(|i| ((i * 13) % 100) as f64 / 100.0).collect();
+        let truth: f64 = xs.iter().sum();
+        // average over a few rounds: expected error is O(bound)
+        let mut worst: f64 = 0.0;
+        for _ in 0..5 {
+            let est = p.aggregate(&xs).unwrap();
+            worst = worst.max((est - truth).abs());
+        }
+        // 6x headroom over the expected-error bound for a max-of-5 draw
+        assert!(worst < 6.0 * bound + 1.0, "worst={worst} bound={bound}");
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let plan = ProtocolPlan::theorem2(10, 1.0, 1e-3).unwrap();
+        let mut p = Pipeline::new(plan, 3);
+        assert!(matches!(
+            p.aggregate(&[0.5; 9]),
+            Err(PipelineError::WrongInputCount { expected: 10, got: 9 })
+        ));
+    }
+
+    #[test]
+    fn traffic_accounting_matches_plan() {
+        let plan = ProtocolPlan::theorem2(20, 1.0, 1e-4).unwrap();
+        let m = plan.num_messages as u64;
+        let mut p = Pipeline::new(plan, 4);
+        p.aggregate(&vec![0.1; 20]).unwrap();
+        assert_eq!(p.last_traffic.messages, 20 * m);
+        assert_eq!(p.last_traffic.batches, 20);
+    }
+
+    #[test]
+    fn prop_thm2_exactness_random_inputs() {
+        forall("pipeline thm2 exact", 20, |g: &mut Gen| {
+            let n = g.usize_in(2, 40);
+            let plan = ProtocolPlan::theorem2(n, 0.5 + g.f64_unit(), 1e-4).unwrap();
+            let k = plan.scale;
+            let mut p = Pipeline::new(plan, g.seed());
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_unit()).collect();
+            let est = p.aggregate(&xs).unwrap();
+            let truth_bar: u64 = xs.iter().map(|&x| (x * k as f64).floor() as u64).sum();
+            assert!((est - truth_bar as f64 / k as f64).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let plan = ProtocolPlan::theorem1(50, 1.0, 1e-4).unwrap();
+        let xs: Vec<f64> = vec![0.5; 50];
+        let mut p1 = Pipeline::new(plan.clone(), 9);
+        let mut p2 = Pipeline::new(plan, 9);
+        assert_eq!(p1.aggregate(&xs).unwrap(), p2.aggregate(&xs).unwrap());
+    }
+}

@@ -1,0 +1,141 @@
+//! Privacy accountant — composition of per-round (ε, δ) guarantees.
+//!
+//! §1.2: "in order to run gradient descent in a differentially private
+//! manner, privacy parameters need to be chosen in such a way that the
+//! combined privacy loss over many iterations is limited." The FL driver
+//! registers every aggregation round here; the accountant reports the
+//! running budget under both **basic composition** (Σε, Σδ) and **advanced
+//! composition** (Dwork–Rothblum–Vadhan): for T executions of an
+//! (ε, δ)-DP mechanism and slack δ′,
+//!
+//!   ε_total = √(2T·ln(1/δ′))·ε + T·ε·(e^ε − 1),  δ_total = T·δ + δ′.
+
+use super::DpBudget;
+
+/// Running composition state.
+#[derive(Clone, Debug, Default)]
+pub struct PrivacyAccountant {
+    rounds: Vec<DpBudget>,
+}
+
+impl PrivacyAccountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one mechanism execution.
+    pub fn spend(&mut self, b: DpBudget) {
+        self.rounds.push(b);
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Basic composition: budgets add up.
+    pub fn basic(&self) -> DpBudget {
+        let epsilon = self.rounds.iter().map(|b| b.epsilon).sum();
+        let delta = self.rounds.iter().map(|b| b.delta).sum::<f64>().min(1.0 - f64::EPSILON);
+        DpBudget { epsilon, delta }
+    }
+
+    /// Advanced composition with slack `delta_prime`, assuming homogeneous
+    /// rounds (uses the max per-round ε — exact when all rounds match,
+    /// conservative otherwise).
+    pub fn advanced(&self, delta_prime: f64) -> DpBudget {
+        assert!(delta_prime > 0.0 && delta_prime < 1.0);
+        let t = self.rounds.len() as f64;
+        if self.rounds.is_empty() {
+            return DpBudget { epsilon: 0.0, delta: 0.0 };
+        }
+        let eps = self.rounds.iter().map(|b| b.epsilon).fold(0.0f64, f64::max);
+        let delta_sum: f64 = self.rounds.iter().map(|b| b.delta).sum();
+        let epsilon = (2.0 * t * (1.0 / delta_prime).ln()).sqrt() * eps
+            + t * eps * (eps.exp() - 1.0);
+        DpBudget {
+            epsilon,
+            delta: (delta_sum + delta_prime).min(1.0 - f64::EPSILON),
+        }
+    }
+
+    /// The tighter of basic vs advanced — what the FL driver logs.
+    pub fn best(&self, delta_prime: f64) -> DpBudget {
+        let b = self.basic();
+        let a = self.advanced(delta_prime);
+        if a.epsilon < b.epsilon {
+            a
+        } else {
+            b
+        }
+    }
+
+    /// Rounds of budget (ε, δ) each that fit inside `total` under advanced
+    /// composition — the planner the FL example uses to pick a round count.
+    pub fn max_rounds(per_round: DpBudget, total: DpBudget, delta_prime: f64) -> usize {
+        let mut acc = PrivacyAccountant::new();
+        let mut t = 0usize;
+        loop {
+            acc.spend(per_round);
+            let spent = acc.best(delta_prime);
+            if spent.epsilon > total.epsilon || spent.delta > total.delta {
+                return t;
+            }
+            t += 1;
+            if t > 1_000_000 {
+                return t; // effectively unbounded
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_adds() {
+        let mut a = PrivacyAccountant::new();
+        a.spend(DpBudget::new(0.5, 1e-6));
+        a.spend(DpBudget::new(0.25, 1e-7));
+        let b = a.basic();
+        assert!((b.epsilon - 0.75).abs() < 1e-12);
+        assert!((b.delta - 1.1e-6).abs() < 1e-16);
+    }
+
+    #[test]
+    fn advanced_beats_basic_for_many_small_rounds() {
+        let mut a = PrivacyAccountant::new();
+        for _ in 0..400 {
+            a.spend(DpBudget::new(0.05, 1e-8));
+        }
+        let basic = a.basic();
+        let adv = a.advanced(1e-6);
+        assert!(adv.epsilon < basic.epsilon, "adv={} basic={}", adv.epsilon, basic.epsilon);
+        // sanity: sqrt(2*400*ln 1e6)*0.05 + 400*0.05*(e^0.05-1) ≈ 5.3 + 1.03
+        assert!(adv.epsilon < 7.0 && adv.epsilon > 4.0, "{}", adv.epsilon);
+    }
+
+    #[test]
+    fn empty_accountant_is_free() {
+        let a = PrivacyAccountant::new();
+        assert_eq!(a.basic(), DpBudget { epsilon: 0.0, delta: 0.0 });
+        assert_eq!(a.advanced(1e-9).epsilon, 0.0);
+    }
+
+    #[test]
+    fn max_rounds_monotone_in_budget() {
+        let per = DpBudget::new(0.1, 1e-9);
+        let small = PrivacyAccountant::max_rounds(per, DpBudget::new(1.0, 1e-5), 1e-7);
+        let large = PrivacyAccountant::max_rounds(per, DpBudget::new(4.0, 1e-5), 1e-7);
+        assert!(small >= 1);
+        assert!(large > small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn best_picks_smaller_epsilon() {
+        let mut a = PrivacyAccountant::new();
+        a.spend(DpBudget::new(2.0, 1e-8)); // single round: basic wins
+        let b = a.best(1e-9);
+        assert!((b.epsilon - 2.0).abs() < 1e-9);
+    }
+}

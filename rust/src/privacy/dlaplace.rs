@@ -1,0 +1,218 @@
+//! The truncated discrete Laplace distribution D_{N,p} (Definition 3).
+//!
+//! pmf: D_{N,p}[k] = (1−p)·p^|k| / (1 + p − 2·p^{(N+1)/2}) on the integer
+//! interval I = {−(N−1)/2, …, +(N−1)/2}.
+//!
+//! Lemma 7 (log-Lipschitzness) and Lemma 8 (zero mean, variance bound
+//! 2p(1+p)/((1−p)²(1+p−2p^{(N+1)/2}))) are verified by the unit tests.
+//!
+//! Sampling uses the two-sided-geometric construction with rejection of
+//! out-of-interval magnitudes: draw magnitude g ~ Geom(1−p), sign s = ±1,
+//! reject (g=0, s=−1) to avoid double-counting zero, reject g > (N−1)/2.
+//! The geometric is drawn by inversion, g = ⌊ln(U)/ln(p)⌋, which is exact
+//! up to f64 rounding — adequate for a simulation testbed (a hardened
+//! deployment would use a constant-time exact sampler; see DESIGN.md §3).
+
+use crate::rng::Rng;
+
+/// Truncated discrete Laplace sampler + closed-form moments.
+#[derive(Clone, Debug)]
+pub struct TruncatedDiscreteLaplace {
+    /// Ring size N (odd): support is ±(N−1)/2.
+    modulus: u64,
+    /// Geometric decay p ∈ (0, 1).
+    p: f64,
+}
+
+impl TruncatedDiscreteLaplace {
+    pub fn new(modulus: u64, p: f64) -> Self {
+        assert!(modulus % 2 == 1, "N must be odd");
+        assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+        TruncatedDiscreteLaplace { modulus, p }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Half-width of the support: (N−1)/2.
+    pub fn half_width(&self) -> u64 {
+        (self.modulus - 1) / 2
+    }
+
+    /// Normalizing constant denominator 1 + p − 2·p^{(N+1)/2}.
+    fn norm_denom(&self) -> f64 {
+        let half_plus = (self.modulus as f64 + 1.0) / 2.0;
+        1.0 + self.p - 2.0 * self.p.powf(half_plus)
+    }
+
+    /// pmf at integer k (0 outside the support) — Definition 3, Eq. (15).
+    pub fn pmf(&self, k: i64) -> f64 {
+        if k.unsigned_abs() > self.half_width() {
+            return 0.0;
+        }
+        (1.0 - self.p) * self.p.powi(k.unsigned_abs().min(i32::MAX as u64) as i32)
+            / self.norm_denom()
+    }
+
+    /// Closed-form variance bound from Lemma 8 (the true variance is ≤ this).
+    pub fn variance(&self) -> f64 {
+        let p = self.p;
+        2.0 * p * (1.0 + p) / ((1.0 - p) * (1.0 - p) * self.norm_denom())
+    }
+
+    /// Draw one sample.
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> i64 {
+        let half = self.half_width();
+        let ln_p = self.p.ln();
+        loop {
+            // magnitude ~ Geom(1−p): P(g) = (1−p)p^g
+            let u = {
+                // avoid ln(0)
+                let mut v = rng.gen_f64();
+                while v <= 0.0 {
+                    v = rng.gen_f64();
+                }
+                v
+            };
+            let g = (u.ln() / ln_p).floor();
+            if !(g >= 0.0) || g > half as f64 {
+                continue; // truncation rejection
+            }
+            let g = g as u64;
+            let negative = rng.gen_bool(0.5);
+            if g == 0 && negative {
+                continue; // avoid double-counting zero
+            }
+            return if negative { -(g as i64) } else { g as i64 };
+        }
+    }
+
+    /// Expected |X| (used for the Thm 1 error-bound curve): for a zero-mean
+    /// X, E|X| ≤ sqrt(Var X); we report the exact sum when cheap.
+    pub fn expected_abs(&self) -> f64 {
+        // Exact for small N; bound otherwise.
+        if self.modulus <= 20_001 {
+            let mut s = 0.0;
+            for k in 1..=self.half_width() as i64 {
+                s += 2.0 * k as f64 * self.pmf(k);
+            }
+            s
+        } else {
+            self.variance().sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaCha20Rng, SeedableRng};
+    use crate::util::Welford;
+
+    #[test]
+    fn pmf_normalizes() {
+        for &(n, p) in &[(101u64, 0.5f64), (1001, 0.9), (51, 0.99)] {
+            let d = TruncatedDiscreteLaplace::new(n, p);
+            let total: f64 = (-(d.half_width() as i64)..=d.half_width() as i64)
+                .map(|k| d.pmf(k))
+                .sum();
+            assert!((total - 1.0).abs() < 1e-9, "n={n} p={p} total={total}");
+        }
+    }
+
+    #[test]
+    fn pmf_symmetric_and_zero_outside() {
+        let d = TruncatedDiscreteLaplace::new(101, 0.8);
+        for k in 1..=50i64 {
+            assert_eq!(d.pmf(k), d.pmf(-k));
+        }
+        assert_eq!(d.pmf(51), 0.0);
+        assert_eq!(d.pmf(-51), 0.0);
+    }
+
+    #[test]
+    fn lemma7_log_lipschitz() {
+        // p^|t| <= pmf(k+t mod I)/pmf(k mod I) <= p^{-|t|}
+        let n = 101u64;
+        let p = 0.7;
+        let d = TruncatedDiscreteLaplace::new(n, p);
+        let half = d.half_width() as i64;
+        let wrap = |v: i64| -> i64 {
+            // reduce into I = [-half, half]
+            let m = n as i64;
+            let mut r = v % m;
+            if r > half {
+                r -= m;
+            }
+            if r < -half {
+                r += m;
+            }
+            r
+        };
+        for k in 0..n as i64 {
+            for t in [-half, -10, -1, 0, 1, 10, half] {
+                let num = d.pmf(wrap(k + t));
+                let den = d.pmf(wrap(k));
+                let ratio = num / den;
+                let lo = p.powi(t.unsigned_abs() as i32);
+                let hi = p.powi(-(t.unsigned_abs() as i32));
+                assert!(
+                    ratio >= lo * (1.0 - 1e-9) && ratio <= hi * (1.0 + 1e-9),
+                    "k={k} t={t} ratio={ratio} in [{lo},{hi}]?"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lemma8_moments_empirical() {
+        let d = TruncatedDiscreteLaplace::new(10_001, 0.95);
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        let mut w = Welford::default();
+        for _ in 0..200_000 {
+            w.push(d.sample(&mut rng) as f64);
+        }
+        // zero mean
+        let sem = w.std_dev() / (w.count() as f64).sqrt();
+        assert!(w.mean().abs() < 5.0 * sem, "mean={} sem={}", w.mean(), sem);
+        // variance below the Lemma 8 bound, and not absurdly below
+        assert!(w.variance() <= d.variance() * 1.05, "{} vs {}", w.variance(), d.variance());
+        assert!(w.variance() >= d.variance() * 0.5);
+    }
+
+    #[test]
+    fn samples_within_support() {
+        let d = TruncatedDiscreteLaplace::new(11, 0.9999);
+        let mut rng = ChaCha20Rng::seed_from_u64(2);
+        for _ in 0..5000 {
+            let s = d.sample(&mut rng);
+            assert!(s.abs() <= 5, "{s}");
+        }
+    }
+
+    #[test]
+    fn empirical_pmf_matches_closed_form() {
+        let d = TruncatedDiscreteLaplace::new(21, 0.6);
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let trials = 400_000;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..trials {
+            *counts.entry(d.sample(&mut rng)).or_insert(0u64) += 1;
+        }
+        for k in -10..=10i64 {
+            let want = d.pmf(k);
+            let got = *counts.get(&k).unwrap_or(&0) as f64 / trials as f64;
+            let sd = (want * (1.0 - want) / trials as f64).sqrt();
+            assert!((got - want).abs() < 6.0 * sd + 1e-4, "k={k} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn expected_abs_close_to_std() {
+        let d = TruncatedDiscreteLaplace::new(10_001, 0.9);
+        let ea = d.expected_abs();
+        let sd = d.variance().sqrt();
+        assert!(ea > 0.0 && ea <= sd * 1.01, "ea={ea} sd={sd}");
+    }
+}

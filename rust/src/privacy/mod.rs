@@ -1,0 +1,39 @@
+//! Privacy machinery: the truncated discrete Laplace distribution
+//! (Definition 3), the γ-smoothness estimator (Definition 2 / Lemma 1),
+//! and the (ε, δ) accountant that composes the per-round guarantee across
+//! federated-learning iterations (§1.2).
+
+pub mod accountant;
+pub mod dlaplace;
+pub mod smoothness;
+
+/// An (ε, δ) differential-privacy guarantee.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpBudget {
+    pub epsilon: f64,
+    pub delta: f64,
+}
+
+impl DpBudget {
+    pub fn new(epsilon: f64, delta: f64) -> Self {
+        assert!(epsilon >= 0.0 && (0.0..1.0).contains(&delta));
+        DpBudget { epsilon, delta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_constructs() {
+        let b = DpBudget::new(1.0, 1e-6);
+        assert_eq!(b.epsilon, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn budget_rejects_bad_delta() {
+        DpBudget::new(1.0, 1.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Empirical γ-smoothness (Definition 2) — the engine behind Lemma 1's
+//! guarantee and `benches/smoothness.rs`.
+//!
+//! A multiset E = {y_1, …, y_{2m}} is γ-smooth when the subset sums
+//! X_I = Σ_{i∈I} y_i mod N over all I ∈ C([2m], m) are near-uniform on Z_N:
+//! Pr_I[X_I = x] ∈ [(1−γ)/N, (1+γ)/N] for every x. This module enumerates
+//! all C(2m, m) subsets (feasible for m ≤ 13: C(26,13) ≈ 10.4M) with a
+//! Gosper's-hack walk and a running modular sum per subset, and reports
+//! the empirical γ and duplicate status — exactly the two properties
+//! Lemma 3 consumes.
+
+use crate::arith::modring::ModRing;
+
+/// Result of a smoothness measurement.
+#[derive(Clone, Debug)]
+pub struct SmoothnessReport {
+    /// max_x |Pr_I[X_I = x]·N − 1| — the empirical γ.
+    pub gamma: f64,
+    /// Whether all 2m elements were distinct (the other half of the
+    /// (Y choose 2m)_{γ-smooth} membership test).
+    pub distinct: bool,
+    /// Number of subsets enumerated, C(2m, m).
+    pub subsets: u64,
+    /// Histogram mass at the two *planted* sums (x1, x2 rows I_1, I_2 in
+    /// Lemma 1) divided by uniform mass — should be ≈ 1 + O(γ).
+    pub max_ratio: f64,
+    pub min_ratio: f64,
+}
+
+/// Measure γ-smoothness of a 2m-element multiset over Z_N by exhaustive
+/// subset enumeration. Panics if 2m > 26 (enumeration would be > 10^7·m).
+pub fn measure(elements: &[u64], modulus: u64) -> SmoothnessReport {
+    let two_m = elements.len();
+    assert!(two_m % 2 == 0 && two_m >= 4, "need an even number >= 4 of elements");
+    assert!(two_m <= 26, "enumeration bounded to 2m <= 26, got {two_m}");
+    let m = two_m / 2;
+    let ring = ModRing::new(modulus);
+    let reduced: Vec<u64> = elements.iter().map(|&e| ring.reduce(e)).collect();
+
+    // Distinctness check.
+    let mut sorted = reduced.clone();
+    sorted.sort_unstable();
+    let distinct = sorted.windows(2).all(|w| w[0] != w[1]);
+
+    // Histogram of X_I over all I in C([2m], m) via Gosper's hack.
+    let mut hist = vec![0u64; modulus as usize];
+    let mut subsets = 0u64;
+    let mut mask: u64 = (1u64 << m) - 1;
+    let limit: u64 = 1u64 << two_m;
+    while mask < limit {
+        let mut acc = 0u64;
+        let mut bits = mask;
+        while bits != 0 {
+            let i = bits.trailing_zeros() as usize;
+            acc = ring.add(acc, reduced[i]);
+            bits &= bits - 1;
+        }
+        hist[acc as usize] += 1;
+        subsets += 1;
+        // Gosper: next subset of the same popcount.
+        let c = mask & mask.wrapping_neg();
+        let r = mask + c;
+        mask = (((r ^ mask) >> 2) / c) | r;
+    }
+
+    let uniform = subsets as f64 / modulus as f64;
+    let mut max_ratio = f64::MIN;
+    let mut min_ratio = f64::MAX;
+    for &h in &hist {
+        let ratio = h as f64 / uniform;
+        max_ratio = max_ratio.max(ratio);
+        min_ratio = min_ratio.min(ratio);
+    }
+    let gamma = (max_ratio - 1.0).max(1.0 - min_ratio);
+    SmoothnessReport { gamma, distinct, subsets, max_ratio, min_ratio }
+}
+
+/// Lemma 1's failure-probability bound for the chosen (m, N, γ):
+/// Pr[not γ-smooth or duplicates] < 2m²/N + 18√m·N²/(γ²·2^{2m}).
+pub fn lemma1_failure_bound(m: usize, modulus: u64, gamma: f64) -> f64 {
+    let mf = m as f64;
+    let nf = modulus as f64;
+    let term1 = 2.0 * mf * mf / nf;
+    // compute 18√m·N²/(γ²·2^{2m}) in log2 space to dodge overflow
+    let log2_term2 = (18.0 * mf.sqrt()).log2() + 2.0 * nf.log2() - 2.0 * gamma.log2() - 2.0 * mf;
+    term1 + if log2_term2 < -1074.0 { 0.0 } else { log2_term2.exp2() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::CloakEncoder;
+    use crate::rng::{ChaCha20Rng, SeedableRng};
+
+    #[test]
+    fn binomial_count_is_exact() {
+        // 2m = 8, m = 4: C(8,4) = 70 subsets.
+        let r = measure(&[1, 2, 3, 4, 5, 6, 7, 8], 31);
+        assert_eq!(r.subsets, 70);
+        assert!(r.distinct);
+    }
+
+    #[test]
+    fn duplicates_detected() {
+        let r = measure(&[1, 1, 3, 4, 5, 6, 7, 8], 31);
+        assert!(!r.distinct);
+    }
+
+    #[test]
+    fn encoder_pairs_are_smooth_whp() {
+        // Lemma 1 regime: m = 12, N = 31 => 2^{2m} = 16.7M >> N^2 = 961.
+        // The union of two encodings should be ~N^{-1}-smooth-ish; we only
+        // assert gamma is small (subset-sum equidistribution), since a
+        // single draw has sampling noise ~ sqrt(N/C(2m,m)).
+        let m = 12;
+        let n_mod = 31u64;
+        let enc = CloakEncoder::new(n_mod, 10, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        let mut e = enc.encode_scalar(0.4, &mut rng);
+        e.extend(enc.encode_scalar(0.9, &mut rng));
+        let r = measure(&e, n_mod);
+        assert_eq!(r.subsets, 2_704_156); // C(24,12)
+        // planted sums contribute ~2 subsets of 2.7M: gamma should be tiny
+        assert!(r.gamma < 0.02, "gamma={}", r.gamma);
+    }
+
+    #[test]
+    fn planted_sums_present() {
+        // The defining property: subsets I_1 = first half, I_2 = second
+        // half hit exactly x1', x2'. measure() can't see which subset is
+        // which, but the histogram mass at x1+x2's split values must be >0.
+        let m = 6;
+        let n_mod = 13u64;
+        let enc = CloakEncoder::new(n_mod, 10, m);
+        let mut rng = ChaCha20Rng::seed_from_u64(7);
+        let x1 = 0.3;
+        let ys1 = enc.encode_scalar(x1, &mut rng);
+        let sum1 = enc.ring().sum(&ys1);
+        assert_eq!(sum1, enc.codec().encode(x1) % n_mod);
+    }
+
+    #[test]
+    fn lemma1_bound_shrinks_with_m() {
+        let b8 = lemma1_failure_bound(8, 1009, 0.1);
+        let b12 = lemma1_failure_bound(12, 1009, 0.1);
+        assert!(b12 < b8);
+    }
+
+    #[test]
+    fn constant_multiset_is_maximally_unsmooth() {
+        // all elements equal -> every size-m subset has the same sum
+        let r = measure(&[5u64; 12], 31);
+        assert!(!r.distinct);
+        assert!(r.gamma > 10.0, "gamma={}", r.gamma); // all mass on one x
+    }
+}

@@ -1,0 +1,341 @@
+//! ChaCha20 (Bernstein 2008; block function as standardized in RFC 8439).
+//!
+//! This is the crate's CSPRNG: the Invisibility Cloak encoder's m−1 uniform
+//! draws must be computationally indistinguishable from uniform over Z_N —
+//! the whole "invisibility" property rests on them — so the simulation uses
+//! cryptographic randomness on the hot path, like a real deployment would.
+//!
+//! The RNG uses the original djb layout (64-bit block counter + 64-bit
+//! nonce), giving a 2^70-byte stream per (key, nonce); the RFC 8439 IETF
+//! layout (32-bit counter, 96-bit nonce) is exposed for known-answer tests.
+
+use super::{Rng, SeedableRng};
+
+/// Number of 20-round ChaCha rounds pairs (10 double-rounds = ChaCha20).
+const DOUBLE_ROUNDS: usize = 10;
+
+/// "expand 32-byte k" — the ChaCha constants.
+const SIGMA: [u32; 4] = [0x61707865, 0x3320646E, 0x79622D32, 0x6B206574];
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// The ChaCha20 block function: 16-word input state -> 16-word keystream.
+#[inline]
+pub fn chacha20_block(input: &[u32; 16]) -> [u32; 16] {
+    let mut s = *input;
+    for _ in 0..DOUBLE_ROUNDS {
+        // column rounds
+        quarter_round(&mut s, 0, 4, 8, 12);
+        quarter_round(&mut s, 1, 5, 9, 13);
+        quarter_round(&mut s, 2, 6, 10, 14);
+        quarter_round(&mut s, 3, 7, 11, 15);
+        // diagonal rounds
+        quarter_round(&mut s, 0, 5, 10, 15);
+        quarter_round(&mut s, 1, 6, 11, 12);
+        quarter_round(&mut s, 2, 7, 8, 13);
+        quarter_round(&mut s, 3, 4, 9, 14);
+    }
+    for i in 0..16 {
+        s[i] = s[i].wrapping_add(input[i]);
+    }
+    s
+}
+
+/// RFC 8439 layout block (32-bit counter, 96-bit nonce) — used by the
+/// known-answer tests against the RFC vectors.
+pub fn block_ietf(key: &[u8; 32], counter: u32, nonce: &[u8; 12]) -> [u8; 64] {
+    let mut st = [0u32; 16];
+    st[..4].copy_from_slice(&SIGMA);
+    for i in 0..8 {
+        st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+    }
+    st[12] = counter;
+    for i in 0..3 {
+        st[13 + i] = u32::from_le_bytes(nonce[4 * i..4 * i + 4].try_into().unwrap());
+    }
+    let out = chacha20_block(&st);
+    let mut bytes = [0u8; 64];
+    for (i, w) in out.iter().enumerate() {
+        bytes[4 * i..4 * i + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    bytes
+}
+
+/// Number of blocks generated per refill. Eight independent blocks are
+/// computed in lockstep so the compiler auto-vectorizes every quarter-
+/// round across blocks (8×u32 = one AVX2/AVX-512 lane group — §Perf
+/// iterations 6-7; LANES=16 regressed from register spills, LANES=4
+/// under-filled the vector units).
+const LANES: usize = 8;
+
+/// The LANES-way interleaved block function: blocks `counter..counter+LANES`
+/// of the same (key, nonce) stream, serialized as u64 keystream words.
+#[inline]
+fn chacha20_block_x4(input: &[u32; 16], out: &mut [u64; LANES * 8]) {
+    // state[i][lane] — structure-of-arrays so every quarter-round op is a
+    // LANES-wide vector op on contiguous lanes.
+    let mut s = [[0u32; LANES]; 16];
+    let mut init = [[0u32; LANES]; 16];
+    for i in 0..16 {
+        for l in 0..LANES {
+            init[i][l] = input[i];
+        }
+    }
+    // per-lane 64-bit counter increment across words 12 (low) / 13 (high)
+    let base = (input[12] as u64) | ((input[13] as u64) << 32);
+    for (l, lane_ctr) in (0..LANES as u64).enumerate() {
+        let c = base.wrapping_add(lane_ctr);
+        init[12][l] = c as u32;
+        init[13][l] = (c >> 32) as u32;
+    }
+    s.copy_from_slice(&init);
+
+    macro_rules! qr {
+        ($a:expr, $b:expr, $c:expr, $d:expr) => {
+            for l in 0..LANES {
+                s[$a][l] = s[$a][l].wrapping_add(s[$b][l]);
+                s[$d][l] = (s[$d][l] ^ s[$a][l]).rotate_left(16);
+            }
+            for l in 0..LANES {
+                s[$c][l] = s[$c][l].wrapping_add(s[$d][l]);
+                s[$b][l] = (s[$b][l] ^ s[$c][l]).rotate_left(12);
+            }
+            for l in 0..LANES {
+                s[$a][l] = s[$a][l].wrapping_add(s[$b][l]);
+                s[$d][l] = (s[$d][l] ^ s[$a][l]).rotate_left(8);
+            }
+            for l in 0..LANES {
+                s[$c][l] = s[$c][l].wrapping_add(s[$d][l]);
+                s[$b][l] = (s[$b][l] ^ s[$c][l]).rotate_left(7);
+            }
+        };
+    }
+    for _ in 0..DOUBLE_ROUNDS {
+        qr!(0, 4, 8, 12);
+        qr!(1, 5, 9, 13);
+        qr!(2, 6, 10, 14);
+        qr!(3, 7, 11, 15);
+        qr!(0, 5, 10, 15);
+        qr!(1, 6, 11, 12);
+        qr!(2, 7, 8, 13);
+        qr!(3, 4, 9, 14);
+    }
+    for i in 0..16 {
+        for l in 0..LANES {
+            s[i][l] = s[i][l].wrapping_add(init[i][l]);
+        }
+    }
+    // serialize: per lane, words 0..16 little-endian pairs -> 8 u64 each
+    for l in 0..LANES {
+        for i in 0..8 {
+            out[l * 8 + i] = (s[2 * i][l] as u64) | ((s[2 * i + 1][l] as u64) << 32);
+        }
+    }
+}
+
+/// ChaCha20-based RNG (djb layout: 64-bit counter at words 12–13,
+/// 64-bit nonce/stream id at words 14–15).
+#[derive(Clone, Debug)]
+pub struct ChaCha20Rng {
+    /// Input state template; counter words updated per refill.
+    state: [u32; 16],
+    /// Buffered keystream (LANES blocks), consumed as u64 words.
+    buf: [u64; LANES * 8],
+    /// Next u64 index in `buf`; LANES*8 means "refill".
+    idx: usize,
+}
+
+impl ChaCha20Rng {
+    /// Construct from a 256-bit key and a 64-bit stream id.
+    pub fn from_key(key: &[u8; 32], stream: u64) -> Self {
+        let mut st = [0u32; 16];
+        st[..4].copy_from_slice(&SIGMA);
+        for i in 0..8 {
+            st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        st[12] = 0;
+        st[13] = 0;
+        st[14] = stream as u32;
+        st[15] = (stream >> 32) as u32;
+        ChaCha20Rng { state: st, buf: [0; LANES * 8], idx: LANES * 8 }
+    }
+
+    /// Seed-expand a u64 into a key via SplitMix64 (deterministic, keyed
+    /// construction shared with tests and the cross-layer seed protocol).
+    pub fn from_seed_and_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = super::SplitMix64::seed_from_u64(seed);
+        let mut key = [0u8; 32];
+        for chunk in key.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&sm.next_u64().to_le_bytes());
+        }
+        Self::from_key(&key, stream)
+    }
+
+    fn refill(&mut self) {
+        chacha20_block_x4(&self.state, &mut self.buf);
+        // 64-bit counter advanced by LANES blocks.
+        let ctr = ((self.state[12] as u64) | ((self.state[13] as u64) << 32))
+            .wrapping_add(LANES as u64);
+        self.state[12] = ctr as u32;
+        self.state[13] = (ctr >> 32) as u32;
+        self.idx = 0;
+    }
+
+    /// Current 64-bit block counter (for tests / reproducibility checks).
+    pub fn block_count(&self) -> u64 {
+        (self.state[12] as u64) | ((self.state[13] as u64) << 32)
+    }
+}
+
+impl SeedableRng for ChaCha20Rng {
+    fn seed_from_u64(seed: u64) -> Self {
+        Self::from_seed_and_stream(seed, 0)
+    }
+}
+
+impl Rng for ChaCha20Rng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        if self.idx >= LANES * 8 {
+            self.refill();
+        }
+        let v = self.buf[self.idx];
+        self.idx += 1;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 8439 §2.3.2 test vector: block function with the spec key,
+    /// counter = 1, nonce = 00:00:00:09:00:00:00:4a:00:00:00:00.
+    #[test]
+    fn rfc8439_block_vector() {
+        let mut key = [0u8; 32];
+        for (i, b) in key.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        let nonce: [u8; 12] = [0, 0, 0, 9, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let out = block_ietf(&key, 1, &nonce);
+        let expected: [u8; 64] = [
+            0x10, 0xf1, 0xe7, 0xe4, 0xd1, 0x3b, 0x59, 0x15, 0x50, 0x0f, 0xdd, 0x1f, 0xa3, 0x20,
+            0x71, 0xc4, 0xc7, 0xd1, 0xf4, 0xc7, 0x33, 0xc0, 0x68, 0x03, 0x04, 0x22, 0xaa, 0x9a,
+            0xc3, 0xd4, 0x6c, 0x4e, 0xd2, 0x82, 0x64, 0x46, 0x07, 0x9f, 0xaa, 0x09, 0x14, 0xc2,
+            0xd7, 0x05, 0xd9, 0x8b, 0x02, 0xa2, 0xb5, 0x12, 0x9c, 0xd1, 0xde, 0x16, 0x4e, 0xb9,
+            0xcb, 0xd0, 0x83, 0xe8, 0xa2, 0x50, 0x3c, 0x4e,
+        ];
+        assert_eq!(out, expected);
+    }
+
+    /// RFC 8439 §2.4.2: keystream used to encrypt the "Ladies and Gentlemen"
+    /// plaintext; first 16 bytes of the counter=1 block.
+    #[test]
+    fn rfc8439_encrypt_vector_prefix() {
+        let mut key = [0u8; 32];
+        for (i, b) in key.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        let nonce: [u8; 12] = [0, 0, 0, 0, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let ks = block_ietf(&key, 1, &nonce);
+        let plaintext = b"Ladies and Gentl";
+        let expected_ct: [u8; 16] = [
+            0x6e, 0x2e, 0x35, 0x9a, 0x25, 0x68, 0xf9, 0x80, 0x41, 0xba, 0x07, 0x28, 0xdd, 0x0d,
+            0x69, 0x81,
+        ];
+        let ct: Vec<u8> = plaintext.iter().zip(ks.iter()).map(|(p, k)| p ^ k).collect();
+        assert_eq!(&ct[..], &expected_ct[..]);
+    }
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let mut a = ChaCha20Rng::from_seed_and_stream(1, 0);
+        let mut b = ChaCha20Rng::from_seed_and_stream(1, 0);
+        let mut c = ChaCha20Rng::from_seed_and_stream(1, 1);
+        let va: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..32).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn counter_advances_per_refill() {
+        let mut r = ChaCha20Rng::from_seed_and_stream(9, 0);
+        assert_eq!(r.block_count(), 0);
+        r.next_u64(); // first refill: LANES blocks buffered
+        assert_eq!(r.block_count(), LANES as u64);
+        for _ in 0..LANES * 8 {
+            r.next_u64();
+        }
+        assert_eq!(r.block_count(), 2 * LANES as u64);
+    }
+
+    #[test]
+    fn x4_lanes_match_single_block_function() {
+        // lane l of the interleaved function must equal the RFC block
+        // function at counter base+l — the 4-way path is a pure layout
+        // optimization, bit-identical keystream.
+        let mut key = [0u8; 32];
+        for (i, b) in key.iter_mut().enumerate() {
+            *b = (i * 7 + 3) as u8;
+        }
+        let mut st = [0u32; 16];
+        st[..4].copy_from_slice(&SIGMA);
+        for i in 0..8 {
+            st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        st[12] = 41; // counter base
+        st[13] = 0;
+        st[14] = 0xDEAD;
+        st[15] = 0xBEEF;
+        let mut out = [0u64; LANES * 8];
+        chacha20_block_x4(&st, &mut out);
+        for l in 0..LANES {
+            let mut st1 = st;
+            st1[12] = 41 + l as u32;
+            let single = chacha20_block(&st1);
+            for i in 0..8 {
+                let want = (single[2 * i] as u64) | ((single[2 * i + 1] as u64) << 32);
+                assert_eq!(out[l * 8 + i], want, "lane {l} word {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn keystream_bits_balanced() {
+        let mut r = ChaCha20Rng::seed_from_u64(2024);
+        let n = 10_000usize;
+        let ones: u32 = (0..n).map(|_| r.next_u64().count_ones()).sum();
+        let total = (n * 64) as f64;
+        let frac = ones as f64 / total;
+        assert!((frac - 0.5).abs() < 0.005, "{frac}");
+    }
+
+    #[test]
+    fn chi_square_uniform_bytes() {
+        let mut r = ChaCha20Rng::seed_from_u64(77);
+        let mut counts = [0u32; 256];
+        let n = 1 << 16;
+        for _ in 0..n / 8 {
+            for b in r.next_u64().to_le_bytes() {
+                counts[b as usize] += 1;
+            }
+        }
+        let expect = n as f64 / 256.0;
+        let chi2: f64 = counts.iter().map(|&c| (c as f64 - expect).powi(2) / expect).sum();
+        // 255 dof: mean 255, sd ~22.6; 5 sigma ≈ 368
+        assert!(chi2 < 368.0, "chi2={chi2}");
+    }
+}

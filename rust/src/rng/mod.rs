@@ -1,0 +1,154 @@
+//! Random number generation substrate.
+//!
+//! The offline build has no `rand` crate, so the crate ships its own
+//! generators (a deliberate substrate per DESIGN.md §3):
+//!
+//! * [`ChaCha20Rng`] — the encoder's share stream. ChaCha20 (RFC 8439 block
+//!   function) is a CSPRNG; Algorithm 1's privacy argument needs the m−1
+//!   uniform draws to be indistinguishable from uniform, so the simulation
+//!   uses cryptographic randomness on the hot path (validated against RFC
+//!   test vectors).
+//! * [`SplitMix64`] — fast non-crypto generator for workload synthesis,
+//!   shuffling in tests, and seeding.
+//!
+//! Both implement the minimal [`Rng`] trait used across the crate.
+
+pub mod chacha;
+pub mod splitmix;
+pub mod uniform;
+
+pub use chacha::ChaCha20Rng;
+pub use splitmix::SplitMix64;
+
+/// Minimal uniform-random interface (the subset of `rand::RngCore` we need).
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Next 32 uniformly random bits.
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method with a
+    /// rejection fix-up). `bound` must be nonzero.
+    fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Lemire: multiply-shift with rejection on the low word.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            // threshold = 2^64 mod bound = (2^64 - bound) mod bound
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+}
+
+// Forwarding impl so generic consumers (e.g. FisherYates) can borrow a
+// generator instead of owning it.
+impl<R: Rng + ?Sized> Rng for &mut R {
+    fn next_u64(&mut self) -> u64 {
+        (**self).next_u64()
+    }
+}
+
+/// Construction from a 64-bit seed (our `rand::SeedableRng` counterpart).
+pub trait SeedableRng: Sized {
+    fn seed_from_u64(seed: u64) -> Self;
+}
+
+/// Derive a stream of independent child seeds from a parent seed — used to
+/// give every simulated user its own generator (seed-splitting protocol
+/// shared with the integration tests and the L1 artifact cross-check).
+pub fn derive_seed(parent: u64, stream: u64) -> u64 {
+    // SplitMix64 over (parent ^ golden-ratio-scrambled stream id).
+    let mut s = SplitMix64::seed_from_u64(parent ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+    s.next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountingRng(u64);
+    impl Rng for CountingRng {
+        fn next_u64(&mut self) -> u64 {
+            self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+            // weak scramble is fine for the range-logic tests
+            let mut z = self.0;
+            z ^= z >> 31;
+            z = z.wrapping_mul(0xD6E8FEB86659FD93);
+            z ^ (z >> 32)
+        }
+    }
+
+    #[test]
+    fn gen_range_is_in_range() {
+        let mut r = CountingRng(1);
+        for bound in [1u64, 2, 3, 7, 1 << 20, u64::MAX] {
+            for _ in 0..200 {
+                assert!(r.gen_range(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_bound_one_is_zero() {
+        let mut r = CountingRng(3);
+        for _ in 0..10 {
+            assert_eq!(r.gen_range(1), 0);
+        }
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval() {
+        let mut r = CountingRng(5);
+        for _ in 0..1000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_roughly_uniform() {
+        let mut r = CountingRng(7);
+        let bound = 10u64;
+        let mut counts = [0usize; 10];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[r.gen_range(bound) as usize] += 1;
+        }
+        let expect = trials as f64 / bound as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt() + 50.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn derive_seed_distinct_streams() {
+        let a = derive_seed(42, 0);
+        let b = derive_seed(42, 1);
+        let c = derive_seed(43, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // deterministic
+        assert_eq!(a, derive_seed(42, 0));
+    }
+}

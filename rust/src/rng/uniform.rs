@@ -1,0 +1,86 @@
+//! Batched unbiased uniform sampling over Z_N — the encoder's inner loop.
+//!
+//! The scalar path (`Rng::gen_range`) does one Lemire multiply-shift per
+//! draw with rare rejection. The batched path here amortizes the threshold
+//! computation across a whole buffer, which is what the hot-path encoder
+//! uses (see EXPERIMENTS.md §Perf).
+
+use super::Rng;
+
+/// Fill `out` with independent uniforms in `[0, bound)`.
+///
+/// Computes Lemire's rejection threshold once for the whole batch; the
+/// expected number of extra draws is `len * (2^64 mod bound) / 2^64`,
+/// which is negligible for every protocol modulus.
+pub fn fill_uniform<R: Rng>(rng: &mut R, bound: u64, out: &mut [u64]) {
+    debug_assert!(bound > 0);
+    let threshold = bound.wrapping_neg() % bound; // 2^64 mod bound
+    for slot in out.iter_mut() {
+        loop {
+            let x = rng.next_u64();
+            let m = (x as u128) * (bound as u128);
+            if (m as u64) >= threshold {
+                *slot = (m >> 64) as u64;
+                break;
+            }
+        }
+    }
+}
+
+/// Draw `count` uniforms into a fresh Vec (convenience wrapper).
+pub fn sample_uniform_vec<R: Rng>(rng: &mut R, bound: u64, count: usize) -> Vec<u64> {
+    let mut v = vec![0u64; count];
+    fill_uniform(rng, bound, &mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaCha20Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn all_in_range() {
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        for bound in [1u64, 2, 3, 97, 1 << 33, u64::MAX - 1] {
+            let v = sample_uniform_vec(&mut rng, bound, 500);
+            assert!(v.iter().all(|&x| x < bound));
+        }
+    }
+
+    #[test]
+    fn matches_scalar_distribution_moments() {
+        // Batched and scalar paths should have the same mean ~ (bound-1)/2.
+        let bound = 1_000_003u64;
+        let mut rng = SplitMix64::seed_from_u64(5);
+        let v = sample_uniform_vec(&mut rng, bound, 200_000);
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let want = (bound - 1) as f64 / 2.0;
+        let sd = bound as f64 / (12f64).sqrt() / (v.len() as f64).sqrt();
+        assert!((mean - want).abs() < 6.0 * sd, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn bound_one_all_zero() {
+        let mut rng = SplitMix64::seed_from_u64(9);
+        let v = sample_uniform_vec(&mut rng, 1, 64);
+        assert!(v.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn chi_square_small_bound() {
+        let bound = 13u64;
+        let mut rng = ChaCha20Rng::seed_from_u64(11);
+        let mut counts = vec![0u32; bound as usize];
+        let n = 130_000;
+        let mut buf = vec![0u64; n];
+        fill_uniform(&mut rng, bound, &mut buf);
+        for x in buf {
+            counts[x as usize] += 1;
+        }
+        let expect = n as f64 / bound as f64;
+        let chi2: f64 = counts.iter().map(|&c| (c as f64 - expect).powi(2) / expect).sum();
+        // 12 dof: mean 12, sd ~4.9; generous 6-sigma bound
+        assert!(chi2 < 42.0, "chi2={chi2}");
+    }
+}

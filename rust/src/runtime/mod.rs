@@ -1,0 +1,265 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One [`Runtime`] owns the PJRT CPU client and all compiled executables;
+//! executables are compiled once at startup and reused for every request —
+//! Python is never on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Protocol/model constants baked into the artifacts (manifest.json).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub modulus: u64,
+    pub scale: u64,
+    pub num_messages: usize,
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub param_count: usize,
+    pub encode_dim: usize,
+    pub modsum_rows: usize,
+    pub artifact_files: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let u = |path: &[&str]| -> Result<u64> {
+            j.at(path)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing {}", path.join(".")))
+        };
+        let mut artifact_files = HashMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    artifact_files.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            modulus: u(&["kernel", "modulus"])?,
+            scale: u(&["kernel", "scale"])?,
+            num_messages: u(&["kernel", "num_messages"])? as usize,
+            input_dim: u(&["model", "input_dim"])? as usize,
+            hidden_dim: u(&["model", "hidden_dim"])? as usize,
+            num_classes: u(&["model", "num_classes"])? as usize,
+            batch_size: u(&["model", "batch_size"])? as usize,
+            param_count: u(&["model", "param_count"])? as usize,
+            encode_dim: u(&["encode_dim"])? as usize,
+            modsum_rows: u(&["modsum_rows"])? as usize,
+            artifact_files,
+        })
+    }
+
+    /// Re-validate the kernel profile against the protocol constraints the
+    /// paper requires (odd N; int32-safe N for the Pallas path; m ≥ 4).
+    pub fn validate(&self) -> Result<()> {
+        if self.modulus % 2 == 0 {
+            bail!("manifest modulus must be odd");
+        }
+        if self.modulus >= 1 << 30 {
+            bail!("kernel profile requires N < 2^30 (int32 lanes)");
+        }
+        if self.num_messages < 4 {
+            bail!("Lemma 1 requires m >= 4");
+        }
+        let expected = self.input_dim * self.hidden_dim
+            + self.hidden_dim
+            + self.hidden_dim * self.num_classes
+            + self.num_classes;
+        if expected != self.param_count {
+            bail!("param_count {} != shapes {}", self.param_count, expected);
+        }
+        Ok(())
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers every artifact with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{}'", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT CPU client plus all compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, Executable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `artifacts/` (manifest + all HLO files), compile everything.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, file) in &manifest.artifact_files {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            executables.insert(name.clone(), Executable { exe, name: name.clone() });
+        }
+        Ok(Runtime { client, manifest, executables, dir })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// `fl_grad(params, x, y) -> (loss, grad)`.
+    pub fn fl_grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let mf = &self.manifest;
+        anyhow::ensure!(params.len() == mf.param_count, "params len");
+        anyhow::ensure!(x.len() == mf.batch_size * mf.input_dim, "x len");
+        anyhow::ensure!(y.len() == mf.batch_size, "y len");
+        let p = xla::Literal::vec1(params);
+        let xl = xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
+        let yl = xla::Literal::vec1(y);
+        let out = self.get("fl_grad")?.run(&[p, xl, yl])?;
+        anyhow::ensure!(out.len() == 2, "fl_grad must return (loss, grad)");
+        let loss = out[0].to_vec::<f32>()?[0];
+        let grad = out[1].to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+
+    /// `fl_predict(params, x) -> class predictions`.
+    pub fn fl_predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<i32>> {
+        let mf = &self.manifest;
+        let p = xla::Literal::vec1(params);
+        let xl = xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
+        let out = self.get("fl_predict")?.run(&[p, xl])?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+
+    /// `cloak_encode(seed, xbar[d]) -> shares[d, m]` — the L1 Pallas
+    /// encoder running under PJRT (used for cross-checking the Rust
+    /// encoder and for offloading wide encodes).
+    pub fn cloak_encode(&self, seed: i32, xbar: &[i32]) -> Result<Vec<i32>> {
+        let mf = &self.manifest;
+        anyhow::ensure!(xbar.len() == mf.encode_dim, "xbar must be encode_dim");
+        let s = xla::Literal::scalar(seed);
+        let xl = xla::Literal::vec1(xbar);
+        let out = self.get("cloak_encode")?.run(&[s, xl])?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+
+    /// `cloak_modsum(y[rows, d]) -> colsums[d]` — the L1 analyzer reduction.
+    pub fn cloak_modsum(&self, y: &[i32]) -> Result<Vec<i32>> {
+        let mf = &self.manifest;
+        anyhow::ensure!(y.len() == mf.modsum_rows * mf.encode_dim, "y shape");
+        let yl = xla::Literal::vec1(y).reshape(&[mf.modsum_rows as i64, mf.encode_dim as i64])?;
+        let out = self.get("cloak_modsum")?.run(&[yl])?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime integration tests live in rust/tests/runtime_integration.rs
+    // (they need artifacts/ built). Here: manifest parsing on a synthetic
+    // document, independent of the artifacts.
+
+    fn synthetic_manifest() -> String {
+        r#"{
+          "kernel": {"modulus": 536870909, "scale": 65536, "num_messages": 16},
+          "model": {"input_dim": 32, "hidden_dim": 64, "num_classes": 8,
+                    "batch_size": 32, "param_count": 2632},
+          "encode_dim": 256,
+          "modsum_rows": 4096,
+          "artifacts": {"fl_grad": "fl_grad.hlo.txt"}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn manifest_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("cloak_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), synthetic_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.modulus, 536870909);
+        assert_eq!(m.param_count, 2632);
+        assert_eq!(m.artifact_files["fl_grad"], "fl_grad.hlo.txt");
+        m.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_bad_profiles() {
+        let mut m = Manifest {
+            modulus: 536870909,
+            scale: 65536,
+            num_messages: 16,
+            input_dim: 32,
+            hidden_dim: 64,
+            num_classes: 8,
+            batch_size: 32,
+            param_count: 2632,
+            encode_dim: 256,
+            modsum_rows: 4096,
+            artifact_files: HashMap::new(),
+        };
+        m.validate().unwrap();
+        m.modulus = 536870908;
+        assert!(m.validate().is_err(), "even N");
+        m.modulus = 1 << 31;
+        assert!(m.validate().is_err(), "too-large N");
+        m.modulus = 536870909;
+        m.num_messages = 3;
+        assert!(m.validate().is_err(), "m < 4");
+        m.num_messages = 16;
+        m.param_count = 1;
+        assert!(m.validate().is_err(), "param mismatch");
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Manifest::load(Path::new("/nonexistent-cloak-agg")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Mixnet simulation — the deployed realization of the shuffler [5, 7].
+//!
+//! A chain of `hops` relays; each relay batches its input, applies an
+//! independent uniform permutation, and forwards. The security model of
+//! the shuffled model needs *one* honest relay: composing any fixed
+//! permutations (the dishonest hops, which the adversary knows) with one
+//! uniform permutation yields a uniform permutation. `Mixnet` lets tests
+//! and the collusion bench mark hops as compromised (their permutation is
+//! revealed/fixed) and verifies the composed output is still uniform.
+//!
+//! Latency/byte accounting flows through [`crate::transport`] so the
+//! scalability bench can report shuffler overhead per message.
+
+use super::{FisherYates, Shuffler};
+use crate::rng::{derive_seed, ChaCha20Rng};
+use crate::transport::CostModel;
+
+/// One relay in the chain.
+struct Hop {
+    rng: ChaCha20Rng,
+    /// Compromised hops use a *fixed, adversary-known* permutation (we
+    /// model it as identity — the worst case for mixing).
+    compromised: bool,
+}
+
+/// A chain of shuffling relays.
+pub struct Mixnet {
+    hops: Vec<Hop>,
+    /// Total messages moved (for cost accounting).
+    messages_moved: u64,
+}
+
+impl Mixnet {
+    /// `compromised[i]` marks hop i as adversarial (identity permutation).
+    pub fn new(seed: u64, hops: usize, compromised: &[bool]) -> Self {
+        assert!(hops >= 1);
+        assert!(compromised.len() == hops);
+        Mixnet {
+            hops: (0..hops)
+                .map(|i| Hop {
+                    rng: ChaCha20Rng::from_seed_and_stream(derive_seed(seed, i as u64), 0x6D69786E),
+                    compromised: compromised[i],
+                })
+                .collect(),
+            messages_moved: 0,
+        }
+    }
+
+    /// All-honest chain.
+    pub fn honest(seed: u64, hops: usize) -> Self {
+        Self::new(seed, hops, &vec![false; hops])
+    }
+
+    pub fn num_hops(&self) -> usize {
+        self.hops.len()
+    }
+
+    pub fn has_honest_hop(&self) -> bool {
+        self.hops.iter().any(|h| !h.compromised)
+    }
+
+    pub fn messages_moved(&self) -> u64 {
+        self.messages_moved
+    }
+
+    /// Simulated transport cost of one batch through the chain.
+    pub fn batch_cost(&self, batch_len: usize, bytes_per_msg: usize, cost: &CostModel) -> f64 {
+        // Each hop receives and retransmits the whole batch.
+        self.hops.len() as f64 * cost.batch_latency(batch_len, bytes_per_msg)
+    }
+}
+
+impl Shuffler for Mixnet {
+    fn shuffle<T>(&mut self, items: &mut [T]) {
+        self.messages_moved += (items.len() * self.hops.len()) as u64;
+        for hop in &mut self.hops {
+            if hop.compromised {
+                // Adversary-chosen permutation: worst case = identity
+                // (any *fixed* permutation is equivalent for the analysis).
+                continue;
+            }
+            let mut fy = FisherYates::new(&mut hop.rng);
+            fy.shuffle(items);
+        }
+    }
+}
+
+/// Statistical check helper shared by tests & the collusion bench:
+/// chi-square statistic of permutation uniformity for 4-element batches.
+pub fn permutation_chi2(shuffler: &mut impl Shuffler, trials: usize) -> (f64, usize) {
+    let mut counts: std::collections::HashMap<[u8; 4], u64> = std::collections::HashMap::new();
+    for _ in 0..trials {
+        let mut v = [0u8, 1, 2, 3];
+        shuffler.shuffle(&mut v);
+        *counts.entry(v).or_insert(0) += 1;
+    }
+    let expect = trials as f64 / 24.0;
+    let chi2 = (0..24)
+        .zip(all_perms_4())
+        .map(|(_, p)| {
+            let c = *counts.get(&p).unwrap_or(&0) as f64;
+            (c - expect).powi(2) / expect
+        })
+        .sum();
+    (chi2, 23)
+}
+
+fn all_perms_4() -> Vec<[u8; 4]> {
+    let mut out = Vec::new();
+    let mut v = [0u8, 1, 2, 3];
+    permute(&mut v, 0, &mut out);
+    out
+}
+
+fn permute(v: &mut [u8; 4], i: usize, out: &mut Vec<[u8; 4]>) {
+    if i == 4 {
+        out.push(*v);
+        return;
+    }
+    for j in i..4 {
+        v.swap(i, j);
+        permute(v, i + 1, out);
+        v.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiset_preserved_through_chain() {
+        let mut net = Mixnet::honest(1, 3);
+        let mut v: Vec<u32> = (0..500).collect();
+        net.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..500).collect::<Vec<_>>());
+        assert_eq!(net.messages_moved(), 1500);
+    }
+
+    #[test]
+    fn honest_chain_is_uniform() {
+        let mut net = Mixnet::honest(2, 3);
+        let (chi2, _dof) = permutation_chi2(&mut net, 48_000);
+        // 23 dof: mean 23, sd ~6.8; 6 sigma ≈ 64
+        assert!(chi2 < 64.0, "chi2={chi2}");
+    }
+
+    #[test]
+    fn one_honest_hop_suffices() {
+        // hops 0 and 2 compromised (identity), hop 1 honest:
+        let mut net = Mixnet::new(3, 3, &[true, false, true]);
+        assert!(net.has_honest_hop());
+        let (chi2, _) = permutation_chi2(&mut net, 48_000);
+        assert!(chi2 < 64.0, "chi2={chi2}");
+    }
+
+    #[test]
+    fn all_compromised_does_not_mix() {
+        let mut net = Mixnet::new(4, 2, &[true, true]);
+        assert!(!net.has_honest_hop());
+        let mut v = [0u8, 1, 2, 3];
+        net.shuffle(&mut v);
+        assert_eq!(v, [0, 1, 2, 3], "identity permutations compose to identity");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Mixnet::honest(7, 2);
+        let mut b = Mixnet::honest(7, 2);
+        let mut va: Vec<u32> = (0..50).collect();
+        let mut vb: Vec<u32> = (0..50).collect();
+        a.shuffle(&mut va);
+        b.shuffle(&mut vb);
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn all_perms_4_complete() {
+        let ps = all_perms_4();
+        assert_eq!(ps.len(), 24);
+        let set: std::collections::HashSet<_> = ps.iter().collect();
+        assert_eq!(set.len(), 24);
+    }
+}

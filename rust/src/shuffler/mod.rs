@@ -1,0 +1,104 @@
+//! The shuffler 𝒮 — the trusted primitive of the shuffled model.
+//!
+//! The DP analysis requires exactly one property: the output is a uniformly
+//! random permutation of the input multiset. [`FisherYates`] provides it
+//! directly; [`mixnet::Mixnet`] simulates the deployed realization — a
+//! multi-hop mixnet à la Bittau et al. [5] where each honest hop applies an
+//! independent permutation (composition of any permutation with a uniform
+//! one is uniform, so one honest hop suffices — tested).
+
+pub mod mixnet;
+
+use crate::rng::Rng;
+
+/// Anything that can uniformly permute a message batch in place.
+pub trait Shuffler {
+    fn shuffle<T>(&mut self, items: &mut [T]);
+}
+
+/// Uniform Fisher–Yates shuffle over a caller-supplied RNG.
+pub struct FisherYates<R: Rng> {
+    rng: R,
+}
+
+impl<R: Rng> FisherYates<R> {
+    pub fn new(rng: R) -> Self {
+        FisherYates { rng }
+    }
+
+    pub fn into_rng(self) -> R {
+        self.rng
+    }
+}
+
+impl<R: Rng> Shuffler for FisherYates<R> {
+    fn shuffle<T>(&mut self, items: &mut [T]) {
+        // Durstenfeld variant: unbiased given an unbiased gen_range.
+        for i in (1..items.len()).rev() {
+            let j = self.rng.gen_range((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaCha20Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn preserves_multiset() {
+        let mut s = FisherYates::new(ChaCha20Rng::seed_from_u64(1));
+        let mut v: Vec<u32> = (0..100).collect();
+        s.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_are_noops() {
+        let mut s = FisherYates::new(SplitMix64::seed_from_u64(2));
+        let mut empty: Vec<u32> = vec![];
+        s.shuffle(&mut empty);
+        let mut one = vec![7u32];
+        s.shuffle(&mut one);
+        assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn all_permutations_of_3_equally_likely() {
+        // chi-square over the 6 permutations of [0,1,2]
+        let mut s = FisherYates::new(ChaCha20Rng::seed_from_u64(3));
+        let mut counts = std::collections::HashMap::new();
+        let trials = 60_000;
+        for _ in 0..trials {
+            let mut v = [0u8, 1, 2];
+            s.shuffle(&mut v);
+            *counts.entry(v).or_insert(0u64) += 1;
+        }
+        assert_eq!(counts.len(), 6);
+        let expect = trials as f64 / 6.0;
+        let chi2: f64 = counts.values().map(|&c| (c as f64 - expect).powi(2) / expect).sum();
+        // 5 dof: mean 5, sd sqrt(10); 6-sigma ≈ 24
+        assert!(chi2 < 24.0, "chi2={chi2}");
+    }
+
+    #[test]
+    fn position_uniformity() {
+        // Item 0 should land at each of 8 positions equally often.
+        let mut s = FisherYates::new(ChaCha20Rng::seed_from_u64(4));
+        let mut counts = [0u64; 8];
+        let trials = 80_000;
+        for _ in 0..trials {
+            let mut v: Vec<usize> = (0..8).collect();
+            s.shuffle(&mut v);
+            let pos = v.iter().position(|&x| x == 0).unwrap();
+            counts[pos] += 1;
+        }
+        let expect = trials as f64 / 8.0;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 6.0 * expect.sqrt(), "{counts:?}");
+        }
+    }
+}

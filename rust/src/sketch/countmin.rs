@@ -1,0 +1,157 @@
+//! CountMin sketch (Cormode–Muthukrishnan): `depth` rows of `width`
+//! counters; update adds 1 to one cell per row; query takes the min.
+//! Linear ⇒ privately aggregable (merge = cell-wise add).
+
+use super::hash64;
+
+/// CountMin sketch over u64 item ids.
+#[derive(Clone, Debug)]
+pub struct CountMin {
+    width: usize,
+    depth: usize,
+    seed: u64,
+    /// Row-major cells: row r cell c at `cells[r*width + c]`.
+    cells: Vec<u64>,
+}
+
+impl CountMin {
+    pub fn new(width: usize, depth: usize, seed: u64) -> Self {
+        assert!(width >= 1 && depth >= 1);
+        CountMin { width, depth, seed, cells: vec![0; width * depth] }
+    }
+
+    /// Geometry for a target (ε·total, δ) guarantee: width = ⌈e/ε⌉,
+    /// depth = ⌈ln(1/δ)⌉.
+    pub fn for_error(eps_frac: f64, delta: f64, seed: u64) -> Self {
+        let width = (std::f64::consts::E / eps_frac).ceil() as usize;
+        let depth = (1.0 / delta).ln().ceil().max(1.0) as usize;
+        Self::new(width, depth, seed)
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn cells(&self) -> &[u64] {
+        &self.cells
+    }
+
+    fn cell_of(&self, row: usize, item: u64) -> usize {
+        row * self.width + (hash64(self.seed.wrapping_add(row as u64), item) % self.width as u64) as usize
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        self.insert_count(item, 1);
+    }
+
+    pub fn insert_count(&mut self, item: u64, count: u64) {
+        for r in 0..self.depth {
+            let c = self.cell_of(r, item);
+            self.cells[c] += count;
+        }
+    }
+
+    /// Point-frequency over-estimate.
+    pub fn query(&self, item: u64) -> u64 {
+        (0..self.depth).map(|r| self.cells[self.cell_of(r, item)]).min().unwrap_or(0)
+    }
+
+    /// Merge another sketch with identical geometry/seed (linearity).
+    pub fn merge(&mut self, other: &CountMin) {
+        assert_eq!(self.width, other.width);
+        assert_eq!(self.depth, other.depth);
+        assert_eq!(self.seed, other.seed);
+        for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+            *a += b;
+        }
+    }
+
+    /// Query against externally-aggregated (possibly noisy) cells with the
+    /// same geometry — the private read-out path.
+    pub fn query_cells(&self, cells: &[f64], item: u64) -> f64 {
+        (0..self.depth)
+            .map(|r| cells[self.cell_of(r, item)])
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn never_underestimates() {
+        let mut cm = CountMin::new(64, 4, 1);
+        let mut truth = std::collections::HashMap::new();
+        let mut rng = SplitMix64::seed_from_u64(2);
+        for _ in 0..2000 {
+            let item = rng.gen_range(100);
+            cm.insert(item);
+            *truth.entry(item).or_insert(0u64) += 1;
+        }
+        for (&item, &count) in &truth {
+            assert!(cm.query(item) >= count);
+        }
+    }
+
+    #[test]
+    fn error_bound_holds_empirically() {
+        // width = e/0.01 => overestimate <= 0.01 * total whp
+        let mut cm = CountMin::for_error(0.01, 1e-3, 3);
+        let total = 10_000u64;
+        let mut rng = SplitMix64::seed_from_u64(4);
+        for _ in 0..total {
+            cm.insert(rng.gen_range(500));
+        }
+        // probe items never inserted: estimate should be small
+        let mut violations = 0;
+        for probe in 1000..1100u64 {
+            if cm.query(probe) as f64 > 0.01 * total as f64 {
+                violations += 1;
+            }
+        }
+        assert!(violations <= 2, "violations={violations}");
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = CountMin::new(32, 3, 5);
+        let mut b = CountMin::new(32, 3, 5);
+        let mut whole = CountMin::new(32, 3, 5);
+        for i in 0..100 {
+            a.insert(i % 7);
+            whole.insert(i % 7);
+        }
+        for i in 0..50 {
+            b.insert(i % 5);
+            whole.insert(i % 5);
+        }
+        a.merge(&b);
+        assert_eq!(a.cells(), whole.cells());
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_geometry() {
+        let mut a = CountMin::new(32, 3, 5);
+        let b = CountMin::new(64, 3, 5);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn query_cells_matches_query_on_exact_cells() {
+        let mut cm = CountMin::new(16, 3, 6);
+        for i in 0..200u64 {
+            cm.insert(i % 9);
+        }
+        let cells_f: Vec<f64> = cm.cells().iter().map(|&c| c as f64).collect();
+        for item in 0..9u64 {
+            assert_eq!(cm.query_cells(&cells_f, item), cm.query(item) as f64);
+        }
+    }
+}

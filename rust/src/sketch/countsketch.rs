@@ -1,0 +1,190 @@
+//! CountSketch (Charikar–Chen–Farach-Colton): like CountMin but each
+//! update is ±1 (sign hash) and the query is the *median* of rows —
+//! unbiased with ℓ₂ error, at the cost of signed cells.
+//!
+//! Signed cells still aggregate through the protocol: cells are stored
+//! offset-encoded (cell + offset ∈ [0, 2·offset]) so the aggregation
+//! domain stays non-negative; [`CountSketch::decode_aggregate`] removes
+//! n·offset after summation.
+
+use super::hash64;
+
+/// CountSketch over u64 item ids.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    width: usize,
+    depth: usize,
+    seed: u64,
+    /// Signed cells, row-major.
+    cells: Vec<i64>,
+}
+
+impl CountSketch {
+    pub fn new(width: usize, depth: usize, seed: u64) -> Self {
+        assert!(width >= 1 && depth >= 1);
+        CountSketch { width, depth, seed, cells: vec![0; width * depth] }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn cells(&self) -> &[i64] {
+        &self.cells
+    }
+
+    fn cell_of(&self, row: usize, item: u64) -> usize {
+        row * self.width + (hash64(self.seed.wrapping_add(row as u64), item) % self.width as u64) as usize
+    }
+
+    fn sign_of(&self, row: usize, item: u64) -> i64 {
+        if hash64(self.seed.wrapping_add(0x5157_0000 + row as u64), item) & 1 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        self.insert_count(item, 1);
+    }
+
+    pub fn insert_count(&mut self, item: u64, count: i64) {
+        for r in 0..self.depth {
+            let c = self.cell_of(r, item);
+            self.cells[c] += self.sign_of(r, item) * count;
+        }
+    }
+
+    /// Unbiased point-frequency estimate (median of rows).
+    pub fn query(&self, item: u64) -> f64 {
+        let mut est: Vec<f64> = (0..self.depth)
+            .map(|r| (self.cells[self.cell_of(r, item)] * self.sign_of(r, item)) as f64)
+            .collect();
+        est.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = est.len() / 2;
+        if est.len() % 2 == 1 {
+            est[mid]
+        } else {
+            (est[mid - 1] + est[mid]) / 2.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &CountSketch) {
+        assert_eq!((self.width, self.depth, self.seed), (other.width, other.depth, other.seed));
+        for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+            *a += b;
+        }
+    }
+
+    /// Offset-encode cells into non-negative counts for the aggregation
+    /// protocol: cell ↦ cell + offset (panics if |cell| > offset).
+    pub fn offset_cells(&self, offset: i64) -> Vec<u64> {
+        self.cells
+            .iter()
+            .map(|&c| {
+                assert!(c.abs() <= offset, "cell {c} exceeds offset {offset}");
+                (c + offset) as u64
+            })
+            .collect()
+    }
+
+    /// Decode an aggregated offset-encoded estimate back into signed cells:
+    /// subtract n·offset per cell.
+    pub fn decode_aggregate(agg: &[f64], n: usize, offset: i64) -> Vec<f64> {
+        agg.iter().map(|&v| v - (n as i64 * offset) as f64).collect()
+    }
+
+    /// Query externally-aggregated signed cells.
+    pub fn query_cells(&self, cells: &[f64], item: u64) -> f64 {
+        let mut est: Vec<f64> = (0..self.depth)
+            .map(|r| cells[self.cell_of(r, item)] * self.sign_of(r, item) as f64)
+            .collect();
+        est.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = est.len() / 2;
+        if est.len() % 2 == 1 {
+            est[mid]
+        } else {
+            (est[mid - 1] + est[mid]) / 2.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn heavy_item_recovered() {
+        let mut cs = CountSketch::new(128, 5, 1);
+        let mut rng = SplitMix64::seed_from_u64(2);
+        for _ in 0..5000 {
+            cs.insert(rng.gen_range(1000) + 100);
+        }
+        cs.insert_count(7, 800); // heavy item
+        let est = cs.query(7);
+        assert!((est - 800.0).abs() < 120.0, "est={est}");
+    }
+
+    #[test]
+    fn unbiased_on_average() {
+        // estimate of an uninserted item averages ~0 across seeds
+        let mut total = 0.0;
+        for seed in 0..20 {
+            let mut cs = CountSketch::new(64, 1, seed);
+            let mut rng = SplitMix64::seed_from_u64(seed + 100);
+            for _ in 0..500 {
+                cs.insert(rng.gen_range(50));
+            }
+            total += cs.query(9_999);
+        }
+        assert!((total / 20.0).abs() < 30.0, "bias={}", total / 20.0);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = CountSketch::new(32, 3, 5);
+        let mut b = CountSketch::new(32, 3, 5);
+        let mut whole = CountSketch::new(32, 3, 5);
+        for i in 0..60 {
+            a.insert(i % 11);
+            whole.insert(i % 11);
+            b.insert(i % 4);
+            whole.insert(i % 4);
+        }
+        a.merge(&b);
+        assert_eq!(a.cells(), whole.cells());
+    }
+
+    #[test]
+    fn offset_roundtrip() {
+        let mut cs = CountSketch::new(8, 2, 6);
+        for i in 0..40 {
+            cs.insert(i % 5);
+        }
+        let off = cs.offset_cells(64);
+        assert!(off.iter().all(|&c| c <= 128));
+        // single-client aggregate (n=1) decodes back
+        let agg: Vec<f64> = off.iter().map(|&c| c as f64).collect();
+        let dec = CountSketch::decode_aggregate(&agg, 1, 64);
+        let want: Vec<f64> = cs.cells().iter().map(|&c| c as f64).collect();
+        assert_eq!(dec, want);
+    }
+
+    #[test]
+    fn query_cells_matches_query() {
+        let mut cs = CountSketch::new(16, 3, 7);
+        for i in 0..100u64 {
+            cs.insert_count(i % 6, 2);
+        }
+        let cells_f: Vec<f64> = cs.cells().iter().map(|&c| c as f64).collect();
+        for item in 0..6u64 {
+            assert_eq!(cs.query_cells(&cells_f, item), cs.query(item));
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Distinct-element estimation via linear probabilistic counting
+//! (Whang et al.): a bitmap of size w where each item sets cell
+//! h(item) mod w; the estimate is −w·ln(z/w) for z empty cells. The
+//! bitmap is linear over OR — approximated under addition by saturating
+//! occupancy counts, which the aggregation path uses (cell > 0 ⇔ occupied),
+//! so n clients' bitmaps compose through the sum protocol.
+
+use super::hash64;
+
+/// Linear probabilistic counting bitmap.
+#[derive(Clone, Debug)]
+pub struct DistinctCounter {
+    width: usize,
+    seed: u64,
+    bitmap: Vec<bool>,
+}
+
+impl DistinctCounter {
+    pub fn new(width: usize, seed: u64) -> Self {
+        assert!(width >= 8);
+        DistinctCounter { width, seed, bitmap: vec![false; width] }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        let c = (hash64(self.seed, item) % self.width as u64) as usize;
+        self.bitmap[c] = true;
+    }
+
+    /// Occupancy cells as 0/1 counts (the aggregation payload).
+    pub fn cells(&self) -> Vec<u64> {
+        self.bitmap.iter().map(|&b| b as u64).collect()
+    }
+
+    /// Estimate from own bitmap.
+    pub fn estimate(&self) -> f64 {
+        Self::estimate_from_occupancy(
+            &self.bitmap.iter().map(|&b| b as u64 as f64).collect::<Vec<_>>(),
+            self.width,
+        )
+    }
+
+    /// Estimate from an aggregated occupancy vector: any cell with total
+    /// count ≥ 0.5 (noise!) is treated as occupied.
+    pub fn estimate_from_occupancy(cells: &[f64], width: usize) -> f64 {
+        let empty = cells.iter().filter(|&&c| c < 0.5).count();
+        if empty == 0 {
+            // saturated: lower bound
+            return width as f64 * (width as f64).ln();
+        }
+        -(width as f64) * ((empty as f64) / width as f64).ln()
+    }
+
+    pub fn merge(&mut self, other: &DistinctCounter) {
+        assert_eq!((self.width, self.seed), (other.width, other.seed));
+        for (a, b) in self.bitmap.iter_mut().zip(&other.bitmap) {
+            *a |= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_within_tolerance() {
+        let mut d = DistinctCounter::new(4096, 1);
+        for i in 0..1000u64 {
+            d.insert(i);
+            d.insert(i); // duplicates must not matter
+        }
+        let est = d.estimate();
+        assert!((est - 1000.0).abs() < 100.0, "est={est}");
+    }
+
+    #[test]
+    fn merge_is_union() {
+        let mut a = DistinctCounter::new(1024, 2);
+        let mut b = DistinctCounter::new(1024, 2);
+        for i in 0..300u64 {
+            a.insert(i);
+        }
+        for i in 200..500u64 {
+            b.insert(i);
+        }
+        a.merge(&b);
+        let est = a.estimate();
+        assert!((est - 500.0).abs() < 60.0, "est={est}");
+    }
+
+    #[test]
+    fn occupancy_aggregation_matches_merge() {
+        // summed 0/1 cells from two clients decode like the OR'd bitmap
+        let mut a = DistinctCounter::new(512, 3);
+        let mut b = DistinctCounter::new(512, 3);
+        for i in 0..100u64 {
+            a.insert(i);
+        }
+        for i in 80..180u64 {
+            b.insert(i);
+        }
+        let summed: Vec<f64> = a
+            .cells()
+            .iter()
+            .zip(b.cells())
+            .map(|(&x, y)| (x + y) as f64)
+            .collect();
+        let est = DistinctCounter::estimate_from_occupancy(&summed, 512);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert!((est - merged.estimate()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturated_bitmap_returns_finite() {
+        let cells = vec![1.0; 64];
+        let est = DistinctCounter::estimate_from_occupancy(&cells, 64);
+        assert!(est.is_finite() && est > 64.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Heavy hitters over a known (dyadic) domain: CountMin for frequency
+//! estimates + a dyadic-tree search that descends only into heavy
+//! prefixes, so the candidate scan is O(k·log|U|) instead of O(|U|).
+//! Each tree level is one CountMin sketch — all levels are linear, so the
+//! whole structure aggregates privately level-by-level.
+
+use super::countmin::CountMin;
+
+/// Dyadic heavy-hitter sketch over the domain [0, 2^bits).
+#[derive(Clone, Debug)]
+pub struct HeavyHitters {
+    bits: u32,
+    /// levels[l] sketches prefixes of length l+1 bits.
+    levels: Vec<CountMin>,
+    total: u64,
+}
+
+impl HeavyHitters {
+    pub fn new(bits: u32, width: usize, depth: usize, seed: u64) -> Self {
+        assert!(bits >= 1 && bits <= 32);
+        HeavyHitters {
+            bits,
+            levels: (0..bits)
+                .map(|l| CountMin::new(width, depth, seed.wrapping_add(l as u64 * 0x9E37)))
+                .collect(),
+            total: 0,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn levels(&self) -> &[CountMin] {
+        &self.levels
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        assert!(item < 1u64 << self.bits);
+        for l in 0..self.bits {
+            let prefix = item >> (self.bits - 1 - l);
+            self.levels[l as usize].insert(prefix);
+        }
+        self.total += 1;
+    }
+
+    pub fn merge(&mut self, other: &HeavyHitters) {
+        assert_eq!(self.bits, other.bits);
+        for (a, b) in self.levels.iter_mut().zip(&other.levels) {
+            a.merge(b);
+        }
+        self.total += other.total;
+    }
+
+    /// All items with estimated frequency ≥ threshold, via dyadic descent.
+    pub fn heavy(&self, threshold: u64) -> Vec<(u64, u64)> {
+        let cells: Vec<Vec<f64>> = self
+            .levels
+            .iter()
+            .map(|l| l.cells().iter().map(|&c| c as f64).collect())
+            .collect();
+        self.heavy_from_cells(&cells, threshold as f64)
+            .into_iter()
+            .map(|(item, est)| (item, est.max(0.0) as u64))
+            .collect()
+    }
+
+    /// Dyadic descent over externally-aggregated (possibly noisy) level
+    /// cells — the private read-out path: each level's CountMin cells are
+    /// aggregated through the protocol, then searched server-side without
+    /// touching any per-client data.
+    pub fn heavy_from_cells(&self, level_cells: &[Vec<f64>], threshold: f64) -> Vec<(u64, f64)> {
+        assert_eq!(level_cells.len(), self.bits as usize, "one cell vector per level");
+        let mut frontier: Vec<u64> = vec![0, 1]; // 1-bit prefixes
+        for l in 0..self.bits as usize {
+            let sketch = &self.levels[l];
+            frontier.retain(|&p| sketch.query_cells(&level_cells[l], p) >= threshold);
+            if l + 1 < self.bits as usize {
+                frontier = frontier.iter().flat_map(|&p| [p << 1, (p << 1) | 1]).collect();
+            }
+        }
+        let last = self.bits as usize - 1;
+        let mut out: Vec<(u64, f64)> = frontier
+            .into_iter()
+            .map(|item| (item, self.levels[last].query_cells(&level_cells[last], item)))
+            .collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn finds_planted_heavy_items() {
+        let mut hh = HeavyHitters::new(10, 256, 4, 1);
+        let mut rng = SplitMix64::seed_from_u64(2);
+        // background: 5000 uniform items
+        for _ in 0..5000 {
+            hh.insert(rng.gen_range(1024));
+        }
+        // planted: two heavy items
+        for _ in 0..800 {
+            hh.insert(42);
+        }
+        for _ in 0..600 {
+            hh.insert(777);
+        }
+        let heavy = hh.heavy(400);
+        let ids: Vec<u64> = heavy.iter().map(|&(i, _)| i).collect();
+        assert!(ids.contains(&42), "{ids:?}");
+        assert!(ids.contains(&777), "{ids:?}");
+        assert!(ids.len() <= 6, "few false positives: {ids:?}");
+        // ordering by estimated count
+        assert_eq!(heavy[0].0, 42);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = HeavyHitters::new(8, 64, 3, 3);
+        let mut b = HeavyHitters::new(8, 64, 3, 3);
+        for _ in 0..300 {
+            a.insert(7);
+        }
+        for _ in 0..300 {
+            b.insert(7);
+        }
+        a.merge(&b);
+        let heavy = a.heavy(500);
+        assert_eq!(heavy[0].0, 7);
+        assert!(heavy[0].1 >= 600);
+    }
+
+    #[test]
+    fn no_heavy_items_empty_result() {
+        let mut hh = HeavyHitters::new(8, 128, 3, 4);
+        let mut rng = SplitMix64::seed_from_u64(5);
+        for _ in 0..1000 {
+            hh.insert(rng.gen_range(256));
+        }
+        assert!(hh.heavy(500).is_empty());
+    }
+
+    #[test]
+    fn heavy_from_noisy_cells_still_finds_planted() {
+        // simulate per-cell aggregation noise (the Thm 1 regime read-out)
+        let mut hh = HeavyHitters::new(8, 128, 3, 7);
+        let mut rng = SplitMix64::seed_from_u64(8);
+        for _ in 0..2000 {
+            hh.insert(rng.gen_range(256));
+        }
+        for _ in 0..700 {
+            hh.insert(99);
+        }
+        let noisy: Vec<Vec<f64>> = hh
+            .levels()
+            .iter()
+            .map(|l| {
+                l.cells()
+                    .iter()
+                    .map(|&c| c as f64 + (rng.gen_f64() * 20.0 - 10.0))
+                    .collect()
+            })
+            .collect();
+        let heavy = hh.heavy_from_cells(&noisy, 500.0);
+        assert!(heavy.iter().any(|&(i, _)| i == 99), "{heavy:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_domain() {
+        let mut hh = HeavyHitters::new(4, 16, 2, 6);
+        hh.insert(16);
+    }
+}

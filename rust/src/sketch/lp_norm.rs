@@ -1,0 +1,200 @@
+//! ℓ_p-norm estimation over secure aggregation — §1.2 names "estimation
+//! of ℓ_p-norms" as a linear-sketch application of the protocol.
+//!
+//! ℓ₂ (F₂): the AMS / Tug-of-War estimator — `reps` independent ±1
+//! projections; E[(Σ_x f_x s(x))²] = ‖f‖₂². Each projection is linear in
+//! the frequency vector, so clients sketch locally and the coordinator
+//! sums the projections coordinate-wise (offset-encoded like CountSketch).
+//! ℓ₁ of a non-negative frequency vector is the plain total count — one
+//! aggregation instance.
+
+use super::hash64;
+
+/// AMS sketch for ‖f‖₂² over u64 item ids.
+#[derive(Clone, Debug)]
+pub struct AmsL2Sketch {
+    reps: usize,
+    seed: u64,
+    /// Signed projections Σ_x f_x·s_r(x), one per repetition.
+    projections: Vec<i64>,
+    /// Total insertions (= ℓ₁ for insert-only streams).
+    total: u64,
+}
+
+impl AmsL2Sketch {
+    pub fn new(reps: usize, seed: u64) -> Self {
+        assert!(reps >= 1);
+        AmsL2Sketch { reps, seed, projections: vec![0; reps], total: 0 }
+    }
+
+    /// reps for relative error ~ε with constant probability: O(1/ε²).
+    pub fn for_error(eps_rel: f64, seed: u64) -> Self {
+        Self::new(((2.0 / (eps_rel * eps_rel)).ceil() as usize).max(8), seed)
+    }
+
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+
+    fn sign(&self, rep: usize, item: u64) -> i64 {
+        if hash64(self.seed.wrapping_add(0xA5A5_0000 + rep as u64), item) & 1 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        self.insert_count(item, 1);
+    }
+
+    pub fn insert_count(&mut self, item: u64, count: i64) {
+        for r in 0..self.reps {
+            self.projections[r] += self.sign(r, item) * count;
+        }
+        self.total = self.total.saturating_add(count.unsigned_abs());
+    }
+
+    pub fn projections(&self) -> &[i64] {
+        &self.projections
+    }
+
+    /// ‖f‖₂² estimate: median-of-means over the squared projections.
+    pub fn l2_squared(&self) -> f64 {
+        Self::l2_squared_from_projections(
+            &self.projections.iter().map(|&p| p as f64).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Decode from externally-aggregated projections (the private path:
+    /// clients' projections summed coordinate-wise by the coordinator —
+    /// the sum of clients' linear projections IS the global projection).
+    pub fn l2_squared_from_projections(proj: &[f64]) -> f64 {
+        assert!(!proj.is_empty());
+        // median of means over 8 groups (robustness to heavy groups)
+        let groups = 8.min(proj.len());
+        let per = proj.len() / groups;
+        let mut means: Vec<f64> = (0..groups)
+            .map(|g| {
+                let s = &proj[g * per..(g + 1) * per];
+                s.iter().map(|&x| x * x).sum::<f64>() / s.len() as f64
+            })
+            .collect();
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = means.len() / 2;
+        if means.len() % 2 == 1 {
+            means[mid]
+        } else {
+            (means[mid - 1] + means[mid]) / 2.0
+        }
+    }
+
+    /// Offset-encode projections for the non-negative aggregation domain.
+    pub fn offset_projections(&self, offset: i64) -> Vec<u64> {
+        self.projections
+            .iter()
+            .map(|&p| {
+                assert!(p.abs() <= offset, "projection {p} exceeds offset {offset}");
+                (p + offset) as u64
+            })
+            .collect()
+    }
+
+    /// Undo offset encoding after aggregation of n clients.
+    pub fn decode_aggregate(agg: &[f64], n: usize, offset: i64) -> Vec<f64> {
+        agg.iter().map(|&v| v - (n as i64 * offset) as f64).collect()
+    }
+
+    pub fn merge(&mut self, other: &AmsL2Sketch) {
+        assert_eq!((self.reps, self.seed), (other.reps, other.seed));
+        for (a, b) in self.projections.iter_mut().zip(&other.projections) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// ℓ₁ for insert-only streams (exact).
+    pub fn l1(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, SeedableRng, SplitMix64};
+
+    fn truth_l2sq(freqs: &std::collections::HashMap<u64, i64>) -> f64 {
+        freqs.values().map(|&f| (f * f) as f64).sum()
+    }
+
+    #[test]
+    fn estimates_f2_within_tolerance() {
+        let mut s = AmsL2Sketch::new(256, 1);
+        let mut rng = SplitMix64::seed_from_u64(2);
+        let mut freqs = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            let item = rng.gen_range(200);
+            s.insert(item);
+            *freqs.entry(item).or_insert(0i64) += 1;
+        }
+        let truth = truth_l2sq(&freqs);
+        let est = s.l2_squared();
+        assert!((est - truth).abs() < 0.25 * truth, "est={est} truth={truth}");
+    }
+
+    #[test]
+    fn for_error_sizes_reps() {
+        assert!(AmsL2Sketch::for_error(0.1, 0).reps() >= 200);
+        assert_eq!(AmsL2Sketch::for_error(1.0, 0).reps(), 8);
+    }
+
+    #[test]
+    fn merge_equals_pooled() {
+        let mut a = AmsL2Sketch::new(64, 5);
+        let mut b = AmsL2Sketch::new(64, 5);
+        let mut whole = AmsL2Sketch::new(64, 5);
+        let mut rng = SplitMix64::seed_from_u64(6);
+        for _ in 0..500 {
+            let item = rng.gen_range(40);
+            if rng.gen_bool(0.5) {
+                a.insert(item);
+            } else {
+                b.insert(item);
+            }
+            whole.insert(item);
+        }
+        a.merge(&b);
+        assert_eq!(a.projections(), whole.projections());
+        assert_eq!(a.l1(), 500);
+    }
+
+    #[test]
+    fn offset_roundtrip_single_client() {
+        let mut s = AmsL2Sketch::new(16, 7);
+        for i in 0..100u64 {
+            s.insert(i % 9);
+        }
+        let off = s.offset_projections(256);
+        let agg: Vec<f64> = off.iter().map(|&v| v as f64).collect();
+        let dec = AmsL2Sketch::decode_aggregate(&agg, 1, 256);
+        let want: Vec<f64> = s.projections().iter().map(|&p| p as f64).collect();
+        assert_eq!(dec, want);
+        // decoded projections give the same estimate
+        assert_eq!(AmsL2Sketch::l2_squared_from_projections(&dec), s.l2_squared());
+    }
+
+    #[test]
+    fn distinguishes_flat_from_skewed() {
+        // Same l1 mass, very different l2: the estimator must separate them.
+        let mut flat = AmsL2Sketch::new(128, 9);
+        let mut skew = AmsL2Sketch::new(128, 9);
+        for i in 0..1000u64 {
+            flat.insert(i); // 1000 distinct
+        }
+        for _ in 0..1000u64 {
+            skew.insert(7); // one heavy item
+        }
+        assert!(skew.l2_squared() > 100.0 * flat.l2_squared());
+    }
+}

@@ -1,0 +1,72 @@
+//! Linear sketches over secure aggregation (§1.2 "Private Sketching and
+//! Statistical Learning").
+//!
+//! Every sketch here is a *linear* map of the input multiset, so n clients
+//! can sketch locally and the coordinator can sum the sketch vectors
+//! coordinate-wise through the Invisibility Cloak protocol — the server
+//! only ever sees the (noised) aggregate sketch. The modules:
+//!
+//! * [`countmin`] — frequency over-estimates (heavy hitters substrate);
+//! * [`countsketch`] — unbiased frequency estimates, ℓ₂ guarantees;
+//! * [`distinct`] — linear probabilistic counting (distinct elements);
+//! * [`quantiles`] — dyadic histogram quantile sketch;
+//! * [`heavy_hitters`] — CountMin + dyadic decomposition search.
+//!
+//! All sketch cells are small non-negative counts normalized into [0, 1]
+//! by a per-round `cell_cap` before entering the aggregation protocol (the
+//! protocol's domain); decode rescales. See `examples/sketch_analytics.rs`.
+
+pub mod countmin;
+pub mod countsketch;
+pub mod distinct;
+pub mod heavy_hitters;
+pub mod lp_norm;
+pub mod quantiles;
+
+use crate::rng::{SeedableRng, SplitMix64};
+
+/// Shared 2-universal-ish hashing for the sketches: seeded 64-bit mixers.
+/// (SplitMix64 of (seed ⊕ item) is a fine stand-in for the pairwise-
+/// independent families the analyses assume; the unit tests validate the
+/// resulting error bounds empirically.)
+#[inline]
+pub fn hash64(seed: u64, item: u64) -> u64 {
+    let mut s = SplitMix64::seed_from_u64(seed ^ item.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    crate::rng::Rng::next_u64(&mut s)
+}
+
+/// Normalize a count-valued sketch vector into [0,1] coordinates for the
+/// aggregation protocol, given a cap on per-client cell values.
+pub fn normalize_cells(cells: &[u64], cap: u64) -> Vec<f64> {
+    cells.iter().map(|&c| (c.min(cap)) as f64 / cap as f64).collect()
+}
+
+/// Undo [`normalize_cells`] on an aggregated estimate.
+pub fn denormalize_sum(est: &[f64], cap: u64) -> Vec<f64> {
+    est.iter().map(|&e| e * cap as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_deterministic_and_spread() {
+        let a = hash64(1, 42);
+        assert_eq!(a, hash64(1, 42));
+        assert_ne!(a, hash64(2, 42));
+        assert_ne!(a, hash64(1, 43));
+        // spread: low bits roughly balanced over many items
+        let ones: u32 = (0..1000).map(|i| (hash64(7, i) & 1) as u32).sum();
+        assert!((400..600).contains(&ones), "{ones}");
+    }
+
+    #[test]
+    fn normalize_roundtrip() {
+        let cells = vec![0u64, 3, 10, 99];
+        let norm = normalize_cells(&cells, 10);
+        assert_eq!(norm, vec![0.0, 0.3, 1.0, 1.0]);
+        let back = denormalize_sum(&norm, 10);
+        assert_eq!(back, vec![0.0, 3.0, 10.0, 10.0]);
+    }
+}

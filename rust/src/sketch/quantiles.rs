@@ -1,0 +1,145 @@
+//! Quantile estimation via a dyadic histogram sketch: values in [0, 1)
+//! are binned at a fixed resolution; ranks/quantiles are read off the
+//! aggregated cumulative histogram. Histograms are linear, so n clients
+//! aggregate privately; the analyzer's per-cell noise adds at most
+//! O(noise·bins) rank error, which the tests budget for.
+
+/// Fixed-resolution histogram over [0, 1).
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    bins: usize,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl QuantileSketch {
+    pub fn new(bins: usize) -> Self {
+        assert!(bins >= 2);
+        QuantileSketch { bins, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        let b = ((x.clamp(0.0, 1.0)) * self.bins as f64) as usize;
+        self.counts[b.min(self.bins - 1)] += 1;
+        self.total += 1;
+    }
+
+    pub fn cells(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert_eq!(self.bins, other.bins);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// q-quantile from own counts.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let cells: Vec<f64> = self.counts.iter().map(|&c| c as f64).collect();
+        Self::quantile_from_cells(&cells, q)
+    }
+
+    /// q-quantile from (possibly noisy) aggregated cells: walk the
+    /// cumulative histogram to the q·total rank; negative noise cells are
+    /// clamped at 0.
+    pub fn quantile_from_cells(cells: &[f64], q: f64) -> f64 {
+        let bins = cells.len();
+        let total: f64 = cells.iter().map(|&c| c.max(0.0)).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total;
+        let mut acc = 0.0;
+        for (i, &c) in cells.iter().enumerate() {
+            acc += c.max(0.0);
+            if acc >= target {
+                // linear interpolation inside the bin
+                let over = acc - target;
+                let frac = if c > 0.0 { 1.0 - over / c.max(1e-12) } else { 0.5 };
+                return (i as f64 + frac) / bins as f64;
+            }
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, SeedableRng, SplitMix64};
+
+    #[test]
+    fn median_of_uniform_is_half() {
+        let mut s = QuantileSketch::new(256);
+        let mut rng = SplitMix64::seed_from_u64(1);
+        for _ in 0..20_000 {
+            s.insert(rng.gen_f64());
+        }
+        let med = s.quantile(0.5);
+        assert!((med - 0.5).abs() < 0.02, "med={med}");
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut s = QuantileSketch::new(64);
+        let mut rng = SplitMix64::seed_from_u64(2);
+        for _ in 0..5000 {
+            let x = rng.gen_f64();
+            s.insert(x * x); // skewed
+        }
+        let q25 = s.quantile(0.25);
+        let q50 = s.quantile(0.5);
+        let q75 = s.quantile(0.75);
+        assert!(q25 <= q50 && q50 <= q75);
+        // skew: median of x² for uniform x is 0.25
+        assert!((q50 - 0.25).abs() < 0.05, "q50={q50}");
+    }
+
+    #[test]
+    fn merge_matches_pooled() {
+        let mut a = QuantileSketch::new(128);
+        let mut b = QuantileSketch::new(128);
+        let mut pooled = QuantileSketch::new(128);
+        let mut rng = SplitMix64::seed_from_u64(3);
+        for _ in 0..3000 {
+            let x = rng.gen_f64();
+            if rng.gen_bool(0.5) {
+                a.insert(x);
+            } else {
+                b.insert(x);
+            }
+            pooled.insert(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.cells(), pooled.cells());
+    }
+
+    #[test]
+    fn noisy_cells_still_reasonable() {
+        let mut s = QuantileSketch::new(128);
+        let mut rng = SplitMix64::seed_from_u64(4);
+        for _ in 0..50_000 {
+            s.insert(rng.gen_f64());
+        }
+        // add +-2 noise per cell (simulating aggregation noise)
+        let noisy: Vec<f64> = s
+            .cells()
+            .iter()
+            .map(|&c| c as f64 + (rng.gen_f64() * 4.0 - 2.0))
+            .collect();
+        let med = QuantileSketch::quantile_from_cells(&noisy, 0.5);
+        assert!((med - 0.5).abs() < 0.03, "med={med}");
+    }
+
+    #[test]
+    fn empty_cells_degenerate() {
+        assert_eq!(QuantileSketch::quantile_from_cells(&[0.0; 16], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! benchkit: micro-benchmark harness (the offline image has no criterion).
+//!
+//! Usage mirrors criterion's closure style:
+//!
+//! ```no_run
+//! use cloak_agg::util::benchkit::Bench;
+//! let mut b = Bench::new("example");
+//! b.run("sum", || (0..1000u64).sum::<u64>());
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to cross a
+//! minimum measurement window; mean / p50 / p95 / min over sample batches
+//! are reported in the same "time per iteration" terms criterion uses.
+
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional caller-supplied throughput denominator (items per iter).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|it| it / (self.mean_ns * 1e-9))
+    }
+}
+
+/// A group of benchmark cases with shared config.
+pub struct Bench {
+    pub group: String,
+    warmup: Duration,
+    window: Duration,
+    samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Respect a quick mode for CI: CLOAK_BENCH_QUICK=1.
+        let quick = std::env::var("CLOAK_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            window: if quick { Duration::from_millis(50) } else { Duration::from_millis(400) },
+            samples: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_window(mut self, warmup: Duration, window: Duration, samples: usize) -> Self {
+        self.warmup = warmup;
+        self.window = window;
+        self.samples = samples;
+        self
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Time `f` and record a throughput denominator (e.g. messages/iter).
+    pub fn run_items<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) -> &Measurement {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        // Warmup + estimate iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let est_ns = (self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let iters_per_sample =
+            ((self.window.as_nanos() as f64 / self.samples as f64) / est_ns).ceil().max(1.0) as u64;
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            per_iter.push(dt / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let p50 = percentile(&per_iter, 0.50);
+        let p95 = percentile(&per_iter, 0.95);
+        let min = per_iter[0];
+        self.results.push(Measurement {
+            name: format!("{}/{}", self.group, name),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            min_ns: min,
+            items_per_iter: items,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print a criterion-style table of all results.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>14}",
+            "case", "mean", "p50", "p95", "throughput"
+        );
+        for m in &self.results {
+            let tp = m
+                .throughput()
+                .map(|t| format_throughput(t))
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "{:<48} {:>12} {:>12} {:>12} {:>14}",
+                m.name,
+                format_ns(m.mean_ns),
+                format_ns(m.p50_ns),
+                format_ns(m.p95_ns),
+                tp
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Human-readable nanoseconds.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human-readable items/second.
+pub fn format_throughput(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("test").with_window(
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            3,
+        );
+        let m = b.run("noop-ish", || std::hint::black_box(1u64 + 1)).clone();
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+        assert!(m.min_ns <= m.p50_ns && m.p50_ns <= m.p95_ns);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new("test").with_window(
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            3,
+        );
+        let m = b.run_items("items", 100.0, || std::hint::black_box(42)).clone();
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_ns(12.3), "12.3 ns");
+        assert!(format_ns(12_300.0).contains("µs"));
+        assert!(format_ns(12_300_000.0).contains("ms"));
+        assert!(format_throughput(2.5e9).contains("G/s"));
+        assert!(format_throughput(2.5e3).contains("K/s"));
+    }
+}

@@ -1,0 +1,253 @@
+//! Scoped thread pool (the offline image has no tokio/rayon).
+//!
+//! The coordinator fans user encoding out across workers and fans encoded
+//! batches back in through a bounded channel — the same bounded-queue
+//! backpressure semantics a tokio implementation would have, with plain
+//! std threads. Work is distributed by chunking, so per-item overhead is
+//! one atomic per chunk, not per item.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Fixed-size worker pool for fork-join parallel maps.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// `workers = 0` means "number of available cores".
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            workers
+        };
+        ThreadPool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel indexed map: computes `f(i)` for `i in 0..n`, preserving
+    /// order. `f` must be `Sync` (called concurrently from many threads).
+    pub fn map_indexed<T, F>(&self, n: usize, chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let chunk = chunk.max(1);
+        let mut out = vec![T::default(); n];
+        let next = AtomicUsize::new(0);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n.div_ceil(chunk)) {
+                let next = &next;
+                let f = &f;
+                let out_ptr = &out_ptr;
+                scope.spawn(move || loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        // SAFETY: each index i is written by exactly one
+                        // worker (disjoint chunks from the atomic counter),
+                        // and `out` outlives the scope.
+                        unsafe { *out_ptr.0.add(i) = f(i) };
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Parallel for-each over disjoint chunks of a mutable slice.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk = chunk.max(1);
+        let chunks: Vec<(usize, &mut [T])> = {
+            let mut v = Vec::new();
+            let mut rest = data;
+            let mut idx = 0;
+            while !rest.is_empty() {
+                let take = chunk.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                v.push((idx, head));
+                rest = tail;
+                idx += take;
+            }
+            v
+        };
+        let queue = Arc::new(std::sync::Mutex::new(chunks));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                let queue = Arc::clone(&queue);
+                let f = &f;
+                scope.spawn(move || loop {
+                    let item = queue.lock().unwrap().pop();
+                    match item {
+                        Some((idx, slice)) => f(idx, slice),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: raw pointer shared across scoped threads; writes are disjoint.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Bounded MPSC channel with blocking send — the coordinator's
+/// backpressure primitive (see `coordinator::batcher`).
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    buf: std::sync::Mutex<std::collections::VecDeque<T>>,
+    cap: usize,
+    not_full: std::sync::Condvar,
+    not_empty: std::sync::Condvar,
+    closed: std::sync::atomic::AtomicBool,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Arc::new(QueueInner {
+                buf: std::sync::Mutex::new(std::collections::VecDeque::new()),
+                cap: cap.max(1),
+                not_full: std::sync::Condvar::new(),
+                not_empty: std::sync::Condvar::new(),
+                closed: std::sync::atomic::AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut buf = self.inner.buf.lock().unwrap();
+        while buf.len() >= self.inner.cap {
+            if self.inner.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            buf = self.inner.not_full.wait(buf).unwrap();
+        }
+        if self.inner.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        buf.push_back(item);
+        drop(buf);
+        self.inner.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; returns None once closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        loop {
+            if let Some(v) = buf.pop_front() {
+                drop(buf);
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if self.inner.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            buf = self.inner.not_empty.wait(buf).unwrap();
+        }
+    }
+
+    /// Close the queue: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.buf.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map_indexed(1000, 7, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_indexed_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        assert!(pool.map_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(pool.map_indexed(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn for_each_chunk_touches_every_element() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 503];
+        pool.for_each_chunk(&mut data, 16, |base, chunk| {
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = (base + off) as u64;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressure() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                assert!(q2.push(i));
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn closed_queue_rejects_push() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.close();
+        assert!(!q.push(1));
+        assert_eq!(q.pop(), None);
+    }
+}

