@@ -11,6 +11,8 @@
 use cloak_agg::analyzer::Analyzer;
 use cloak_agg::arith::modring::ModRing;
 use cloak_agg::encoder::CloakEncoder;
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::params::ProtocolPlan;
 use cloak_agg::rng::{uniform::fill_uniform, ChaCha20Rng, Rng, SeedableRng};
 use cloak_agg::shuffler::{FisherYates, Shuffler};
 use cloak_agg::util::benchkit::Bench;
@@ -102,7 +104,37 @@ fn main() {
         });
     }
 
+    // engine round on the shard axis: the full encode→shuffle→analyze hot
+    // path at S = 1 vs S = cores (d = 128 instances, n = 64 clients)
+    {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        let (n, d, enc_m) = (64usize, 128usize, 8usize);
+        let plan = ProtocolPlan::exact_secure_agg(n, 1 << 10, enc_m);
+        let seeds = DerivedClientSeeds::new(9);
+        let mut rng = ChaCha20Rng::seed_from_u64(9);
+        let inputs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+        let mut sweep = vec![1usize, cores];
+        sweep.sort_unstable();
+        sweep.dedup();
+        for s in sweep {
+            let mut engine = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(s), 9);
+            b.run_sharded(
+                &format!("engine round (n={n}, d={d}, m={enc_m}, S={s})"),
+                (n * d * enc_m) as f64,
+                s,
+                || {
+                    engine
+                        .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                        .expect("engine round")
+                        .estimates[0]
+                },
+            );
+        }
+    }
+
     b.report();
+    b.write_json("BENCH_encoder_hotpath.json").expect("write BENCH_encoder_hotpath.json");
 
     // Perf gate for EXPERIMENTS.md §Perf: the vector encoder must beat
     // 10M shares/s/core (the practical target; see DESIGN.md §7).

@@ -1,39 +1,25 @@
 //! PERF/FL: full coordinator round throughput — the end-to-end number
-//! the FL driver pays per round (encode ∥ ingest → shuffle → analyze).
+//! the FL driver pays per round (shard-parallel encode → shuffle →
+//! analyze through the engine).
 //!
 //!     cargo bench --bench fl_round
 //!
-//! Sweeps (clients, instances) and reports wall-clock, messages/s and the
-//! per-stage budget. The coordinator must stay near-linear in n·d·m and
-//! the shuffle+analyze side must not dominate encode (backpressure sized
-//! correctly).
+//! Sweeps (clients, instances) at the default shard configuration and
+//! reports wall-clock and messages/s; then holds the widest round fixed
+//! and sweeps the shard count. The coordinator must stay near-linear in
+//! n·d·m, and sharding must not regress the single-shard round.
 
 use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
-use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::{fmt_f, Table};
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
 use std::time::Instant;
 
-fn round_secs(clients: usize, instances: usize, m: usize) -> (f64, u64) {
-    let scale = 1u64 << 16;
-    let modulus = {
-        let v = 3 * clients as u64 * scale + 10_001;
-        if v % 2 == 0 {
-            v + 1
-        } else {
-            v
-        }
-    };
-    let plan = ProtocolPlan::custom(
-        clients,
-        1.0,
-        1e-6,
-        NeighborNotion::SumPreserving,
-        modulus,
-        scale,
-        m,
-    );
-    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, instances), 77);
+fn round_secs(clients: usize, instances: usize, m: usize, shards: usize) -> (f64, u64) {
+    let plan = ProtocolPlan::exact_secure_agg(clients, 1 << 16, m);
+    let mut cfg = CoordinatorConfig::new(plan, instances);
+    cfg.shards = shards;
+    let mut coord = Coordinator::new(cfg, 77);
     let mut rng = SplitMix64::seed_from_u64(5);
     let inputs: Vec<Vec<f64>> = (0..clients)
         .map(|_| (0..instances).map(|_| rng.gen_f64()).collect())
@@ -46,12 +32,12 @@ fn round_secs(clients: usize, instances: usize, m: usize) -> (f64, u64) {
 fn main() {
     let m = 16usize;
     let mut table = Table::new(
-        "coordinator round throughput (m=16, Thm 2 regime)",
+        "coordinator round throughput (m=16, Thm 2 regime, auto shards)",
         &["clients", "instances", "messages", "secs", "msgs/sec"],
     );
     let mut rates = Vec::new();
     for &(c, d) in &[(16usize, 256usize), (32, 256), (64, 256), (32, 1024), (32, 2688)] {
-        let (secs, msgs) = round_secs(c, d, m);
+        let (secs, msgs) = round_secs(c, d, m, 0);
         let rate = msgs as f64 / secs;
         rates.push(rate);
         table.row(&[
@@ -72,5 +58,28 @@ fn main() {
     assert!(max_rate / min_rate < 6.0, "rate spread {}", max_rate / min_rate);
     // absolute floor: ≥ 1M messages/s end-to-end on the largest round
     assert!(*rates.last().unwrap() > 1.0e6, "end-to-end rate {}", rates.last().unwrap());
+
+    // --- shard axis: same round, S = 1, 2, 4, cores ----------------------
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let mut sweep = vec![1usize, 2, 4, cores];
+    sweep.sort_unstable();
+    sweep.dedup();
+    let mut shard_table = Table::new(
+        "coordinator round vs shard count (clients=32, d=1024, m=16)",
+        &["shards", "secs", "msgs/sec"],
+    );
+    let mut secs_by_shards = Vec::new();
+    for &s in &sweep {
+        let (secs, msgs) = round_secs(32, 1024, m, s);
+        secs_by_shards.push((s, secs));
+        shard_table.row(&[s.to_string(), format!("{secs:.4}"), fmt_f(msgs as f64 / secs)]);
+    }
+    println!("{}", shard_table.render());
+    let (_, t1) = secs_by_shards[0];
+    let &(s_max, t_max) = secs_by_shards.last().unwrap();
+    assert!(
+        t_max <= t1 * 1.6,
+        "S={s_max} round slower than single shard: {t_max:.4}s vs {t1:.4}s"
+    );
     println!("fl_round: OK");
 }

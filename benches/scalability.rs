@@ -1,17 +1,25 @@
 //! SCALE: "total work and communication of our new protocol scales
-//! near-linearly with the number of users" (§1.2) vs Bonawitz's O(n²).
+//! near-linearly with the number of users" (§1.2) vs Bonawitz's O(n²) —
+//! plus the engine's shard-scaling axis.
 //!
 //!     cargo bench --bench scalability
 //!
-//! Measures wall-clock of a full aggregation round (encode → shuffle →
-//! analyze) and total simulated bytes for both protocols across n; fits
-//! the growth exponent. Bonawitz's quadratic key exchange blows up by
-//! n ≈ 2000 while the cloak round stays near-linear in n·m.
+//! Part 1 measures wall-clock of a full aggregation round (encode →
+//! shuffle → analyze) and total simulated bytes for both protocols across
+//! n; fits the growth exponent. Bonawitz's quadratic key exchange blows up
+//! by n ≈ 2000 while the cloak round stays near-linear in n·m.
+//!
+//! Part 2 sweeps the engine shard count S for a wide round (d = 256
+//! instances) and writes BENCH_scalability.json (benchkit schema with the
+//! `shards` field), so scaling runs are comparable across machines.
 
 use cloak_agg::baselines::{bonawitz::BonawitzProtocol, AggregationProtocol, CloakProtocol};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::{fmt_f, Table};
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
-use std::time::Instant;
+use cloak_agg::util::benchkit::{format_ns, Bench};
+use std::time::{Duration, Instant};
 
 fn measure(p: &mut dyn AggregationProtocol, n: usize) -> (f64, u64) {
     let mut rng = SplitMix64::seed_from_u64(3);
@@ -32,7 +40,7 @@ fn fit_exponent(ns: &[usize], ys: &[f64]) -> f64 {
     num / den
 }
 
-fn main() {
+fn protocol_comparison() {
     let ns = [250usize, 500, 1_000, 2_000, 4_000];
     let mut table = Table::new(
         "scalability — one full round, wall-clock and bytes",
@@ -77,5 +85,65 @@ fn main() {
         e_bona_time > e_cloak_time + 0.3,
         "bonawitz time must grow faster: {e_bona_time} vs {e_cloak_time}"
     );
+}
+
+/// One engine round at shard count `shards`; returns the configured engine.
+fn engine_for(n: usize, d: usize, m: usize, shards: usize) -> Engine {
+    let plan = ProtocolPlan::exact_secure_agg(n, 1 << 10, m);
+    Engine::new(EngineConfig::new(plan, d).with_shards(shards), 77)
+}
+
+fn shard_sweep() {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let (n, d, m) = (128usize, 256usize, 8usize);
+    let msgs = (n * d * m) as f64;
+    let mut sweep: Vec<usize> = vec![1, 2, 4, cores];
+    sweep.sort_unstable();
+    sweep.dedup();
+
+    let mut b = Bench::new("scalability_shards").with_window(
+        Duration::from_millis(50),
+        Duration::from_millis(300),
+        5,
+    );
+    let seeds = DerivedClientSeeds::new(5);
+    let mut rng = SplitMix64::seed_from_u64(5);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+
+    let mut mean_by_shards: Vec<(usize, f64)> = Vec::new();
+    for &s in &sweep {
+        let mut engine = engine_for(n, d, m, s);
+        let name = format!("round n={n} d={d} m={m} S={s}");
+        let meas = b.run_sharded(&name, msgs, s, || {
+            engine
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("engine round")
+                .estimates[0]
+        });
+        mean_by_shards.push((s, meas.mean_ns));
+    }
+    b.report();
+    b.write_json("BENCH_scalability.json").expect("write BENCH_scalability.json");
+    println!("\nwrote BENCH_scalability.json ({} shard points)", mean_by_shards.len());
+
+    let (_, t_single) = mean_by_shards[0];
+    let &(s_max, t_multi) = mean_by_shards.last().unwrap();
+    println!(
+        "shard scaling at d={d}: S=1 {} vs S={s_max} {}",
+        format_ns(t_single),
+        format_ns(t_multi)
+    );
+    // Acceptance: per-round wall time at S=cores must not regress vs the
+    // single-shard round (generous headroom for small/noisy machines).
+    assert!(
+        t_multi <= t_single * 1.6,
+        "sharded round regressed: S={s_max} {t_multi}ns vs S=1 {t_single}ns"
+    );
+}
+
+fn main() {
+    protocol_comparison();
+    shard_sweep();
     println!("scalability: shape OK");
 }

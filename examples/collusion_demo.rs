@@ -16,8 +16,9 @@ use cloak_agg::params::{NeighborNotion, ProtocolPlan};
 use cloak_agg::privacy::smoothness;
 use cloak_agg::report::Table;
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use cloak_agg::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let n = 20usize;
     let scale = 100u64;
     // small modulus so the smoothness measurement can enumerate Z_N, but

@@ -19,11 +19,13 @@
 //!     --eps F         per-round epsilon         (default 1.0)
 
 use cloak_agg::cli::Args;
+use cloak_agg::ensure;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
 use cloak_agg::params::NeighborNotion;
 use cloak_agg::report::Table;
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
 use cloak_agg::runtime::{Manifest, Runtime};
+use cloak_agg::util::error::Result;
 
 fn init_params(mf: &Manifest, seed: u64) -> Vec<f32> {
     let mut rng = SplitMix64::seed_from_u64(seed ^ 0x1217);
@@ -56,7 +58,7 @@ fn accuracy(rt: &Runtime, params: &[f32], task: &SyntheticTask, batches: usize) 
     correct as f64 / total as f64
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // examples take flags directly; prepend an implicit subcommand
     let args = Args::parse(
         std::iter::once("run".to_string()).chain(std::env::args().skip(1)),
@@ -133,8 +135,8 @@ fn main() -> anyhow::Result<()> {
     let spent = driver.accountant().best(1e-6);
     println!("privacy spent: ε = {:.2}, δ = {:.1e} ({} rounds composed)",
         spent.epsilon, spent.delta, driver.accountant().num_rounds());
-    anyhow::ensure!(last < first * 0.8, "training must reduce loss");
-    anyhow::ensure!(final_acc > 2.0 / mf.num_classes as f64, "must beat chance");
+    ensure!(last < first * 0.8, "training must reduce loss");
+    ensure!(final_acc > 2.0 / mf.num_classes as f64, "must beat chance");
     println!("fl_training: OK");
     Ok(())
 }

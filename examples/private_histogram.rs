@@ -10,11 +10,13 @@
 //! without ever seeing an individual's category.
 
 use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
+use cloak_agg::ensure;
 use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::Table;
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
+use cloak_agg::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // Thm 1 noise is flat in n (~166 per bucket at ε=1, δ=1e-6), so the
     // relative accuracy *improves* with cohort size — the paper's whole
     // point. 10^4 users over 8 buckets puts the mode ≈ 3700 ≫ noise.
@@ -83,10 +85,10 @@ fn main() -> anyhow::Result<()> {
     // Sanity: the heavy buckets must be ordered correctly despite noise.
     let mut order: Vec<usize> = (0..buckets).collect();
     order.sort_by(|&a, &b| result.estimates[b].partial_cmp(&result.estimates[a]).unwrap());
-    anyhow::ensure!(order[0] == 0, "bucket 0 is the zipf mode");
+    ensure!(order[0] == 0, "bucket 0 is the zipf mode");
     // and the total mass is ≈ n
     let mass: f64 = result.estimates.iter().sum();
-    anyhow::ensure!((mass - n as f64).abs() < n as f64 * 0.2, "mass {mass}");
+    ensure!((mass - n as f64).abs() < n as f64 * 0.2, "mass {mass}");
     println!("private_histogram: OK");
     Ok(())
 }

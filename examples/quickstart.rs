@@ -8,8 +8,9 @@
 
 use cloak_agg::prelude::*;
 use cloak_agg::rng::SplitMix64;
+use cloak_agg::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let n = 1_000;
     let (eps, delta) = (1.0, 1e-6);
 

@@ -1,6 +1,7 @@
 //! Private sketch analytics — §1.2 "Private Sketching and Statistical
 //! Learning": linear sketches computed locally, aggregated through the
-//! Invisibility Cloak coordinator, decoded server-side.
+//! shard-parallel Invisibility Cloak engine (one shard per slice of the
+//! sketch width), decoded server-side.
 //!
 //!     cargo run --release --example sketch_analytics
 //!
@@ -11,44 +12,49 @@
 //!   * dyadic histogram      → quantiles of a numeric attribute
 //! The server sees only aggregated (cloaked) sketch cells.
 
-use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
-use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::ensure;
+use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::{fmt_f, Table};
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
 use cloak_agg::sketch::countmin::CountMin;
 use cloak_agg::sketch::distinct::DistinctCounter;
 use cloak_agg::sketch::quantiles::QuantileSketch;
 use cloak_agg::sketch::{denormalize_sum, normalize_cells};
+use cloak_agg::util::error::Result;
 
 const N_CLIENTS: usize = 600;
 const ITEMS_PER_CLIENT: usize = 8;
 const CELL_CAP: u64 = 8; // max count a single client can put in one cell
 
-/// Aggregate per-client cell vectors (each cell in [0, CELL_CAP]) through
-/// the protocol; returns the decoded per-cell totals.
-fn aggregate_cells(cells_per_client: &[Vec<u64>], seed: u64) -> Vec<f64> {
-    let width = cells_per_client[0].len();
-    let n = cells_per_client.len();
-    let scale = 10 * n as u64;
-    let modulus = {
-        let v = 3 * (n as u64) * scale + 10_001;
-        if v % 2 == 0 {
-            v + 1
-        } else {
-            v
-        }
-    };
+/// A Theorem 2 (exact secure-aggregation) engine over `width` instances —
+/// sketch analytics needs no registry or streaming ingestion, so it
+/// constructs the engine directly rather than going through a coordinator.
+fn cell_engine(n: usize, width: usize, seed: u64) -> Engine {
     // Theorem 2 regime: exact totals (secure-aggregation semantics).
-    let plan =
-        ProtocolPlan::custom(n, 1.0, 1e-6, NeighborNotion::SumPreserving, modulus, scale, 16);
-    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, width), seed);
-    let inputs: Vec<Vec<f64>> =
-        cells_per_client.iter().map(|c| normalize_cells(c, CELL_CAP)).collect();
-    let result = coord.run_round(&inputs).expect("aggregation round");
-    denormalize_sum(&result.estimates, CELL_CAP)
+    let plan = ProtocolPlan::exact_secure_agg(n, 10 * n as u64, 16);
+    Engine::new(EngineConfig::new(plan, width), seed)
 }
 
-fn main() -> anyhow::Result<()> {
+/// Aggregate per-client cell vectors (each cell in [0, cap]) through the
+/// engine; returns the decoded per-cell totals.
+fn aggregate_cells_capped(cells_per_client: &[Vec<u64>], cap: u64, seed: u64) -> Vec<f64> {
+    let width = cells_per_client[0].len();
+    let n = cells_per_client.len();
+    let mut engine = cell_engine(n, width, seed);
+    let inputs: Vec<Vec<f64>> =
+        cells_per_client.iter().map(|c| normalize_cells(c, cap)).collect();
+    let result = engine
+        .run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(seed))
+        .expect("aggregation round");
+    denormalize_sum(&result.estimates, cap)
+}
+
+fn aggregate_cells(cells_per_client: &[Vec<u64>], seed: u64) -> Vec<f64> {
+    aggregate_cells_capped(cells_per_client, CELL_CAP, seed)
+}
+
+fn main() -> Result<()> {
     let mut rng = SplitMix64::seed_from_u64(31);
     // zipf-ish items over a 1..512 universe + a numeric attribute in [0,1)
     let universe = 512u64;
@@ -109,8 +115,8 @@ fn main() -> anyhow::Result<()> {
     println!("{}", table.emit("sketch_analytics.txt"));
     for &(item, count) in top.iter().take(3) {
         let est = probe.query_cells(&agg_cm, item);
-        anyhow::ensure!(est >= count as f64 * 0.9, "CountMin never underestimates (modulo cap)");
-        anyhow::ensure!(est <= count as f64 + 0.02 * (N_CLIENTS * ITEMS_PER_CLIENT) as f64);
+        ensure!(est >= count as f64 * 0.9, "CountMin never underestimates (modulo cap)");
+        ensure!(est <= count as f64 + 0.02 * (N_CLIENTS * ITEMS_PER_CLIENT) as f64);
     }
 
     // --- 2. occupancy bitmap → distinct count ----------------------------
@@ -132,7 +138,7 @@ fn main() -> anyhow::Result<()> {
         distinct_true.len(),
         distinct_est
     );
-    anyhow::ensure!(
+    ensure!(
         (distinct_est - distinct_true.len() as f64).abs() < 0.15 * distinct_true.len() as f64
     );
 
@@ -152,8 +158,8 @@ fn main() -> anyhow::Result<()> {
     let med = QuantileSketch::quantile_from_cells(&agg_q, 0.5);
     let p90 = QuantileSketch::quantile_from_cells(&agg_q, 0.9);
     println!("median: true = {true_median:.3}, private = {med:.3}; p90 private = {p90:.3}");
-    anyhow::ensure!((med - true_median).abs() < 0.05, "median error");
-    anyhow::ensure!(p90 > med, "quantile monotonicity");
+    ensure!((med - true_median).abs() < 0.05, "median error");
+    ensure!(p90 > med, "quantile monotonicity");
 
     // --- 4. AMS projections → ℓ₂ norm ------------------------------------
     use cloak_agg::sketch::lp_norm::AmsL2Sketch;
@@ -171,32 +177,9 @@ fn main() -> anyhow::Result<()> {
         .collect();
     // offset cells are in [0, 2*offset]; reuse the aggregation path with a
     // cap of 2*offset per cell
-    let width = reps;
     let n = clients_l2.len();
-    let scale = 10 * n as u64;
-    let modulus = {
-        let v = 3 * (n as u64) * scale + 10_001;
-        if v % 2 == 0 {
-            v + 1
-        } else {
-            v
-        }
-    };
-    let plan = cloak_agg::params::ProtocolPlan::custom(
-        n,
-        1.0,
-        1e-6,
-        NeighborNotion::SumPreserving,
-        modulus,
-        scale,
-        16,
-    );
-    let mut coord = Coordinator::new(CoordinatorConfig::new(plan, width), 4);
     let cap = 2 * offset as u64;
-    let inputs: Vec<Vec<f64>> =
-        clients_l2.iter().map(|c| normalize_cells(c, cap)).collect();
-    let result = coord.run_round(&inputs)?;
-    let agg = denormalize_sum(&result.estimates, cap);
+    let agg = aggregate_cells_capped(&clients_l2, cap, 4);
     let proj = AmsL2Sketch::decode_aggregate(&agg, n, offset);
     let l2sq_est = AmsL2Sketch::l2_squared_from_projections(&proj);
     let l2sq_true: f64 = freq.values().map(|&c| (c * c) as f64).sum();
@@ -204,7 +187,7 @@ fn main() -> anyhow::Result<()> {
         "l2^2 of the global frequency vector: true = {:.0}, private = {:.0}",
         l2sq_true, l2sq_est
     );
-    anyhow::ensure!(
+    ensure!(
         (l2sq_est - l2sq_true).abs() < 0.35 * l2sq_true,
         "l2 estimate out of tolerance"
     );

@@ -90,13 +90,26 @@ impl Analyzer {
 }
 
 /// Validation failures from [`Analyzer::analyze_checked`].
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AnalyzeError {
-    #[error("message count {len} is not a multiple of m = {m}")]
     BadCount { len: usize, m: usize },
-    #[error("message at index {index} = {value} is outside Z_N")]
     OutOfRing { index: usize, value: u64 },
 }
+
+impl std::fmt::Display for AnalyzeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AnalyzeError::BadCount { len, m } => {
+                write!(f, "message count {len} is not a multiple of m = {m}")
+            }
+            AnalyzeError::OutOfRing { index, value } => {
+                write!(f, "message at index {index} = {value} is outside Z_N")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AnalyzeError {}
 
 #[cfg(test)]
 mod tests {

@@ -11,17 +11,30 @@ pub struct Args {
 }
 
 /// Parse failure.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
-    #[error("missing subcommand; expected one of: {0}")]
     MissingCommand(String),
-    #[error("unknown flag '{0}'")]
     UnknownFlag(String),
-    #[error("flag '{0}' expects a value")]
     MissingValue(String),
-    #[error("flag '{0}': cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingCommand(c) => {
+                write!(f, "missing subcommand; expected one of: {c}")
+            }
+            CliError::UnknownFlag(n) => write!(f, "unknown flag '{n}'"),
+            CliError::MissingValue(n) => write!(f, "flag '{n}' expects a value"),
+            CliError::BadValue(n, v, ty) => {
+                write!(f, "flag '{n}': cannot parse '{v}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv[1..]`; `allowed` lists the legal flag names (without

@@ -1,20 +1,16 @@
 //! The aggregation coordinator — the paper's system contribution as a
 //! deployable service loop.
 //!
+//! The coordinator owns the *service* concerns of a deployment — client
+//! identity and collusion marks ([`registry::ClientRegistry`]), bounded-
+//! queue ingestion for streaming transports ([`batcher::Batcher`]), and the
+//! per-round lifecycle state machine ([`round::RoundState`]) — and
+//! delegates the protocol round itself (encode → pre-randomize → shuffle →
+//! analyze, shard-parallel across instances) to [`crate::engine::Engine`].
 //! One round aggregates `d` independent instances (e.g. every coordinate
-//! of a clipped gradient) across `n` registered clients:
-//!
-//! 1. **Encode (parallel)** — each client quantizes its d-vector,
-//!    pre-randomizes (Theorem 1 plans), and cloak-encodes every coordinate
-//!    (Algorithm 1) into a flat d×m share buffer, on the worker pool.
-//! 2. **Ingest** — client batches flow through the bounded-queue
-//!    [`batcher::Batcher`] (backpressure) into per-instance pools, gated
-//!    by the [`round::RoundState`] machine.
-//! 3. **Shuffle** — each instance pool goes through the mixnet
-//!    ([`crate::shuffler::mixnet::Mixnet`]); only the shuffled multiset
-//!    continues (the privacy boundary).
-//! 4. **Analyze** — Algorithm 2 per instance; results + traffic stats +
-//!    latency metrics are returned.
+//! of a clipped gradient) across `n` registered clients; the engine
+//! partitions the instances across shards and merges a single
+//! [`RoundResult`] at the barrier.
 //!
 //! The same coordinator serves the FL driver (d = padded gradient dim),
 //! the sketch analytics (d = sketch width), and the benches.
@@ -23,21 +19,15 @@ pub mod batcher;
 pub mod registry;
 pub mod round;
 
-use std::time::Instant;
-
-use crate::analyzer::Analyzer;
-use crate::encoder::prerandomizer::PreRandomizer;
-use crate::encoder::CloakEncoder;
+use crate::engine::{Engine, EngineConfig, RoundInput};
 use crate::metrics::Registry as MetricsRegistry;
-use crate::params::{NeighborNotion, ProtocolPlan};
-use crate::rng::{derive_seed, ChaCha20Rng};
-use crate::shuffler::{mixnet::Mixnet, Shuffler};
-use crate::transport::{CostModel, Envelope, TrafficStats};
-use crate::util::pool::ThreadPool;
+use crate::params::ProtocolPlan;
+use crate::util::error::Result;
 
-use batcher::{Batcher, ClientBatch, InstancePools};
-use registry::{ClientId, ClientRegistry};
+use registry::ClientRegistry;
 use round::RoundState;
+
+pub use crate::engine::{ClientView, RoundResult};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -46,11 +36,16 @@ pub struct CoordinatorConfig {
     pub plan: ProtocolPlan,
     /// Aggregation instances per round (gradient dim, sketch width, …).
     pub instances: usize,
-    /// Worker threads for client-side encoding (0 = all cores).
+    /// Engine shards (0 = all cores); each shard owns an instance range.
+    pub shards: usize,
+    /// Encode workers per shard (0 or 1 = the shard's own worker).
     pub workers: usize,
     /// Mixnet hops.
     pub mixnet_hops: usize,
-    /// Max in-flight client batches before producers block.
+    /// Max in-flight client batches before producers block when ingesting
+    /// through [`batcher::Batcher`]. In-process rounds hand the engine the
+    /// whole cohort at once and bypass the batcher, so this knob only
+    /// affects streaming-transport ingestion built on the batcher.
     pub batch_capacity: usize,
 }
 
@@ -62,69 +57,34 @@ impl CoordinatorConfig {
         // distributionally identical to a 3-hop chain while cutting the
         // shuffle cost — the dominant per-message term — by 3×. Multi-hop
         // remains available for the collusion demos (`mixnet_hops: 3`).
-        CoordinatorConfig { plan, instances, workers: 0, mixnet_hops: 1, batch_capacity: 256 }
+        CoordinatorConfig {
+            plan,
+            instances,
+            shards: 0,
+            workers: 1,
+            mixnet_hops: 1,
+            batch_capacity: 256,
+        }
     }
-}
-
-/// Result of one aggregation round.
-#[derive(Clone, Debug)]
-pub struct RoundResult {
-    pub round_id: u64,
-    /// Analyzer estimate of Σ_i x_i[j] for each instance j.
-    pub estimates: Vec<f64>,
-    /// Clients that actually contributed.
-    pub participants: usize,
-    pub traffic: TrafficStats,
-    pub wall_seconds: f64,
-}
-
-/// Per-client view captured for the collusion analyses (Lemmas 12–13):
-/// the messages a colluding client would reveal to the server.
-#[derive(Clone, Debug)]
-pub struct ClientView {
-    pub client: ClientId,
-    /// Flat d×m shares exactly as sent.
-    pub shares: Vec<u64>,
 }
 
 /// The coordinator.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: ClientRegistry,
-    encoder: CloakEncoder,
-    prerandomizer: PreRandomizer,
-    analyzer: Analyzer,
-    pool: ThreadPool,
-    metrics: MetricsRegistry,
-    rounds_run: u64,
-    shuffle_seed: u64,
+    engine: Engine,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, seed: u64) -> Self {
-        let plan = &cfg.plan;
-        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
-        let prerandomizer = match plan.notion {
-            NeighborNotion::SingleUser => {
-                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
-            }
-            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
-        };
-        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
         let mut registry = ClientRegistry::new(seed);
-        registry.register_many(plan.n);
-        let pool = ThreadPool::new(cfg.workers);
-        Coordinator {
-            cfg,
-            registry,
-            encoder,
-            prerandomizer,
-            analyzer,
-            pool,
-            metrics: MetricsRegistry::new(),
-            rounds_run: 0,
-            shuffle_seed: derive_seed(seed, 0x5348_5546),
-        }
+        registry.register_many(cfg.plan.n);
+        let engine_cfg = EngineConfig::new(cfg.plan.clone(), cfg.instances)
+            .with_shards(cfg.shards)
+            .with_workers_per_shard(cfg.workers)
+            .with_mixnet_hops(cfg.mixnet_hops);
+        let engine = Engine::new(engine_cfg, seed);
+        Coordinator { cfg, registry, engine }
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -139,37 +99,27 @@ impl Coordinator {
         &mut self.registry
     }
 
-    pub fn metrics(&self) -> &MetricsRegistry {
-        &self.metrics
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
-    /// Encode one client's d-vector into a flat d×m share buffer.
-    fn encode_client(&self, client: ClientId, round: u64, values: &[f64]) -> ClientBatch {
-        let d = self.cfg.instances;
-        let m = self.cfg.plan.num_messages;
-        debug_assert_eq!(values.len(), d);
-        let mut rng = self.registry.client_rng(client, round);
-        let mut shares = vec![0u64; d * m];
-        for (j, &x) in values.iter().enumerate() {
-            let xbar = self.encoder.codec().encode(x);
-            let (noised, _) = self.prerandomizer.apply(xbar, &mut rng);
-            self.encoder.encode_quantized_into(noised, &mut rng, &mut shares[j * m..(j + 1) * m]);
-        }
-        ClientBatch { client_stream: client, shares }
+    pub fn metrics(&self) -> &MetricsRegistry {
+        self.engine.metrics()
     }
 
     /// Run one full round. `inputs[i]` is client i's d-vector, every
     /// coordinate in [0, 1]. Returns per-instance sum estimates.
-    pub fn run_round(&mut self, inputs: &[Vec<f64>]) -> anyhow::Result<RoundResult> {
+    pub fn run_round(&mut self, inputs: &[Vec<f64>]) -> Result<RoundResult> {
         self.run_round_inner(inputs, false).map(|(r, _)| r)
     }
 
-    /// Like [`run_round`], additionally returning every client's sent
-    /// messages — the collusion benches' raw material. Only for small n.
+    /// Like [`Coordinator::run_round`], additionally returning every
+    /// client's sent messages — the collusion benches' raw material. Only
+    /// for small n.
     pub fn run_round_with_views(
         &mut self,
         inputs: &[Vec<f64>],
-    ) -> anyhow::Result<(RoundResult, Vec<ClientView>)> {
+    ) -> Result<(RoundResult, Vec<ClientView>)> {
         let (r, v) = self.run_round_inner(inputs, true)?;
         Ok((r, v.expect("views requested")))
     }
@@ -178,109 +128,44 @@ impl Coordinator {
         &mut self,
         inputs: &[Vec<f64>],
         capture_views: bool,
-    ) -> anyhow::Result<(RoundResult, Option<Vec<ClientView>>)> {
+    ) -> Result<(RoundResult, Option<Vec<ClientView>>)> {
         let n = self.registry.len();
-        anyhow::ensure!(inputs.len() == n, "expected {n} client inputs, got {}", inputs.len());
+        crate::ensure!(inputs.len() == n, "expected {n} client inputs, got {}", inputs.len());
         let d = self.cfg.instances;
         for (i, v) in inputs.iter().enumerate() {
-            anyhow::ensure!(v.len() == d, "client {i}: expected {d} coordinates, got {}", v.len());
+            crate::ensure!(v.len() == d, "client {i}: expected {d} coordinates, got {}", v.len());
         }
-        let m = self.cfg.plan.num_messages;
-        let round = self.rounds_run;
-        self.rounds_run += 1;
-        let t0 = Instant::now();
-        let mut state = RoundState::new(round, n);
+
+        // Round lifecycle. The analyzer-only-sees-the-shuffled-multiset
+        // ordering is enforced *inside* the engine (per shard); in this
+        // in-process path the whole cohort arrives atomically, so the
+        // state machine below RECORDS the lifecycle rather than gating it.
+        // It gates for real when ingestion is streaming: a transport feeds
+        // contributions through the batcher during Collecting, and
+        // begin_shuffle refuses until the cohort is complete.
+        let mut state = RoundState::new(self.engine.rounds_run(), n);
         state.begin_collect()?;
-
-        // --- 1+2: parallel encode, ingest through the bounded queue ----
-        let batcher = Batcher::new(self.cfg.batch_capacity);
-        let tx = batcher.sender();
-        let (pools, views) = std::thread::scope(|scope| {
-            // Collector runs on this thread's scope; producers fan out on
-            // the pool inside a spawned task so collect() can drain.
-            let this = &*self;
-            let producer = scope.spawn(move || {
-                let views = std::sync::Mutex::new(if capture_views {
-                    Some(Vec::with_capacity(n))
-                } else {
-                    None
-                });
-                let views_ref = &views;
-                let tx_ref = &tx;
-                // §Perf iteration 4: chunk so every worker gets ≥4 slices
-                // even for small cohorts (a fixed chunk of 8 left most of
-                // the pool idle at n=32 — see EXPERIMENTS.md).
-                let chunk = (n / (this.pool.workers() * 4)).max(1);
-                this.pool.map_indexed(n, chunk, move |i| {
-                    let batch = this.encode_client(i as u32, round, &inputs[i]);
-                    if let Some(vs) = views_ref.lock().unwrap().as_mut() {
-                        vs.push(ClientView { client: batch.client_stream, shares: batch.shares.clone() });
-                    }
-                    tx_ref.push(batch);
-                    0u8
-                });
-                tx_ref.close();
-                views.into_inner().unwrap()
-            });
-            let pools = batcher.collect(d, m, n);
-            let mut views = producer.join().expect("producer panicked");
-            if let Some(vs) = views.as_mut() {
-                // Parallel producers push in nondeterministic order; the
-                // collusion analyses index views by client id.
-                vs.sort_by_key(|v| v.client);
-            }
-            (pools, views)
-        });
-
-        // Round bookkeeping: every client contributed.
+        let round_inputs = RoundInput::Vectors(inputs);
+        let (result, views) = if capture_views {
+            let (r, v) = self.engine.run_round_with_views(&round_inputs, &self.registry)?;
+            (r, Some(v))
+        } else {
+            (self.engine.run_round(&round_inputs, &self.registry)?, None)
+        };
         for i in 0..n as u32 {
             state.record_contribution(i)?;
         }
-        anyhow::ensure!(pools.total_messages() == n * d * m, "lost messages in ingestion");
-
-        // --- traffic accounting ----------------------------------------
-        let cost = CostModel::default();
-        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
-        let mut traffic = TrafficStats::default();
-        for _ in 0..n {
-            traffic.record_batch(d * m, bytes, &cost);
-        }
-
-        // --- 3: shuffle each instance pool ------------------------------
         state.begin_shuffle()?;
-        let mut pools: InstancePools = pools;
-        let shuffle_seed = derive_seed(self.shuffle_seed, round);
-        let hops = self.cfg.mixnet_hops;
-        self.pool.for_each_chunk(pools.pools_mut(), 1, |j, chunk| {
-            let mut net = Mixnet::honest(derive_seed(shuffle_seed, j as u64), hops);
-            net.shuffle(&mut chunk[0]);
-        });
-
-        // --- 4: analyze --------------------------------------------------
         state.begin_analyze()?;
-        let estimates: Vec<f64> =
-            (0..d).map(|j| self.analyzer.analyze(pools.pool(j))).collect();
         state.finish()?;
-
-        let wall = t0.elapsed().as_secs_f64();
-        self.metrics.counter("coordinator.rounds").inc();
-        self.metrics.counter("coordinator.messages").add((n * d * m) as u64);
-        self.metrics.histogram("coordinator.round_seconds").record_ns((wall * 1e9) as u64);
-        Ok((
-            RoundResult {
-                round_id: round,
-                estimates,
-                participants: n,
-                traffic,
-                wall_seconds: wall,
-            },
-            views,
-        ))
-    }
-
-    /// Deterministic shuffle RNG access for tests of the privacy boundary.
-    pub fn shuffle_rng(&self, round: u64, instance: u64) -> ChaCha20Rng {
-        ChaCha20Rng::from_seed_and_stream(derive_seed(self.shuffle_seed, round), instance)
+        // The barrier merge must hand back every instance: a shard that
+        // dropped its range would surface here.
+        crate::ensure!(
+            result.estimates.len() == d,
+            "engine returned {} estimates for {d} instances",
+            result.estimates.len()
+        );
+        Ok((result, views))
     }
 }
 
@@ -304,6 +189,7 @@ pub fn honest_residual_sum(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::params::NeighborNotion;
 
     fn small_plan(n: usize) -> ProtocolPlan {
         ProtocolPlan::custom(
@@ -358,6 +244,25 @@ mod tests {
     }
 
     #[test]
+    fn shard_count_does_not_change_coordinator_results() {
+        // The coordinator must inherit the engine's shard-invariance: the
+        // same cohort aggregated under different shard configurations gives
+        // identical estimates and identical client views.
+        let inputs: Vec<Vec<f64>> =
+            (0..12).map(|i| vec![i as f64 / 12.0, 0.25, 0.75, 0.5]).collect();
+        let mut results = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let mut cfg = CoordinatorConfig::new(small_plan(12), 4);
+            cfg.shards = shards;
+            let mut c = Coordinator::new(cfg, 21);
+            let (r, views) = c.run_round_with_views(&inputs).unwrap();
+            results.push((r.estimates, views.iter().map(|v| v.shares.clone()).collect::<Vec<_>>()));
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0], results[2]);
+    }
+
+    #[test]
     fn rejects_wrong_shapes() {
         let mut c = Coordinator::new(CoordinatorConfig::new(small_plan(5), 2), 1);
         assert!(c.run_round(&vec![vec![0.5; 2]; 4]).is_err(), "wrong n");
@@ -372,7 +277,10 @@ mod tests {
         let mut c = Coordinator::new(CoordinatorConfig::new(plan, 4), 3);
         let r = c.run_round(&vec![vec![0.1; 4]; 10]).unwrap();
         assert_eq!(r.traffic.messages, 10 * 4 * m);
-        assert_eq!(r.traffic.bytes, 10 * 4 * m * Envelope::wire_bytes(bits) as u64);
+        assert_eq!(
+            r.traffic.bytes,
+            10 * 4 * m * crate::transport::Envelope::wire_bytes(bits) as u64
+        );
     }
 
     #[test]

@@ -77,15 +77,27 @@ impl ClientRegistry {
         }
     }
 
-    /// Per-round, per-client generator: fresh stream every round, so
-    /// repeated rounds never reuse share randomness.
-    pub fn client_rng(&self, id: ClientId, round: u64) -> ChaCha20Rng {
+    /// The generator client `id` uses for aggregation instance `instance`
+    /// in round `round` — the exact derivation the engine's shard workers
+    /// apply, so collusion/privacy analyses can reconstruct the share
+    /// randomness a client actually consumed. Fresh stream per (client,
+    /// round, instance); repeated rounds never reuse share randomness.
+    pub fn client_share_rng(&self, id: ClientId, round: u64, instance: u64) -> ChaCha20Rng {
         let rec = &self.clients[id as usize];
-        ChaCha20Rng::from_seed_and_stream(rec.seed, round)
+        ChaCha20Rng::from_seed_and_stream(derive_seed(rec.seed, round), instance)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &ClientRecord> {
         self.clients.iter()
+    }
+}
+
+// The registry is the coordinator's seed source for the engine: every
+// registered client's master seed feeds the engine's per-(client,
+// instance, round) stream derivation.
+impl crate::engine::ClientSeeds for ClientRegistry {
+    fn client_seed(&self, client: u32) -> u64 {
+        self.clients[client as usize].seed
     }
 }
 
@@ -126,17 +138,46 @@ mod tests {
     }
 
     #[test]
-    fn rng_streams_differ_by_round_and_client() {
+    fn share_rng_streams_differ_by_round_client_and_instance() {
         let mut r = ClientRegistry::new(4);
         r.register_many(2);
-        let mut a0 = r.client_rng(0, 0);
-        let mut a1 = r.client_rng(0, 1);
-        let mut b0 = r.client_rng(1, 0);
-        let x = a0.next_u64();
-        assert_ne!(x, a1.next_u64());
-        assert_ne!(x, b0.next_u64());
+        let mut a00 = r.client_share_rng(0, 0, 0);
+        let mut a01 = r.client_share_rng(0, 0, 1);
+        let mut a10 = r.client_share_rng(0, 1, 0);
+        let mut b00 = r.client_share_rng(1, 0, 0);
+        let x = a00.next_u64();
+        assert_ne!(x, a01.next_u64());
+        assert_ne!(x, a10.next_u64());
+        assert_ne!(x, b00.next_u64());
         // deterministic
-        let mut a0b = r.client_rng(0, 0);
-        assert_eq!(x, a0b.next_u64());
+        let mut again = r.client_share_rng(0, 0, 0);
+        assert_eq!(x, again.next_u64());
+    }
+
+    #[test]
+    fn share_rng_matches_engine_share_stream() {
+        // The registry's reconstruction must reproduce the exact shares
+        // the engine emits for that (client, round, instance).
+        use crate::coordinator::{Coordinator, CoordinatorConfig};
+        use crate::params::ProtocolPlan;
+        let plan = ProtocolPlan::exact_secure_agg(4, 100, 8);
+        let m = plan.num_messages;
+        let enc = crate::encoder::CloakEncoder::new(plan.modulus, plan.scale, m);
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, 2), 77);
+        let inputs: Vec<Vec<f64>> = (0..4).map(|i| vec![i as f64 / 4.0, 0.5]).collect();
+        let (_, views) = c.run_round_with_views(&inputs).unwrap();
+        for (i, view) in views.iter().enumerate() {
+            for j in 0..2u64 {
+                let mut rng = c.registry().client_share_rng(i as u32, 0, j);
+                let xbar = enc.codec().encode(inputs[i][j as usize]);
+                let mut want = vec![0u64; m];
+                enc.encode_quantized_into(xbar, &mut rng, &mut want);
+                assert_eq!(
+                    &view.shares[j as usize * m..(j as usize + 1) * m],
+                    &want[..],
+                    "client {i} instance {j}"
+                );
+            }
+        }
     }
 }

@@ -18,15 +18,26 @@ pub enum Phase {
 }
 
 /// Errors from illegal state transitions.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum RoundError {
-    #[error("illegal transition from {0:?}")]
     IllegalTransition(Phase),
-    #[error("client {0} already contributed this round")]
     DuplicateContribution(u32),
-    #[error("round still waiting on {0} clients")]
     Incomplete(usize),
 }
+
+impl std::fmt::Display for RoundError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoundError::IllegalTransition(p) => write!(f, "illegal transition from {p:?}"),
+            RoundError::DuplicateContribution(c) => {
+                write!(f, "client {c} already contributed this round")
+            }
+            RoundError::Incomplete(k) => write!(f, "round still waiting on {k} clients"),
+        }
+    }
+}
+
+impl std::error::Error for RoundError {}
 
 /// Tracks one round's progress.
 #[derive(Debug)]

@@ -180,6 +180,61 @@ mod tests {
     }
 
     #[test]
+    fn prop_encode_quantized_sum_preserved_mod_n() {
+        // Satellite property: for random pre-quantized residues the m
+        // shares written by `encode_quantized_into` always lie in Z_N and
+        // fold back to x̄ mod N — the Algorithm 1 contract the engine's
+        // shard workers rely on.
+        forall("encode_quantized_into sum mod N", 200, |g: &mut Gen| {
+            let modulus = g.odd_u64(11, 1 << 48);
+            let m = g.usize_in(4, 24);
+            let enc = CloakEncoder::new(modulus, 100, m);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.seed());
+            let mut out = vec![0u64; m];
+            let xbar = g.u64_below(modulus);
+            enc.encode_quantized_into(xbar, &mut rng, &mut out);
+            assert!(out.iter().all(|&y| y < modulus), "shares in Z_N");
+            assert_eq!(enc.ring().sum(&out), xbar, "x̄ = {xbar}, N = {modulus}, m = {m}");
+        });
+    }
+
+    #[test]
+    fn prop_minimum_m_of_four_preserves_sum() {
+        // The Lemma 1 boundary: m = 4 is the smallest legal share count
+        // and must still satisfy the reconstruction invariant.
+        forall("m = 4 minimum", 150, |g: &mut Gen| {
+            let modulus = g.odd_u64(11, 1 << 32);
+            let enc = CloakEncoder::new(modulus, 10, 4);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.seed());
+            let mut out = vec![0u64; 4];
+            let xbar = g.u64_below(modulus);
+            enc.encode_quantized_into(xbar, &mut rng, &mut out);
+            assert!(out.iter().all(|&y| y < modulus));
+            assert_eq!(enc.ring().sum(&out), xbar);
+        });
+    }
+
+    #[test]
+    fn prop_xbar_at_ring_boundary() {
+        // x̄ = N − 1 (the largest residue) must reconstruct exactly: the
+        // residual share computation wraps through the modulus here, which
+        // is where an off-by-one in the reduction would show.
+        forall("xbar = N - 1 boundary", 150, |g: &mut Gen| {
+            let modulus = g.odd_u64(11, 1 << 48);
+            let m = g.usize_in(4, 16);
+            let enc = CloakEncoder::new(modulus, 100, m);
+            let mut rng = ChaCha20Rng::seed_from_u64(g.seed());
+            let mut out = vec![0u64; m];
+            enc.encode_quantized_into(modulus - 1, &mut rng, &mut out);
+            assert!(out.iter().all(|&y| y < modulus));
+            assert_eq!(enc.ring().sum(&out), modulus - 1);
+            // and x̄ = 0, the other wrap end
+            enc.encode_quantized_into(0, &mut rng, &mut out);
+            assert_eq!(enc.ring().sum(&out), 0);
+        });
+    }
+
+    #[test]
     fn residual_share_matches_encode() {
         let enc = CloakEncoder::new(65537, 100, 6);
         let mut rng = ChaCha20Rng::seed_from_u64(3);

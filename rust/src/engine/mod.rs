@@ -1,0 +1,753 @@
+//! The sharded aggregation engine — the one implementation of the
+//! encode → pre-randomize → shuffle → analyze round that every entry point
+//! ([`crate::pipeline::Pipeline`], [`crate::coordinator::Coordinator`],
+//! [`crate::fl::FlDriver`], the sketch examples) routes through.
+//!
+//! # Shard layout
+//!
+//! One round aggregates `d` independent instances (gradient coordinates,
+//! sketch cells, histogram buckets) over `n` clients. The engine partitions
+//! the instances across `S` shards; each shard owns a contiguous instance
+//! range and runs the *full* protocol for it on its own worker, with its
+//! own seed stream, mixnet and analyzer, merged only at the final barrier:
+//!
+//! ```text
+//!                 clients 0..n   (x[i][j] ∈ [0,1])
+//!                       │
+//!        ┌──────────────┼──────────────────┐
+//!        ▼              ▼                  ▼
+//!  shard 0 (j ∈ [0,d/S))  shard 1 (…)  …  shard S−1
+//!  ┌───────────────────┐
+//!  │ encode+prerandomize│  flat span×n×m share buffer
+//!  │        ↓           │  (instance-major, per-client rows)
+//!  │ mixnet shuffle     │  ← the privacy boundary: everything below
+//!  │        ↓           │    this line sees only a shuffled multiset
+//!  │ analyze (Alg. 2)   │
+//!  └───────────────────┘
+//!        │              │                  │
+//!        └──────► RoundResult { estimates[0..d], traffic, … } ◄──┘
+//!                        (barrier merge)
+//! ```
+//!
+//! # Seed derivation
+//!
+//! All randomness is derived, never shared, so results are independent of
+//! the shard count and of scheduling:
+//!
+//! * **Client shares** — client `i`'s generator for instance `j` in round
+//!   `r` is `ChaCha20Rng::from_seed_and_stream(derive_seed(seed_i, r), j)`
+//!   where `seed_i` comes from the [`ClientSeeds`] source (the coordinator
+//!   registry, or [`DerivedClientSeeds`] for standalone use). The stream is
+//!   a function of `(i, j, r)` only — *not* of the shard that encodes it —
+//!   which is what makes `S = 1` and `S = k` rounds bit-identical in their
+//!   estimates (tested below).
+//! * **Shuffles** — shard `s` derives `derive_seed(derive_seed(shuffle_seed,
+//!   r), s)` and gives each of its instances an independent mixnet from it.
+//!
+//! # Privacy boundary
+//!
+//! The engine upholds the shuffled-model contract *per instance*: the
+//! analyzer only ever reads an instance pool after that pool was permuted
+//! by its mixnet. Shards never exchange pre-shuffle shares; client views
+//! (for the collusion analyses) are captured on the client side of the
+//! boundary and never feed the analyzer.
+//!
+//! What this module deliberately does **not** do (see ROADMAP.md): cross-
+//! process shards and async/remote transports — the shard seams here are
+//! the cut points where those would plug in.
+
+use std::time::Instant;
+
+use crate::analyzer::Analyzer;
+use crate::encoder::prerandomizer::PreRandomizer;
+use crate::encoder::CloakEncoder;
+use crate::metrics::Registry as MetricsRegistry;
+use crate::params::{NeighborNotion, ProtocolPlan};
+use crate::rng::{derive_seed, ChaCha20Rng};
+use crate::shuffler::{mixnet::Mixnet, Shuffler};
+use crate::transport::{CostModel, Envelope, TrafficStats};
+use crate::util::pool::ThreadPool;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Protocol parameters (n is the expected client count).
+    pub plan: ProtocolPlan,
+    /// Aggregation instances per round (gradient dim, sketch width, …).
+    pub instances: usize,
+    /// Shard count `S` (0 = number of available cores). Effective shard
+    /// count is additionally capped at `instances`.
+    pub shards: usize,
+    /// Encode workers per shard (0 or 1 = the shard's own worker only).
+    pub workers_per_shard: usize,
+    /// Mixnet hops per instance shuffle.
+    pub mixnet_hops: usize,
+}
+
+impl EngineConfig {
+    /// Default profile: auto shard count, one worker per shard, one honest
+    /// mixnet hop (one uniform permutation composed with anything is
+    /// uniform — see `shuffler::mixnet`).
+    pub fn new(plan: ProtocolPlan, instances: usize) -> Self {
+        EngineConfig { plan, instances, shards: 0, workers_per_shard: 1, mixnet_hops: 1 }
+    }
+
+    /// The `Pipeline` profile: one shard, one instance.
+    pub fn single(plan: ProtocolPlan) -> Self {
+        Self::new(plan, 1).with_shards(1)
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_workers_per_shard(mut self, workers: usize) -> Self {
+        self.workers_per_shard = workers;
+        self
+    }
+
+    pub fn with_mixnet_hops(mut self, hops: usize) -> Self {
+        self.mixnet_hops = hops;
+        self
+    }
+}
+
+/// Result of one aggregation round, merged across shards at the barrier.
+#[derive(Clone, Debug)]
+pub struct RoundResult {
+    pub round_id: u64,
+    /// Analyzer estimate of Σ_i x_i[j] for each instance j.
+    pub estimates: Vec<f64>,
+    /// Clients that actually contributed.
+    pub participants: usize,
+    pub traffic: TrafficStats,
+    pub wall_seconds: f64,
+}
+
+/// Per-client view captured for the collusion analyses (Lemmas 12–13):
+/// the messages a colluding client would reveal to the server, as a flat
+/// d×m buffer in instance order.
+#[derive(Clone, Debug)]
+pub struct ClientView {
+    pub client: u32,
+    pub shares: Vec<u64>,
+}
+
+/// Engine input validation failures.
+#[derive(Debug, PartialEq, Eq)]
+pub enum EngineError {
+    WrongClientCount { expected: usize, got: usize },
+    WrongWidth { client: usize, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::WrongClientCount { expected, got } => {
+                write!(f, "expected {expected} client inputs (plan n), got {got}")
+            }
+            EngineError::WrongWidth { client, expected, got } => {
+                write!(f, "client {client}: expected {expected} coordinates, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Source of per-client master seeds — the coordinator registry in the
+/// service path, [`DerivedClientSeeds`] for standalone engines.
+pub trait ClientSeeds: Sync {
+    fn client_seed(&self, client: u32) -> u64;
+}
+
+/// Client seeds split off a single base seed (the standalone profile).
+#[derive(Clone, Copy, Debug)]
+pub struct DerivedClientSeeds {
+    base: u64,
+}
+
+impl DerivedClientSeeds {
+    pub fn new(base: u64) -> Self {
+        DerivedClientSeeds { base }
+    }
+}
+
+impl ClientSeeds for DerivedClientSeeds {
+    fn client_seed(&self, client: u32) -> u64 {
+        derive_seed(self.base, client as u64)
+    }
+}
+
+/// One round's client inputs, without forcing the caller's layout.
+pub enum RoundInput<'a> {
+    /// One value per client (d = 1) — the `Pipeline` shape.
+    Scalars(&'a [f64]),
+    /// One d-vector per client — the coordinator / FL / sketch shape.
+    Vectors(&'a [Vec<f64>]),
+}
+
+impl RoundInput<'_> {
+    pub fn clients(&self) -> usize {
+        match self {
+            RoundInput::Scalars(xs) => xs.len(),
+            RoundInput::Vectors(vs) => vs.len(),
+        }
+    }
+
+    #[inline]
+    fn get(&self, client: usize, instance: usize) -> f64 {
+        match self {
+            RoundInput::Scalars(xs) => xs[client],
+            RoundInput::Vectors(vs) => vs[client][instance],
+        }
+    }
+
+    fn validate(&self, expected_clients: usize, instances: usize) -> Result<(), EngineError> {
+        let n = self.clients();
+        if n != expected_clients {
+            return Err(EngineError::WrongClientCount { expected: expected_clients, got: n });
+        }
+        match self {
+            RoundInput::Scalars(_) => {
+                if instances != 1 {
+                    return Err(EngineError::WrongWidth {
+                        client: 0,
+                        expected: instances,
+                        got: 1,
+                    });
+                }
+            }
+            RoundInput::Vectors(vs) => {
+                for (i, v) in vs.iter().enumerate() {
+                    if v.len() != instances {
+                        return Err(EngineError::WrongWidth {
+                            client: i,
+                            expected: instances,
+                            got: v.len(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What one shard hands back at the barrier.
+struct ShardOut {
+    estimates: Vec<f64>,
+    /// Pre-shuffle per-client share slices for this shard's instance range
+    /// (only when views were requested).
+    views: Option<Vec<Vec<u64>>>,
+    wall_ns: u64,
+}
+
+/// The shard-parallel aggregation engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    /// Resolved shard count (cfg.shards with 0 = cores applied).
+    shards: usize,
+    encoder: CloakEncoder,
+    prerandomizer: PreRandomizer,
+    analyzer: Analyzer,
+    pool: ThreadPool,
+    metrics: MetricsRegistry,
+    rounds_run: u64,
+    shuffle_seed: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, seed: u64) -> Self {
+        assert!(cfg.instances >= 1, "engine needs at least one instance");
+        let plan = &cfg.plan;
+        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
+        let prerandomizer = match plan.notion {
+            NeighborNotion::SingleUser => {
+                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
+            }
+            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
+        };
+        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
+        let shards = if cfg.shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            cfg.shards
+        };
+        let workers = shards * cfg.workers_per_shard.max(1);
+        Engine {
+            cfg,
+            shards,
+            encoder,
+            prerandomizer,
+            analyzer,
+            pool: ThreadPool::new(workers),
+            metrics: MetricsRegistry::new(),
+            rounds_run: 0,
+            shuffle_seed: derive_seed(seed, 0x5348_5546),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Resolved shard count (before the per-round cap at `instances`).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn rounds_run(&self) -> u64 {
+        self.rounds_run
+    }
+
+    /// The seed shard `s` uses in round `r` — the documented derivation,
+    /// exposed so privacy-boundary tests can reconstruct shuffle RNGs.
+    pub fn shard_seed(&self, round: u64, shard: u64) -> u64 {
+        derive_seed(derive_seed(self.shuffle_seed, round), shard)
+    }
+
+    /// Run one full round. Returns per-instance sum estimates.
+    pub fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, EngineError> {
+        self.run_round_inner(inputs, seeds, false).map(|(r, _)| r)
+    }
+
+    /// Like [`Engine::run_round`], additionally returning every client's
+    /// sent messages (pre-shuffle) — the collusion analyses' raw material.
+    pub fn run_round_with_views(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<(RoundResult, Vec<ClientView>), EngineError> {
+        let (r, v) = self.run_round_inner(inputs, seeds, true)?;
+        Ok((r, v.expect("views requested")))
+    }
+
+    fn run_round_inner(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+        capture_views: bool,
+    ) -> Result<(RoundResult, Option<Vec<ClientView>>), EngineError> {
+        let d = self.cfg.instances;
+        let n = inputs.clients();
+        inputs.validate(self.cfg.plan.n, d)?;
+        let m = self.cfg.plan.num_messages;
+        let round = self.rounds_run;
+        self.rounds_run += 1;
+        let t0 = Instant::now();
+
+        let s_eff = self.shards.min(d).max(1);
+        let ranges = shard_ranges(d, s_eff);
+        let round_seed = derive_seed(self.shuffle_seed, round);
+        // Per-client round seeds, shared read-only across shards.
+        let client_seeds: Vec<u64> =
+            (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), round)).collect();
+
+        let enc = self.encoder;
+        let ana = self.analyzer;
+        let pre = &self.prerandomizer;
+        let hops = self.cfg.mixnet_hops;
+        // Narrow rounds (s_eff < pool size) redistribute the idle workers
+        // as intra-shard encode workers, so a d=1 round over a large cohort
+        // still encodes client-parallel on all cores.
+        let wps = (self.pool.workers() / s_eff).max(self.cfg.workers_per_shard.max(1));
+        let seeds_ref: &[u64] = &client_seeds;
+        let ranges_ref: &[(usize, usize)] = &ranges;
+
+        let outs: Vec<ShardOut> = self.pool.dispatch(s_eff, |s| {
+            let shard_t0 = Instant::now();
+            let (lo, hi) = ranges_ref[s];
+            let span = hi - lo;
+            let mut buf = vec![0u64; span * n * m];
+
+            // --- encode + pre-randomize (client side) -------------------
+            if wps > 1 && span > 1 {
+                // wide shard: split the instance range across workers
+                let block = span.div_ceil(wps);
+                std::thread::scope(|scope| {
+                    let mut rest: &mut [u64] = &mut buf;
+                    let mut jlo = lo;
+                    while !rest.is_empty() {
+                        let take = block.min(hi - jlo);
+                        let (head, tail) = rest.split_at_mut(take * n * m);
+                        let start = jlo;
+                        scope.spawn(move || {
+                            encode_block(&enc, pre, inputs, seeds_ref, start, n, m, head);
+                        });
+                        rest = tail;
+                        jlo += take;
+                    }
+                });
+            } else if wps > 1 && span == 1 && n > 1 {
+                // narrow shard (single instance): split the cohort instead
+                let cblock = n.div_ceil(wps);
+                std::thread::scope(|scope| {
+                    let mut rest: &mut [u64] = &mut buf;
+                    let mut ilo = 0usize;
+                    while !rest.is_empty() {
+                        let take = cblock.min(n - ilo);
+                        let (head, tail) = rest.split_at_mut(take * m);
+                        let start = ilo;
+                        scope.spawn(move || {
+                            encode_clients(&enc, pre, inputs, seeds_ref, lo, start, m, head);
+                        });
+                        rest = tail;
+                        ilo += take;
+                    }
+                });
+            } else {
+                encode_block(&enc, pre, inputs, seeds_ref, lo, n, m, &mut buf);
+            }
+
+            // --- client views (the server-visible pre-shuffle messages) --
+            let views = capture_views.then(|| {
+                (0..n)
+                    .map(|i| {
+                        let mut v = Vec::with_capacity(span * m);
+                        for jj in 0..span {
+                            let off = (jj * n + i) * m;
+                            v.extend_from_slice(&buf[off..off + m]);
+                        }
+                        v
+                    })
+                    .collect::<Vec<_>>()
+            });
+
+            // --- shuffle: the privacy boundary ---------------------------
+            let shard_seed = derive_seed(round_seed, s as u64);
+            for jj in 0..span {
+                let mut net = Mixnet::honest(derive_seed(shard_seed, jj as u64), hops);
+                net.shuffle(&mut buf[jj * n * m..(jj + 1) * n * m]);
+            }
+
+            // --- analyze --------------------------------------------------
+            let estimates: Vec<f64> =
+                (0..span).map(|jj| ana.analyze(&buf[jj * n * m..(jj + 1) * n * m])).collect();
+
+            ShardOut { estimates, views, wall_ns: shard_t0.elapsed().as_nanos() as u64 }
+        });
+
+        // --- barrier: merge shard results in instance order --------------
+        let mut estimates = Vec::with_capacity(d);
+        for o in &outs {
+            estimates.extend_from_slice(&o.estimates);
+        }
+        let views = capture_views.then(|| {
+            (0..n)
+                .map(|i| {
+                    let mut shares = Vec::with_capacity(d * m);
+                    for o in &outs {
+                        shares.extend_from_slice(&o.views.as_ref().expect("shard views")[i]);
+                    }
+                    ClientView { client: i as u32, shares }
+                })
+                .collect::<Vec<ClientView>>()
+        });
+
+        // --- traffic accounting (one batch of d×m messages per client) ---
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
+        let mut traffic = TrafficStats::default();
+        for _ in 0..n {
+            traffic.record_batch(d * m, bytes, &cost);
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.counter("engine.rounds").inc();
+        self.metrics.counter("engine.messages").add((n * d * m) as u64);
+        self.metrics.histogram("engine.round_seconds").record_ns((wall * 1e9) as u64);
+        for o in &outs {
+            self.metrics.histogram("engine.shard_seconds").record_ns(o.wall_ns);
+        }
+        Ok((
+            RoundResult {
+                round_id: round,
+                estimates,
+                participants: n,
+                traffic,
+                wall_seconds: wall,
+            },
+            views,
+        ))
+    }
+}
+
+/// Encode one contiguous block of instances `[lo, lo + span)` for all `n`
+/// clients into `buf` (instance-major: instance `jj`'s client `i` occupies
+/// `buf[(jj*n + i)*m ..][..m]`). The RNG stream is a pure function of
+/// `(client, instance, round)`, never of the block/shard boundaries.
+#[allow(clippy::too_many_arguments)]
+fn encode_block(
+    enc: &CloakEncoder,
+    pre: &PreRandomizer,
+    inputs: &RoundInput<'_>,
+    client_round_seeds: &[u64],
+    lo: usize,
+    n: usize,
+    m: usize,
+    buf: &mut [u64],
+) {
+    let span = buf.len() / (n * m);
+    for jj in 0..span {
+        let j = lo + jj;
+        for (i, &seed_i) in client_round_seeds.iter().enumerate() {
+            let mut rng = ChaCha20Rng::from_seed_and_stream(seed_i, j as u64);
+            let xbar = enc.codec().encode(inputs.get(i, j));
+            let (noised, _w) = pre.apply(xbar, &mut rng);
+            let off = (jj * n + i) * m;
+            enc.encode_quantized_into(noised, &mut rng, &mut buf[off..off + m]);
+        }
+    }
+}
+
+/// Encode clients `[client_lo, client_lo + k)` for the single instance `j`
+/// into `buf` (client-major: client `client_lo + idx` occupies
+/// `buf[idx*m ..][..m]`) — the narrow-round (span = 1) encode split.
+#[allow(clippy::too_many_arguments)]
+fn encode_clients(
+    enc: &CloakEncoder,
+    pre: &PreRandomizer,
+    inputs: &RoundInput<'_>,
+    client_round_seeds: &[u64],
+    j: usize,
+    client_lo: usize,
+    m: usize,
+    buf: &mut [u64],
+) {
+    for (idx, row) in buf.chunks_exact_mut(m).enumerate() {
+        let i = client_lo + idx;
+        let mut rng = ChaCha20Rng::from_seed_and_stream(client_round_seeds[i], j as u64);
+        let xbar = enc.codec().encode(inputs.get(i, j));
+        let (noised, _w) = pre.apply(xbar, &mut rng);
+        enc.encode_quantized_into(noised, &mut rng, row);
+    }
+}
+
+/// Near-equal contiguous instance ranges for `shards` shards.
+fn shard_ranges(instances: usize, shards: usize) -> Vec<(usize, usize)> {
+    let base = instances / shards;
+    let extra = instances % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let span = base + usize::from(s < extra);
+        ranges.push((lo, lo + span));
+        lo += span;
+    }
+    debug_assert_eq!(lo, instances);
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_plan(n: usize) -> ProtocolPlan {
+        ProtocolPlan::exact_secure_agg(n, 100, 8)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    fn run(n: usize, d: usize, shards: usize, seed: u64) -> RoundResult {
+        let plan = small_plan(n);
+        let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(shards), seed);
+        let inputs = inputs_for(n, d);
+        e.run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(seed)).unwrap()
+    }
+
+    #[test]
+    fn recovers_exact_sums_per_instance() {
+        let n = 20;
+        let d = 5;
+        let plan = small_plan(n);
+        let k = plan.scale;
+        let inputs = inputs_for(n, d);
+        let r = run(n, d, 2, 42);
+        assert_eq!(r.estimates.len(), d);
+        for j in 0..d {
+            let truth_bar: u64 = inputs.iter().map(|v| (v[j] * k as f64).floor() as u64).sum();
+            assert!(
+                (r.estimates[j] - truth_bar as f64 / k as f64).abs() < 1e-9,
+                "instance {j}: {} vs {}",
+                r.estimates[j],
+                truth_bar as f64 / k as f64
+            );
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_estimates() {
+        // The satellite determinism property: same seed + same inputs give
+        // bit-identical estimates at S = 1 and S = 4 (and with more shards
+        // than instances), because client share streams are derived per
+        // (client, instance, round) — never from shard-local RNG state.
+        let n = 16;
+        let d = 7;
+        let r1 = run(n, d, 1, 9);
+        let r4 = run(n, d, 4, 9);
+        let r_many = run(n, d, 32, 9);
+        assert_eq!(r1.estimates, r4.estimates);
+        assert_eq!(r1.estimates, r_many.estimates);
+        // workers_per_shard must not change results either
+        let plan = small_plan(n);
+        let mut e = Engine::new(
+            EngineConfig::new(plan, d).with_shards(2).with_workers_per_shard(3),
+            9,
+        );
+        let inputs = inputs_for(n, d);
+        let r =
+            e.run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(9)).unwrap();
+        assert_eq!(r1.estimates, r.estimates);
+    }
+
+    #[test]
+    fn narrow_round_client_split_matches_serial() {
+        // d = 1 rounds split the cohort across encode workers; the split
+        // must be invisible in the estimate (streams are per client).
+        let n = 24;
+        let plan = small_plan(n);
+        let xs: Vec<f64> = (0..n).map(|i| (i % 9) as f64 / 9.0).collect();
+        let seeds = DerivedClientSeeds::new(17);
+        let mut serial = Engine::new(EngineConfig::single(plan.clone()), 17);
+        let mut split = Engine::new(
+            EngineConfig::new(plan, 1).with_shards(1).with_workers_per_shard(4),
+            17,
+        );
+        let r1 = serial.run_round(&RoundInput::Scalars(&xs), &seeds).unwrap();
+        let r2 = split.run_round(&RoundInput::Scalars(&xs), &seeds).unwrap();
+        assert_eq!(r1.estimates, r2.estimates);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_multi_round_divergence() {
+        let n = 10;
+        let d = 3;
+        let plan = small_plan(n);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(7);
+        let mut e1 = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(2), 7);
+        let mut e2 = Engine::new(EngineConfig::new(plan, d).with_shards(2), 7);
+        let (r1, v1) = e1.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let (r2, v2) = e2.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(r1.estimates, r2.estimates);
+        assert_eq!(v1[0].shares, v2[0].shares);
+        // a second round on the same engine must use fresh randomness
+        let (_, v1b) = e1.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_ne!(v1[0].shares, v1b[0].shares);
+    }
+
+    #[test]
+    fn views_are_flat_d_by_m_in_instance_order() {
+        let n = 6;
+        let d = 4;
+        let plan = small_plan(n);
+        let k = plan.scale;
+        let m = plan.num_messages;
+        let ring = crate::arith::modring::ModRing::new(plan.modulus);
+        let inputs = inputs_for(n, d);
+        // Shard split must not disturb the per-client flat layout.
+        for shards in [1usize, 3] {
+            let mut e = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(shards), 5);
+            let (_, views) = e
+                .run_round_with_views(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(5))
+                .unwrap();
+            assert_eq!(views.len(), n);
+            for v in &views {
+                let i = v.client as usize;
+                assert_eq!(v.shares.len(), d * m);
+                for j in 0..d {
+                    let share_sum = ring.sum(&v.shares[j * m..(j + 1) * m]);
+                    let want = (inputs[i][j] * k as f64).floor() as u64;
+                    assert_eq!(share_sum, want, "client {i} instance {j} shards {shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_input_matches_vector_input() {
+        let n = 12;
+        let plan = small_plan(n);
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+        let vecs: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+        let seeds = DerivedClientSeeds::new(3);
+        let mut e1 = Engine::new(EngineConfig::single(plan.clone()), 3);
+        let mut e2 = Engine::new(EngineConfig::single(plan), 3);
+        let r1 = e1.run_round(&RoundInput::Scalars(&xs), &seeds).unwrap();
+        let r2 = e2.run_round(&RoundInput::Vectors(&vecs), &seeds).unwrap();
+        assert_eq!(r1.estimates, r2.estimates);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let plan = small_plan(5);
+        let mut e = Engine::new(EngineConfig::new(plan, 2), 1);
+        let seeds = DerivedClientSeeds::new(1);
+        assert_eq!(
+            e.run_round(&RoundInput::Vectors(&vec![vec![0.5; 2]; 4]), &seeds).unwrap_err(),
+            EngineError::WrongClientCount { expected: 5, got: 4 }
+        );
+        assert_eq!(
+            e.run_round(&RoundInput::Vectors(&vec![vec![0.5; 3]; 5]), &seeds).unwrap_err(),
+            EngineError::WrongWidth { client: 0, expected: 2, got: 3 }
+        );
+        assert!(matches!(
+            e.run_round(&RoundInput::Scalars(&[0.5; 5]), &seeds),
+            Err(EngineError::WrongWidth { .. })
+        ));
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        for (d, s) in [(7usize, 3usize), (64, 8), (5, 5), (3, 1), (4, 16)] {
+            let s_eff = s.min(d);
+            let ranges = shard_ranges(d, s_eff);
+            assert_eq!(ranges.len(), s_eff);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, d);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let spans: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+            let min = spans.iter().min().unwrap();
+            let max = spans.iter().max().unwrap();
+            assert!(max - min <= 1, "balanced: {spans:?}");
+        }
+    }
+
+    #[test]
+    fn traffic_and_metrics_accounting() {
+        let n = 10;
+        let d = 4;
+        let plan = small_plan(n);
+        let m = plan.num_messages as u64;
+        let bits = plan.message_bits();
+        let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(2), 3);
+        let inputs = inputs_for(n, d);
+        let r = e.run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(3)).unwrap();
+        assert_eq!(r.traffic.messages, n as u64 * d as u64 * m);
+        assert_eq!(
+            r.traffic.bytes,
+            n as u64 * d as u64 * m * Envelope::wire_bytes(bits) as u64
+        );
+        assert_eq!(r.traffic.batches, n as u64);
+        assert_eq!(e.metrics().counter("engine.rounds").get(), 1);
+        assert_eq!(e.metrics().counter("engine.messages").get(), n as u64 * d as u64 * m);
+        // one shard-latency sample per shard
+        assert_eq!(e.metrics().histogram("engine.shard_seconds").count(), 2);
+    }
+}

@@ -4,8 +4,9 @@
 //! every client computes a clipped local gradient (the **L2 artifact**
 //! executed through [`crate::runtime::Runtime`] — Python never runs);
 //! gradients are quantized ([`quantize::GradientCodec`]) and aggregated
-//! coordinate-wise through the Invisibility Cloak [`crate::coordinator`];
-//! the server applies the decoded mean gradient and the
+//! coordinate-wise through the shard-parallel [`crate::engine::Engine`]
+//! (d = padded gradient dim aggregation instances, partitioned across
+//! shards); the server applies the decoded mean gradient and the
 //! [`crate::privacy::accountant::PrivacyAccountant`] tracks the composed
 //! (ε, δ) budget across rounds.
 
@@ -13,12 +14,11 @@ pub mod data;
 pub mod quantize;
 pub mod server;
 
-use anyhow::Result;
-
-use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::privacy::accountant::PrivacyAccountant;
 use crate::privacy::DpBudget;
+use crate::util::error::Result;
 
 use data::Batch;
 use quantize::GradientCodec;
@@ -99,7 +99,8 @@ pub struct RoundLog {
 pub struct FlDriver<'a, O: GradOracle> {
     cfg: FlConfig,
     oracle: &'a O,
-    coordinator: Coordinator,
+    engine: Engine,
+    seeds: DerivedClientSeeds,
     codec: GradientCodec,
     pub server: ServerState,
     accountant: PrivacyAccountant,
@@ -142,13 +143,16 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
                 p
             }
         };
-        let coordinator =
-            Coordinator::new(CoordinatorConfig::new(plan, codec.padded()), seed);
+        // The FL server constructs the engine directly: gradient
+        // aggregation is a pure engine workload, with no client registry or
+        // streaming ingestion in between.
+        let engine = Engine::new(EngineConfig::new(plan, codec.padded()), seed);
         let server = ServerState::new(init_params, cfg.lr, cfg.momentum);
         Ok(FlDriver {
             cfg,
             oracle,
-            coordinator,
+            engine,
+            seeds: DerivedClientSeeds::new(seed),
             codec,
             server,
             accountant: PrivacyAccountant::new(),
@@ -160,13 +164,13 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         &self.accountant
     }
 
-    pub fn coordinator(&self) -> &Coordinator {
-        &self.coordinator
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     /// Run one federated round over the given per-client batches.
     pub fn run_round(&mut self, batches: &[Batch]) -> Result<RoundLog> {
-        anyhow::ensure!(batches.len() == self.cfg.clients, "need one batch per client");
+        crate::ensure!(batches.len() == self.cfg.clients, "need one batch per client");
         let round = self.logs.len();
         let params = self.server.params().to_vec();
 
@@ -180,7 +184,7 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         }
 
         // --- private aggregation ----------------------------------------
-        let result = self.coordinator.run_round(&inputs)?;
+        let result = self.engine.run_round(&RoundInput::Vectors(&inputs), &self.seeds)?;
         let mean_grad = self.codec.decode_mean(&result.estimates, result.participants);
         let grad_norm = mean_grad.iter().map(|g| g * g).sum::<f32>().sqrt();
 

@@ -9,10 +9,11 @@
 //!
 //! * **L3 (this crate)** — the coordination system: encoder / pre-randomizer
 //!   (Algorithm 1 + §2.4), shuffler (mixnet simulation), analyzer
-//!   (Algorithm 2), round coordinator with batching and backpressure,
-//!   parameter planner for Theorems 1–2, privacy accountant, baselines
-//!   (Cheu et al., Balle et al., Bonawitz et al., local/central DP), and
-//!   linear-sketch analytics built on secure aggregation (§1.2).
+//!   (Algorithm 2), the shard-parallel aggregation [`engine`] every entry
+//!   point routes rounds through, the round coordinator with batching and
+//!   backpressure, parameter planner for Theorems 1–2, privacy accountant,
+//!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
+//!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
 //! * **L2/L1 (build-time Python)** — the federated-learning workload (JAX
 //!   MLP fwd/bwd) and the Pallas cloak/modsum kernels, AOT-lowered to HLO
 //!   text in `artifacts/` and executed from [`runtime`] via PJRT. Python is
@@ -38,6 +39,7 @@ pub mod baselines;
 pub mod cli;
 pub mod coordinator;
 pub mod encoder;
+pub mod engine;
 pub mod fl;
 pub mod metrics;
 pub mod params;
@@ -58,6 +60,7 @@ pub mod prelude {
     pub use crate::arith::modring::ModRing;
     pub use crate::encoder::prerandomizer::PreRandomizer;
     pub use crate::encoder::CloakEncoder;
+    pub use crate::engine::{Engine, EngineConfig, RoundInput};
     pub use crate::params::{NeighborNotion, ProtocolPlan};
     pub use crate::pipeline::Pipeline;
     pub use crate::privacy::accountant::PrivacyAccountant;

@@ -18,6 +18,8 @@ use cloak_agg::pipeline::Pipeline;
 use cloak_agg::report::{fmt_f, Table};
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
 use cloak_agg::runtime::Runtime;
+use cloak_agg::util::error::Result;
+use cloak_agg::{bail, ensure};
 
 const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke> [--flag value]...
   aggregate: --n --eps --delta --seed --notion (1|2)
@@ -33,7 +35,7 @@ fn main() {
     }
 }
 
-fn run() -> anyhow::Result<()> {
+fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
         &["aggregate", "fl", "plan", "smoke"],
@@ -50,7 +52,7 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
+fn cmd_aggregate(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1000)?;
     let eps = args.get_f64("eps", 1.0)?;
     let delta = args.get_f64("delta", 1e-6)?;
@@ -59,7 +61,7 @@ fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
     let plan = match notion {
         1 => ProtocolPlan::theorem1(n, eps, delta)?,
         2 => ProtocolPlan::theorem2(n, eps, delta)?,
-        other => anyhow::bail!("--notion must be 1 or 2, got {other}"),
+        other => bail!("--notion must be 1 or 2, got {other}"),
     };
     println!(
         "plan: n={n} eps={eps} delta={delta} N={} k={} m={} bits/msg={}",
@@ -85,7 +87,7 @@ fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fl(args: &Args) -> anyhow::Result<()> {
+fn cmd_fl(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 16)?;
     let rounds = args.get_usize("rounds", 5)?;
     let eps = args.get_f64("eps", 1.0)?;
@@ -144,7 +146,7 @@ fn init_params(mf: &cloak_agg::runtime::Manifest, seed: u64) -> Vec<f32> {
     params
 }
 
-fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+fn cmd_plan(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1000)?;
     let eps = args.get_f64("eps", 1.0)?;
     let delta = args.get_f64("delta", 1e-6)?;
@@ -171,7 +173,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
+fn cmd_smoke(args: &Args) -> Result<()> {
     let artifacts = args.get_str("artifacts", "artifacts");
     let rt = Runtime::load(&artifacts)?;
     let mf = rt.manifest.clone();
@@ -183,7 +185,7 @@ fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
     let m = mf.num_messages;
     for (j, &xb) in xbar.iter().enumerate() {
         let s: i64 = shares[j * m..(j + 1) * m].iter().map(|&v| v as i64).sum();
-        anyhow::ensure!(
+        ensure!(
             s.rem_euclid(mf.modulus as i64) == xb as i64,
             "encode row {j} does not reconstruct"
         );
@@ -201,11 +203,11 @@ fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
     let x: Vec<f32> = (0..mf.batch_size * mf.input_dim).map(|i| (i % 7) as f32 / 7.0).collect();
     let yl: Vec<i32> = (0..mf.batch_size).map(|i| (i % mf.num_classes) as i32).collect();
     let (loss, grad) = rt.fl_grad(&params, &x, &yl)?;
-    anyhow::ensure!(loss.is_finite() && grad.len() == mf.param_count);
+    ensure!(loss.is_finite() && grad.len() == mf.param_count);
     let norm: f32 = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
-    anyhow::ensure!(norm <= 1.0 + 1e-4, "clipped grad norm {norm}");
+    ensure!(norm <= 1.0 + 1e-4, "clipped grad norm {norm}");
     let preds = rt.fl_predict(&params, &x)?;
-    anyhow::ensure!(preds.len() == mf.batch_size);
+    ensure!(preds.len() == mf.batch_size);
     println!("fl_grad ok (loss={loss:.4}, |g|={norm:.4}); fl_predict ok");
     println!("smoke: ALL OK");
     Ok(())

@@ -46,17 +46,28 @@ pub struct ProtocolPlan {
 }
 
 /// Why a parameter set is infeasible.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PlanError {
-    #[error("n must be >= 2, got {0}")]
     TooFewUsers(usize),
-    #[error("epsilon must be > 0, got {0}")]
     BadEpsilon(f64),
-    #[error("delta must be in (0,1), got {0}")]
     BadDelta(f64),
-    #[error("required modulus {0} exceeds u64 (n too large for this build)")]
     ModulusOverflow(f64),
 }
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::TooFewUsers(n) => write!(f, "n must be >= 2, got {n}"),
+            PlanError::BadEpsilon(e) => write!(f, "epsilon must be > 0, got {e}"),
+            PlanError::BadDelta(d) => write!(f, "delta must be in (0,1), got {d}"),
+            PlanError::ModulusOverflow(t) => {
+                write!(f, "required modulus {t} exceeds u64 (n too large for this build)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 impl ProtocolPlan {
     /// Theorem 1 plan: (ε, δ)-DP under single-user changes.
@@ -110,6 +121,19 @@ impl ProtocolPlan {
             noise_q: 0.0,
             gamma: epsilon / (10.0 * nf),
         })
+    }
+
+    /// Theorem 2-style exact secure-aggregation plan with explicit (k, m):
+    /// the first odd modulus above 3nk + 10_000 (headroom over the
+    /// Algorithm 2 minimum). This is the one place the benches, examples
+    /// and engine tests get their "valid small modulus" rule from.
+    pub fn exact_secure_agg(n: usize, scale: u64, num_messages: usize) -> Self {
+        let mut modulus =
+            3u64.saturating_mul(n as u64).saturating_mul(scale).saturating_add(10_001);
+        if modulus % 2 == 0 {
+            modulus += 1;
+        }
+        Self::custom(n, 1.0, 1e-6, NeighborNotion::SumPreserving, modulus, scale, num_messages)
     }
 
     /// A plan with explicit constants — used by tests, benches and the
@@ -264,6 +288,16 @@ mod tests {
         let ratio = big.num_messages as f64 / small.num_messages as f64;
         assert!(ratio < 2.2, "ratio={ratio}");
         assert!(big.message_bits() <= 2 * small.message_bits() + 8);
+    }
+
+    #[test]
+    fn exact_secure_agg_plan_is_valid() {
+        let p = ProtocolPlan::exact_secure_agg(600, 6_000, 16);
+        assert_eq!(p.notion, NeighborNotion::SumPreserving);
+        assert_eq!(p.num_messages, 16);
+        assert!(p.modulus % 2 == 1, "odd modulus");
+        assert!(p.modulus as u128 > 3 * 600 * 6_000, "N > 3nk");
+        assert_eq!(p.noise_q, 0.0, "zero-noise regime");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Single-shot aggregation pipeline — the library's simplest entry point.
 //!
-//! Wires Algorithm 1 (+ the §2.4 pre-randomizer when the plan is a
-//! Theorem 1 plan), the shuffler and Algorithm 2 into one call:
+//! Since the engine refactor this type is a thin wrapper over
+//! [`crate::engine::Engine`] with one shard and one aggregation instance:
+//! Algorithm 1 (+ the §2.4 pre-randomizer when the plan is a Theorem 1
+//! plan), the shuffler and Algorithm 2 in one call:
 //!
 //! ```
 //! use cloak_agg::prelude::*;
@@ -13,53 +15,48 @@
 //! ```
 //!
 //! The full streaming system (many aggregation instances, batching,
-//! backpressure, PJRT execution) lives in [`crate::coordinator`]; this type
-//! is the reference implementation the integration tests compare it to.
+//! backpressure, shard parallelism) lives in [`crate::coordinator`] and
+//! [`crate::engine`]; this type is the reference entry point the
+//! integration tests compare them to.
 
-use crate::analyzer::Analyzer;
-use crate::encoder::prerandomizer::PreRandomizer;
-use crate::encoder::CloakEncoder;
-use crate::params::{NeighborNotion, ProtocolPlan};
-use crate::rng::{derive_seed, ChaCha20Rng};
-use crate::shuffler::{FisherYates, Shuffler};
-use crate::transport::{CostModel, Envelope, TrafficStats};
+use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use crate::params::ProtocolPlan;
+use crate::transport::TrafficStats;
 
 /// One-shot scalar aggregation under a [`ProtocolPlan`].
 pub struct Pipeline {
     plan: ProtocolPlan,
-    encoder: CloakEncoder,
-    prerandomizer: PreRandomizer,
-    analyzer: Analyzer,
-    seed: u64,
-    rounds_run: u64,
+    engine: Engine,
+    seeds: DerivedClientSeeds,
     /// Communication accounting for the last round.
     pub last_traffic: TrafficStats,
 }
 
 /// Pipeline failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PipelineError {
-    #[error("expected {expected} inputs (plan n), got {got}")]
     WrongInputCount { expected: usize, got: usize },
 }
 
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::WrongInputCount { expected, got } => {
+                write!(f, "expected {expected} inputs (plan n), got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
 impl Pipeline {
     pub fn new(plan: ProtocolPlan, seed: u64) -> Self {
-        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
-        let prerandomizer = match plan.notion {
-            NeighborNotion::SingleUser => {
-                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
-            }
-            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
-        };
-        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
+        let engine = Engine::new(EngineConfig::single(plan.clone()), seed);
         Pipeline {
             plan,
-            encoder,
-            prerandomizer,
-            analyzer,
-            seed,
-            rounds_run: 0,
+            engine,
+            seeds: DerivedClientSeeds::new(seed),
             last_traffic: TrafficStats::default(),
         }
     }
@@ -74,38 +71,12 @@ impl Pipeline {
         if xs.len() != self.plan.n {
             return Err(PipelineError::WrongInputCount { expected: self.plan.n, got: xs.len() });
         }
-        let m = self.plan.num_messages;
-        let round = self.rounds_run;
-        self.rounds_run += 1;
-
-        // --- user side: pre-randomize + encode -------------------------
-        let mut messages: Vec<u64> = vec![0; xs.len() * m];
-        let mut traffic = TrafficStats::default();
-        let cost = CostModel::default();
-        let bytes = Envelope::wire_bytes(self.plan.message_bits());
-        for (i, &x) in xs.iter().enumerate() {
-            // Every user gets an independent ChaCha stream derived from the
-            // pipeline seed — the same seed-splitting protocol the
-            // coordinator and the Pallas cross-check use.
-            let mut rng =
-                ChaCha20Rng::from_seed_and_stream(derive_seed(self.seed, round), i as u64);
-            let xbar = self.encoder.codec().encode(x);
-            let (noised, _w) = self.prerandomizer.apply(xbar, &mut rng);
-            self.encoder
-                .encode_quantized_into(noised, &mut rng, &mut messages[i * m..(i + 1) * m]);
-            traffic.record_batch(m, bytes, &cost);
-        }
-
-        // --- shuffler ---------------------------------------------------
-        let mut fy = FisherYates::new(ChaCha20Rng::from_seed_and_stream(
-            derive_seed(self.seed ^ 0x5348_5546, round),
-            0,
-        ));
-        fy.shuffle(&mut messages);
-
-        // --- analyzer ---------------------------------------------------
-        self.last_traffic = traffic;
-        Ok(self.analyzer.analyze(&messages))
+        let result = self
+            .engine
+            .run_round(&RoundInput::Scalars(xs), &self.seeds)
+            .expect("pipeline inputs validated above");
+        self.last_traffic = result.traffic;
+        Ok(result.estimates[0])
     }
 
     /// Aggregate and also return the raw discretized sum readout (no
@@ -190,5 +161,18 @@ mod tests {
         let mut p1 = Pipeline::new(plan.clone(), 9);
         let mut p2 = Pipeline::new(plan, 9);
         assert_eq!(p1.aggregate(&xs).unwrap(), p2.aggregate(&xs).unwrap());
+    }
+
+    #[test]
+    fn pipeline_matches_engine_single_profile() {
+        // The wrapper must be a pure delegation: a hand-built S=1/d=1
+        // engine with the same seed produces the same estimate.
+        let plan = ProtocolPlan::theorem2(30, 1.0, 1e-4).unwrap();
+        let xs: Vec<f64> = (0..30).map(|i| (i % 5) as f64 / 5.0).collect();
+        let mut p = Pipeline::new(plan.clone(), 11);
+        let mut e = Engine::new(EngineConfig::single(plan), 11);
+        let direct =
+            e.run_round(&RoundInput::Scalars(&xs), &DerivedClientSeeds::new(11)).unwrap();
+        assert_eq!(p.aggregate(&xs).unwrap(), direct.estimates[0]);
     }
 }

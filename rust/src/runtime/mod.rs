@@ -8,12 +8,23 @@
 //! One [`Runtime`] owns the PJRT CPU client and all compiled executables;
 //! executables are compiled once at startup and reused for every request —
 //! Python is never on this path.
+//!
+//! # The `pjrt` feature
+//!
+//! The actual PJRT execution path needs the `xla` bindings crate, which
+//! the offline build image does not ship. It is therefore gated behind the
+//! off-by-default `pjrt` cargo feature; enabling it requires *both*
+//! vendoring `xla` and adding the dependency line to Cargo.toml (see the
+//! note on the feature there). The default build compiles a stub
+//! [`Runtime`] with the same API: manifest loading and validation work
+//! (they are pure Rust), while executing an artifact returns an error at
+//! call time. The integration tests skip when `artifacts/` is absent, so
+//! `cargo test` is green in both configurations.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Protocol/model constants baked into the artifacts (manifest.json).
@@ -34,13 +45,14 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
         let u = |path: &[&str]| -> Result<u64> {
             j.at(path)
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("manifest missing {}", path.join(".")))
+                .ok_or_else(|| crate::err!("manifest missing {}", path.join(".")))
         };
         let mut artifact_files = HashMap::new();
         if let Some(Json::Obj(m)) = j.get("artifacts") {
@@ -69,136 +81,204 @@ impl Manifest {
     /// paper requires (odd N; int32-safe N for the Pallas path; m ≥ 4).
     pub fn validate(&self) -> Result<()> {
         if self.modulus % 2 == 0 {
-            bail!("manifest modulus must be odd");
+            crate::bail!("manifest modulus must be odd");
         }
         if self.modulus >= 1 << 30 {
-            bail!("kernel profile requires N < 2^30 (int32 lanes)");
+            crate::bail!("kernel profile requires N < 2^30 (int32 lanes)");
         }
         if self.num_messages < 4 {
-            bail!("Lemma 1 requires m >= 4");
+            crate::bail!("Lemma 1 requires m >= 4");
         }
         let expected = self.input_dim * self.hidden_dim
             + self.hidden_dim
             + self.hidden_dim * self.num_classes
             + self.num_classes;
         if expected != self.param_count {
-            bail!("param_count {} != shapes {}", self.param_count, expected);
+            crate::bail!("param_count {} != shapes {}", self.param_count, expected);
         }
         Ok(())
     }
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Executable {
-    /// Execute with literal inputs; returns the elements of the result
-    /// tuple (aot.py lowers every artifact with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact '{}'", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of '{}'", self.name))?;
-        Ok(lit.to_tuple()?)
+    use super::Manifest;
+    use crate::util::error::{Context, Result};
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
-}
 
-/// The PJRT CPU client plus all compiled artifacts.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: HashMap<String, Executable>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Load `artifacts/` (manifest + all HLO files), compile everything.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        manifest.validate()?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = HashMap::new();
-        for (name, file) in &manifest.artifact_files {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact '{name}'"))?;
-            executables.insert(name.clone(), Executable { exe, name: name.clone() });
+    impl Executable {
+        /// Execute with literal inputs; returns the elements of the result
+        /// tuple (aot.py lowers every artifact with `return_tuple=True`).
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing artifact '{}'", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching result of '{}'", self.name))?;
+            Ok(lit.to_tuple()?)
         }
-        Ok(Runtime { client, manifest, executables, dir })
     }
 
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
+    /// The PJRT CPU client plus all compiled artifacts.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: HashMap<String, Executable>,
+        dir: PathBuf,
     }
 
-    pub fn get(&self, name: &str) -> Result<&Executable> {
-        self.executables
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
-    }
+    impl Runtime {
+        /// Load `artifacts/` (manifest + all HLO files), compile everything.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&dir)?;
+            manifest.validate()?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut executables = HashMap::new();
+            for (name, file) in &manifest.artifact_files {
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact '{name}'"))?;
+                executables.insert(name.clone(), Executable { exe, name: name.clone() });
+            }
+            Ok(Runtime { client, manifest, executables, dir })
+        }
 
-    /// `fl_grad(params, x, y) -> (loss, grad)`.
-    pub fn fl_grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
-        let mf = &self.manifest;
-        anyhow::ensure!(params.len() == mf.param_count, "params len");
-        anyhow::ensure!(x.len() == mf.batch_size * mf.input_dim, "x len");
-        anyhow::ensure!(y.len() == mf.batch_size, "y len");
-        let p = xla::Literal::vec1(params);
-        let xl = xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
-        let yl = xla::Literal::vec1(y);
-        let out = self.get("fl_grad")?.run(&[p, xl, yl])?;
-        anyhow::ensure!(out.len() == 2, "fl_grad must return (loss, grad)");
-        let loss = out[0].to_vec::<f32>()?[0];
-        let grad = out[1].to_vec::<f32>()?;
-        Ok((loss, grad))
-    }
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.dir
+        }
 
-    /// `fl_predict(params, x) -> class predictions`.
-    pub fn fl_predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<i32>> {
-        let mf = &self.manifest;
-        let p = xla::Literal::vec1(params);
-        let xl = xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
-        let out = self.get("fl_predict")?.run(&[p, xl])?;
-        Ok(out[0].to_vec::<i32>()?)
-    }
+        pub fn get(&self, name: &str) -> Result<&Executable> {
+            self.executables
+                .get(name)
+                .ok_or_else(|| crate::err!("artifact '{name}' not in manifest"))
+        }
 
-    /// `cloak_encode(seed, xbar[d]) -> shares[d, m]` — the L1 Pallas
-    /// encoder running under PJRT (used for cross-checking the Rust
-    /// encoder and for offloading wide encodes).
-    pub fn cloak_encode(&self, seed: i32, xbar: &[i32]) -> Result<Vec<i32>> {
-        let mf = &self.manifest;
-        anyhow::ensure!(xbar.len() == mf.encode_dim, "xbar must be encode_dim");
-        let s = xla::Literal::scalar(seed);
-        let xl = xla::Literal::vec1(xbar);
-        let out = self.get("cloak_encode")?.run(&[s, xl])?;
-        Ok(out[0].to_vec::<i32>()?)
-    }
+        /// `fl_grad(params, x, y) -> (loss, grad)`.
+        pub fn fl_grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+            let mf = &self.manifest;
+            crate::ensure!(params.len() == mf.param_count, "params len");
+            crate::ensure!(x.len() == mf.batch_size * mf.input_dim, "x len");
+            crate::ensure!(y.len() == mf.batch_size, "y len");
+            let p = xla::Literal::vec1(params);
+            let xl =
+                xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
+            let yl = xla::Literal::vec1(y);
+            let out = self.get("fl_grad")?.run(&[p, xl, yl])?;
+            crate::ensure!(out.len() == 2, "fl_grad must return (loss, grad)");
+            let loss = out[0].to_vec::<f32>()?[0];
+            let grad = out[1].to_vec::<f32>()?;
+            Ok((loss, grad))
+        }
 
-    /// `cloak_modsum(y[rows, d]) -> colsums[d]` — the L1 analyzer reduction.
-    pub fn cloak_modsum(&self, y: &[i32]) -> Result<Vec<i32>> {
-        let mf = &self.manifest;
-        anyhow::ensure!(y.len() == mf.modsum_rows * mf.encode_dim, "y shape");
-        let yl = xla::Literal::vec1(y).reshape(&[mf.modsum_rows as i64, mf.encode_dim as i64])?;
-        let out = self.get("cloak_modsum")?.run(&[yl])?;
-        Ok(out[0].to_vec::<i32>()?)
+        /// `fl_predict(params, x) -> class predictions`.
+        pub fn fl_predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<i32>> {
+            let mf = &self.manifest;
+            let p = xla::Literal::vec1(params);
+            let xl =
+                xla::Literal::vec1(x).reshape(&[mf.batch_size as i64, mf.input_dim as i64])?;
+            let out = self.get("fl_predict")?.run(&[p, xl])?;
+            Ok(out[0].to_vec::<i32>()?)
+        }
+
+        /// `cloak_encode(seed, xbar[d]) -> shares[d, m]` — the L1 Pallas
+        /// encoder running under PJRT (used for cross-checking the Rust
+        /// encoder and for offloading wide encodes).
+        pub fn cloak_encode(&self, seed: i32, xbar: &[i32]) -> Result<Vec<i32>> {
+            let mf = &self.manifest;
+            crate::ensure!(xbar.len() == mf.encode_dim, "xbar must be encode_dim");
+            let s = xla::Literal::scalar(seed);
+            let xl = xla::Literal::vec1(xbar);
+            let out = self.get("cloak_encode")?.run(&[s, xl])?;
+            Ok(out[0].to_vec::<i32>()?)
+        }
+
+        /// `cloak_modsum(y[rows, d]) -> colsums[d]` — the L1 analyzer
+        /// reduction.
+        pub fn cloak_modsum(&self, y: &[i32]) -> Result<Vec<i32>> {
+            let mf = &self.manifest;
+            crate::ensure!(y.len() == mf.modsum_rows * mf.encode_dim, "y shape");
+            let yl = xla::Literal::vec1(y)
+                .reshape(&[mf.modsum_rows as i64, mf.encode_dim as i64])?;
+            let out = self.get("cloak_modsum")?.run(&[yl])?;
+            Ok(out[0].to_vec::<i32>()?)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::{Path, PathBuf};
+
+    use super::Manifest;
+    use crate::util::error::Result;
+
+    const STUB_MSG: &str =
+        "cloak-agg was built without the `pjrt` feature; artifact execution is unavailable \
+         (vendor the `xla` crate and rebuild with --features pjrt)";
+
+    /// Stub runtime: loads and validates the manifest, errors on execution.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Load and validate `artifacts/manifest.json` (no compilation).
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&dir)?;
+            manifest.validate()?;
+            Ok(Runtime { manifest, dir })
+        }
+
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        pub fn fl_grad(&self, _params: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, Vec<f32>)> {
+            crate::bail!("{STUB_MSG}");
+        }
+
+        pub fn fl_predict(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<i32>> {
+            crate::bail!("{STUB_MSG}");
+        }
+
+        pub fn cloak_encode(&self, _seed: i32, _xbar: &[i32]) -> Result<Vec<i32>> {
+            crate::bail!("{STUB_MSG}");
+        }
+
+        pub fn cloak_modsum(&self, _y: &[i32]) -> Result<Vec<i32>> {
+            crate::bail!("{STUB_MSG}");
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Executable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     // Runtime integration tests live in rust/tests/runtime_integration.rs
     // (they need artifacts/ built). Here: manifest parsing on a synthetic
@@ -261,5 +341,19 @@ mod tests {
     fn missing_manifest_is_informative() {
         let err = Manifest::load(Path::new("/nonexistent-cloak-agg")).unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_at_call_time() {
+        let dir = std::env::temp_dir().join(format!("cloak_stub_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), synthetic_manifest()).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.manifest.modulus, 536870909);
+        assert_eq!(rt.artifacts_dir(), dir.as_path());
+        let err = rt.fl_predict(&[0.0; 4], &[0.0; 4]).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

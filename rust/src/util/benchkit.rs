@@ -15,6 +15,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{num, obj, s, Json};
+
 /// One measured case.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -26,6 +28,10 @@ pub struct Measurement {
     pub min_ns: f64,
     /// Optional caller-supplied throughput denominator (items per iter).
     pub items_per_iter: Option<f64>,
+    /// Engine shard count for this case, when the case sweeps the shard
+    /// axis (`None` for unsharded cases). Lands in the BENCH_*.json output
+    /// so scaling runs are comparable across machines.
+    pub shards: Option<usize>,
 }
 
 impl Measurement {
@@ -65,18 +71,31 @@ impl Bench {
 
     /// Time `f`, preventing the result from being optimized away.
     pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
-        self.run_with_items(name, None, &mut f)
+        self.run_case(name, None, None, &mut f)
     }
 
     /// Time `f` and record a throughput denominator (e.g. messages/iter).
     pub fn run_items<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) -> &Measurement {
-        self.run_with_items(name, Some(items), &mut f)
+        self.run_case(name, Some(items), None, &mut f)
     }
 
-    fn run_with_items<T>(
+    /// Time `f` on the shard-count axis: like [`Bench::run_items`] but the
+    /// measurement carries the shard count into reports and JSON.
+    pub fn run_sharded<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        shards: usize,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        self.run_case(name, Some(items), Some(shards), &mut f)
+    }
+
+    fn run_case<T>(
         &mut self,
         name: &str,
         items: Option<f64>,
+        shards: Option<usize>,
         f: &mut dyn FnMut() -> T,
     ) -> &Measurement {
         // Warmup + estimate iteration cost.
@@ -114,25 +133,64 @@ impl Bench {
             p95_ns: p95,
             min_ns: min,
             items_per_iter: items,
+            shards,
         });
         self.results.last().unwrap()
+    }
+
+    /// All results as a JSON document (the BENCH_*.json schema): group +
+    /// one record per case with timing percentiles, the optional
+    /// throughput denominator and the optional `shards` axis.
+    pub fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut entries = vec![
+                    ("name", s(&m.name)),
+                    ("iters", num(m.iters as f64)),
+                    ("mean_ns", num(m.mean_ns)),
+                    ("p50_ns", num(m.p50_ns)),
+                    ("p95_ns", num(m.p95_ns)),
+                    ("min_ns", num(m.min_ns)),
+                ];
+                if let Some(items) = m.items_per_iter {
+                    entries.push(("items_per_iter", num(items)));
+                }
+                if let Some(tp) = m.throughput() {
+                    entries.push(("items_per_sec", num(tp)));
+                }
+                if let Some(shards) = m.shards {
+                    entries.push(("shards", num(shards as f64)));
+                }
+                obj(entries)
+            })
+            .collect();
+        obj(vec![("group", s(&self.group)), ("cases", Json::Arr(cases))])
+    }
+
+    /// Write the JSON report to `path` (conventionally `BENCH_<group>.json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
     }
 
     /// Print a criterion-style table of all results.
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
         println!(
-            "{:<48} {:>12} {:>12} {:>12} {:>14}",
-            "case", "mean", "p50", "p95", "throughput"
+            "{:<48} {:>7} {:>12} {:>12} {:>12} {:>14}",
+            "case", "shards", "mean", "p50", "p95", "throughput"
         );
         for m in &self.results {
             let tp = m
                 .throughput()
                 .map(|t| format_throughput(t))
                 .unwrap_or_else(|| "-".to_string());
+            let sh = m.shards.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string());
             println!(
-                "{:<48} {:>12} {:>12} {:>12} {:>14}",
+                "{:<48} {:>7} {:>12} {:>12} {:>12} {:>14}",
                 m.name,
+                sh,
                 format_ns(m.mean_ns),
                 format_ns(m.p50_ns),
                 format_ns(m.p95_ns),
@@ -206,6 +264,30 @@ mod tests {
         );
         let m = b.run_items("items", 100.0, || std::hint::black_box(42)).clone();
         assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_includes_shards_axis() {
+        let mut b = Bench::new("jsontest").with_window(
+            Duration::from_millis(2),
+            Duration::from_millis(4),
+            2,
+        );
+        b.run_items("plain", 10.0, || std::hint::black_box(1u64));
+        b.run_sharded("sharded", 10.0, 8, || std::hint::black_box(2u64));
+        let j = b.to_json();
+        assert_eq!(j.at(&["group"]).unwrap().as_str(), Some("jsontest"));
+        let cases = match j.get("cases").unwrap() {
+            crate::util::json::Json::Arr(a) => a,
+            _ => panic!("cases must be an array"),
+        };
+        assert_eq!(cases.len(), 2);
+        assert!(cases[0].get("shards").is_none(), "unsharded case has no shards field");
+        assert_eq!(cases[1].get("shards").and_then(|v| v.as_u64()), Some(8));
+        assert!(cases[1].get("mean_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // and the document round-trips through the JSON parser
+        let text = j.to_string_pretty();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
     }
 
     #[test]

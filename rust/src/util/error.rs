@@ -1,0 +1,175 @@
+//! Minimal error substrate (the offline image has no `anyhow`/`thiserror`).
+//!
+//! [`Error`] is a context chain of messages — errors in this crate are
+//! terminal reporting, never control flow, so a string chain is all the
+//! structure the callers need. [`Context`] mirrors `anyhow::Context`;
+//! the [`ensure!`](crate::ensure), [`bail!`](crate::bail) and
+//! [`err!`](crate::err) macros mirror the `anyhow` macros of the same
+//! shape. Typed error enums (e.g. [`crate::params::PlanError`]) implement
+//! `std::error::Error` and convert into [`Error`] through the blanket
+//! `From`, so `?` composes across module boundaries.
+
+use std::fmt;
+
+/// A chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message (no context chain).
+    pub fn root(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Any std error (and its source chain) converts into an `Error`, so `?`
+// works on results carrying the crate's typed error enums. `Error` itself
+// deliberately does NOT implement `std::error::Error` — that keeps this
+// blanket impl coherent with `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias (the `anyhow::Result` counterpart).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment for results and options (`anyhow::Context` shape).
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` counterpart).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` counterpart).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*).into()) };
+}
+
+/// Return early with an [`Error`] unless the condition holds
+/// (the `anyhow::ensure!` counterpart).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<u32> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing");
+        Err(e).context("loading config")
+    }
+
+    #[test]
+    fn context_chain_renders_outermost_first() {
+        let err = io_fail().unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("loading config"), "{text}");
+        assert!(text.contains("missing thing"), "{text}");
+        assert_eq!(err.root(), "loading config");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("empty slot").unwrap_err();
+        assert_eq!(format!("{err}"), "empty slot");
+        assert_eq!(Some(3u32).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_bail_macros() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            crate::ensure!(x != 7);
+            if x == 5 {
+                crate::bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(format!("{}", check(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{}", check(7).unwrap_err()).contains("x != 7"));
+        assert!(format!("{}", check(5).unwrap_err()).contains("five"));
+    }
+
+    #[test]
+    fn typed_errors_convert_via_question_mark() {
+        fn inner() -> std::result::Result<(), crate::cli::CliError> {
+            Err(crate::cli::CliError::UnknownFlag("zap".into()))
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert!(format!("{}", outer().unwrap_err()).contains("zap"));
+    }
+}

@@ -3,6 +3,7 @@
 //! micro-benchmark kit, a minimal JSON reader/writer, and a thread pool.
 
 pub mod benchkit;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod proptest_lite;

@@ -66,6 +66,47 @@ impl ThreadPool {
         out
     }
 
+    /// Scoped shard dispatch — the engine's primitive. Runs `f(s)` for
+    /// `s in 0..count` concurrently (at most `workers` threads), returning
+    /// the results in shard order. Unlike [`ThreadPool::map_indexed`] the
+    /// result type needs no `Default + Clone`, so shards can return owned
+    /// state (buffers, metrics) merged at the caller's barrier. `count == 1`
+    /// runs inline — a single-shard engine pays no thread cost.
+    pub fn dispatch<T, F>(&self, count: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if count == 0 {
+            return Vec::new();
+        }
+        if count == 1 {
+            return vec![f(0)];
+        }
+        let mut out: Vec<Option<T>> = (0..count).map(|_| None).collect();
+        let next = AtomicUsize::new(0);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(count) {
+                let next = &next;
+                let f = &f;
+                let out_ptr = &out_ptr;
+                scope.spawn(move || loop {
+                    let s = next.fetch_add(1, Ordering::Relaxed);
+                    if s >= count {
+                        break;
+                    }
+                    let v = f(s);
+                    // SAFETY: slot s is written by exactly one worker (the
+                    // atomic counter hands out each index once), the slot was
+                    // initialized to None, and `out` outlives the scope.
+                    unsafe { *out_ptr.0.add(s) = Some(v) };
+                });
+            }
+        });
+        out.into_iter().map(|o| o.expect("dispatch slot unfilled")).collect()
+    }
+
     /// Parallel for-each over disjoint chunks of a mutable slice.
     pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk: usize, f: F)
     where
@@ -223,6 +264,26 @@ mod tests {
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, i as u64);
         }
+    }
+
+    #[test]
+    fn dispatch_returns_in_shard_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.dispatch(13, |s| (s, vec![s as u64; s + 1]));
+        assert_eq!(out.len(), 13);
+        for (i, (s, v)) in out.iter().enumerate() {
+            assert_eq!(*s, i);
+            assert_eq!(v.len(), i + 1);
+        }
+    }
+
+    #[test]
+    fn dispatch_edge_counts() {
+        let pool = ThreadPool::new(2);
+        assert!(pool.dispatch(0, |s| s).is_empty());
+        assert_eq!(pool.dispatch(1, |s| s + 41), vec![41]);
+        // more shards than workers still completes
+        assert_eq!(pool.dispatch(9, |s| s).len(), 9);
     }
 
     #[test]
