@@ -10,7 +10,7 @@ use crate::util::pool::BoundedQueue;
 
 /// A client's complete contribution for one round: `d × m` residues,
 /// row-major by instance (coordinate).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ClientBatch {
     pub client_stream: u32,
     /// Flat shares: instance j's messages are `shares[j*m..(j+1)*m]`.
@@ -61,6 +61,25 @@ impl InstancePools {
     }
 }
 
+/// The queue closed before the full cohort arrived — the caller asked for
+/// a complete round via [`Batcher::collect`] but got a partial one.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CollectError {
+    Underfilled { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for CollectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CollectError::Underfilled { expected, got } => {
+                write!(f, "queue closed after {got} of {expected} expected client batches")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CollectError {}
+
 /// Bounded-queue batcher: producers push [`ClientBatch`]es, one collector
 /// drains into [`InstancePools`].
 pub struct Batcher {
@@ -78,12 +97,40 @@ impl Batcher {
     }
 
     /// Drain until the queue closes, scattering into fresh pools.
-    pub fn collect(&self, instances: usize, num_messages: usize, expected_clients: usize) -> InstancePools {
+    /// Errors (instead of silently under-filling, the pre-streaming
+    /// behavior) when fewer than `expected_clients` batches arrived —
+    /// full-cohort callers must not mistake a partial round for a
+    /// complete one.
+    pub fn collect(
+        &self,
+        instances: usize,
+        num_messages: usize,
+        expected_clients: usize,
+    ) -> Result<InstancePools, CollectError> {
+        let (pools, got) = self.collect_counted(instances, num_messages, expected_clients);
+        if got < expected_clients {
+            return Err(CollectError::Underfilled { expected: expected_clients, got });
+        }
+        Ok(pools)
+    }
+
+    /// Quorum-path drain: like [`Batcher::collect`] but a partial cohort
+    /// is a legal outcome — returns the pools together with how many
+    /// client batches actually arrived, and lets the caller (the
+    /// streaming round driver) decide whether that clears its quorum.
+    pub fn collect_counted(
+        &self,
+        instances: usize,
+        num_messages: usize,
+        expected_clients: usize,
+    ) -> (InstancePools, usize) {
         let mut pools = InstancePools::new(instances, num_messages, expected_clients);
+        let mut got = 0usize;
         while let Some(batch) = self.queue.pop() {
             pools.absorb(&batch);
+            got += 1;
         }
-        pools
+        (pools, got)
     }
 
     pub fn close(&self) {
@@ -119,7 +166,7 @@ mod tests {
             }
             tx.close();
         });
-        let pools = batcher.collect(2, 2, 50);
+        let pools = batcher.collect(2, 2, 50).expect("full cohort");
         producer.join().unwrap();
         assert_eq!(pools.total_messages(), 50 * 4);
         assert_eq!(pools.pool(0).len(), 100);
@@ -129,5 +176,37 @@ mod tests {
         let mut want: Vec<u64> = (0..50).flat_map(|i| [i, i]).collect();
         want.sort_unstable();
         assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn collect_surfaces_underfill_as_typed_error() {
+        // Satellite fix: a queue closed early must not be mistaken for a
+        // complete cohort by the strict path.
+        let batcher = Batcher::new(8);
+        let tx = batcher.sender();
+        for i in 0..3u32 {
+            tx.push(ClientBatch { client_stream: i, shares: vec![i as u64; 2] });
+        }
+        tx.close();
+        assert_eq!(
+            batcher.collect(1, 2, 5).unwrap_err(),
+            CollectError::Underfilled { expected: 5, got: 3 }
+        );
+    }
+
+    #[test]
+    fn collect_counted_tolerates_partial_cohort() {
+        // The quorum path: same early close, but the count comes back and
+        // the partial pools are usable.
+        let batcher = Batcher::new(8);
+        let tx = batcher.sender();
+        for i in 0..3u32 {
+            tx.push(ClientBatch { client_stream: i, shares: vec![i as u64; 2] });
+        }
+        tx.close();
+        let (pools, got) = batcher.collect_counted(1, 2, 5);
+        assert_eq!(got, 3);
+        assert_eq!(pools.total_messages(), 6);
+        assert_eq!(pools.pool(0), &[0, 0, 1, 1, 2, 2]);
     }
 }

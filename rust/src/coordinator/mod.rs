@@ -22,6 +22,8 @@ pub mod round;
 use crate::engine::{Engine, EngineConfig, RoundInput};
 use crate::metrics::Registry as MetricsRegistry;
 use crate::params::ProtocolPlan;
+use crate::transport::channel::Channel;
+use crate::transport::streaming::{send_cohort, StreamConfig, StreamOutcome, StreamingRound};
 use crate::util::error::Result;
 
 use registry::ClientRegistry;
@@ -122,6 +124,58 @@ impl Coordinator {
     ) -> Result<(RoundResult, Vec<ClientView>)> {
         let (r, v) = self.run_round_inner(inputs, true)?;
         Ok((r, v.expect("views requested")))
+    }
+
+    /// Client-side half of a streamed round: encode the registered
+    /// cohort's inputs for the engine's next round and transmit them as
+    /// wire frames over `channel`. Clients flagged in `drop_mask` send an
+    /// explicit `Drop` frame (graceful dropout); channel-level loss
+    /// produces the silent kind. Returns the round id encoded against.
+    pub fn stream_cohort(
+        &self,
+        inputs: &[Vec<f64>],
+        drop_mask: &[bool],
+        channel: &mut dyn Channel,
+    ) -> Result<u64> {
+        let n = self.registry.len();
+        crate::ensure!(inputs.len() == n, "expected {n} client inputs, got {}", inputs.len());
+        let round = send_cohort(
+            &self.engine,
+            &self.registry,
+            &RoundInput::Vectors(inputs),
+            drop_mask,
+            channel,
+        )?;
+        Ok(round)
+    }
+
+    /// Server-side half: ingest one round's traffic from a transport.
+    /// Unlike [`Coordinator::run_round`] this path does NOT require the
+    /// full cohort — the streaming driver records contributions *and*
+    /// dropouts on the round state machine straight from transport events
+    /// (explicit `Drop` frames, lost frames, deadline expiry), and the
+    /// engine renormalizes the estimates over whoever actually showed up.
+    pub fn run_round_streaming(
+        &mut self,
+        channel: &mut dyn Channel,
+        quorum: usize,
+        deadline_s: f64,
+    ) -> Result<StreamOutcome> {
+        let cfg = StreamConfig {
+            expected: self.registry.len(),
+            quorum,
+            deadline_s,
+            close_on_quorum: false,
+            batch_capacity: self.cfg.batch_capacity,
+        };
+        let outcome = StreamingRound::drive(&mut self.engine, channel, &cfg)?;
+        crate::ensure!(
+            outcome.result.estimates.len() == self.cfg.instances,
+            "engine returned {} estimates for {} instances",
+            outcome.result.estimates.len(),
+            self.cfg.instances
+        );
+        Ok(outcome)
     }
 
     fn run_round_inner(
@@ -324,6 +378,52 @@ mod tests {
             .map(|v| (v[0] * plan.scale as f64).floor() as u64)
             .sum();
         assert_eq!(honest, ring.reduce(want));
+    }
+
+    #[test]
+    fn streaming_round_over_simnet_tolerates_dropouts() {
+        use crate::transport::channel::{SimNet, SimNetConfig};
+        let n = 24;
+        let d = 3;
+        let plan = small_plan(n);
+        let k = plan.scale;
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, d), 17);
+        let inputs: Vec<Vec<f64>> =
+            (0..n).map(|i| vec![i as f64 / n as f64, 0.25, 0.75]).collect();
+        // two graceful dropouts + 10% transport loss on top
+        let mut mask = vec![false; n];
+        mask[3] = true;
+        mask[11] = true;
+        let mut net = SimNet::new(SimNetConfig::new(5).with_loss(0.1));
+        c.stream_cohort(&inputs, &mask, &mut net).unwrap();
+        let out = c.run_round_streaming(&mut net, 1, 1.0).unwrap();
+        assert_eq!(out.contributed.len() + out.dropped.len(), n);
+        assert!(out.dropped.len() >= 2, "graceful drops recorded");
+        assert_eq!(out.result.participants, out.contributed.len());
+        for j in 0..d {
+            let want: u64 = out
+                .contributed
+                .iter()
+                .map(|&i| (inputs[i as usize][j] * k as f64).floor() as u64)
+                .sum();
+            assert!(
+                (out.result.estimates[j] - want as f64 / k as f64).abs() < 1e-9,
+                "renormalized estimate exact over survivors"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_quorum_failure_is_an_error() {
+        use crate::transport::channel::Loopback;
+        let plan = small_plan(6);
+        let mut c = Coordinator::new(CoordinatorConfig::new(plan, 1), 2);
+        let inputs: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 / 6.0]).collect();
+        // everyone bows out gracefully → zero participants
+        let mut ch = Loopback::new();
+        c.stream_cohort(&inputs, &vec![true; 6], &mut ch).unwrap();
+        let err = c.run_round_streaming(&mut ch, 3, 1.0).unwrap_err();
+        assert!(format!("{err}").contains("quorum"), "{err}");
     }
 
     #[test]

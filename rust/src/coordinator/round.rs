@@ -23,6 +23,12 @@ pub enum RoundError {
     IllegalTransition(Phase),
     DuplicateContribution(u32),
     Incomplete(usize),
+    /// A dropout reported after the collection window closed (the round
+    /// already entered `phase`). The contribution set is frozen at
+    /// `begin_shuffle` — the analyzer's renormalized n' must match the
+    /// multiset it reads — so a late drop is a distinct, *expected*
+    /// transport race, not a generic transition bug.
+    DropAfterClose { client: u32, phase: Phase },
 }
 
 impl std::fmt::Display for RoundError {
@@ -33,6 +39,9 @@ impl std::fmt::Display for RoundError {
                 write!(f, "client {c} already contributed this round")
             }
             RoundError::Incomplete(k) => write!(f, "round still waiting on {k} clients"),
+            RoundError::DropAfterClose { client, phase } => {
+                write!(f, "client {client} dropped after collection closed (phase {phase:?})")
+            }
         }
     }
 }
@@ -92,10 +101,17 @@ impl RoundState {
     }
 
     /// Declare a client dropped (device offline). The round can complete
-    /// without it; the analyzer's n is adjusted by the caller.
+    /// without it; the analyzer's n is adjusted by the caller. Only legal
+    /// while Collecting: after `begin_shuffle` the contribution multiset
+    /// is frozen, so a late drop gets the dedicated
+    /// [`RoundError::DropAfterClose`].
     pub fn record_drop(&mut self, idx: u32) -> Result<(), RoundError> {
-        if self.phase != Phase::Collecting {
-            return Err(RoundError::IllegalTransition(self.phase));
+        match self.phase {
+            Phase::Collecting => {}
+            Phase::Shuffling | Phase::Analyzing | Phase::Done => {
+                return Err(RoundError::DropAfterClose { client: idx, phase: self.phase });
+            }
+            Phase::Configured => return Err(RoundError::IllegalTransition(self.phase)),
         }
         let slot = self
             .contributed
@@ -189,6 +205,56 @@ mod tests {
         r.record_contribution(2).unwrap();
         r.begin_shuffle().unwrap();
         assert_eq!(r.participants(), 2);
+    }
+
+    #[test]
+    fn drop_after_shuffle_gets_dedicated_error() {
+        // Satellite fix: a transport race delivering a Drop after the
+        // collection window closed must be distinguishable from a driver
+        // bug (generic IllegalTransition).
+        let mut r = RoundState::new(0, 2);
+        r.begin_collect().unwrap();
+        r.record_contribution(0).unwrap();
+        r.record_drop(1).unwrap();
+        r.begin_shuffle().unwrap();
+        assert_eq!(
+            r.record_drop(0),
+            Err(RoundError::DropAfterClose { client: 0, phase: Phase::Shuffling })
+        );
+        r.begin_analyze().unwrap();
+        assert_eq!(
+            r.record_drop(0),
+            Err(RoundError::DropAfterClose { client: 0, phase: Phase::Analyzing })
+        );
+        r.finish().unwrap();
+        assert_eq!(
+            r.record_drop(0),
+            Err(RoundError::DropAfterClose { client: 0, phase: Phase::Done })
+        );
+        // before collection opens the generic transition error still applies
+        let mut fresh = RoundState::new(1, 2);
+        assert_eq!(
+            fresh.record_drop(0),
+            Err(RoundError::IllegalTransition(Phase::Configured))
+        );
+    }
+
+    #[test]
+    fn participants_excludes_drops_in_every_phase() {
+        let mut r = RoundState::new(0, 4);
+        r.begin_collect().unwrap();
+        r.record_contribution(0).unwrap();
+        r.record_drop(1).unwrap();
+        r.record_contribution(2).unwrap();
+        r.record_drop(3).unwrap();
+        assert_eq!(r.participants(), 2, "collecting");
+        r.begin_shuffle().unwrap();
+        assert_eq!(r.participants(), 2, "shuffling");
+        r.begin_analyze().unwrap();
+        assert_eq!(r.participants(), 2, "analyzing");
+        r.finish().unwrap();
+        assert_eq!(r.participants(), 2, "done");
+        assert_eq!(r.outstanding(), 0);
     }
 
     #[test]

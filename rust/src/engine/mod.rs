@@ -52,9 +52,20 @@
 //! (for the collusion analyses) are captured on the client side of the
 //! boundary and never feed the analyzer.
 //!
-//! What this module deliberately does **not** do (see ROADMAP.md): cross-
-//! process shards and async/remote transports — the shard seams here are
-//! the cut points where those would plug in.
+//! # Streaming rounds
+//!
+//! The wire-ingestion path splits the round at the privacy boundary:
+//! clients encode locally ([`Engine::encode_client_shares`] is the exact
+//! per-(client, instance, round) derivation the in-process shard workers
+//! use), the transport carries only cloaked shares, and
+//! [`Engine::run_round_streaming`] runs the server half — shuffle +
+//! analyze — over whatever partial cohort actually arrived, with the
+//! analyzer renormalized to the participant count. See
+//! [`crate::transport`] for the wire codec, channels and the driver.
+//!
+//! What this module deliberately does **not** do (see ROADMAP.md):
+//! cross-process/multi-host shards — `transport::wire::ShardOutMsg` is
+//! the promoted wire form of the barrier message a socket would carry.
 
 use std::time::Instant;
 
@@ -139,6 +150,19 @@ pub struct ClientView {
 pub enum EngineError {
     WrongClientCount { expected: usize, got: usize },
     WrongWidth { client: usize, expected: usize, got: usize },
+    /// A client id outside the cohort (streaming ingestion path).
+    UnknownClient { client: u32, cohort: usize },
+    /// Streaming pools don't cover the configured instance count.
+    WrongInstanceCount { expected: usize, got: usize },
+    /// An instance pool's length disagrees with participants × m.
+    BadPoolLen { instance: usize, expected: usize, got: usize },
+    /// A residue outside Z_N reached the engine (hostile/corrupt wire).
+    OutOfRing { instance: usize, index: usize, value: u64 },
+    /// A streaming round closed with nobody in it.
+    NoParticipants,
+    /// More participants than the plan's n — the analyzer's N > 3nk
+    /// feasibility bound only covers cohorts up to the planned size.
+    TooManyParticipants { plan_n: usize, got: usize },
 }
 
 impl std::fmt::Display for EngineError {
@@ -149,6 +173,22 @@ impl std::fmt::Display for EngineError {
             }
             EngineError::WrongWidth { client, expected, got } => {
                 write!(f, "client {client}: expected {expected} coordinates, got {got}")
+            }
+            EngineError::UnknownClient { client, cohort } => {
+                write!(f, "client id {client} outside cohort of {cohort}")
+            }
+            EngineError::WrongInstanceCount { expected, got } => {
+                write!(f, "expected {expected} instance pools, got {got}")
+            }
+            EngineError::BadPoolLen { instance, expected, got } => {
+                write!(f, "instance {instance}: pool holds {got} residues, expected {expected}")
+            }
+            EngineError::OutOfRing { instance, index, value } => {
+                write!(f, "instance {instance}: residue {value} at index {index} outside Z_N")
+            }
+            EngineError::NoParticipants => write!(f, "streaming round closed with no participants"),
+            EngineError::TooManyParticipants { plan_n, got } => {
+                write!(f, "{got} participants exceed the plan's n = {plan_n}")
             }
         }
     }
@@ -310,6 +350,167 @@ impl Engine {
     /// exposed so privacy-boundary tests can reconstruct shuffle RNGs.
     pub fn shard_seed(&self, round: u64, shard: u64) -> u64 {
         derive_seed(derive_seed(self.shuffle_seed, round), shard)
+    }
+
+    /// The id the *next* round will run under — what a cohort must encode
+    /// against before streaming contributions in (see
+    /// [`crate::transport::streaming::send_cohort`]).
+    pub fn next_round(&self) -> u64 {
+        self.rounds_run
+    }
+
+    /// Client-side encode for the wire path: client `client`'s complete
+    /// cloaked contribution (flat `d × m` shares, instance-major) for
+    /// round `round`. Bit-identical to what [`Engine::run_round`]'s shard
+    /// workers would produce for that client — the RNG stream is the same
+    /// pure function of `(client, instance, round)` — so a streamed round
+    /// over a full cohort reproduces the in-process round exactly.
+    pub fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, EngineError> {
+        let d = self.cfg.instances;
+        let m = self.cfg.plan.num_messages;
+        let i = client as usize;
+        if i >= inputs.clients() {
+            return Err(EngineError::UnknownClient { client, cohort: inputs.clients() });
+        }
+        match inputs {
+            RoundInput::Scalars(_) => {
+                if d != 1 {
+                    return Err(EngineError::WrongWidth { client: i, expected: d, got: 1 });
+                }
+            }
+            RoundInput::Vectors(vs) => {
+                if vs[i].len() != d {
+                    return Err(EngineError::WrongWidth {
+                        client: i,
+                        expected: d,
+                        got: vs[i].len(),
+                    });
+                }
+            }
+        }
+        let seed_i = derive_seed(seeds.client_seed(client), round);
+        let mut shares = vec![0u64; d * m];
+        for j in 0..d {
+            let mut rng = ChaCha20Rng::from_seed_and_stream(seed_i, j as u64);
+            let xbar = self.encoder.codec().encode(inputs.get(i, j));
+            let (noised, _w) = self.prerandomizer.apply(xbar, &mut rng);
+            self.encoder.encode_quantized_into(noised, &mut rng, &mut shares[j * m..(j + 1) * m]);
+        }
+        Ok(shares)
+    }
+
+    /// Streaming entry point: run the server half of a round over a
+    /// *partial cohort* — per-instance pools of already-cloaked shares
+    /// collected from whoever actually contributed (see
+    /// [`crate::transport::streaming::StreamingRound`]).
+    ///
+    /// Differences from [`Engine::run_round`]:
+    ///
+    /// * The engine never sees inputs or client seeds — encoding happened
+    ///   client-side; the wire layer only carried cloaked shares.
+    /// * Estimates are **renormalized over the actual participants**:
+    ///   Algorithm 2's wrap-decision thresholds use n' = `participants`,
+    ///   not the plan's n, so a dropout round folds out-of-range sums to
+    ///   the surviving cohort's feasible range `[0, n'k]`. `N > 3nk ≥
+    ///   3n'k` keeps the decision arcs disjoint for every n' ≤ n.
+    /// * Mixnet seeds derive per *global* instance id, so both the
+    ///   permutations and the estimates are independent of the shard
+    ///   count — an S=1 and an S=4 engine at the same seed produce
+    ///   bit-identical results over the same pools.
+    ///
+    /// `pools[j]` must hold exactly `participants × m` residues in Z_N;
+    /// pools are shuffled in place (the privacy boundary: the analyzer
+    /// below only ever reads a pool after its mixnet permuted it).
+    pub fn run_round_streaming(
+        &mut self,
+        pools: &mut [Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, EngineError> {
+        let d = self.cfg.instances;
+        let m = self.cfg.plan.num_messages;
+        if pools.len() != d {
+            return Err(EngineError::WrongInstanceCount { expected: d, got: pools.len() });
+        }
+        if participants == 0 {
+            return Err(EngineError::NoParticipants);
+        }
+        if participants > self.cfg.plan.n {
+            return Err(EngineError::TooManyParticipants {
+                plan_n: self.cfg.plan.n,
+                got: participants,
+            });
+        }
+        let modulus = self.cfg.plan.modulus;
+        for (j, pool) in pools.iter().enumerate() {
+            if pool.len() != participants * m {
+                return Err(EngineError::BadPoolLen {
+                    instance: j,
+                    expected: participants * m,
+                    got: pool.len(),
+                });
+            }
+            // Deliberately re-validated even though the streaming driver
+            // already screens residues per frame: this is a public entry
+            // point (the multi-host shard path will feed it directly),
+            // ModRing arithmetic silently mis-sums on out-of-ring values,
+            // and this branch-predictable compare pass costs ~nothing next
+            // to the per-element ChaCha shuffle below.
+            if let Some(pos) = pool.iter().position(|&y| y >= modulus) {
+                return Err(EngineError::OutOfRing { instance: j, index: pos, value: pool[pos] });
+            }
+        }
+        let round = self.rounds_run;
+        self.rounds_run += 1;
+        let t0 = Instant::now();
+
+        // Renormalized analyzer: thresholds over the surviving cohort.
+        let ana = Analyzer::new(modulus, self.cfg.plan.scale, participants);
+        let s_eff = self.shards.min(d).max(1);
+        let round_seed = derive_seed(self.shuffle_seed, round);
+        let hops = self.cfg.mixnet_hops;
+
+        // --- shuffle: the privacy boundary ------------------------------
+        let chunk = d.div_ceil(s_eff);
+        self.pool.for_each_chunk(pools, chunk, |base, chunk_pools| {
+            for (off, pool) in chunk_pools.iter_mut().enumerate() {
+                let j = base + off;
+                let mut net = Mixnet::honest(derive_seed(round_seed, j as u64), hops);
+                net.shuffle(pool);
+            }
+        });
+
+        // --- analyze per shard range, merged in instance order ----------
+        let ranges = shard_ranges(d, s_eff);
+        let ranges_ref: &[(usize, usize)] = &ranges;
+        let pools_ref: &[Vec<u64>] = pools;
+        let outs: Vec<Vec<f64>> = self.pool.dispatch(s_eff, |s| {
+            let (lo, hi) = ranges_ref[s];
+            (lo..hi).map(|j| ana.analyze(&pools_ref[j])).collect()
+        });
+        let mut estimates = Vec::with_capacity(d);
+        for o in &outs {
+            estimates.extend_from_slice(o);
+        }
+
+        // --- traffic + metrics ------------------------------------------
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
+        let mut traffic = TrafficStats::default();
+        for _ in 0..participants {
+            traffic.record_batch(d * m, bytes, &cost);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.counter("engine.rounds").inc();
+        self.metrics.counter("engine.streaming_rounds").inc();
+        self.metrics.counter("engine.messages").add((participants * d * m) as u64);
+        self.metrics.histogram("engine.round_seconds").record_ns((wall * 1e9) as u64);
+        Ok(RoundResult { round_id: round, estimates, participants, traffic, wall_seconds: wall })
     }
 
     /// Run one full round. Returns per-instance sum estimates.
@@ -727,6 +928,150 @@ mod tests {
             let max = spans.iter().max().unwrap();
             assert!(max - min <= 1, "balanced: {spans:?}");
         }
+    }
+
+    /// Assemble streaming pools for a subset of clients exactly the way
+    /// the transport driver does (arrival order = ascending id here).
+    fn pools_for(
+        e: &Engine,
+        inputs: &[Vec<f64>],
+        who: &[usize],
+        seeds: &dyn ClientSeeds,
+    ) -> Vec<Vec<u64>> {
+        let d = e.config().instances;
+        let m = e.config().plan.num_messages;
+        let round = e.next_round();
+        let mut pools = vec![Vec::new(); d];
+        for &i in who {
+            let shares = e
+                .encode_client_shares(round, i as u32, &RoundInput::Vectors(inputs), seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        pools
+    }
+
+    #[test]
+    fn encode_client_shares_matches_run_round_views() {
+        // The wire path's client-side encode must be bit-identical to the
+        // shares the in-process shard workers produce.
+        let n = 8;
+        let d = 3;
+        let plan = small_plan(n);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(13);
+        let mut e = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(2), 13);
+        let round = e.next_round();
+        let streamed: Vec<Vec<u64>> = (0..n)
+            .map(|i| {
+                e.encode_client_shares(round, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                    .unwrap()
+            })
+            .collect();
+        let (_, views) = e.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        for v in &views {
+            assert_eq!(streamed[v.client as usize], v.shares, "client {}", v.client);
+        }
+    }
+
+    #[test]
+    fn streaming_round_renormalizes_over_participants() {
+        let n = 20;
+        let d = 4;
+        let plan = small_plan(n);
+        let k = plan.scale;
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(3);
+        // 15 of 20 clients survive (arbitrary drop mask).
+        let who: Vec<usize> = (0..n).filter(|i| i % 4 != 1).collect();
+        let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(2), 3);
+        let mut pools = pools_for(&e, &inputs, &who, &seeds);
+        let r = e.run_round_streaming(&mut pools, who.len()).unwrap();
+        assert_eq!(r.participants, who.len());
+        for j in 0..d {
+            let truth_bar: u64 =
+                who.iter().map(|&i| (inputs[i][j] * k as f64).floor() as u64).sum();
+            assert!(
+                (r.estimates[j] - truth_bar as f64 / k as f64).abs() < 1e-9,
+                "instance {j}: {} vs {}",
+                r.estimates[j],
+                truth_bar as f64 / k as f64
+            );
+        }
+        assert_eq!(r.traffic.batches, who.len() as u64);
+        assert_eq!(e.metrics().counter("engine.streaming_rounds").get(), 1);
+    }
+
+    #[test]
+    fn streaming_round_shard_invariant() {
+        // Same pools, same seed, S = 1 vs S = 4 vs S > d: bit-identical
+        // estimates (mixnet seeds derive per global instance id).
+        let n = 16;
+        let d = 7;
+        let who: Vec<usize> = (0..n).filter(|i| i % 5 != 0).collect();
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(21);
+        let mut results = Vec::new();
+        for shards in [1usize, 4, 32] {
+            let plan = small_plan(n);
+            let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(shards), 21);
+            let mut pools = pools_for(&e, &inputs, &who, &seeds);
+            results.push(e.run_round_streaming(&mut pools, who.len()).unwrap().estimates);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0], results[2]);
+    }
+
+    #[test]
+    fn streaming_round_rejects_malformed_pools() {
+        let n = 6;
+        let d = 2;
+        let plan = small_plan(n);
+        let modulus = plan.modulus;
+        let m = plan.num_messages;
+        let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(1), 1);
+        assert_eq!(
+            e.run_round_streaming(&mut vec![Vec::new(); 3], 1).unwrap_err(),
+            EngineError::WrongInstanceCount { expected: 2, got: 3 }
+        );
+        assert_eq!(
+            e.run_round_streaming(&mut vec![Vec::new(); 2], 0).unwrap_err(),
+            EngineError::NoParticipants
+        );
+        assert_eq!(
+            e.run_round_streaming(&mut vec![vec![0; 7 * m]; 2], 7).unwrap_err(),
+            EngineError::TooManyParticipants { plan_n: 6, got: 7 }
+        );
+        assert_eq!(
+            e.run_round_streaming(&mut vec![vec![0; m], vec![0; m + 1]], 1).unwrap_err(),
+            EngineError::BadPoolLen { instance: 1, expected: m, got: m + 1 }
+        );
+        let mut pools = vec![vec![0; 2 * m], vec![0; 2 * m]];
+        pools[1][3] = modulus;
+        assert_eq!(
+            e.run_round_streaming(&mut pools, 2).unwrap_err(),
+            EngineError::OutOfRing { instance: 1, index: 3, value: modulus }
+        );
+        // none of the rejects consumed a round id
+        assert_eq!(e.next_round(), 0);
+    }
+
+    #[test]
+    fn encode_client_shares_rejects_bad_clients() {
+        let plan = small_plan(4);
+        let e = Engine::new(EngineConfig::new(plan, 2), 1);
+        let seeds = DerivedClientSeeds::new(1);
+        let inputs = inputs_for(4, 2);
+        assert_eq!(
+            e.encode_client_shares(0, 9, &RoundInput::Vectors(&inputs), &seeds).unwrap_err(),
+            EngineError::UnknownClient { client: 9, cohort: 4 }
+        );
+        assert!(matches!(
+            e.encode_client_shares(0, 0, &RoundInput::Scalars(&[0.5; 4]), &seeds),
+            Err(EngineError::WrongWidth { .. })
+        ));
     }
 
     #[test]

@@ -14,10 +14,12 @@ pub mod data;
 pub mod quantize;
 pub mod server;
 
-use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundResult};
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::privacy::accountant::PrivacyAccountant;
 use crate::privacy::DpBudget;
+use crate::transport::channel::Channel;
+use crate::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
 use crate::util::error::Result;
 
 use data::Batch;
@@ -91,6 +93,10 @@ pub struct RoundLog {
     pub grad_norm: f32,
     pub wall_seconds: f64,
     pub messages: u64,
+    /// Clients whose gradient actually reached the aggregation (equals
+    /// the cohort size on the in-process path; can be smaller on the
+    /// lossy-transport path).
+    pub participants: usize,
     pub eps_spent: f64,
     pub delta_spent: f64,
 }
@@ -170,11 +176,47 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
 
     /// Run one federated round over the given per-client batches.
     pub fn run_round(&mut self, batches: &[Batch]) -> Result<RoundLog> {
-        crate::ensure!(batches.len() == self.cfg.clients, "need one batch per client");
-        let round = self.logs.len();
-        let params = self.server.params().to_vec();
+        let (inputs, loss_sum) = self.local_compute(batches)?;
+        let result = self.engine.run_round(&RoundInput::Vectors(&inputs), &self.seeds)?;
+        Ok(self.apply_round(loss_sum, result))
+    }
 
-        // --- local compute (PJRT) --------------------------------------
+    /// Run one federated round over a lossy transport: every client's
+    /// gradient is cloak-encoded locally and streamed through `channel`
+    /// as wire frames; the round closes on `deadline_s` (or a full
+    /// cohort) and the engine renormalizes the mean gradient over the
+    /// clients that actually arrived — dropout-tolerant FedAvg, the
+    /// Bonawitz et al. failure model on the shuffled-model protocol.
+    /// Errors if fewer than `quorum` gradients survive the network.
+    pub fn run_round_lossy(
+        &mut self,
+        batches: &[Batch],
+        channel: &mut dyn Channel,
+        quorum: usize,
+        deadline_s: f64,
+    ) -> Result<RoundLog> {
+        let (inputs, loss_sum) = self.local_compute(batches)?;
+        send_cohort(
+            &self.engine,
+            &self.seeds,
+            &RoundInput::Vectors(&inputs),
+            &vec![false; inputs.len()],
+            channel,
+        )?;
+        let stream_cfg = StreamConfig::new(self.cfg.clients)
+            .with_quorum(quorum)
+            .with_deadline(deadline_s);
+        let out = StreamingRound::drive(&mut self.engine, channel, &stream_cfg)?;
+        Ok(self.apply_round(loss_sum, out.result))
+    }
+
+    /// Local gradient computation across the cohort (the L2 artifact in
+    /// production). `mean_loss` in the log averages over the *full*
+    /// cohort — every client evaluates locally even if its contribution
+    /// later drops on the wire.
+    fn local_compute(&mut self, batches: &[Batch]) -> Result<(Vec<Vec<f64>>, f32)> {
+        crate::ensure!(batches.len() == self.cfg.clients, "need one batch per client");
+        let params = self.server.params().to_vec();
         let mut inputs = Vec::with_capacity(self.cfg.clients);
         let mut loss_sum = 0f32;
         for batch in batches {
@@ -182,13 +224,15 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
             loss_sum += loss;
             inputs.push(self.codec.encode(&grad));
         }
+        Ok((inputs, loss_sum))
+    }
 
-        // --- private aggregation ----------------------------------------
-        let result = self.engine.run_round(&RoundInput::Vectors(&inputs), &self.seeds)?;
+    /// Server update + privacy accounting over an aggregation result
+    /// (mean gradient renormalized by the result's participant count).
+    fn apply_round(&mut self, loss_sum: f32, result: RoundResult) -> RoundLog {
+        let round = self.logs.len();
         let mean_grad = self.codec.decode_mean(&result.estimates, result.participants);
         let grad_norm = mean_grad.iter().map(|g| g * g).sum::<f32>().sqrt();
-
-        // --- server update + accounting ---------------------------------
         self.server.step(&mean_grad);
         self.accountant.spend(DpBudget::new(self.cfg.eps_round, self.cfg.delta_round));
         let spent = self.accountant.best(self.cfg.delta_round);
@@ -198,11 +242,12 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
             grad_norm,
             wall_seconds: result.wall_seconds,
             messages: result.traffic.messages,
+            participants: result.participants,
             eps_spent: spent.epsilon,
             delta_spent: spent.delta,
         };
         self.logs.push(log.clone());
-        Ok(log)
+        log
     }
 }
 
@@ -339,6 +384,56 @@ mod tests {
         let noisy = deviation(NeighborNotion::SingleUser, 3);
         assert!(exact < 1e-3, "thm2 deviation {exact}");
         assert!(noisy > 10.0 * exact.max(1e-6), "thm1 should be noisier: {noisy} vs {exact}");
+    }
+
+    #[test]
+    fn lossy_round_renormalizes_mean_over_survivors() {
+        use crate::transport::channel::{SimNet, SimNetConfig};
+        // Every client reports the same clipped gradient, so the mean over
+        // ANY surviving subset equals the true gradient — dropouts must
+        // not bias the applied update once renormalized.
+        let oracle = QuadraticOracle { target: vec![0.5, -0.5, 0.25, 0.0] };
+        let params = vec![0.0; 4];
+        let cfg = test_cfg(16, 1);
+        let mut d = FlDriver::new(cfg, &oracle, params.clone(), 7).unwrap();
+        let (_, true_grad) = oracle.loss_and_grad(&params, &dummy_batches(1)[0]).unwrap();
+        let before = d.server.params().to_vec();
+        let mut net = SimNet::new(SimNetConfig::new(19).with_loss(0.3));
+        let log = d.run_round_lossy(&dummy_batches(16), &mut net, 4, 1.0).unwrap();
+        assert!(log.participants >= 4 && log.participants < 16, "{}", log.participants);
+        let applied: Vec<f32> = before
+            .iter()
+            .zip(d.server.params())
+            .map(|(b, a)| (b - a) / d.cfg.lr)
+            .collect();
+        for (a, t) in applied.iter().zip(&true_grad) {
+            assert!((a - t).abs() < 0.05, "applied={a} true={t}");
+        }
+    }
+
+    #[test]
+    fn lossy_round_quorum_failure_is_an_error() {
+        use crate::transport::channel::{SimNet, SimNetConfig};
+        let oracle = QuadraticOracle { target: vec![0.0; 4] };
+        let mut d = FlDriver::new(test_cfg(8, 1), &oracle, vec![0.1; 4], 3).unwrap();
+        // 10 ms minimum latency vs 1 ms deadline: no gradient arrives.
+        let mut net = SimNet::new(SimNetConfig::new(2).with_latency(10e-3, 1e-3));
+        let err = d.run_round_lossy(&dummy_batches(8), &mut net, 4, 1e-3).unwrap_err();
+        assert!(format!("{err}").contains("quorum"), "{err}");
+        assert!(d.logs.is_empty(), "failed round must not log or step");
+    }
+
+    #[test]
+    fn lossless_channel_matches_in_process_round() {
+        use crate::transport::channel::Loopback;
+        let oracle = QuadraticOracle { target: vec![0.3, -0.2, 0.7, 0.1] };
+        let mut a = FlDriver::new(test_cfg(8, 1), &oracle, vec![0.0; 4], 11).unwrap();
+        let mut b = FlDriver::new(test_cfg(8, 1), &oracle, vec![0.0; 4], 11).unwrap();
+        let la = a.run_round(&dummy_batches(8)).unwrap();
+        let mut ch = Loopback::new();
+        let lb = b.run_round_lossy(&dummy_batches(8), &mut ch, 8, 1.0).unwrap();
+        assert_eq!(la.participants, lb.participants);
+        assert_eq!(a.server.params(), b.server.params(), "wire path = in-process path");
     }
 
     #[test]

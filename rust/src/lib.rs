@@ -11,7 +11,9 @@
 //!   (Algorithm 1 + §2.4), shuffler (mixnet simulation), analyzer
 //!   (Algorithm 2), the shard-parallel aggregation [`engine`] every entry
 //!   point routes rounds through, the round coordinator with batching and
-//!   backpressure, parameter planner for Theorems 1–2, privacy accountant,
+//!   backpressure, the [`transport`] layer (wire codec, lossy-network
+//!   simulation and dropout-tolerant streaming rounds), parameter planner
+//!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
 //! * **L2/L1 (build-time Python)** — the federated-learning workload (JAX
@@ -66,4 +68,7 @@ pub mod prelude {
     pub use crate::privacy::accountant::PrivacyAccountant;
     pub use crate::rng::{ChaCha20Rng, Rng, SeedableRng};
     pub use crate::shuffler::{FisherYates, Shuffler};
+    pub use crate::transport::{
+        Channel, Loopback, SimNet, SimNetConfig, StreamConfig, StreamingRound,
+    };
 }

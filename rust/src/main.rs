@@ -1,15 +1,18 @@
 //! cloak-agg leader binary.
 //!
 //! Subcommands:
-//!   aggregate  — one-shot private aggregation of synthetic inputs
-//!   fl         — federated training (requires `make artifacts`)
-//!   plan       — print the protocol plan for (n, eps, delta)
-//!   smoke      — load artifacts, run every executable once, verify
+//!   aggregate     — one-shot private aggregation of synthetic inputs
+//!   fl            — federated training (requires `make artifacts`)
+//!   plan          — print the protocol plan for (n, eps, delta)
+//!   smoke         — load artifacts, run every executable once, verify
+//!   transport-sim — streaming rounds over a seeded lossy network,
+//!                   benchkit JSON out (self-validated)
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
 //!   cloak-agg fl --clients 16 --rounds 5 --artifacts artifacts
 //!   cloak-agg plan --n 100000 --eps 0.5 --delta 1e-8
+//!   cloak-agg transport-sim --n 256 --d 8 --loss 0.1 --seed 7
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -21,11 +24,13 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke> [--flag value]...
-  aggregate: --n --eps --delta --seed --notion (1|2)
-  fl:        --clients --rounds --eps --delta --artifacts --seed
-  plan:      --n --eps --delta
-  smoke:     --artifacts";
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim> [--flag value]...
+  aggregate:     --n --eps --delta --seed --notion (1|2)
+  fl:            --clients --rounds --eps --delta --artifacts --seed
+  plan:          --n --eps --delta
+  smoke:         --artifacts
+  transport-sim: --n --d --loss --dup --shards (0=sweep) --quorum
+                 --deadline --seed --out";
 
 fn main() {
     if let Err(e) = run() {
@@ -38,9 +43,10 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["aggregate", "fl", "plan", "smoke"],
+        &["aggregate", "fl", "plan", "smoke", "transport-sim"],
         &[
-            "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts",
+            "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
+            "loss", "dup", "shards", "quorum", "deadline", "out",
         ],
     )?;
     match args.command.as_str() {
@@ -48,6 +54,7 @@ fn run() -> Result<()> {
         "fl" => cmd_fl(&args),
         "plan" => cmd_plan(&args),
         "smoke" => cmd_smoke(&args),
+        "transport-sim" => cmd_transport_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -144,6 +151,132 @@ fn init_params(mf: &cloak_agg::runtime::Manifest, seed: u64) -> Vec<f32> {
     }
     params.extend(std::iter::repeat(0f32).take(mf.num_classes));
     params
+}
+
+/// Streaming rounds over a seeded lossy network: one instrumented round
+/// for the ingestion report, then a timed shard sweep written as benchkit
+/// JSON and re-validated through the crate's own parser (the CI smoke
+/// step keys on the final "benchkit JSON OK" line).
+fn cmd_transport_sim(args: &Args) -> Result<()> {
+    use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 256)?;
+    let d = args.get_usize("d", 8)?;
+    let loss = args.get_f64("loss", 0.1)?;
+    let dup = args.get_f64("dup", 0.02)?;
+    let seed = args.get_u64("seed", 42)?;
+    let shards = args.get_usize("shards", 0)?;
+    let deadline = args.get_f64("deadline", 1.0)?;
+    let quorum = args.get_usize("quorum", (n / 2).max(1))?;
+    let out = args.get_str("out", "BENCH_transport_sim.json");
+    ensure!(n >= 2, "--n must be >= 2");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!((0.0..1.0).contains(&loss), "--loss must be in [0, 1)");
+    ensure!((0.0..1.0).contains(&dup), "--dup must be in [0, 1)");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let k = plan.scale;
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let no_drops = vec![false; n];
+    let net_for = |stream: u64| {
+        let cfg = SimNetConfig::new(derive_seed(seed, stream));
+        SimNet::new(cfg.with_loss(loss).with_duplicate(dup))
+    };
+    let stream_cfg = StreamConfig::new(n).with_quorum(quorum).with_deadline(deadline);
+
+    // --- one instrumented round: what the fault injector did -------------
+    let mut engine = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(1), seed);
+    let mut net = net_for(0);
+    send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+    let outcome = StreamingRound::drive(&mut engine, &mut net, &stream_cfg)?;
+    let survivors_truth: f64 = outcome
+        .contributed
+        .iter()
+        .map(|&i| (inputs[i as usize][0] * k as f64).floor() as u64)
+        .sum::<u64>() as f64
+        / k as f64;
+    let mut table = Table::new(
+        &format!("transport-sim: n={n} d={d} loss={loss} dup={dup}"),
+        &["participants", "dropped", "late", "dup frames", "malformed", "inst0 |err|"],
+    );
+    table.row(&[
+        outcome.result.participants.to_string(),
+        outcome.dropped.len().to_string(),
+        outcome.late_frames.to_string(),
+        outcome.duplicate_frames.to_string(),
+        outcome.malformed_frames.to_string(),
+        format!("{:.2e}", (outcome.result.estimates[0] - survivors_truth).abs()),
+    ]);
+    println!("{}", table.render());
+    ensure!(
+        (outcome.result.estimates[0] - survivors_truth).abs() < 1e-9,
+        "estimate must be exact over the surviving cohort"
+    );
+
+    // --- timed sweep over shard counts ------------------------------------
+    // Client-side encode is shard-independent, so the cohort's frames are
+    // encoded ONCE here and replayed per iteration through a fresh SimNet
+    // and a fresh engine (round id 0 matches the frames) — the timer
+    // measures the server-side ingestion path the shard axis scales, not
+    // the constant encode.
+    let frames: Vec<Vec<u8>> = {
+        let reference = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(1), seed);
+        let mut ch = Loopback::new();
+        send_cohort(&reference, &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut ch)?;
+        std::iter::from_fn(|| ch.recv().map(|(_, bytes)| bytes)).collect()
+    };
+    let sweep: Vec<usize> = if shards == 0 { vec![1, 2, 4] } else { vec![shards] };
+    let mut bench = Bench::new("transport_sim");
+    for &s in &sweep {
+        let mut stream = 0u64;
+        let name = format!("stream n={n} d={d} loss={loss} S={s}");
+        bench.run_sharded(&name, (n * d * m) as f64, s, || {
+            stream += 1;
+            let mut engine =
+                Engine::new(EngineConfig::new(plan.clone(), d).with_shards(s), seed);
+            let mut net = net_for(stream);
+            for f in &frames {
+                net.send(f.clone());
+            }
+            StreamingRound::drive(&mut engine, &mut net, &stream_cfg)
+                .expect("streaming round (quorum too high for this loss rate?)")
+                .result
+                .estimates[0]
+        });
+    }
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -------
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("transport_sim"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(cases.len() == sweep.len(), "expected {} cases, found {}", sweep.len(), cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

@@ -1,0 +1,126 @@
+//! Byte & latency accounting for the communication columns of Figure 1.
+//!
+//! The paper's costs are *communication per user* (number of messages ×
+//! message size) and total work; the simulator charges every message
+//! against a [`CostModel`] and aggregates per-component [`TrafficStats`].
+//! The coordinator, mixnet and baselines all report through this module,
+//! which is what `benches/fig1_comm.rs` and `benches/scalability.rs` read.
+
+/// Latency/bandwidth model of one link.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message fixed overhead (seconds) — framing, syscalls.
+    pub per_message_s: f64,
+    /// Per-byte cost (seconds/byte) — inverse bandwidth.
+    pub per_byte_s: f64,
+    /// Per-batch fixed overhead (seconds) — RTT-ish.
+    pub per_batch_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // 1 µs/message, 1 Gbps link, 200 µs batch RTT.
+        CostModel { per_message_s: 1e-6, per_byte_s: 8e-9, per_batch_s: 2e-4 }
+    }
+}
+
+impl CostModel {
+    /// Simulated time to move one batch of `len` messages of `bytes` each.
+    pub fn batch_latency(&self, len: usize, bytes: usize) -> f64 {
+        self.per_batch_s + len as f64 * (self.per_message_s + bytes as f64 * self.per_byte_s)
+    }
+}
+
+/// Running traffic counters for one component (user fleet, shuffler, server).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub batches: u64,
+    /// Simulated seconds accumulated under the cost model.
+    pub sim_seconds: f64,
+}
+
+impl TrafficStats {
+    pub fn record_batch(&mut self, len: usize, bytes_per_msg: usize, cost: &CostModel) {
+        self.messages += len as u64;
+        self.bytes += (len * bytes_per_msg) as u64;
+        self.batches += 1;
+        self.sim_seconds += cost.batch_latency(len, bytes_per_msg);
+    }
+
+    pub fn merge(&mut self, other: &TrafficStats) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+        self.batches += other.batches;
+        self.sim_seconds += other.sim_seconds;
+    }
+
+    /// Bytes per user for an n-user round (Fig. 1 communication column).
+    pub fn bytes_per_user(&self, n: usize) -> f64 {
+        self.bytes as f64 / n.max(1) as f64
+    }
+}
+
+/// An addressed protocol message (used by the coordinator's queues).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    /// Which aggregation instance (e.g. gradient coordinate) this belongs to.
+    pub instance: u32,
+    /// The Z_N residue.
+    pub payload: u64,
+}
+
+impl Envelope {
+    /// Wire size: instance tag (4 bytes) + ceil(log2 N)/8 payload bytes.
+    pub fn wire_bytes(message_bits: u32) -> usize {
+        4 + message_bits.div_ceil(8) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_latency_additive() {
+        let c = CostModel::default();
+        let l1 = c.batch_latency(0, 100);
+        let l2 = c.batch_latency(1000, 100);
+        assert!((l1 - c.per_batch_s).abs() < 1e-12);
+        let per_msg = (l2 - l1) / 1000.0;
+        assert!((per_msg - (c.per_message_s + 100.0 * c.per_byte_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate_and_merge() {
+        let c = CostModel::default();
+        let mut a = TrafficStats::default();
+        a.record_batch(10, 8, &c);
+        a.record_batch(5, 8, &c);
+        assert_eq!(a.messages, 15);
+        assert_eq!(a.bytes, 120);
+        assert_eq!(a.batches, 2);
+        let mut b = TrafficStats::default();
+        b.record_batch(1, 100, &c);
+        b.merge(&a);
+        assert_eq!(b.messages, 16);
+        assert_eq!(b.bytes, 220);
+    }
+
+    #[test]
+    fn wire_bytes_rounds_up() {
+        assert_eq!(Envelope::wire_bytes(1), 5);
+        assert_eq!(Envelope::wire_bytes(8), 5);
+        assert_eq!(Envelope::wire_bytes(9), 6);
+        assert_eq!(Envelope::wire_bytes(33), 9);
+    }
+
+    #[test]
+    fn bytes_per_user() {
+        let mut s = TrafficStats::default();
+        s.bytes = 1000;
+        assert_eq!(s.bytes_per_user(10), 100.0);
+        assert_eq!(s.bytes_per_user(0), 1000.0);
+    }
+}

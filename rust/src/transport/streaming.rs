@@ -1,0 +1,543 @@
+//! Streaming round driver — wire-level ingestion with dropout-tolerant
+//! close.
+//!
+//! [`StreamingRound::drive`] pumps frames off a [`Channel`] as they
+//! arrive, decodes and validates them ([`super::wire`]), records
+//! contributions and dropouts on the coordinator's
+//! [`RoundState`](crate::coordinator::round::RoundState) state machine,
+//! and feeds accepted [`ClientBatch`]es incrementally into the
+//! [`Batcher`]'s bounded queue — a collector thread scatters them into
+//! per-instance pools concurrently, so ingestion is pipelined with
+//! backpressure exactly like the in-process path. The round closes when
+//! the full cohort is accounted for, when the simulated deadline passes,
+//! or (optionally) as soon as a quorum of contributions is in; everyone
+//! still unaccounted is recorded as dropped — the transport event, not a
+//! full-cohort requirement, is what drives `RoundState::record_drop`.
+//!
+//! The closed pools then enter
+//! [`Engine::run_round_streaming`](crate::engine::Engine::run_round_streaming),
+//! which shuffles each instance pool (the privacy boundary) and analyzes
+//! with the estimate renormalized over the *actual* participants.
+
+use crate::coordinator::batcher::{Batcher, ClientBatch, CollectError};
+use crate::coordinator::round::{RoundError, RoundState};
+use crate::engine::{ClientSeeds, Engine, EngineError, RoundInput, RoundResult};
+use crate::transport::channel::Channel;
+use crate::transport::wire::{decode_frame, encode_frame, Frame};
+use crate::util::pool::BoundedQueue;
+
+/// How a streaming round collects and closes.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Cohort size — how many clients were invited (the registry's n).
+    pub expected: usize,
+    /// Minimum contributions for the round to be valid.
+    pub quorum: usize,
+    /// Simulated-time close: frames arriving after this are late and their
+    /// senders count as dropped (unless an earlier copy made it).
+    pub deadline_s: f64,
+    /// Close as soon as `quorum` contributions are in, without waiting for
+    /// the rest of the cohort (stragglers are recorded as dropped).
+    pub close_on_quorum: bool,
+    /// Bound on in-flight decoded batches (producer blocks beyond this).
+    pub batch_capacity: usize,
+}
+
+impl StreamConfig {
+    /// Defaults: majority quorum, 1 simulated second deadline, wait for
+    /// the full cohort up to the deadline.
+    pub fn new(expected: usize) -> Self {
+        StreamConfig {
+            expected,
+            quorum: (expected / 2).max(1),
+            deadline_s: 1.0,
+            close_on_quorum: false,
+            batch_capacity: 256,
+        }
+    }
+
+    pub fn with_quorum(mut self, quorum: usize) -> Self {
+        self.quorum = quorum;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = deadline_s;
+        self
+    }
+
+    pub fn close_on_quorum(mut self, yes: bool) -> Self {
+        self.close_on_quorum = yes;
+        self
+    }
+}
+
+/// Why a streaming round failed.
+#[derive(Debug, PartialEq)]
+pub enum StreamError {
+    /// Fewer contributions than [`StreamConfig::quorum`] by close.
+    QuorumNotReached { quorum: usize, participants: usize },
+    /// The engine rejected the collected pools.
+    Engine(EngineError),
+    /// The round state machine rejected a transition (driver bug surface).
+    Round(RoundError),
+    /// The batcher under-filled relative to what the driver recorded.
+    Collect(CollectError),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::QuorumNotReached { quorum, participants } => {
+                write!(f, "round closed with {participants} participants, quorum {quorum}")
+            }
+            StreamError::Engine(e) => write!(f, "engine: {e}"),
+            StreamError::Round(e) => write!(f, "round state: {e}"),
+            StreamError::Collect(e) => write!(f, "collect: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+impl From<EngineError> for StreamError {
+    fn from(e: EngineError) -> Self {
+        StreamError::Engine(e)
+    }
+}
+
+impl From<RoundError> for StreamError {
+    fn from(e: RoundError) -> Self {
+        StreamError::Round(e)
+    }
+}
+
+impl From<CollectError> for StreamError {
+    fn from(e: CollectError) -> Self {
+        StreamError::Collect(e)
+    }
+}
+
+/// What a streaming round produced, plus ingestion telemetry.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    pub result: RoundResult,
+    /// Clients whose contribution was accepted, ascending.
+    pub contributed: Vec<u32>,
+    /// Clients recorded as dropped (explicit Drop frame, lost in transit,
+    /// or past the deadline), ascending.
+    pub dropped: Vec<u32>,
+    /// Frames that arrived after the deadline.
+    pub late_frames: usize,
+    /// Redundant frames for an already-accounted client (network
+    /// duplication, or a contribution racing its own Drop).
+    pub duplicate_frames: usize,
+    /// Frames rejected by the wire codec or payload validation.
+    pub malformed_frames: usize,
+    /// Well-formed frames for a different round id.
+    pub stale_frames: usize,
+}
+
+/// Per-round ingestion state: who is accounted for, plus frame telemetry.
+/// Split out of [`StreamingRound::drive`] so the pump loop can run inside
+/// the collector's thread scope without closure gymnastics.
+struct Ingest<'a> {
+    cfg: &'a StreamConfig,
+    round: u64,
+    d: usize,
+    m: usize,
+    modulus: u64,
+    state: RoundState,
+    contributed: Vec<bool>,
+    dropped: Vec<bool>,
+    late: usize,
+    dups: usize,
+    malformed: usize,
+    stale: usize,
+}
+
+impl Ingest<'_> {
+    /// Pump frames off the channel until the round closes (full cohort,
+    /// deadline, or quorum close), pushing accepted batches into the
+    /// bounded queue (backpressure point).
+    fn pump(
+        &mut self,
+        channel: &mut dyn Channel,
+        sender: &BoundedQueue<ClientBatch>,
+    ) -> Result<(), StreamError> {
+        let expected = self.cfg.expected;
+        while let Some((t, bytes)) = channel.recv() {
+            if t > self.cfg.deadline_s {
+                self.late += 1;
+                continue; // keep draining so telemetry sees the tail
+            }
+            let frame = match decode_frame(&bytes) {
+                Ok((frame, used)) if used == bytes.len() => frame,
+                _ => {
+                    self.malformed += 1;
+                    continue;
+                }
+            };
+            match frame {
+                Frame::Contribute { round, batch } => {
+                    if round != self.round {
+                        self.stale += 1;
+                        continue;
+                    }
+                    let idx = batch.client_stream as usize;
+                    // The wire is untrusted: bad ids, wrong widths and
+                    // out-of-ring residues stop here, before anything
+                    // reaches a pool.
+                    if idx >= expected
+                        || batch.shares.len() != self.d * self.m
+                        || batch.shares.iter().any(|&s| s >= self.modulus)
+                    {
+                        self.malformed += 1;
+                        continue;
+                    }
+                    if self.contributed[idx] || self.dropped[idx] {
+                        self.dups += 1;
+                        continue;
+                    }
+                    self.state.record_contribution(batch.client_stream)?;
+                    self.contributed[idx] = true;
+                    sender.push(batch);
+                }
+                Frame::Drop { round, client } => {
+                    if round != self.round {
+                        self.stale += 1;
+                        continue;
+                    }
+                    let idx = client as usize;
+                    if idx >= expected {
+                        self.malformed += 1;
+                        continue;
+                    }
+                    if self.contributed[idx] || self.dropped[idx] {
+                        self.dups += 1;
+                        continue;
+                    }
+                    self.state.record_drop(client)?;
+                    self.dropped[idx] = true;
+                }
+                // Control frames carry no contribution payload.
+                Frame::Hello { .. } | Frame::Commit { .. } | Frame::ShardOut(_) => {}
+            }
+            if self.state.outstanding() == 0 {
+                break; // whole cohort accounted for
+            }
+            if self.cfg.close_on_quorum && self.state.participants() >= self.cfg.quorum {
+                break; // quorum close: stragglers become drops below
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The streaming ingestion driver. Stateless — all per-round state lives
+/// on the stack of [`StreamingRound::drive`].
+pub struct StreamingRound;
+
+impl StreamingRound {
+    /// Ingest one round's traffic from `channel` and run the protocol
+    /// over whoever actually showed up.
+    pub fn drive(
+        engine: &mut Engine,
+        channel: &mut dyn Channel,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, StreamError> {
+        let d = engine.config().instances;
+        let m = engine.config().plan.num_messages;
+        let modulus = engine.config().plan.modulus;
+        let round = engine.next_round();
+        let expected = cfg.expected;
+
+        let mut state = RoundState::new(round, expected);
+        state.begin_collect()?;
+        let mut ing = Ingest {
+            cfg,
+            round,
+            d,
+            m,
+            modulus,
+            state,
+            contributed: vec![false; expected],
+            dropped: vec![false; expected],
+            late: 0,
+            dups: 0,
+            malformed: 0,
+            stale: 0,
+        };
+
+        let batcher = Batcher::new(cfg.batch_capacity.max(1));
+        let sender = batcher.sender();
+
+        // Pump the channel while a collector thread drains the bounded
+        // queue into per-instance pools — ingestion and scatter overlap,
+        // and a slow collector exerts backpressure through `sender.push`.
+        let (mut pools, got) = std::thread::scope(|scope| {
+            let collector = scope.spawn(|| batcher.collect_counted(d, m, expected));
+            let pumped = ing.pump(channel, &sender);
+            batcher.close();
+            let collected = collector.join().expect("collector thread");
+            pumped.map(|()| collected)
+        })?;
+
+        // Everyone neither contributed nor explicitly dropped by close is
+        // a dropout (lost frame, late frame, or silent client).
+        for idx in 0..expected {
+            if !ing.contributed[idx] && !ing.dropped[idx] {
+                ing.state.record_drop(idx as u32)?;
+                ing.dropped[idx] = true;
+            }
+        }
+
+        let participants = ing.state.participants();
+        debug_assert_eq!(participants, got, "driver and collector disagree on batch count");
+        if participants < cfg.quorum {
+            return Err(StreamError::QuorumNotReached { quorum: cfg.quorum, participants });
+        }
+
+        ing.state.begin_shuffle()?;
+        let result = engine.run_round_streaming(pools.pools_mut(), participants)?;
+        ing.state.begin_analyze()?;
+        ing.state.finish()?;
+
+        let ids = |mask: &[bool]| {
+            mask.iter()
+                .enumerate()
+                .filter_map(|(i, &on)| on.then_some(i as u32))
+                .collect::<Vec<u32>>()
+        };
+        Ok(StreamOutcome {
+            result,
+            contributed: ids(&ing.contributed),
+            dropped: ids(&ing.dropped),
+            late_frames: ing.late,
+            duplicate_frames: ing.dups,
+            malformed_frames: ing.malformed,
+            stale_frames: ing.stale,
+        })
+    }
+}
+
+/// Client-side half of the simulation: encode every client's input for
+/// the engine's *next* round and send it through `channel` as wire
+/// frames. Clients flagged in `drop_mask` send an explicit [`Frame::Drop`]
+/// instead (graceful dropout); transport-level loss on top of this
+/// produces the silent kind. Returns the round id the cohort encoded for.
+pub fn send_cohort(
+    engine: &Engine,
+    seeds: &dyn ClientSeeds,
+    inputs: &RoundInput<'_>,
+    drop_mask: &[bool],
+    channel: &mut dyn Channel,
+) -> Result<u64, EngineError> {
+    let n = inputs.clients();
+    if drop_mask.len() != n {
+        return Err(EngineError::WrongClientCount { expected: n, got: drop_mask.len() });
+    }
+    let round = engine.next_round();
+    for i in 0..n {
+        let frame = if drop_mask[i] {
+            Frame::Drop { round, client: i as u32 }
+        } else {
+            let shares = engine.encode_client_shares(round, i as u32, inputs, seeds)?;
+            Frame::Contribute {
+                round,
+                batch: ClientBatch { client_stream: i as u32, shares },
+            }
+        };
+        channel.send(encode_frame(&frame));
+    }
+    Ok(round)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{DerivedClientSeeds, EngineConfig};
+    use crate::params::ProtocolPlan;
+    use crate::transport::channel::{Loopback, SimNet, SimNetConfig};
+
+    fn small_engine(n: usize, d: usize, shards: usize, seed: u64) -> Engine {
+        let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+        Engine::new(EngineConfig::new(plan, d).with_shards(shards), seed)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    /// Exact discretized sum over a subset of clients (Theorem 2 regime).
+    fn surviving_truth(inputs: &[Vec<f64>], who: &[u32], j: usize, k: u64) -> f64 {
+        who.iter().map(|&i| (inputs[i as usize][j] * k as f64).floor() as u64).sum::<u64>()
+            as f64
+            / k as f64
+    }
+
+    #[test]
+    fn loopback_full_cohort_matches_in_process_round() {
+        let (n, d) = (12, 3);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(9);
+        // In-process reference round.
+        let mut reference = small_engine(n, d, 2, 9);
+        let want =
+            reference.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap().estimates;
+        // Same seed, streamed over loopback.
+        let mut engine = small_engine(n, d, 2, 9);
+        let mut ch = Loopback::new();
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut ch)
+            .unwrap();
+        let out =
+            StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n)).unwrap();
+        assert_eq!(out.result.estimates, want, "wire path must reproduce in-process round");
+        assert_eq!(out.result.participants, n);
+        assert_eq!(out.contributed.len(), n);
+        assert!(out.dropped.is_empty());
+    }
+
+    #[test]
+    fn explicit_drop_frames_shrink_the_round() {
+        let (n, d) = (10, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(4);
+        let mut engine = small_engine(n, d, 1, 4);
+        let k = engine.config().plan.scale;
+        let mut mask = vec![false; n];
+        mask[2] = true;
+        mask[7] = true;
+        let mut ch = Loopback::new();
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch).unwrap();
+        let out =
+            StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n)).unwrap();
+        assert_eq!(out.result.participants, 8);
+        assert_eq!(out.dropped, vec![2, 7]);
+        for j in 0..d {
+            let want = surviving_truth(&inputs, &out.contributed, j, k);
+            assert!(
+                (out.result.estimates[j] - want).abs() < 1e-9,
+                "instance {j}: {} vs {want}",
+                out.result.estimates[j]
+            );
+        }
+    }
+
+    #[test]
+    fn simnet_loss_becomes_dropout_and_duplicates_are_ignored() {
+        let (n, d) = (40, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(8);
+        let mut engine = small_engine(n, d, 2, 8);
+        let k = engine.config().plan.scale;
+        let mut net =
+            SimNet::new(SimNetConfig::new(31).with_loss(0.2).with_duplicate(0.2));
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut net)
+            .unwrap();
+        let out = StreamingRound::drive(
+            &mut engine,
+            &mut net,
+            &StreamConfig::new(n).with_quorum(1),
+        )
+        .unwrap();
+        assert_eq!(out.contributed.len() + out.dropped.len(), n);
+        assert_eq!(out.result.participants, out.contributed.len());
+        assert!(!out.dropped.is_empty(), "p=0.2 loss over 40 sends should drop someone");
+        assert!(out.duplicate_frames > 0, "p=0.2 duplication should duplicate someone");
+        // Renormalized estimate is exact over the survivors.
+        for j in 0..d {
+            let want = surviving_truth(&inputs, &out.contributed, j, k);
+            assert!((out.result.estimates[j] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deadline_drops_late_clients() {
+        let (n, d) = (6, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(2);
+        let mut engine = small_engine(n, d, 1, 2);
+        // Every frame takes ≥ 10 ms; deadline at 1 ms → nobody makes it.
+        let mut net = SimNet::new(SimNetConfig::new(1).with_latency(10e-3, 1e-3));
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut net)
+            .unwrap();
+        let err = StreamingRound::drive(
+            &mut engine,
+            &mut net,
+            &StreamConfig::new(n).with_deadline(1e-3),
+        )
+        .unwrap_err();
+        assert_eq!(err, StreamError::QuorumNotReached { quorum: 3, participants: 0 });
+    }
+
+    #[test]
+    fn quorum_close_stops_early() {
+        let (n, d) = (9, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(5);
+        let mut engine = small_engine(n, d, 1, 5);
+        let mut ch = Loopback::new();
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut ch)
+            .unwrap();
+        let out = StreamingRound::drive(
+            &mut engine,
+            &mut ch,
+            &StreamConfig::new(n).with_quorum(4).close_on_quorum(true),
+        )
+        .unwrap();
+        assert_eq!(out.result.participants, 4, "closed at quorum");
+        assert_eq!(out.dropped.len(), 5, "stragglers recorded as drops");
+    }
+
+    #[test]
+    fn garbage_and_stale_frames_are_counted_not_fatal() {
+        let (n, d) = (5, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(6);
+        let mut engine = small_engine(n, d, 1, 6);
+        let mut ch = Loopback::new();
+        ch.send(vec![1, 2, 3]); // truncated garbage
+        ch.send(encode_frame(&Frame::Contribute {
+            round: 999, // stale round id
+            batch: ClientBatch { client_stream: 0, shares: vec![0; 8] },
+        }));
+        ch.send(encode_frame(&Frame::Hello { round: 0, client: 0 })); // ignored control
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut ch)
+            .unwrap();
+        let out =
+            StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n)).unwrap();
+        assert_eq!(out.result.participants, n);
+        assert_eq!(out.malformed_frames, 1);
+        assert_eq!(out.stale_frames, 1);
+    }
+
+    #[test]
+    fn out_of_ring_shares_rejected_at_ingestion() {
+        let (n, d) = (4, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(3);
+        let mut engine = small_engine(n, d, 1, 3);
+        let modulus = engine.config().plan.modulus;
+        let round = engine.next_round();
+        let mut ch = Loopback::new();
+        // Client 0 sends a hostile batch with a residue outside Z_N.
+        ch.send(encode_frame(&Frame::Contribute {
+            round,
+            batch: ClientBatch { client_stream: 0, shares: vec![modulus; 8] },
+        }));
+        let mut mask = vec![false; n];
+        mask[0] = true; // the honest cohort's client 0 bows out instead
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch).unwrap();
+        let out = StreamingRound::drive(
+            &mut engine,
+            &mut ch,
+            &StreamConfig::new(n).with_quorum(1),
+        )
+        .unwrap();
+        assert_eq!(out.malformed_frames, 1, "hostile batch rejected");
+        assert_eq!(out.result.participants, 3);
+    }
+}
