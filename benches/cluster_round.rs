@@ -1,0 +1,97 @@
+//! CLUSTER: full-round throughput across backend × shard count — what a
+//! round costs when shards leave the process.
+//!
+//!     cargo bench --bench cluster_round
+//!
+//! Backends: `inprocess` (local threads, no wire — the floor),
+//! `loopback` (full wire codec through in-memory channels — the
+//! serialization cost in isolation) and `tcp` (shard servers on
+//! localhost sockets — serialization + syscalls + real scatter/gather).
+//! Every case is gate-checked bit-identical to the in-process `Engine`
+//! before the timer starts. Results land in BENCH_cluster_round.json
+//! (benchkit schema, `shards` axis populated), seeding the cluster bench
+//! trajectory.
+
+use std::time::Duration;
+
+use cloak_agg::cluster::{
+    cluster_layout, ClusterEngine, RemoteShardBackend, ServeOpts, TcpShardHost,
+};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::util::benchkit::Bench;
+
+fn main() {
+    let (n, d, seed) = (96usize, 32usize, 9u64);
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..d).map(|j| ((i * 3 + j * 11) % 100) as f64 / 100.0).collect())
+        .collect();
+    let seeds = DerivedClientSeeds::new(seed);
+
+    let mut b = Bench::new("cluster_round").with_window(
+        Duration::from_millis(50),
+        Duration::from_millis(250),
+        5,
+    );
+
+    for backend_name in ["inprocess", "loopback", "tcp"] {
+        for s in [1usize, 2, 4] {
+            let cfg = EngineConfig::new(plan.clone(), d).with_shards(s);
+
+            // Gate: one cluster round must reproduce the in-process engine
+            // bit-exactly before this case's numbers mean anything.
+            let mut reference = Engine::new(cfg.clone(), seed);
+            let want = reference
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("reference round")
+                .estimates;
+
+            let (mut cluster, hosts): (ClusterEngine, Vec<TcpShardHost>) = match backend_name {
+                "inprocess" => (ClusterEngine::in_process(cfg.clone(), seed), Vec::new()),
+                "loopback" => (
+                    ClusterEngine::new(
+                        cfg.clone(),
+                        seed,
+                        Box::new(RemoteShardBackend::loopback(&cfg)),
+                    ),
+                    Vec::new(),
+                ),
+                _ => {
+                    let hosts: Vec<TcpShardHost> = (0..cluster_layout(&cfg).0)
+                        .map(|_| {
+                            TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default())
+                                .expect("bind shard host")
+                        })
+                        .collect();
+                    let addrs: Vec<String> =
+                        hosts.iter().map(|h| h.addr().to_string()).collect();
+                    let backend =
+                        RemoteShardBackend::over_tcp(&cfg, &addrs).expect("tcp backend");
+                    (ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), hosts)
+                }
+            };
+            let gate = cluster
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("gate round");
+            assert_eq!(gate.estimates, want, "backend={backend_name} S={s} diverged");
+
+            let name = format!("round n={n} d={d} backend={backend_name} S={s}");
+            b.run_sharded(&name, (n * d * m) as f64, s, || {
+                cluster
+                    .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                    .expect("cluster round")
+                    .estimates[0]
+            });
+            drop(cluster);
+            for h in hosts {
+                h.shutdown();
+            }
+        }
+    }
+
+    b.report();
+    b.write_json("BENCH_cluster_round.json").expect("write BENCH_cluster_round.json");
+    println!("\nwrote BENCH_cluster_round.json");
+}

@@ -1,0 +1,949 @@
+//! The cluster coordinator — scatter per-shard work, gather
+//! [`ShardOutMsg`]s at a straggler-tolerant barrier, merge bit-identically
+//! with the in-process engine.
+//!
+//! [`RemoteShardBackend`] implements the engine's
+//! [`ShardBackend`](crate::engine::ShardBackend) seam over links that are
+//! either *in-memory* (a [`ShardServer`] behind a pair of unidirectional
+//! [`Channel`]s — `Loopback` for the deterministic baseline, `SimNet` for
+//! fault injection) or *TCP* (a [`TcpChannel`] to a shard server on
+//! another thread, process or host). [`ClusterEngine`] wraps any backend
+//! in the same round API as [`Engine`](crate::engine::Engine).
+//!
+//! # The barrier
+//!
+//! One round is two phases: *scatter* (handshake any link that needs it,
+//! send every shard its work frame) and *gather* (collect each shard's
+//! `ShardOut`). A shard that produces nothing within
+//! [`ClusterTuning::straggler_timeout_s`] is retried with the *same* work
+//! frame: a link that is actually down (dead socket, refused connect) is
+//! rebuilt first — over TCP that reconnects and re-handshakes against the
+//! freshly restarted server — while a merely *slow* shard keeps its
+//! connection and its in-progress execution, the resend queueing behind
+//! it. Work units carry every seed they need, so re-executions are
+//! bit-identical and duplicates harmless (the gather keeps the first
+//! matching reply and skips stale ones). Only a shard that stays silent
+//! through [`ClusterTuning::max_retries`] resends fails the round
+//! ([`ShardBackendError::ShardLost`]).
+
+use std::time::{Duration, Instant};
+
+use crate::engine::{
+    validate_pools, ClientSeeds, EngineConfig, InProcessBackend, RoundInput, RoundResult,
+    ShardBackend, ShardBackendError, ShardRoundWork, SHUFFLE_SEED_TAG,
+};
+use crate::metrics::Registry as MetricsRegistry;
+use crate::rng::derive_seed;
+use crate::transport::channel::{Channel, Loopback};
+use crate::transport::wire::{
+    decode_frame, encode_frame, Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg, ShardWorkMsg,
+};
+use crate::transport::{CostModel, Envelope, TrafficStats};
+
+use super::cluster_layout;
+use super::shard_server::{config_fingerprint, ShardServer};
+use super::tcp::TcpChannel;
+
+/// Barrier tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterTuning {
+    /// Wall-clock budget for one shard's reply before the link is reset
+    /// and the work resent. (In-memory links are exhausted the moment they
+    /// drain, so simulated rounds never actually wait this long.)
+    pub straggler_timeout_s: f64,
+    /// Resends after the first attempt before a shard is declared lost.
+    pub max_retries: usize,
+    /// TCP read poll tick — how long one receive call blocks.
+    pub poll_s: f64,
+}
+
+impl Default for ClusterTuning {
+    fn default() -> Self {
+        ClusterTuning { straggler_timeout_s: 5.0, max_retries: 2, poll_s: 0.02 }
+    }
+}
+
+enum LinkKind {
+    /// An in-memory shard: the server is stepped inline after each
+    /// transmit, so frames still round-trip the full wire codec and
+    /// whatever fault injector the channels carry.
+    Sim { down: Box<dyn Channel>, up: Box<dyn Channel>, server: ShardServer },
+    /// A live socket (lazily connected; `None` between a detected death
+    /// and the next reconnect). The connector takes the read-poll tick so
+    /// [`ClusterTuning::poll_s`] applies even when set after construction.
+    Tcp {
+        chan: Option<TcpChannel>,
+        connect: Box<dyn FnMut(Duration) -> std::io::Result<TcpChannel>>,
+    },
+}
+
+struct ShardLink {
+    shard: u32,
+    lo: u32,
+    hi: u32,
+    /// Handshake completed on the current connection/server.
+    ready: bool,
+    kind: LinkKind,
+}
+
+/// [`ShardBackend`] over real links: wire frames, faults, stragglers,
+/// retry — the multi-host half of the cluster.
+pub struct RemoteShardBackend {
+    links: Vec<ShardLink>,
+    tuning: ClusterTuning,
+    cost: CostModel,
+    traffic: TrafficStats,
+    fingerprint: u32,
+    retries: u64,
+    label: &'static str,
+}
+
+impl RemoteShardBackend {
+    fn assemble(cfg: &EngineConfig, kinds: Vec<LinkKind>, label: &'static str) -> Self {
+        let (_, ranges) = cluster_layout(cfg);
+        debug_assert_eq!(ranges.len(), kinds.len());
+        let links = ranges
+            .iter()
+            .zip(kinds)
+            .enumerate()
+            .map(|(s, (&(lo, hi), kind))| ShardLink {
+                shard: s as u32,
+                lo: lo as u32,
+                hi: hi as u32,
+                ready: false,
+                kind,
+            })
+            .collect();
+        RemoteShardBackend {
+            links,
+            tuning: ClusterTuning::default(),
+            cost: CostModel::default(),
+            traffic: TrafficStats::default(),
+            fingerprint: config_fingerprint(cfg),
+            retries: 0,
+            label,
+        }
+    }
+
+    /// In-memory cluster: one [`ShardServer`] per shard behind a
+    /// caller-supplied channel pair `(coordinator→shard, shard→coordinator)`.
+    pub fn over_channels(
+        cfg: &EngineConfig,
+        make: impl FnMut(usize) -> (Box<dyn Channel>, Box<dyn Channel>),
+    ) -> Self {
+        let servers =
+            (0..cluster_layout(cfg).0).map(|_| ShardServer::new(cfg.clone())).collect();
+        Self::over_channels_with_servers(cfg, servers, make).expect("server count matches layout")
+    }
+
+    /// Like [`RemoteShardBackend::over_channels`] but with caller-built
+    /// servers — tests use this to model mis-deployed shards running a
+    /// different protocol config.
+    pub fn over_channels_with_servers(
+        cfg: &EngineConfig,
+        servers: Vec<ShardServer>,
+        mut make: impl FnMut(usize) -> (Box<dyn Channel>, Box<dyn Channel>),
+    ) -> Result<Self, ShardBackendError> {
+        let (s_eff, _) = cluster_layout(cfg);
+        if servers.len() != s_eff {
+            return Err(ShardBackendError::Io(format!(
+                "need {s_eff} shard servers, got {}",
+                servers.len()
+            )));
+        }
+        let kinds = servers
+            .into_iter()
+            .enumerate()
+            .map(|(s, server)| {
+                let (down, up) = make(s);
+                LinkKind::Sim { down, up, server }
+            })
+            .collect();
+        Ok(Self::assemble(cfg, kinds, "channels"))
+    }
+
+    /// The zero-fault in-memory baseline.
+    pub fn loopback(cfg: &EngineConfig) -> Self {
+        let mut backend = Self::over_channels(cfg, |_| {
+            (Box::new(Loopback::new()) as Box<dyn Channel>, Box::new(Loopback::new()) as _)
+        });
+        backend.label = "loopback";
+        backend
+    }
+
+    /// TCP cluster: one shard-server address per shard (shard `s` serves
+    /// the `s`-th instance range of [`cluster_layout`]). Connections are
+    /// lazy — established (and re-established after a death) on demand.
+    pub fn over_tcp(cfg: &EngineConfig, addrs: &[String]) -> Result<Self, ShardBackendError> {
+        let (s_eff, _) = cluster_layout(cfg);
+        if addrs.len() != s_eff {
+            return Err(ShardBackendError::Io(format!(
+                "need {s_eff} shard addresses, got {}",
+                addrs.len()
+            )));
+        }
+        let kinds = addrs
+            .iter()
+            .map(|addr| {
+                let addr = addr.clone();
+                let connect: Box<dyn FnMut(Duration) -> std::io::Result<TcpChannel>> =
+                    Box::new(move |poll| TcpChannel::connect(&addr, poll));
+                LinkKind::Tcp { chan: None, connect }
+            })
+            .collect();
+        Ok(Self::assemble(cfg, kinds, "tcp"))
+    }
+
+    pub fn with_tuning(mut self, tuning: ClusterTuning) -> Self {
+        self.tuning = tuning;
+        self
+    }
+
+    fn timeout(&self) -> Duration {
+        Duration::from_secs_f64(self.tuning.straggler_timeout_s.max(1e-3))
+    }
+
+    /// True when link `i` has no usable connection (TCP dead or never
+    /// connected). A link that is merely *slow* is NOT down: resetting it
+    /// would kill the shard's in-progress execution, turning a straggler
+    /// into a livelock — instead the retry resends on the live connection
+    /// (the server processes frames in order, duplicate replies are
+    /// skipped at the gather), giving the original execution another full
+    /// timeout window to finish.
+    fn link_is_down(&self, i: usize) -> bool {
+        match &self.links[i].kind {
+            LinkKind::Sim { .. } => false,
+            LinkKind::Tcp { chan, .. } => chan.as_ref().map(|c| c.is_dead()).unwrap_or(true),
+        }
+    }
+
+    /// Drop whatever connection/handshake state a failed attempt left.
+    /// In-memory servers keep their assignment (the "process" is alive,
+    /// only frames were lost); a TCP link reconnects and re-handshakes,
+    /// because the far side may be a freshly restarted server.
+    fn reset_link(&mut self, i: usize) {
+        let link = &mut self.links[i];
+        let is_tcp = matches!(link.kind, LinkKind::Tcp { .. });
+        if let LinkKind::Tcp { chan, .. } = &mut link.kind {
+            *chan = None;
+        }
+        if is_tcp {
+            link.ready = false;
+        }
+    }
+
+    /// Send one already-encoded frame down link `i`, recording its bytes
+    /// (only frames actually handed to a link are charged — a failed
+    /// connect moves nothing, and `bytes_per_user` must not say it did).
+    fn transmit(&mut self, i: usize, frame: Vec<u8>) -> Result<(), ShardBackendError> {
+        let wire_len = frame.len();
+        let poll = Duration::from_secs_f64(self.tuning.poll_s.max(1e-3));
+        match &mut self.links[i].kind {
+            LinkKind::Sim { down, up, server } => {
+                self.traffic.record_frame(wire_len, &self.cost);
+                down.send(frame);
+                // Step the in-memory server: serve whatever survived the
+                // fault injector, queueing replies on the up channel.
+                while let Some((_t, bytes)) = down.recv() {
+                    let f = match decode_frame(&bytes) {
+                        Ok((f, used)) if used == bytes.len() => f,
+                        _ => continue,
+                    };
+                    if let Some(reply) = server.handle(&f) {
+                        up.send(encode_frame(&reply));
+                    }
+                }
+            }
+            LinkKind::Tcp { chan, connect } => {
+                if chan.is_none() {
+                    // A failed connect is not fatal here: the gather's
+                    // timeout turns it into a retry, and only an exhausted
+                    // retry budget fails the round.
+                    if let Ok(c) = connect(poll) {
+                        *chan = Some(c);
+                    }
+                }
+                if let Some(c) = chan {
+                    self.traffic.record_frame(wire_len, &self.cost);
+                    c.send(frame);
+                    if c.is_dead() {
+                        *chan = None;
+                    }
+                }
+            }
+        }
+        // A TCP link without a live connection cannot have a valid
+        // handshake either: the next connection reaches a FRESH
+        // ShardServer with no assignment, so force a re-handshake instead
+        // of letting un-assigned work be silently rejected into a full
+        // straggler timeout.
+        if let LinkKind::Tcp { chan: None, .. } = &self.links[i].kind {
+            self.links[i].ready = false;
+        }
+        Ok(())
+    }
+
+    /// Next decodable frame from link `i`, or `None` once the link is
+    /// exhausted (in-memory: drained; TCP: dead peer or `deadline`).
+    fn next_frame(
+        &mut self,
+        i: usize,
+        deadline: Instant,
+    ) -> Result<Option<Frame>, ShardBackendError> {
+        loop {
+            // Checked every iteration, not just on empty reads: a peer
+            // streaming decodable-but-useless frames (garbage that fails
+            // the checksum, replays from old rounds) must still hit the
+            // straggler timeout instead of pinning the barrier.
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            let got = match &mut self.links[i].kind {
+                LinkKind::Sim { up, .. } => up.recv(),
+                LinkKind::Tcp { chan, .. } => chan.as_mut().and_then(|c| c.recv()),
+            };
+            match got {
+                Some((_t, bytes)) => {
+                    self.traffic.record_frame(bytes.len(), &self.cost);
+                    match decode_frame(&bytes) {
+                        Ok((f, used)) if used == bytes.len() => return Ok(Some(f)),
+                        // Corrupt frame: skip it; the retry path owns
+                        // recovery, the checksum already screened payloads.
+                        _ => continue,
+                    }
+                }
+                None => {
+                    let exhausted = match &self.links[i].kind {
+                        LinkKind::Sim { .. } => true,
+                        LinkKind::Tcp { chan, .. } => {
+                            chan.as_ref().map(|c| c.is_dead()).unwrap_or(true)
+                        }
+                    };
+                    if exhausted || Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A TCP attempt that failed *faster* than the straggler budget
+    /// (connect refused while the host restarts, dead socket) sleeps out
+    /// the remainder: the retry budget promises `max_retries ×
+    /// straggler_timeout_s` of wall-clock tolerance, not a spin count.
+    /// In-memory links run on virtual time and fail deterministically, so
+    /// pacing them would only slow tests.
+    fn pace_retry(&self, i: usize, attempt_start: Instant) {
+        if matches!(self.links[i].kind, LinkKind::Tcp { .. }) {
+            let budget = self.timeout();
+            let spent = attempt_start.elapsed();
+            if spent < budget {
+                std::thread::sleep(budget - spent);
+            }
+        }
+    }
+
+    /// Handshake link `i` if its current connection hasn't been yet.
+    fn ensure_ready(&mut self, i: usize) -> Result<(), ShardBackendError> {
+        if self.links[i].ready {
+            return Ok(());
+        }
+        let (shard, lo, hi) = (self.links[i].shard, self.links[i].lo, self.links[i].hi);
+        let frame = encode_frame(&Frame::ShardAssign(ShardAssignMsg {
+            shard,
+            lo,
+            hi,
+            config_fnv: self.fingerprint,
+        }));
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            let attempt_start = Instant::now();
+            self.transmit(i, frame.clone())?;
+            let deadline = Instant::now() + self.timeout();
+            let reply = loop {
+                match self.next_frame(i, deadline)? {
+                    Some(Frame::ShardReady(r)) => break Some(r),
+                    Some(_) => continue, // stale frames from a prior round
+                    None => break None,
+                }
+            };
+            match reply {
+                Some(r) => {
+                    if r.config_fnv != self.fingerprint {
+                        return Err(ShardBackendError::ConfigMismatch {
+                            shard,
+                            want: self.fingerprint,
+                            got: r.config_fnv,
+                        });
+                    }
+                    self.links[i].ready = true;
+                    return Ok(());
+                }
+                None => {
+                    if attempts > self.tuning.max_retries {
+                        return Err(ShardBackendError::ShardLost { shard, attempts });
+                    }
+                    self.pace_retry(i, attempt_start);
+                    self.retries += 1;
+                    if self.link_is_down(i) {
+                        self.reset_link(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wait for link `i`'s `ShardOut` for `round`, skipping duplicates and
+    /// stale frames. `None` = straggler (nothing within the timeout).
+    fn gather(&mut self, i: usize, round: u64) -> Result<Option<ShardOutMsg>, ShardBackendError> {
+        let shard = self.links[i].shard;
+        let span = (self.links[i].hi - self.links[i].lo) as usize;
+        let deadline = Instant::now() + self.timeout();
+        loop {
+            match self.next_frame(i, deadline)? {
+                Some(Frame::ShardOut(msg)) if msg.round == round && msg.shard == shard => {
+                    if msg.estimates.len() != span {
+                        return Err(ShardBackendError::Merge {
+                            shard,
+                            detail: format!(
+                                "{} estimates for an instance span of {span}",
+                                msg.estimates.len()
+                            ),
+                        });
+                    }
+                    return Ok(Some(msg));
+                }
+                Some(_) => continue,
+                None => return Ok(None),
+            }
+        }
+    }
+}
+
+impl ShardBackend for RemoteShardBackend {
+    fn run_shards(
+        &mut self,
+        work: Vec<ShardRoundWork>,
+    ) -> Result<Vec<ShardOutMsg>, ShardBackendError> {
+        if work.len() != self.links.len() {
+            return Err(ShardBackendError::Merge {
+                shard: 0,
+                detail: format!("{} work units for {} links", work.len(), self.links.len()),
+            });
+        }
+        for (i, w) in work.iter().enumerate() {
+            let link = &self.links[i];
+            if w.shard() != link.shard || w.lo() != link.lo || w.lo() + w.span() != link.hi {
+                return Err(ShardBackendError::Merge {
+                    shard: link.shard,
+                    detail: format!(
+                        "work (shard {}, [{}, {})) does not match link (shard {}, [{}, {}))",
+                        w.shard(),
+                        w.lo(),
+                        w.lo() + w.span(),
+                        link.shard,
+                        link.lo,
+                        link.hi
+                    ),
+                });
+            }
+        }
+        let round = work.first().map(|w| w.round()).unwrap_or(0);
+        // Serialize by moving the work's payload vectors into the frames —
+        // the only lasting copy is the encoded bytes themselves (recloned
+        // per transmit so the retry path can resend verbatim).
+        let frames: Vec<Vec<u8>> =
+            work.into_iter().map(|w| encode_frame(&w.into_frame())).collect();
+
+        // Scatter: every shard gets its work before we wait on anyone, so
+        // remote shards compute concurrently.
+        for i in 0..self.links.len() {
+            self.ensure_ready(i)?;
+            self.transmit(i, frames[i].clone())?;
+        }
+
+        // Gather with per-shard retry.
+        let mut outs = Vec::with_capacity(frames.len());
+        for i in 0..self.links.len() {
+            let mut attempts = 1usize;
+            let mut attempt_start = Instant::now();
+            let msg = loop {
+                if let Some(msg) = self.gather(i, round)? {
+                    break msg;
+                }
+                if attempts > self.tuning.max_retries {
+                    return Err(ShardBackendError::ShardLost {
+                        shard: self.links[i].shard,
+                        attempts,
+                    });
+                }
+                self.pace_retry(i, attempt_start);
+                attempts += 1;
+                attempt_start = Instant::now();
+                self.retries += 1;
+                // A merely-slow shard keeps its connection (and its
+                // in-progress execution); only a down link is rebuilt.
+                if self.link_is_down(i) {
+                    self.reset_link(i);
+                    self.ensure_ready(i)?;
+                }
+                self.transmit(i, frames[i].clone())?;
+            };
+            outs.push(msg);
+        }
+        Ok(outs)
+    }
+
+    fn take_traffic(&mut self) -> TrafficStats {
+        std::mem::take(&mut self.traffic)
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+}
+
+/// The multi-host engine: the same round API as
+/// [`Engine`](crate::engine::Engine), with the per-shard work executed by
+/// a pluggable [`ShardBackend`] and merged at the barrier. At the same
+/// `(seed, config, inputs)` every backend — in-process, in-memory
+/// channels, TCP — produces bit-identical estimates, because all round
+/// randomness derives from seeds carried in the work units.
+pub struct ClusterEngine {
+    cfg: EngineConfig,
+    ranges: Vec<(usize, usize)>,
+    backend: Box<dyn ShardBackend>,
+    rounds_run: u64,
+    shuffle_seed: u64,
+    metrics: MetricsRegistry,
+    last_retries: u64,
+}
+
+impl ClusterEngine {
+    pub fn new(cfg: EngineConfig, seed: u64, backend: Box<dyn ShardBackend>) -> Self {
+        assert!(cfg.instances >= 1, "cluster engine needs at least one instance");
+        let (_, ranges) = cluster_layout(&cfg);
+        ClusterEngine {
+            ranges,
+            backend,
+            rounds_run: 0,
+            shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
+            metrics: MetricsRegistry::new(),
+            last_retries: 0,
+            cfg,
+        }
+    }
+
+    /// The no-wire baseline: same barrier, local threads.
+    pub fn in_process(cfg: EngineConfig, seed: u64) -> Self {
+        let backend = Box::new(InProcessBackend::new(&cfg));
+        Self::new(cfg, seed, backend)
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Resolved shard count (= number of links/work units per round).
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn rounds_run(&self) -> u64 {
+        self.rounds_run
+    }
+
+    /// The id the next round will run under (ids advance only on success;
+    /// a failed barrier leaves the round id unconsumed for the re-run).
+    pub fn next_round(&self) -> u64 {
+        self.rounds_run
+    }
+
+    /// Work resends the backend has performed so far.
+    pub fn shard_retries(&self) -> u64 {
+        self.backend.retries()
+    }
+
+    pub fn backend_label(&self) -> &'static str {
+        self.backend.label()
+    }
+
+    /// Run one full round — the cluster counterpart of
+    /// [`Engine::run_round`](crate::engine::Engine::run_round), scattering
+    /// each shard's instance range (with every seed it needs) and merging
+    /// the gathered estimates in instance order.
+    pub fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, ShardBackendError> {
+        let d = self.cfg.instances;
+        let n = inputs.clients();
+        inputs.validate(self.cfg.plan.n, d)?;
+        let m = self.cfg.plan.num_messages;
+        let round = self.rounds_run;
+        let t0 = Instant::now();
+        let round_seed = derive_seed(self.shuffle_seed, round);
+        let client_round_seeds: Vec<u64> =
+            (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), round)).collect();
+        let work: Vec<ShardRoundWork> = self
+            .ranges
+            .iter()
+            .enumerate()
+            .map(|(s, &(lo, hi))| {
+                let mut values = Vec::with_capacity((hi - lo) * n);
+                for j in lo..hi {
+                    for i in 0..n {
+                        values.push(inputs.get(i, j));
+                    }
+                }
+                ShardRoundWork::Encode(ShardWorkMsg {
+                    round,
+                    shard: s as u32,
+                    lo: lo as u32,
+                    span: (hi - lo) as u32,
+                    shard_seed: derive_seed(round_seed, s as u64),
+                    client_round_seeds: client_round_seeds.clone(),
+                    values,
+                })
+            })
+            .collect();
+
+        let outs = self.backend.run_shards(work)?;
+        let estimates = self.merge(round, outs)?;
+        self.rounds_run += 1;
+
+        // Client uplink accounting identical to the in-process engine,
+        // plus whatever the backend moved coordinator↔shard.
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
+        let mut traffic = TrafficStats::default();
+        for _ in 0..n {
+            traffic.record_batch(d * m, bytes, &cost);
+        }
+        traffic.merge(&self.backend.take_traffic());
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.record_round_metrics(n * d * m, wall, false);
+        Ok(RoundResult { round_id: round, estimates, participants: n, traffic, wall_seconds: wall })
+    }
+
+    /// Streaming entry point — the cluster counterpart of
+    /// [`Engine::run_round_streaming`](crate::engine::Engine::run_round_streaming):
+    /// per-instance pools of already-cloaked shares are scattered by shard
+    /// range; shards shuffle and analyze with Algorithm 2 renormalized
+    /// over `participants`. Unlike the in-process engine (which shuffles
+    /// the caller's pools in place), this borrows the pools read-only —
+    /// each shard permutes its own copy behind the privacy boundary — so
+    /// the signature says so.
+    pub fn run_round_streaming(
+        &mut self,
+        pools: &[Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, ShardBackendError> {
+        let d = self.cfg.instances;
+        let m = self.cfg.plan.num_messages;
+        // Same screen Engine::run_round_streaming applies — and the reason
+        // hostile pools fail with a typed error here instead of a remote
+        // shard silently rejecting the work and the barrier timing out.
+        validate_pools(&self.cfg.plan, d, pools, participants)?;
+        let round = self.rounds_run;
+        let t0 = Instant::now();
+        let round_seed = derive_seed(self.shuffle_seed, round);
+        let work: Vec<ShardRoundWork> = self
+            .ranges
+            .iter()
+            .enumerate()
+            .map(|(s, &(lo, hi))| {
+                ShardRoundWork::Pool(ShardPoolMsg {
+                    round,
+                    shard: s as u32,
+                    lo: lo as u32,
+                    span: (hi - lo) as u32,
+                    participants: participants as u32,
+                    round_seed,
+                    pool: pools[lo..hi].concat(),
+                })
+            })
+            .collect();
+
+        let outs = self.backend.run_shards(work)?;
+        let estimates = self.merge(round, outs)?;
+        self.rounds_run += 1;
+
+        let cost = CostModel::default();
+        let bytes = Envelope::wire_bytes(self.cfg.plan.message_bits());
+        let mut traffic = TrafficStats::default();
+        for _ in 0..participants {
+            traffic.record_batch(d * m, bytes, &cost);
+        }
+        traffic.merge(&self.backend.take_traffic());
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.record_round_metrics(participants * d * m, wall, true);
+        Ok(RoundResult {
+            round_id: round,
+            estimates,
+            participants,
+            traffic,
+            wall_seconds: wall,
+        })
+    }
+
+    /// Barrier merge: every shard present exactly once, for this round,
+    /// with the right estimate span, concatenated in instance order.
+    fn merge(&self, round: u64, outs: Vec<ShardOutMsg>) -> Result<Vec<f64>, ShardBackendError> {
+        let mut sorted = outs;
+        sorted.sort_by_key(|o| o.shard);
+        if sorted.len() != self.ranges.len() {
+            return Err(ShardBackendError::Merge {
+                shard: 0,
+                detail: format!("{} shard outputs for {} shards", sorted.len(), self.ranges.len()),
+            });
+        }
+        let mut estimates = Vec::with_capacity(self.cfg.instances);
+        for (s, o) in sorted.iter().enumerate() {
+            let (lo, hi) = self.ranges[s];
+            if o.shard != s as u32 || o.round != round || o.estimates.len() != hi - lo {
+                return Err(ShardBackendError::Merge {
+                    shard: o.shard,
+                    detail: format!(
+                        "output (shard {}, round {}, {} estimates) does not fit \
+                         slot {s} ([{lo}, {hi}), round {round})",
+                        o.shard,
+                        o.round,
+                        o.estimates.len()
+                    ),
+                });
+            }
+            estimates.extend_from_slice(&o.estimates);
+            self.metrics.histogram("cluster.shard_seconds").record_ns(o.wall_ns);
+        }
+        Ok(estimates)
+    }
+
+    fn record_round_metrics(&mut self, messages: usize, wall: f64, streaming: bool) {
+        self.metrics.counter("cluster.rounds").inc();
+        if streaming {
+            self.metrics.counter("cluster.streaming_rounds").inc();
+        }
+        self.metrics.counter("cluster.messages").add(messages as u64);
+        self.metrics.histogram("cluster.round_seconds").record_ns((wall * 1e9) as u64);
+        let retries = self.backend.retries();
+        self.metrics.counter("cluster.shard_retries").add(retries - self.last_retries);
+        self.last_retries = retries;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{DerivedClientSeeds, Engine, EngineError};
+    use crate::params::ProtocolPlan;
+    use crate::transport::channel::{SimNet, SimNetConfig};
+
+    fn small_plan(n: usize) -> ProtocolPlan {
+        ProtocolPlan::exact_secure_agg(n, 100, 8)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    /// SimNet that deterministically loses exactly the first send — the
+    /// "work frame lost once" fault for retry tests.
+    fn drop_first_net(seed: u64) -> SimNet {
+        SimNet::new(SimNetConfig::new(seed).with_drop_first(1))
+    }
+
+    #[test]
+    fn loopback_cluster_matches_engine_bit_identically() {
+        let (n, d, seed) = (14usize, 6usize, 5u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        for shards in [1usize, 4] {
+            let cfg = EngineConfig::new(small_plan(n), d).with_shards(shards);
+            let mut engine = Engine::new(cfg.clone(), seed);
+            let mut cluster = ClusterEngine::new(
+                cfg.clone(),
+                seed,
+                Box::new(RemoteShardBackend::loopback(&cfg)),
+            );
+            // two rounds: round-id advance must stay in lockstep too
+            for _ in 0..2 {
+                let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+                let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+                assert_eq!(got.estimates, want.estimates, "S={shards}");
+                assert_eq!(got.participants, n);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_traffic_includes_coordinator_shard_frames() {
+        let (n, d, seed) = (8usize, 4usize, 3u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let engine_traffic =
+            engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap().traffic;
+        let mut cluster =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let cluster_traffic =
+            cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap().traffic;
+        assert!(
+            cluster_traffic.bytes > engine_traffic.bytes,
+            "shard frames must add to the byte count"
+        );
+        // 2 shards × (assign + ready + work + out) = 8 extra messages
+        assert_eq!(cluster_traffic.messages, engine_traffic.messages + 8);
+        assert!(cluster_traffic.bytes_per_user(n) > engine_traffic.bytes_per_user(n));
+    }
+
+    #[test]
+    fn lost_work_frame_is_retried_and_recovers() {
+        let (n, d, seed) = (10usize, 4usize, 11u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap().estimates;
+        // Shard 1 loses its first inbound frame (the assign); everything
+        // after goes through.
+        let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+            let down: Box<dyn Channel> =
+                if s == 1 { Box::new(drop_first_net(1)) } else { Box::new(Loopback::new()) };
+            (down, Box::new(Loopback::new()) as _)
+        });
+        let mut cluster = ClusterEngine::new(cfg, seed, Box::new(backend));
+        let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(got.estimates, want, "retry must converge to the same round");
+        assert!(cluster.shard_retries() >= 1, "the drop must have cost a resend");
+        let metric = cluster.metrics().counter("cluster.shard_retries").get();
+        assert_eq!(metric, cluster.shard_retries());
+    }
+
+    #[test]
+    fn silent_shard_exhausts_retries_and_is_lost() {
+        let (n, d, seed) = (8usize, 4usize, 7u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        // Shard 1's inbound link is half-open from the very first frame.
+        let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+            let down: Box<dyn Channel> = if s == 1 {
+                Box::new(SimNet::new(SimNetConfig::new(1).with_silent_after(0)))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+        let mut cluster = ClusterEngine::new(cfg, seed, Box::new(backend));
+        let err = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap_err();
+        assert_eq!(err, ShardBackendError::ShardLost { shard: 1, attempts: 2 });
+        assert_eq!(cluster.next_round(), 0, "a failed barrier must not consume the round id");
+    }
+
+    #[test]
+    fn config_mismatch_is_surfaced_not_timed_out() {
+        let n = 8;
+        let d = 4;
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        // Shard 1 was deployed with a different plan (scale 200, not 100).
+        let rogue = EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 200, 8), d);
+        let servers = vec![ShardServer::new(cfg.clone()), ShardServer::new(rogue)];
+        let backend = RemoteShardBackend::over_channels_with_servers(&cfg, servers, |_| {
+            (Box::new(Loopback::new()) as Box<dyn Channel>, Box::new(Loopback::new()) as _)
+        })
+        .unwrap();
+        let mut cluster = ClusterEngine::new(cfg, 1, Box::new(backend));
+        let inputs = inputs_for(n, d);
+        let err = cluster
+            .run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(1))
+            .unwrap_err();
+        assert!(
+            matches!(err, ShardBackendError::ConfigMismatch { shard: 1, .. }),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn streaming_pools_match_engine_streaming() {
+        let (n, d, seed) = (12usize, 5usize, 9u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let who: Vec<usize> = (0..n).filter(|i| i % 4 != 2).collect();
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let m = cfg.plan.num_messages;
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = engine
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let mut cluster =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let got = cluster.run_round_streaming(&pools, who.len()).unwrap();
+        assert_eq!(got.estimates, want.estimates, "streamed cluster round must be bit-identical");
+        assert_eq!(got.participants, who.len());
+        assert_eq!(cluster.metrics().counter("cluster.streaming_rounds").get(), 1);
+    }
+
+    #[test]
+    fn streaming_rejects_malformed_pools_before_scatter() {
+        let n = 6;
+        let cfg = EngineConfig::new(small_plan(n), 2).with_shards(1);
+        let m = cfg.plan.num_messages;
+        let modulus = cfg.plan.modulus;
+        let mut cluster =
+            ClusterEngine::new(cfg.clone(), 1, Box::new(RemoteShardBackend::loopback(&cfg)));
+        assert_eq!(
+            cluster.run_round_streaming(&vec![Vec::new(); 3], 1).unwrap_err(),
+            ShardBackendError::Engine(EngineError::WrongInstanceCount { expected: 2, got: 3 })
+        );
+        assert_eq!(
+            cluster.run_round_streaming(&vec![Vec::new(); 2], 0).unwrap_err(),
+            ShardBackendError::Engine(EngineError::NoParticipants)
+        );
+        let mut pools = vec![vec![0; 2 * m], vec![0; 2 * m]];
+        pools[1][1] = modulus;
+        assert!(matches!(
+            cluster.run_round_streaming(&pools, 2).unwrap_err(),
+            ShardBackendError::Engine(EngineError::OutOfRing { instance: 1, .. })
+        ));
+        assert_eq!(cluster.next_round(), 0);
+    }
+
+    #[test]
+    fn in_process_cluster_matches_engine() {
+        let (n, d, seed) = (10usize, 7usize, 23u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        for shards in [1usize, 3] {
+            let cfg = EngineConfig::new(small_plan(n), d).with_shards(shards);
+            let mut engine = Engine::new(cfg.clone(), seed);
+            let mut cluster = ClusterEngine::in_process(cfg, seed);
+            let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            assert_eq!(got.estimates, want.estimates, "S={shards}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Multi-host shard execution — engine shards as independent servers over
+//! real sockets, gathered at the coordinator barrier.
+//!
+//! PR 1 gave every shard its own seed stream, mixnet and analyzer; PR 2
+//! promoted the shard barrier message to a wire frame
+//! ([`ShardOutMsg`](crate::transport::wire::ShardOutMsg)). This subsystem
+//! puts that frame on a socket: a [`ShardServer`] owns one contiguous
+//! instance range and serves encode→shuffle→analyze for it, driven
+//! entirely by [`wire`](crate::transport::wire) frames over the
+//! [`Channel`](crate::transport::channel::Channel) trait, and a
+//! [`ClusterEngine`] speaks the same round API as the in-process
+//! [`Engine`](crate::engine::Engine).
+//!
+//! # Architecture
+//!
+//! ```text
+//!  ClusterEngine (same API as Engine: next_round / run_round /
+//!       │         run_round_streaming)
+//!       │ ShardRoundWork per shard (all seeds travel IN the work)
+//!       ▼
+//!  ShardBackend (the engine's scatter/merge seam)
+//!   ├─ InProcessBackend          — local ThreadPool, no wire
+//!   └─ RemoteShardBackend        — wire frames over per-shard links
+//!       │   ShardAssign/ShardReady handshake (config fingerprint)
+//!       │   ShardWork / ShardPool scatter
+//!       │   ShardOut gather, straggler timeout + reset + resend
+//!       ├─ Sim link: ShardServer behind Loopback / SimNet channels
+//!       │            (deterministic tests; loss, dup, half-open faults)
+//!       └─ Tcp link: TcpChannel ──socket── TcpShardHost(ShardServer)
+//!                    reconnect ⇒ fresh server ⇒ re-handshake ⇒ resend
+//! ```
+//!
+//! Work units are *self-contained*: client round seeds and the shuffle
+//! seed chain ride inside the frame, so a shard server keeps no round
+//! state, a restarted server serves a resent frame bit-identically, and
+//! the barrier's retry is safe under duplication (first matching reply
+//! wins, stale ones are skipped). That is also what makes every backend —
+//! in-process, in-memory channels, TCP across processes — produce
+//! bit-identical estimates at the same `(seed, config, inputs)`.
+//!
+//! # Trust model
+//!
+//! **Shard servers sit inside the analyzer boundary.** A shard runs the
+//! analyzer half of the protocol for its instance range, so it is trusted
+//! exactly as far as the analyzer/coordinator it extends — no more, no
+//! less. The shuffled-model guarantee is **unchanged** by distribution:
+//!
+//! * On the streaming path a shard receives only *cloaked* shares
+//!   (`ShardPool`), already stripped of attribution by ingestion, and
+//!   mixnet-shuffles every instance pool before its analyzer reads it —
+//!   the same pool-then-shuffle-then-analyze order the in-process engine
+//!   enforces.
+//! * On the full-round simulation path (`ShardWork`) the shard simulates
+//!   its range's clients locally, exactly as the in-process engine's
+//!   shard workers do; values in that frame are simulation inputs, not a
+//!   protocol message an analyzer could observe.
+//! * What distribution *adds* is links. Coordinator↔shard frames carry
+//!   shuffled pools and per-range estimates — inside-boundary data — so
+//!   in a real deployment these hops need link encryption (mTLS between
+//!   coordinator and shard hosts), exactly like the client→shuffler hop
+//!   discussed in [`wire`](crate::transport::wire)'s privacy notes.
+//!   Checksums here detect corruption, not tampering.
+//!
+//! # Failure model
+//!
+//! The barrier tolerates what Bonawitz et al. call the server-side
+//! realities of scale: stragglers (timeout + resend), crashed-and-
+//! restarted shards (reconnect gets a fresh [`ShardServer`], the
+//! handshake re-establishes the assignment, the resent work replays
+//! bit-identically), half-open links ([`SimNetConfig::silent_after`]
+//! models a peer that goes silent mid-round), and config drift between
+//! coordinator and shard fleet (fingerprint mismatch fails fast instead
+//! of producing wrong sums). A shard silent past the retry budget fails
+//! the round with [`ShardBackendError::ShardLost`] — the round id is not
+//! consumed, so the caller can re-run against a repaired fleet.
+//!
+//! [`SimNetConfig::silent_after`]: crate::transport::channel::SimNetConfig::silent_after
+//! [`ShardBackendError::ShardLost`]: crate::engine::ShardBackendError::ShardLost
+
+pub mod coordinator;
+pub mod shard_server;
+pub mod tcp;
+
+pub use coordinator::{ClusterEngine, ClusterTuning, RemoteShardBackend};
+pub use shard_server::{config_fingerprint, ShardServer, ShardTelemetry};
+pub use tcp::{ServeOpts, TcpChannel, TcpShardHost};
+
+use crate::engine::EngineConfig;
+
+/// Resolved shard count and contiguous instance ranges for a config — the
+/// same resolution [`Engine`](crate::engine::Engine) applies (`shards ==
+/// 0` means available cores; the effective count is capped at the
+/// instance count). Hosts must be spawned one per returned range.
+pub fn cluster_layout(cfg: &EngineConfig) -> (usize, Vec<(usize, usize)>) {
+    let s_eff = crate::engine::resolve_shards(cfg).min(cfg.instances).max(1);
+    (s_eff, crate::engine::shard_ranges(cfg.instances, s_eff))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ProtocolPlan;
+
+    #[test]
+    fn layout_matches_engine_resolution() {
+        let plan = ProtocolPlan::exact_secure_agg(8, 100, 8);
+        let (s, ranges) = cluster_layout(&EngineConfig::new(plan.clone(), 7).with_shards(3));
+        assert_eq!(s, 3);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, 7);
+        // more shards than instances: capped
+        let (s, _) = cluster_layout(&EngineConfig::new(plan.clone(), 2).with_shards(16));
+        assert_eq!(s, 2);
+        // zero resolves to cores (at least one)
+        let (s, _) = cluster_layout(&EngineConfig::new(plan, 64).with_shards(0));
+        assert!(s >= 1);
+    }
+}

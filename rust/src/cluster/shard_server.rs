@@ -1,0 +1,262 @@
+//! The shard server — one shard's instance range served as a standalone
+//! protocol participant, driven entirely by [`wire`](crate::transport::wire)
+//! frames.
+//!
+//! A `ShardServer` is deliberately *round-stateless*: every seed it needs
+//! (client round seeds, the shuffle-seed chain) arrives inside the work
+//! frame, so a server that crashes and restarts mid-round serves a resent
+//! copy of the same work bit-identically — the coordinator's barrier
+//! (see [`super::coordinator`]) leans on exactly this for its retry path.
+//! The only cross-frame state is the *assignment* (which shard id and
+//! instance range this server owns), established by the
+//! `ShardAssign`/`ShardReady` handshake and re-established from scratch
+//! on every fresh connection.
+
+use crate::engine::{EngineConfig, ShardExecutor};
+use crate::params::NeighborNotion;
+use crate::transport::wire::{fnv1a32, Frame, ShardAssignMsg, ShardReadyMsg};
+
+/// Fingerprint of everything two cluster members must agree on before
+/// exchanging work: the protocol plan's constants, the instance count and
+/// the mixnet depth. Seeds are deliberately excluded — they travel in the
+/// work frames, not in configuration.
+pub fn config_fingerprint(cfg: &EngineConfig) -> u32 {
+    let p = &cfg.plan;
+    let notion = match p.notion {
+        NeighborNotion::SingleUser => 1u64,
+        NeighborNotion::SumPreserving => 2u64,
+    };
+    let fields = [
+        p.modulus,
+        p.scale,
+        p.num_messages as u64,
+        p.n as u64,
+        p.noise_p.to_bits(),
+        p.noise_q.to_bits(),
+        notion,
+        cfg.instances as u64,
+        cfg.mixnet_hops as u64,
+    ];
+    let mut bytes = Vec::with_capacity(fields.len() * 8);
+    for v in fields {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fnv1a32(&bytes)
+}
+
+/// What the server did with the frames it saw (rejections never produce a
+/// reply — the coordinator's straggler timeout covers a shard that turns
+/// work away, exactly as it covers one that crashed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardTelemetry {
+    /// Handshakes served (including re-handshakes after reconnect).
+    pub assigns: u64,
+    /// Work units executed to a `ShardOut` reply.
+    pub works: u64,
+    /// Work rejected: no/mismatched assignment, or execution error.
+    pub rejected: u64,
+    /// Frames of types this server never answers (client-plane frames).
+    pub ignored: u64,
+}
+
+/// One shard of the engine, behind a frame interface.
+pub struct ShardServer {
+    exec: ShardExecutor,
+    fingerprint: u32,
+    assignment: Option<ShardAssignMsg>,
+    telemetry: ShardTelemetry,
+}
+
+impl ShardServer {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let fingerprint = config_fingerprint(&cfg);
+        ShardServer {
+            exec: ShardExecutor::new(&cfg),
+            fingerprint,
+            assignment: None,
+            telemetry: ShardTelemetry::default(),
+        }
+    }
+
+    pub fn fingerprint(&self) -> u32 {
+        self.fingerprint
+    }
+
+    /// `(shard, lo, hi)` once assigned.
+    pub fn assignment(&self) -> Option<(u32, u32, u32)> {
+        self.assignment.as_ref().map(|a| (a.shard, a.lo, a.hi))
+    }
+
+    pub fn telemetry(&self) -> ShardTelemetry {
+        self.telemetry
+    }
+
+    /// True when `shard`'s work for `[lo, lo + span)` matches the standing
+    /// assignment exactly.
+    fn assigned_to(&self, shard: u32, lo: u32, span: u32) -> bool {
+        matches!(
+            &self.assignment,
+            Some(a) if a.shard == shard && a.lo == lo && a.hi == lo + span
+        )
+    }
+
+    /// Serve one frame. Returns the reply to send back, or `None` for
+    /// frames that get no reply (client-plane frames, rejected work).
+    pub fn handle(&mut self, frame: &Frame) -> Option<Frame> {
+        match frame {
+            Frame::ShardAssign(a) => {
+                self.telemetry.assigns += 1;
+                let bounds_ok = a.lo < a.hi && a.hi as usize <= self.exec.instances();
+                if a.config_fnv == self.fingerprint && bounds_ok {
+                    self.assignment = Some(a.clone());
+                }
+                // Always reply with OUR fingerprint: a mismatch is the
+                // coordinator's error to surface, not silence to time out.
+                Some(Frame::ShardReady(ShardReadyMsg {
+                    shard: a.shard,
+                    config_fnv: self.fingerprint,
+                }))
+            }
+            Frame::ShardWork(w) => {
+                if !self.assigned_to(w.shard, w.lo, w.span) {
+                    self.telemetry.rejected += 1;
+                    return None;
+                }
+                match self.exec.execute_encode(w) {
+                    Ok(out) => {
+                        self.telemetry.works += 1;
+                        Some(Frame::ShardOut(out))
+                    }
+                    Err(_) => {
+                        self.telemetry.rejected += 1;
+                        None
+                    }
+                }
+            }
+            Frame::ShardPool(w) => {
+                if !self.assigned_to(w.shard, w.lo, w.span) {
+                    self.telemetry.rejected += 1;
+                    return None;
+                }
+                match self.exec.execute_pool(w) {
+                    Ok(out) => {
+                        self.telemetry.works += 1;
+                        Some(Frame::ShardOut(out))
+                    }
+                    Err(_) => {
+                        self.telemetry.rejected += 1;
+                        None
+                    }
+                }
+            }
+            // Client-plane and barrier-output frames are not ours to answer.
+            Frame::Hello { .. }
+            | Frame::Contribute { .. }
+            | Frame::Drop { .. }
+            | Frame::Commit { .. }
+            | Frame::ShardOut(_)
+            | Frame::ShardReady(_) => {
+                self.telemetry.ignored += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ProtocolPlan;
+    use crate::transport::wire::ShardWorkMsg;
+
+    fn cfg(n: usize, d: usize) -> EngineConfig {
+        EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d)
+    }
+
+    fn assign(server: &mut ShardServer, shard: u32, lo: u32, hi: u32) -> Frame {
+        let fnv = server.fingerprint();
+        server
+            .handle(&Frame::ShardAssign(ShardAssignMsg { shard, lo, hi, config_fnv: fnv }))
+            .expect("assign replies")
+    }
+
+    #[test]
+    fn handshake_assigns_and_echoes_fingerprint() {
+        let mut s = ShardServer::new(cfg(8, 6));
+        let reply = assign(&mut s, 1, 2, 5);
+        let Frame::ShardReady(r) = reply else { panic!("expected ShardReady") };
+        assert_eq!(r.shard, 1);
+        assert_eq!(r.config_fnv, s.fingerprint());
+        assert_eq!(s.assignment(), Some((1, 2, 5)));
+    }
+
+    #[test]
+    fn mismatched_fingerprint_replies_but_does_not_assign() {
+        let mut s = ShardServer::new(cfg(8, 6));
+        let reply = s
+            .handle(&Frame::ShardAssign(ShardAssignMsg {
+                shard: 0,
+                lo: 0,
+                hi: 6,
+                config_fnv: s.fingerprint() ^ 1,
+            }))
+            .expect("still replies");
+        assert!(matches!(reply, Frame::ShardReady(_)));
+        assert_eq!(s.assignment(), None, "bad fingerprint must not take the assignment");
+    }
+
+    #[test]
+    fn bad_bounds_do_not_assign() {
+        let mut s = ShardServer::new(cfg(8, 6));
+        assign(&mut s, 0, 4, 9); // hi beyond the instance count
+        assert_eq!(s.assignment(), None);
+        assign(&mut s, 0, 3, 3); // empty range
+        assert_eq!(s.assignment(), None);
+    }
+
+    #[test]
+    fn work_before_or_outside_assignment_is_rejected_silently() {
+        let n = 8;
+        let mut s = ShardServer::new(cfg(n, 6));
+        let work = |shard: u32, lo: u32, span: u32| {
+            Frame::ShardWork(ShardWorkMsg {
+                round: 0,
+                shard,
+                lo,
+                span,
+                shard_seed: 7,
+                client_round_seeds: vec![1; n],
+                values: vec![0.5; span as usize * n],
+            })
+        };
+        assert!(s.handle(&work(0, 0, 3)).is_none(), "no assignment yet");
+        assign(&mut s, 0, 0, 3);
+        assert!(s.handle(&work(0, 1, 2)).is_none(), "wrong range");
+        assert!(s.handle(&work(1, 0, 3)).is_none(), "wrong shard id");
+        assert!(s.handle(&work(0, 0, 3)).is_some(), "matching work executes");
+        let t = s.telemetry();
+        assert_eq!(t.rejected, 3);
+        assert_eq!(t.works, 1);
+    }
+
+    #[test]
+    fn distinct_configs_have_distinct_fingerprints() {
+        let a = config_fingerprint(&cfg(8, 6));
+        assert_eq!(a, config_fingerprint(&cfg(8, 6)), "deterministic");
+        assert_ne!(a, config_fingerprint(&cfg(9, 6)), "n differs");
+        assert_ne!(a, config_fingerprint(&cfg(8, 7)), "instances differ");
+        assert_ne!(
+            a,
+            config_fingerprint(&cfg(8, 6).with_mixnet_hops(3)),
+            "mixnet depth differs"
+        );
+    }
+
+    #[test]
+    fn client_plane_frames_are_ignored() {
+        let mut s = ShardServer::new(cfg(4, 2));
+        assert!(s.handle(&Frame::Hello { round: 0, client: 1 }).is_none());
+        assert!(s.handle(&Frame::Commit { round: 0, participants: 4 }).is_none());
+        assert_eq!(s.telemetry().ignored, 2);
+    }
+}

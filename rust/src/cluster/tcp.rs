@@ -1,0 +1,385 @@
+//! Dependency-free TCP transport for the cluster — `std::net` only,
+//! blocking I/O on the existing pool/host threads (the offline image has
+//! no tokio; see `Cargo.toml`).
+//!
+//! The wire codec's frames are already length-prefixed
+//! ([`crate::transport::wire`]), so TCP framing *is* wire framing: a
+//! stream is a concatenation of frames, re-segmented on read. Two pieces:
+//!
+//! * [`TcpChannel`] — a [`Channel`] over one `TcpStream`. `recv` polls
+//!   with a read timeout and reassembles partial reads in an internal
+//!   buffer, so a frame split across TCP segments is never lost to a
+//!   timeout; `None` means "nothing arrived within one poll tick", and a
+//!   dead peer (EOF, reset) flips [`TcpChannel::is_dead`], which the
+//!   coordinator's barrier turns into reconnect + resend.
+//! * [`TcpShardHost`] — the shard-server side: an accept loop that hands
+//!   each connection a **fresh** [`ShardServer`], so a reconnect always
+//!   re-handshakes from clean state (that is what makes kill-and-restart
+//!   equivalent to a process restart in tests — see
+//!   [`ServeOpts::die_after_frames`]).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::EngineConfig;
+use crate::transport::channel::Channel;
+use crate::transport::wire::{decode_frame, encode_frame};
+
+use super::shard_server::ShardServer;
+
+/// Upper bound on one frame's wire length — a header claiming more marks
+/// the stream hostile/corrupt and kills the connection rather than
+/// buffering without bound.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Bound on connect and write syscalls, so a blackholed address or a
+/// wedged peer (zero receive window) surfaces as a dead link the barrier
+/// can retry, instead of blocking the coordinator indefinitely. Only the
+/// read path uses the caller's (much shorter) poll tick.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A [`Channel`] over one blocking `TcpStream`.
+pub struct TcpChannel {
+    stream: TcpStream,
+    t0: Instant,
+    rbuf: Vec<u8>,
+    dead: bool,
+}
+
+impl TcpChannel {
+    /// Wrap a connected stream; `poll` bounds how long one `recv` call
+    /// blocks waiting for bytes (writes are bounded by [`IO_TIMEOUT`]).
+    pub fn new(stream: TcpStream, poll: Duration) -> std::io::Result<Self> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(poll.max(Duration::from_millis(1))))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        Ok(TcpChannel { stream, t0: Instant::now(), rbuf: Vec::new(), dead: false })
+    }
+
+    pub fn connect(addr: &str, poll: Duration) -> std::io::Result<Self> {
+        use std::net::ToSocketAddrs;
+        let sock = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("shard address '{addr}' resolved to nothing"),
+            )
+        })?;
+        Self::new(TcpStream::connect_timeout(&sock, IO_TIMEOUT)?, poll)
+    }
+
+    /// The peer hung up or the socket errored; frames will no longer move.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Length of the complete frame at the front of `rbuf`, if any.
+    fn frame_len(buf: &[u8]) -> Option<usize> {
+        if buf.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        (buf.len() >= 4 + len).then_some(4 + len)
+    }
+}
+
+impl Channel for TcpChannel {
+    fn send(&mut self, frame: Vec<u8>) {
+        if self.dead {
+            return;
+        }
+        if self.stream.write_all(&frame).is_err() {
+            self.dead = true;
+        }
+    }
+
+    fn recv(&mut self) -> Option<(f64, Vec<u8>)> {
+        loop {
+            if self.rbuf.len() >= 4 {
+                // Reject a hostile/corrupt claimed length as soon as the
+                // header is in — before buffering toward it (the length
+                // prefix is outside the frame checksum).
+                let len = u32::from_le_bytes(self.rbuf[..4].try_into().unwrap()) as usize;
+                if len > MAX_FRAME_BYTES {
+                    self.dead = true;
+                    return None;
+                }
+                if self.rbuf.len() >= 4 + len {
+                    let frame: Vec<u8> = self.rbuf.drain(..4 + len).collect();
+                    return Some((self.t0.elapsed().as_secs_f64(), frame));
+                }
+            }
+            if self.dead {
+                return None;
+            }
+            let mut tmp = [0u8; 64 * 1024];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.dead = true;
+                    return None;
+                }
+                Ok(k) => self.rbuf.extend_from_slice(&tmp[..k]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return None;
+                }
+                Err(_) => {
+                    self.dead = true;
+                    return None;
+                }
+            }
+        }
+    }
+
+    fn pending(&self) -> usize {
+        let mut n = 0;
+        let mut rest: &[u8] = &self.rbuf;
+        while let Some(total) = Self::frame_len(rest) {
+            n += 1;
+            rest = &rest[total..];
+        }
+        n
+    }
+}
+
+/// Server-side knobs, mostly for fault-injection tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOpts {
+    /// Kill the FIRST accepted connection after serving this many frames
+    /// (the "shard crashes mid-round" fault); every later connection —
+    /// the restarted shard — serves normally. `None` = healthy.
+    pub die_after_frames: Option<usize>,
+}
+
+/// Read one length-prefixed frame off a blocking stream. `Ok(None)` on
+/// clean EOF at a frame boundary; mid-frame EOF is an error.
+fn read_frame_blocking(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_bytes = [0u8; 4];
+    if let Err(e) = stream.read_exact(&mut len_bytes) {
+        return if e.kind() == std::io::ErrorKind::UnexpectedEof { Ok(None) } else { Err(e) };
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if !(6..=MAX_FRAME_BYTES).contains(&len) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} out of bounds"),
+        ));
+    }
+    let mut frame = vec![0u8; 4 + len];
+    frame[..4].copy_from_slice(&len_bytes);
+    stream.read_exact(&mut frame[4..])?;
+    Ok(Some(frame))
+}
+
+/// Serve one connection until the peer hangs up (or the injected fault
+/// fires). Undecodable frames are skipped — the coordinator's retry plus
+/// checksum layer own corruption, not this loop.
+fn serve_connection(
+    server: &mut ShardServer,
+    mut stream: TcpStream,
+    die_after: Option<usize>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut handled = 0usize;
+    loop {
+        let bytes = match read_frame_blocking(&mut stream)? {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        if let Some(k) = die_after {
+            if handled >= k {
+                // Simulated crash: drop the connection on the floor with
+                // the frame unserved. The restarted server (next accept)
+                // will see a resent copy.
+                return Ok(());
+            }
+        }
+        handled += 1;
+        let frame = match decode_frame(&bytes) {
+            Ok((f, used)) if used == bytes.len() => f,
+            _ => continue,
+        };
+        if let Some(reply) = server.handle(&frame) {
+            stream.write_all(&encode_frame(&reply))?;
+        }
+    }
+}
+
+/// One shard server behind a TCP listener, on a background thread.
+pub struct TcpShardHost {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpShardHost {
+    /// Bind `127.0.0.1:port` (0 = pick an ephemeral port) and serve shard
+    /// connections sequentially: each accepted connection gets a fresh
+    /// [`ShardServer`] built from `cfg`, so reconnects model restarts.
+    pub fn spawn(cfg: EngineConfig, port: u16, opts: ServeOpts) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let mut first = true;
+            loop {
+                let (stream, _) = match listener.accept() {
+                    Ok(x) => x,
+                    Err(_) => break,
+                };
+                if stop_flag.load(Ordering::Acquire) {
+                    break;
+                }
+                let die_after = if first { opts.die_after_frames } else { None };
+                first = false;
+                let mut server = ShardServer::new(cfg.clone());
+                let _ = serve_connection(&mut server, stream, die_after);
+            }
+        });
+        Ok(TcpShardHost { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread. Call only after every
+    /// coordinator link to this host is dropped — a live connection keeps
+    /// the serve loop (and therefore the join) blocked.
+    pub fn shutdown(mut self) {
+        self.stop_and_wake();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_wake(&self) {
+        self.stop.store(true, Ordering::Release);
+        // Wake a blocked accept with a sentinel connection; if the host is
+        // mid-connection the sentinel waits in the backlog and fires when
+        // that connection closes.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for TcpShardHost {
+    fn drop(&mut self) {
+        // Best-effort, non-blocking: signal and detach. Joining here could
+        // deadlock when a coordinator link outlives the host.
+        if self.handle.is_some() {
+            self.stop_and_wake();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::shard_server::config_fingerprint;
+    use crate::params::ProtocolPlan;
+    use crate::transport::wire::{Frame, ShardAssignMsg};
+
+    fn cfg(n: usize, d: usize) -> EngineConfig {
+        EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d)
+    }
+
+    #[test]
+    fn handshake_round_trips_over_a_real_socket() {
+        let c = cfg(6, 4);
+        let fnv = config_fingerprint(&c);
+        let host = TcpShardHost::spawn(c, 0, ServeOpts::default()).unwrap();
+        let mut ch =
+            TcpChannel::connect(&host.addr().to_string(), Duration::from_millis(20)).unwrap();
+        ch.send(encode_frame(&Frame::ShardAssign(ShardAssignMsg {
+            shard: 0,
+            lo: 0,
+            hi: 4,
+            config_fnv: fnv,
+        })));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let reply = loop {
+            if let Some((_, bytes)) = ch.recv() {
+                break decode_frame(&bytes).unwrap().0;
+            }
+            assert!(Instant::now() < deadline, "no handshake reply within 5s");
+        };
+        match reply {
+            Frame::ShardReady(r) => assert_eq!(r.config_fnv, fnv),
+            other => panic!("expected ShardReady, got {other:?}"),
+        }
+        drop(ch);
+        host.shutdown();
+    }
+
+    #[test]
+    fn recv_reassembles_partial_writes() {
+        // A frame written in two halves with a pause must still come out
+        // whole (the internal buffer survives read timeouts).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let frame = encode_frame(&Frame::Hello { round: 7, client: 3 });
+        let frame2 = frame.clone();
+        let writer = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mid = frame2.len() / 2;
+            s.write_all(&frame2[..mid]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            s.write_all(&frame2[mid..]).unwrap();
+        });
+        let mut ch = TcpChannel::connect(&addr.to_string(), Duration::from_millis(10)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let got = loop {
+            if let Some((_, bytes)) = ch.recv() {
+                break bytes;
+            }
+            assert!(Instant::now() < deadline, "frame never reassembled");
+        };
+        assert_eq!(got, frame);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn hostile_length_prefix_kills_the_link_immediately() {
+        // The length prefix sits outside the checksum; a corrupt claimed
+        // length must kill the link as soon as the header arrives, not
+        // after buffering toward ~4 GiB.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(50)); // keep the socket open
+        });
+        let mut ch = TcpChannel::connect(&addr.to_string(), Duration::from_millis(10)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !ch.is_dead() {
+            assert!(ch.recv().is_none());
+            assert!(Instant::now() < deadline, "hostile length never rejected");
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn dead_peer_is_detected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let closer = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // immediate hangup
+        });
+        let mut ch = TcpChannel::connect(&addr.to_string(), Duration::from_millis(10)).unwrap();
+        closer.join().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !ch.is_dead() {
+            assert!(ch.recv().is_none());
+            assert!(Instant::now() < deadline, "EOF never surfaced");
+        }
+    }
+}

@@ -1,0 +1,648 @@
+//! The shard-work / merge seam — one executable description of "one
+//! shard's share of one round", plus the [`ShardBackend`] trait that
+//! decides *where* that work runs.
+//!
+//! [`ShardExecutor`] is the per-shard computation itself, extracted from
+//! [`Engine`](super::Engine)'s dispatch closure: encode + pre-randomize →
+//! mixnet shuffle → analyze for one contiguous instance range. It is a
+//! pure function of the work unit (seeds travel *in* the work, never in
+//! executor state), which is what makes every backend bit-identical:
+//!
+//! * [`InProcessBackend`] — runs work units on a local [`ThreadPool`];
+//!   the zero-copy baseline [`crate::cluster::ClusterEngine`] compares
+//!   remote backends against.
+//! * [`crate::cluster::RemoteShardBackend`] — serializes the same work
+//!   units as [`transport::wire`](crate::transport::wire) frames, scatters
+//!   them to shard servers over a `Channel` (in-memory or TCP), and
+//!   gathers [`ShardOutMsg`]s at a straggler-tolerant barrier.
+//!
+//! Work units come in two shapes, mirroring the engine's two entry points:
+//! [`ShardWorkMsg`] (full-round simulation: the shard encodes its range's
+//! clients itself) and [`ShardPoolMsg`] (streaming: pre-cloaked pools,
+//! renormalized analyzer — the multi-host form of
+//! [`Engine::run_round_streaming`](super::Engine::run_round_streaming)).
+
+use std::time::Instant;
+
+use crate::analyzer::Analyzer;
+use crate::encoder::prerandomizer::PreRandomizer;
+use crate::encoder::CloakEncoder;
+use crate::params::{NeighborNotion, ProtocolPlan};
+use crate::rng::derive_seed;
+use crate::shuffler::{mixnet::Mixnet, Shuffler};
+use crate::transport::wire::{Frame, ShardOutMsg, ShardPoolMsg, ShardWorkMsg, WireError};
+use crate::transport::TrafficStats;
+use crate::util::pool::ThreadPool;
+
+use super::{encode_block, encode_clients, resolve_shards, EngineConfig, EngineError, RoundInput};
+
+/// One shard's unit of work for one round, in either entry-point shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardRoundWork {
+    /// Full-round simulation: encode + shuffle + analyze from raw values.
+    Encode(ShardWorkMsg),
+    /// Streaming: shuffle + analyze pre-cloaked per-instance pools.
+    Pool(ShardPoolMsg),
+}
+
+impl ShardRoundWork {
+    pub fn shard(&self) -> u32 {
+        match self {
+            ShardRoundWork::Encode(w) => w.shard,
+            ShardRoundWork::Pool(w) => w.shard,
+        }
+    }
+
+    pub fn round(&self) -> u64 {
+        match self {
+            ShardRoundWork::Encode(w) => w.round,
+            ShardRoundWork::Pool(w) => w.round,
+        }
+    }
+
+    pub fn lo(&self) -> u32 {
+        match self {
+            ShardRoundWork::Encode(w) => w.lo,
+            ShardRoundWork::Pool(w) => w.lo,
+        }
+    }
+
+    pub fn span(&self) -> u32 {
+        match self {
+            ShardRoundWork::Encode(w) => w.span,
+            ShardRoundWork::Pool(w) => w.span,
+        }
+    }
+
+    /// The wire frame a remote backend scatters for this work unit.
+    /// Consumes the work: the payload vectors move, they are not cloned.
+    pub fn into_frame(self) -> Frame {
+        match self {
+            ShardRoundWork::Encode(w) => Frame::ShardWork(w),
+            ShardRoundWork::Pool(w) => Frame::ShardPool(w),
+        }
+    }
+}
+
+/// Why a backend failed to complete a round's shard work.
+#[derive(Debug, PartialEq)]
+pub enum ShardBackendError {
+    /// A work unit failed validation or execution.
+    Engine(EngineError),
+    /// A shard stayed unreachable through the whole retry budget.
+    ShardLost { shard: u32, attempts: usize },
+    /// A shard server is running a different protocol config.
+    ConfigMismatch { shard: u32, want: u32, got: u32 },
+    /// A shard's output disagrees with the work it was handed.
+    Merge { shard: u32, detail: String },
+    /// The wire codec rejected a frame on a coordinator↔shard link.
+    Wire(WireError),
+    /// Socket-level failure past what reconnect/retry could absorb.
+    Io(String),
+}
+
+impl std::fmt::Display for ShardBackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardBackendError::Engine(e) => write!(f, "engine: {e}"),
+            ShardBackendError::ShardLost { shard, attempts } => {
+                write!(f, "shard {shard} unreachable after {attempts} attempts")
+            }
+            ShardBackendError::ConfigMismatch { shard, want, got } => {
+                write!(
+                    f,
+                    "shard {shard} config fingerprint {got:#010x} != coordinator {want:#010x}"
+                )
+            }
+            ShardBackendError::Merge { shard, detail } => {
+                write!(f, "shard {shard} barrier merge: {detail}")
+            }
+            ShardBackendError::Wire(e) => write!(f, "wire: {e}"),
+            ShardBackendError::Io(m) => write!(f, "io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardBackendError {}
+
+impl From<EngineError> for ShardBackendError {
+    fn from(e: EngineError) -> Self {
+        ShardBackendError::Engine(e)
+    }
+}
+
+impl From<WireError> for ShardBackendError {
+    fn from(e: WireError) -> Self {
+        ShardBackendError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for ShardBackendError {
+    fn from(e: std::io::Error) -> Self {
+        ShardBackendError::Io(e.to_string())
+    }
+}
+
+/// Where one round's shard work runs.
+pub trait ShardBackend {
+    /// Execute the round's per-shard work units, returning one
+    /// [`ShardOutMsg`] per unit (any order; the caller's barrier reorders
+    /// by shard id). Implementations may retry internally — an error means
+    /// the round is unrecoverable (a shard lost past the retry budget, a
+    /// config mismatch, invalid work).
+    fn run_shards(&mut self, work: Vec<ShardRoundWork>)
+        -> Result<Vec<ShardOutMsg>, ShardBackendError>;
+
+    /// Coordinator↔shard wire traffic since the last call (zero for
+    /// in-process backends — nothing crosses a wire).
+    fn take_traffic(&mut self) -> TrafficStats {
+        TrafficStats::default()
+    }
+
+    /// Work resends performed so far (straggler/retry telemetry).
+    fn retries(&self) -> u64 {
+        0
+    }
+
+    /// Label for reports and benches ("inprocess", "loopback", "tcp", …).
+    fn label(&self) -> &'static str;
+}
+
+/// The protocol state a shard needs to execute work units — what a shard
+/// server (or the in-process backend) builds once from its [`EngineConfig`].
+/// Construction mirrors [`Engine::new`](super::Engine::new) exactly.
+pub struct ShardExecutor {
+    plan: ProtocolPlan,
+    instances: usize,
+    hops: usize,
+    /// Intra-shard encode workers (`cfg.workers_per_shard`) — the split is
+    /// invisible in the results (streams are per client/instance), it only
+    /// buys wall-clock, exactly as in `Engine`'s shard workers.
+    workers: usize,
+    encoder: CloakEncoder,
+    prerandomizer: PreRandomizer,
+    /// Full-cohort analyzer (plan.n) for the encode path; the pool path
+    /// renormalizes per work unit over its `participants`.
+    analyzer: Analyzer,
+}
+
+impl ShardExecutor {
+    pub fn new(cfg: &EngineConfig) -> Self {
+        let plan = &cfg.plan;
+        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
+        let prerandomizer = match plan.notion {
+            NeighborNotion::SingleUser => {
+                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
+            }
+            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
+        };
+        let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
+        ShardExecutor {
+            plan: plan.clone(),
+            instances: cfg.instances,
+            hops: cfg.mixnet_hops,
+            workers: cfg.workers_per_shard.max(1),
+            encoder,
+            prerandomizer,
+            analyzer,
+        }
+    }
+
+    pub fn plan(&self) -> &ProtocolPlan {
+        &self.plan
+    }
+
+    pub fn instances(&self) -> usize {
+        self.instances
+    }
+
+    /// Execute one full-round work unit — the exact per-shard computation
+    /// [`Engine::run_round`](super::Engine::run_round) performs: encode
+    /// streams are a pure function of `(client, instance, round)` and the
+    /// shuffle seed chain arrives in the work, so the result is
+    /// bit-identical to the in-process shard by construction.
+    pub fn execute_encode(&self, w: &ShardWorkMsg) -> Result<ShardOutMsg, EngineError> {
+        self.execute_encode_workers(w, self.workers)
+    }
+
+    /// Like [`ShardExecutor::execute_encode`] with an explicit encode
+    /// worker count — [`InProcessBackend`] uses this to redistribute idle
+    /// pool workers into shards (a narrow round on a many-core box still
+    /// encodes client-parallel), exactly as `Engine`'s shard workers do.
+    ///
+    /// KEEP IN SYNC with `Engine::run_round_inner`'s dispatch closure:
+    /// that closure is this computation plus the views capture this
+    /// executor deliberately lacks; the bit-identity tests are the
+    /// tripwire for drift.
+    pub fn execute_encode_workers(
+        &self,
+        w: &ShardWorkMsg,
+        workers: usize,
+    ) -> Result<ShardOutMsg, EngineError> {
+        let n = w.client_round_seeds.len();
+        let m = self.plan.num_messages;
+        let span = w.span as usize;
+        let lo = w.lo as usize;
+        if n != self.plan.n {
+            return Err(EngineError::WrongClientCount { expected: self.plan.n, got: n });
+        }
+        if span == 0 || lo + span > self.instances {
+            return Err(EngineError::WrongInstanceCount {
+                expected: self.instances,
+                got: lo + span,
+            });
+        }
+        if w.values.len() != span * n {
+            return Err(EngineError::WrongWidth {
+                client: 0,
+                expected: span,
+                got: w.values.len() / n.max(1),
+            });
+        }
+        let t0 = Instant::now();
+        let mut buf = vec![0u64; span * n * m];
+        let inputs = RoundInput::Range { values: &w.values, lo, clients: n };
+        let enc = &self.encoder;
+        let pre = &self.prerandomizer;
+        let seeds_ref: &[u64] = &w.client_round_seeds;
+        let wps = workers.max(1);
+        // Same two intra-shard encode splits as Engine's shard workers —
+        // invisible in the results, they only buy wall-clock.
+        if wps > 1 && span > 1 {
+            // wide shard: split the instance range across workers
+            let block = span.div_ceil(wps);
+            std::thread::scope(|scope| {
+                let inputs = &inputs;
+                let mut rest: &mut [u64] = &mut buf;
+                let mut jlo = lo;
+                while !rest.is_empty() {
+                    let take = block.min(lo + span - jlo);
+                    let (head, tail) = rest.split_at_mut(take * n * m);
+                    let start = jlo;
+                    scope.spawn(move || {
+                        encode_block(enc, pre, inputs, seeds_ref, start, n, m, head);
+                    });
+                    rest = tail;
+                    jlo += take;
+                }
+            });
+        } else if wps > 1 && span == 1 && n > 1 {
+            // narrow shard (single instance): split the cohort instead
+            let cblock = n.div_ceil(wps);
+            std::thread::scope(|scope| {
+                let inputs = &inputs;
+                let mut rest: &mut [u64] = &mut buf;
+                let mut ilo = 0usize;
+                while !rest.is_empty() {
+                    let take = cblock.min(n - ilo);
+                    let (head, tail) = rest.split_at_mut(take * m);
+                    let start = ilo;
+                    scope.spawn(move || {
+                        encode_clients(enc, pre, inputs, seeds_ref, lo, start, m, head);
+                    });
+                    rest = tail;
+                    ilo += take;
+                }
+            });
+        } else {
+            encode_block(enc, pre, &inputs, seeds_ref, lo, n, m, &mut buf);
+        }
+        // The privacy boundary: every instance pool is permuted before
+        // anything below reads it, exactly as in the in-process shard.
+        for jj in 0..span {
+            let mut net = Mixnet::honest(derive_seed(w.shard_seed, jj as u64), self.hops);
+            net.shuffle(&mut buf[jj * n * m..(jj + 1) * n * m]);
+        }
+        let estimates: Vec<f64> = (0..span)
+            .map(|jj| self.analyzer.analyze(&buf[jj * n * m..(jj + 1) * n * m]))
+            .collect();
+        Ok(ShardOutMsg {
+            round: w.round,
+            shard: w.shard,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            estimates,
+        })
+    }
+
+    /// Execute one streaming work unit — the per-shard half of
+    /// [`Engine::run_round_streaming`](super::Engine::run_round_streaming):
+    /// mixnet seeds derive per *global* instance id and Algorithm 2 is
+    /// renormalized over the surviving participants.
+    pub fn execute_pool(&self, w: &ShardPoolMsg) -> Result<ShardOutMsg, EngineError> {
+        let m = self.plan.num_messages;
+        let span = w.span as usize;
+        let lo = w.lo as usize;
+        let participants = w.participants as usize;
+        if participants == 0 {
+            return Err(EngineError::NoParticipants);
+        }
+        if participants > self.plan.n {
+            return Err(EngineError::TooManyParticipants { plan_n: self.plan.n, got: participants });
+        }
+        if span == 0 || lo + span > self.instances {
+            return Err(EngineError::WrongInstanceCount {
+                expected: self.instances,
+                got: lo + span,
+            });
+        }
+        let per_instance = participants * m;
+        if w.pool.len() != span * per_instance {
+            return Err(EngineError::BadPoolLen {
+                instance: lo,
+                expected: span * per_instance,
+                got: w.pool.len(),
+            });
+        }
+        // The wire is untrusted: out-of-ring residues would silently
+        // mis-sum in ModRing arithmetic.
+        if let Some(pos) = w.pool.iter().position(|&y| y >= self.plan.modulus) {
+            return Err(EngineError::OutOfRing {
+                instance: lo + pos / per_instance,
+                index: pos % per_instance,
+                value: w.pool[pos],
+            });
+        }
+        let t0 = Instant::now();
+        let ana = Analyzer::new(self.plan.modulus, self.plan.scale, participants);
+        let mut buf = w.pool.clone();
+        for jj in 0..span {
+            let j = lo + jj;
+            let mut net = Mixnet::honest(derive_seed(w.round_seed, j as u64), self.hops);
+            net.shuffle(&mut buf[jj * per_instance..(jj + 1) * per_instance]);
+        }
+        let estimates: Vec<f64> = (0..span)
+            .map(|jj| ana.analyze(&buf[jj * per_instance..(jj + 1) * per_instance]))
+            .collect();
+        Ok(ShardOutMsg {
+            round: w.round,
+            shard: w.shard,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            estimates,
+        })
+    }
+
+    pub fn execute(&self, work: &ShardRoundWork) -> Result<ShardOutMsg, EngineError> {
+        self.execute_workers(work, self.workers)
+    }
+
+    /// [`ShardExecutor::execute`] with an explicit encode worker count
+    /// (the pool path has no encode phase, so `workers` is moot there).
+    pub fn execute_workers(
+        &self,
+        work: &ShardRoundWork,
+        workers: usize,
+    ) -> Result<ShardOutMsg, EngineError> {
+        match work {
+            ShardRoundWork::Encode(w) => self.execute_encode_workers(w, workers),
+            ShardRoundWork::Pool(w) => self.execute_pool(w),
+        }
+    }
+}
+
+/// Runs shard work on a local thread pool — the no-wire baseline backend.
+pub struct InProcessBackend {
+    exec: ShardExecutor,
+    pool: ThreadPool,
+}
+
+impl InProcessBackend {
+    pub fn new(cfg: &EngineConfig) -> Self {
+        let shards = resolve_shards(cfg);
+        InProcessBackend { exec: ShardExecutor::new(cfg), pool: ThreadPool::new(shards.max(1)) }
+    }
+}
+
+impl ShardBackend for InProcessBackend {
+    fn run_shards(
+        &mut self,
+        work: Vec<ShardRoundWork>,
+    ) -> Result<Vec<ShardOutMsg>, ShardBackendError> {
+        let exec = &self.exec;
+        let work_ref: &[ShardRoundWork] = &work;
+        // Engine's idle-worker redistribution: a round with fewer shards
+        // than pool workers hands the spares to each shard as encode
+        // workers (invisible in the results, wall-clock only).
+        let wps = (self.pool.workers() / work.len().max(1)).max(self.exec.workers);
+        let outs: Vec<Result<ShardOutMsg, EngineError>> =
+            self.pool.dispatch(work.len(), |s| exec.execute_workers(&work_ref[s], wps));
+        outs.into_iter()
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(ShardBackendError::from)
+    }
+
+    fn label(&self) -> &'static str {
+        "inprocess"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{shard_ranges, ClientSeeds, DerivedClientSeeds, Engine, SHUFFLE_SEED_TAG};
+
+    fn small_plan(n: usize) -> ProtocolPlan {
+        ProtocolPlan::exact_secure_agg(n, 100, 8)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    /// Build the exact work units Engine::run_round executes internally
+    /// for `(seed, round 0)`, using the documented seed derivations.
+    fn encode_works(
+        cfg: &EngineConfig,
+        seed: u64,
+        shards: usize,
+        inputs: &[Vec<f64>],
+    ) -> Vec<ShardRoundWork> {
+        let n = inputs.len();
+        let d = cfg.instances;
+        let seeds = DerivedClientSeeds::new(seed);
+        let round_seed = derive_seed(derive_seed(seed, SHUFFLE_SEED_TAG), 0);
+        let client_round_seeds: Vec<u64> =
+            (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), 0)).collect();
+        shard_ranges(d, shards)
+            .into_iter()
+            .enumerate()
+            .map(|(s, (lo, hi))| {
+                let mut values = Vec::with_capacity((hi - lo) * n);
+                for j in lo..hi {
+                    for row in inputs.iter() {
+                        values.push(row[j]);
+                    }
+                }
+                ShardRoundWork::Encode(ShardWorkMsg {
+                    round: 0,
+                    shard: s as u32,
+                    lo: lo as u32,
+                    span: (hi - lo) as u32,
+                    shard_seed: derive_seed(round_seed, s as u64),
+                    client_round_seeds: client_round_seeds.clone(),
+                    values,
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn in_process_backend_matches_engine_round() {
+        let (n, d, seed) = (12usize, 5usize, 77u64);
+        let inputs = inputs_for(n, d);
+        for shards in [1usize, 3] {
+            let cfg = EngineConfig::new(small_plan(n), d).with_shards(shards);
+            let mut engine = Engine::new(cfg.clone(), seed);
+            let want = engine
+                .run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(seed))
+                .unwrap()
+                .estimates;
+            let mut backend = InProcessBackend::new(&cfg);
+            let outs = backend.run_shards(encode_works(&cfg, seed, shards, &inputs)).unwrap();
+            let got: Vec<f64> = outs.iter().flat_map(|o| o.estimates.clone()).collect();
+            assert_eq!(got, want, "S={shards}: backend must be bit-identical to Engine");
+        }
+    }
+
+    #[test]
+    fn pool_work_matches_engine_streaming() {
+        let (n, d, seed) = (10usize, 4usize, 21u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let who: Vec<usize> = (0..n).filter(|i| i % 3 != 0).collect();
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let m = cfg.plan.num_messages;
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = engine
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap().estimates;
+
+        let exec = ShardExecutor::new(&cfg);
+        let round_seed = derive_seed(derive_seed(seed, SHUFFLE_SEED_TAG), 0);
+        let mut got = Vec::new();
+        for (s, (lo, hi)) in shard_ranges(d, 2).into_iter().enumerate() {
+            let out = exec
+                .execute_pool(&ShardPoolMsg {
+                    round: 0,
+                    shard: s as u32,
+                    lo: lo as u32,
+                    span: (hi - lo) as u32,
+                    participants: who.len() as u32,
+                    round_seed,
+                    pool: pools[lo..hi].concat(),
+                })
+                .unwrap();
+            got.extend_from_slice(&out.estimates);
+        }
+        assert_eq!(got, want, "pool executor must match Engine::run_round_streaming");
+    }
+
+    #[test]
+    fn intra_shard_worker_split_is_invisible() {
+        // workers_per_shard changes only the wall-clock, never the bits:
+        // wide shards (span > 1) split the instance range, narrow shards
+        // (span == 1) split the cohort — both must match the serial path.
+        let (n, seed) = (9usize, 3u64);
+        for d in [6usize, 1] {
+            let inputs = inputs_for(n, d);
+            let serial = ShardExecutor::new(&EngineConfig::new(small_plan(n), d));
+            let split = ShardExecutor::new(
+                &EngineConfig::new(small_plan(n), d).with_workers_per_shard(3),
+            );
+            for work in encode_works(&EngineConfig::new(small_plan(n), d), seed, 1, &inputs) {
+                let a = serial.execute(&work).unwrap().estimates;
+                let b = split.execute(&work).unwrap().estimates;
+                assert_eq!(a, b, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_rejects_malformed_work() {
+        let n = 6;
+        let cfg = EngineConfig::new(small_plan(n), 3);
+        let exec = ShardExecutor::new(&cfg);
+        let base = ShardWorkMsg {
+            round: 0,
+            shard: 0,
+            lo: 0,
+            span: 3,
+            shard_seed: 1,
+            client_round_seeds: vec![1; n],
+            values: vec![0.5; 3 * n],
+        };
+        // wrong cohort
+        let mut w = base.clone();
+        w.client_round_seeds = vec![1; n - 1];
+        w.values = vec![0.5; 3 * (n - 1)];
+        assert_eq!(
+            exec.execute_encode(&w).unwrap_err(),
+            EngineError::WrongClientCount { expected: n, got: n - 1 }
+        );
+        // range outside the configured instance count
+        let mut w = base.clone();
+        w.lo = 2;
+        assert!(matches!(
+            exec.execute_encode(&w),
+            Err(EngineError::WrongInstanceCount { .. })
+        ));
+        // values shape mismatch
+        let mut w = base.clone();
+        w.values = vec![0.5; 3 * n - 1];
+        assert!(matches!(exec.execute_encode(&w), Err(EngineError::WrongWidth { .. })));
+
+        let m = cfg.plan.num_messages;
+        let pool_base = ShardPoolMsg {
+            round: 0,
+            shard: 0,
+            lo: 0,
+            span: 3,
+            participants: 4,
+            round_seed: 1,
+            pool: vec![0; 3 * 4 * m],
+        };
+        assert_eq!(
+            exec.execute_pool(&ShardPoolMsg { participants: 0, pool: vec![], ..pool_base.clone() })
+                .unwrap_err(),
+            EngineError::NoParticipants
+        );
+        assert!(matches!(
+            exec.execute_pool(&ShardPoolMsg { participants: 99, ..pool_base.clone() }),
+            Err(EngineError::TooManyParticipants { .. })
+        ));
+        let mut w = pool_base.clone();
+        w.pool.pop();
+        assert!(matches!(exec.execute_pool(&w), Err(EngineError::BadPoolLen { .. })));
+        let mut w = pool_base;
+        let bad = exec.plan().modulus;
+        w.pool[5] = bad;
+        assert!(matches!(exec.execute_pool(&w), Err(EngineError::OutOfRing { .. })));
+    }
+
+    #[test]
+    fn in_process_backend_surfaces_work_errors() {
+        let cfg = EngineConfig::new(small_plan(4), 2).with_shards(2);
+        let mut backend = InProcessBackend::new(&cfg);
+        let bad = ShardRoundWork::Encode(ShardWorkMsg {
+            round: 0,
+            shard: 0,
+            lo: 0,
+            span: 2,
+            shard_seed: 0,
+            client_round_seeds: vec![1; 3], // wrong cohort
+            values: vec![0.5; 6],
+        });
+        assert!(matches!(
+            backend.run_shards(vec![bad]),
+            Err(ShardBackendError::Engine(EngineError::WrongClientCount { .. }))
+        ));
+    }
+}

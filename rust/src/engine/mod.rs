@@ -63,9 +63,16 @@
 //! analyzer renormalized to the participant count. See
 //! [`crate::transport`] for the wire codec, channels and the driver.
 //!
-//! What this module deliberately does **not** do (see ROADMAP.md):
-//! cross-process/multi-host shards — `transport::wire::ShardOutMsg` is
-//! the promoted wire form of the barrier message a socket would carry.
+//! # Multi-host shards
+//!
+//! The per-shard computation is extracted into [`backend::ShardExecutor`]
+//! and the scatter/merge seam into the [`backend::ShardBackend`] trait:
+//! [`backend::InProcessBackend`] runs shard work on the local pool, and
+//! [`crate::cluster`] runs the *same* work on shard servers behind real
+//! sockets, gathering `transport::wire::ShardOutMsg`s at the barrier —
+//! bit-identical to this module's in-process rounds by construction.
+
+pub mod backend;
 
 use std::time::Instant;
 
@@ -78,6 +85,13 @@ use crate::rng::{derive_seed, ChaCha20Rng};
 use crate::shuffler::{mixnet::Mixnet, Shuffler};
 use crate::transport::{CostModel, Envelope, TrafficStats};
 use crate::util::pool::ThreadPool;
+
+pub use backend::{InProcessBackend, ShardBackend, ShardBackendError, ShardExecutor, ShardRoundWork};
+
+/// Stream tag splitting the engine's master seed into the shuffle-seed
+/// chain (`b"SHUF"`); shared with [`crate::cluster::ClusterEngine`] so a
+/// cluster round at the same seed derives the same mixnet permutations.
+pub(crate) const SHUFFLE_SEED_TAG: u64 = 0x5348_5546;
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -226,6 +240,10 @@ pub enum RoundInput<'a> {
     Scalars(&'a [f64]),
     /// One d-vector per client — the coordinator / FL / sketch shape.
     Vectors(&'a [Vec<f64>]),
+    /// A contiguous instance range's values, instance-major — the cluster
+    /// scatter shape (see [`crate::cluster`]): client `i`'s instance `j`
+    /// sits at `values[(j - lo) * clients + i]` for `j ∈ [lo, lo + span)`.
+    Range { values: &'a [f64], lo: usize, clients: usize },
 }
 
 impl RoundInput<'_> {
@@ -233,43 +251,68 @@ impl RoundInput<'_> {
         match self {
             RoundInput::Scalars(xs) => xs.len(),
             RoundInput::Vectors(vs) => vs.len(),
+            RoundInput::Range { clients, .. } => *clients,
         }
     }
 
     #[inline]
-    fn get(&self, client: usize, instance: usize) -> f64 {
+    pub(crate) fn get(&self, client: usize, instance: usize) -> f64 {
         match self {
             RoundInput::Scalars(xs) => xs[client],
             RoundInput::Vectors(vs) => vs[client][instance],
+            RoundInput::Range { values, lo, clients } => {
+                values[(instance - lo) * clients + client]
+            }
         }
     }
 
-    fn validate(&self, expected_clients: usize, instances: usize) -> Result<(), EngineError> {
+    /// True when the input covers all `instances` starting at instance 0
+    /// (the shape [`Engine::run_round`] and the per-client encode need).
+    fn covers(&self, client: usize, instances: usize) -> Result<(), EngineError> {
+        match self {
+            RoundInput::Scalars(_) => {
+                if instances != 1 {
+                    return Err(EngineError::WrongWidth { client, expected: instances, got: 1 });
+                }
+            }
+            RoundInput::Vectors(vs) => {
+                if vs[client].len() != instances {
+                    return Err(EngineError::WrongWidth {
+                        client,
+                        expected: instances,
+                        got: vs[client].len(),
+                    });
+                }
+            }
+            RoundInput::Range { values, lo, clients } => {
+                if *lo != 0 || values.len() != clients * instances {
+                    return Err(EngineError::WrongWidth {
+                        client,
+                        expected: instances,
+                        got: values.len() / (*clients).max(1),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub(crate) fn validate(
+        &self,
+        expected_clients: usize,
+        instances: usize,
+    ) -> Result<(), EngineError> {
         let n = self.clients();
         if n != expected_clients {
             return Err(EngineError::WrongClientCount { expected: expected_clients, got: n });
         }
         match self {
-            RoundInput::Scalars(_) => {
-                if instances != 1 {
-                    return Err(EngineError::WrongWidth {
-                        client: 0,
-                        expected: instances,
-                        got: 1,
-                    });
+            RoundInput::Vectors(_) => {
+                for i in 0..n {
+                    self.covers(i, instances)?;
                 }
             }
-            RoundInput::Vectors(vs) => {
-                for (i, v) in vs.iter().enumerate() {
-                    if v.len() != instances {
-                        return Err(EngineError::WrongWidth {
-                            client: i,
-                            expected: instances,
-                            got: v.len(),
-                        });
-                    }
-                }
-            }
+            RoundInput::Scalars(_) | RoundInput::Range { .. } => self.covers(0, instances)?,
         }
         Ok(())
     }
@@ -310,11 +353,7 @@ impl Engine {
             NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
         };
         let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
-        let shards = if cfg.shards == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        } else {
-            cfg.shards
-        };
+        let shards = resolve_shards(&cfg);
         let workers = shards * cfg.workers_per_shard.max(1);
         Engine {
             cfg,
@@ -325,7 +364,7 @@ impl Engine {
             pool: ThreadPool::new(workers),
             metrics: MetricsRegistry::new(),
             rounds_run: 0,
-            shuffle_seed: derive_seed(seed, 0x5348_5546),
+            shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
         }
     }
 
@@ -378,22 +417,7 @@ impl Engine {
         if i >= inputs.clients() {
             return Err(EngineError::UnknownClient { client, cohort: inputs.clients() });
         }
-        match inputs {
-            RoundInput::Scalars(_) => {
-                if d != 1 {
-                    return Err(EngineError::WrongWidth { client: i, expected: d, got: 1 });
-                }
-            }
-            RoundInput::Vectors(vs) => {
-                if vs[i].len() != d {
-                    return Err(EngineError::WrongWidth {
-                        client: i,
-                        expected: d,
-                        got: vs[i].len(),
-                    });
-                }
-            }
-        }
+        inputs.covers(i, d)?;
         let seed_i = derive_seed(seeds.client_seed(client), round);
         let mut shares = vec![0u64; d * m];
         for j in 0..d {
@@ -434,37 +458,8 @@ impl Engine {
     ) -> Result<RoundResult, EngineError> {
         let d = self.cfg.instances;
         let m = self.cfg.plan.num_messages;
-        if pools.len() != d {
-            return Err(EngineError::WrongInstanceCount { expected: d, got: pools.len() });
-        }
-        if participants == 0 {
-            return Err(EngineError::NoParticipants);
-        }
-        if participants > self.cfg.plan.n {
-            return Err(EngineError::TooManyParticipants {
-                plan_n: self.cfg.plan.n,
-                got: participants,
-            });
-        }
+        validate_pools(&self.cfg.plan, d, pools, participants)?;
         let modulus = self.cfg.plan.modulus;
-        for (j, pool) in pools.iter().enumerate() {
-            if pool.len() != participants * m {
-                return Err(EngineError::BadPoolLen {
-                    instance: j,
-                    expected: participants * m,
-                    got: pool.len(),
-                });
-            }
-            // Deliberately re-validated even though the streaming driver
-            // already screens residues per frame: this is a public entry
-            // point (the multi-host shard path will feed it directly),
-            // ModRing arithmetic silently mis-sums on out-of-ring values,
-            // and this branch-predictable compare pass costs ~nothing next
-            // to the per-element ChaCha shuffle below.
-            if let Some(pos) = pool.iter().position(|&y| y >= modulus) {
-                return Err(EngineError::OutOfRing { instance: j, index: pos, value: pool[pos] });
-            }
-        }
         let round = self.rounds_run;
         self.rounds_run += 1;
         let t0 = Instant::now();
@@ -565,6 +560,12 @@ impl Engine {
         let seeds_ref: &[u64] = &client_seeds;
         let ranges_ref: &[(usize, usize)] = &ranges;
 
+        // KEEP IN SYNC with backend::ShardExecutor::execute_encode_workers:
+        // this closure is the same per-shard computation plus the views
+        // capture the executor deliberately lacks. Any change to the
+        // split/shuffle/analyze sequence here must land there too — the
+        // cross-backend bit-identity tests (engine::backend and
+        // tests/cluster_integration.rs) are the tripwire.
         let outs: Vec<ShardOut> = self.pool.dispatch(s_eff, |s| {
             let shard_t0 = Instant::now();
             let (lo, hi) = ranges_ref[s];
@@ -715,7 +716,7 @@ fn encode_block(
 /// into `buf` (client-major: client `client_lo + idx` occupies
 /// `buf[idx*m ..][..m]`) — the narrow-round (span = 1) encode split.
 #[allow(clippy::too_many_arguments)]
-fn encode_clients(
+pub(crate) fn encode_clients(
     enc: &CloakEncoder,
     pre: &PreRandomizer,
     inputs: &RoundInput<'_>,
@@ -734,8 +735,60 @@ fn encode_clients(
     }
 }
 
+/// Validate a streaming round's pools: instance count, participant
+/// bounds, per-pool length, residues in Z_N (ModRing arithmetic silently
+/// mis-sums on out-of-ring values). ONE definition shared by
+/// [`Engine::run_round_streaming`] and `cluster::ClusterEngine`, so the
+/// two entry points cannot drift. The per-shard executor re-validates its
+/// own slice too — this coordinator-side pass is what turns hostile pools
+/// into immediate typed errors instead of a remote shard silently
+/// rejecting the work and the barrier timing out; the branch-predictable
+/// compare pass costs ~nothing next to the per-element ChaCha shuffle.
+pub(crate) fn validate_pools(
+    plan: &ProtocolPlan,
+    instances: usize,
+    pools: &[Vec<u64>],
+    participants: usize,
+) -> Result<(), EngineError> {
+    if pools.len() != instances {
+        return Err(EngineError::WrongInstanceCount { expected: instances, got: pools.len() });
+    }
+    if participants == 0 {
+        return Err(EngineError::NoParticipants);
+    }
+    if participants > plan.n {
+        return Err(EngineError::TooManyParticipants { plan_n: plan.n, got: participants });
+    }
+    let m = plan.num_messages;
+    for (j, pool) in pools.iter().enumerate() {
+        if pool.len() != participants * m {
+            return Err(EngineError::BadPoolLen {
+                instance: j,
+                expected: participants * m,
+                got: pool.len(),
+            });
+        }
+        if let Some(pos) = pool.iter().position(|&y| y >= plan.modulus) {
+            return Err(EngineError::OutOfRing { instance: j, index: pos, value: pool[pos] });
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a config's shard count: `0` means "available cores". ONE
+/// definition shared by [`Engine::new`], [`backend::InProcessBackend`]
+/// and [`crate::cluster::cluster_layout`] — cross-backend bit-identity
+/// depends on all three agreeing on the resolved count.
+pub(crate) fn resolve_shards(cfg: &EngineConfig) -> usize {
+    if cfg.shards == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.shards
+    }
+}
+
 /// Near-equal contiguous instance ranges for `shards` shards.
-fn shard_ranges(instances: usize, shards: usize) -> Vec<(usize, usize)> {
+pub(crate) fn shard_ranges(instances: usize, shards: usize) -> Vec<(usize, usize)> {
     let base = instances / shards;
     let extra = instances % shards;
     let mut ranges = Vec::with_capacity(shards);

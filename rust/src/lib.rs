@@ -12,7 +12,9 @@
 //!   (Algorithm 2), the shard-parallel aggregation [`engine`] every entry
 //!   point routes rounds through, the round coordinator with batching and
 //!   backpressure, the [`transport`] layer (wire codec, lossy-network
-//!   simulation and dropout-tolerant streaming rounds), parameter planner
+//!   simulation and dropout-tolerant streaming rounds), the [`cluster`]
+//!   subsystem (engine shards as standalone servers over TCP or simulated
+//!   channels, gathered at a straggler-tolerant barrier), parameter planner
 //!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
@@ -39,6 +41,7 @@ pub mod analyzer;
 pub mod arith;
 pub mod baselines;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod encoder;
 pub mod engine;
@@ -60,9 +63,10 @@ pub mod prelude {
     pub use crate::analyzer::Analyzer;
     pub use crate::arith::fixed::FixedCodec;
     pub use crate::arith::modring::ModRing;
+    pub use crate::cluster::{ClusterEngine, ClusterTuning, RemoteShardBackend};
     pub use crate::encoder::prerandomizer::PreRandomizer;
     pub use crate::encoder::CloakEncoder;
-    pub use crate::engine::{Engine, EngineConfig, RoundInput};
+    pub use crate::engine::{Engine, EngineConfig, InProcessBackend, RoundInput, ShardBackend};
     pub use crate::params::{NeighborNotion, ProtocolPlan};
     pub use crate::pipeline::Pipeline;
     pub use crate::privacy::accountant::PrivacyAccountant;

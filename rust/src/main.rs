@@ -7,12 +7,16 @@
 //!   smoke         — load artifacts, run every executable once, verify
 //!   transport-sim — streaming rounds over a seeded lossy network,
 //!                   benchkit JSON out (self-validated)
+//!   cluster-sim   — rounds over N shard servers (localhost TCP, SimNet
+//!                   or loopback channels), gate-checked bit-identical to
+//!                   the in-process engine, benchkit JSON out
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
 //!   cloak-agg fl --clients 16 --rounds 5 --artifacts artifacts
 //!   cloak-agg plan --n 100000 --eps 0.5 --delta 1e-8
 //!   cloak-agg transport-sim --n 256 --d 8 --loss 0.1 --seed 7
+//!   cloak-agg cluster-sim --n 64 --d 16 --shards 4 --net tcp --seed 7
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -24,13 +28,15 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
   smoke:         --artifacts
   transport-sim: --n --d --loss --dup --shards (0=sweep) --quorum
-                 --deadline --seed --out";
+                 --deadline --seed --out
+  cluster-sim:   --n --d --shards (0=sweep) --net (tcp|sim|loopback|inprocess)
+                 --loss (sim net only) --seed --out";
 
 fn main() {
     if let Err(e) = run() {
@@ -43,10 +49,10 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["aggregate", "fl", "plan", "smoke", "transport-sim"],
+        &["aggregate", "fl", "plan", "smoke", "transport-sim", "cluster-sim"],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
-            "loss", "dup", "shards", "quorum", "deadline", "out",
+            "loss", "dup", "shards", "quorum", "deadline", "out", "net",
         ],
     )?;
     match args.command.as_str() {
@@ -55,6 +61,7 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&args),
         "smoke" => cmd_smoke(&args),
         "transport-sim" => cmd_transport_sim(&args),
+        "cluster-sim" => cmd_cluster_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -261,6 +268,149 @@ fn cmd_transport_sim(args: &Args) -> Result<()> {
     let json = Json::parse(&text)?;
     ensure!(
         json.get("group").and_then(|g| g.as_str()) == Some("transport_sim"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(cases.len() == sweep.len(), "expected {} cases, found {}", sweep.len(), cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Multi-host shard rounds: launch one shard server per shard (threads
+/// over localhost TCP, or in-memory channels), gate-check that a full
+/// `ClusterEngine` round is bit-identical to the in-process `Engine` at
+/// the same seed, then write a timed shard sweep as benchkit JSON and
+/// re-validate it through the crate's own parser (the CI smoke step keys
+/// on the final "benchkit JSON OK" line).
+fn cmd_cluster_sim(args: &Args) -> Result<()> {
+    use cloak_agg::cluster::{
+        cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts,
+        TcpShardHost,
+    };
+    use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::transport::channel::{Channel, SimNet, SimNetConfig};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 64)?;
+    let d = args.get_usize("d", 16)?;
+    let shards = args.get_usize("shards", 0)?;
+    let net = args.get_str("net", "tcp");
+    let loss = args.get_f64("loss", 0.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get_str("out", "BENCH_cluster_sim.json");
+    ensure!(n >= 2, "--n must be >= 2");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!((0.0..1.0).contains(&loss), "--loss must be in [0, 1)");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let sweep: Vec<usize> = if shards == 0 { vec![1, 2, 4] } else { vec![shards] };
+
+    let make_cluster = |cfg: &EngineConfig| -> Result<(ClusterEngine, Vec<TcpShardHost>)> {
+        match net.as_str() {
+            "inprocess" => Ok((ClusterEngine::in_process(cfg.clone(), seed), Vec::new())),
+            "loopback" => {
+                let backend = RemoteShardBackend::loopback(cfg);
+                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), Vec::new()))
+            }
+            "sim" => {
+                let backend = RemoteShardBackend::over_channels(cfg, |s| {
+                    let down = SimNet::new(
+                        SimNetConfig::new(derive_seed(seed, 2 * s as u64)).with_loss(loss),
+                    );
+                    let up = SimNet::new(
+                        SimNetConfig::new(derive_seed(seed, 2 * s as u64 + 1)).with_loss(loss),
+                    );
+                    (Box::new(down) as Box<dyn Channel>, Box::new(up) as _)
+                })
+                // Lossy links are expected to cost resends, not rounds.
+                .with_tuning(ClusterTuning { max_retries: 6, ..ClusterTuning::default() });
+                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), Vec::new()))
+            }
+            "tcp" => {
+                let hosts: Vec<TcpShardHost> = (0..cluster_layout(cfg).0)
+                    .map(|_| TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default()))
+                    .collect::<std::io::Result<_>>()?;
+                let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
+                let backend = RemoteShardBackend::over_tcp(cfg, &addrs)?;
+                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), hosts))
+            }
+            other => bail!("--net must be tcp|sim|loopback|inprocess, got '{other}'"),
+        }
+    };
+
+    // --- correctness gate: cluster ≡ in-process engine, per sweep point --
+    let mut table = Table::new(
+        &format!("cluster-sim: n={n} d={d} net={net} loss={loss}"),
+        &["shards", "backend", "participants", "bytes/user", "retries", "inst0 est"],
+    );
+    for &s in &sweep {
+        let cfg = EngineConfig::new(plan.clone(), d).with_shards(s);
+        let mut reference = Engine::new(cfg.clone(), seed);
+        let want = reference.run_round(&RoundInput::Vectors(&inputs), &seeds)?.estimates;
+        let (mut cluster, hosts) = make_cluster(&cfg)?;
+        let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+        ensure!(
+            got.estimates == want,
+            "cluster estimates diverge from the in-process engine at S={s}"
+        );
+        table.row(&[
+            s.to_string(),
+            cluster.backend_label().to_string(),
+            got.participants.to_string(),
+            fmt_f(got.traffic.bytes_per_user(n)),
+            cluster.shard_retries().to_string(),
+            format!("{:.4}", got.estimates[0]),
+        ]);
+        drop(cluster);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+    println!("{}", table.render());
+    println!("gate: cluster rounds bit-identical to the in-process engine for S in {sweep:?}");
+
+    // --- timed sweep over shard counts ------------------------------------
+    let mut bench = Bench::new("cluster_sim");
+    for &s in &sweep {
+        let cfg = EngineConfig::new(plan.clone(), d).with_shards(s);
+        let (mut cluster, hosts) = make_cluster(&cfg)?;
+        let name = format!("round n={n} d={d} net={net} S={s}");
+        bench.run_sharded(&name, (n * d * m) as f64, s, || {
+            cluster
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("cluster round")
+                .estimates[0]
+        });
+        drop(cluster);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -------
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("cluster_sim"),
         "bad benchkit group in {out}"
     );
     let cases = match json.get("cases") {

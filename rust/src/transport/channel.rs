@@ -83,6 +83,17 @@ pub struct SimNetConfig {
     /// Uniform extra delay in `[0, jitter_s)` — the reordering source:
     /// with any nonzero jitter, consecutive sends can overtake each other.
     pub jitter_s: f64,
+    /// Half-open fault: the link delivers the first `k` frames normally,
+    /// then goes silent — every later send vanishes without an error, the
+    /// signature of a crashed or partitioned peer. `None` = healthy link.
+    /// A silenced send consumes no fault draws, so the scenario up to the
+    /// failure point is unchanged by the fault being configured.
+    pub silent_after: Option<u64>,
+    /// Deterministically swallow the first `k` sends (counted as lost),
+    /// then behave per the other knobs — the "frame lost exactly once"
+    /// fault the cluster barrier's retry tests key on. Consumes no fault
+    /// draws, so the rest of the scenario is unchanged.
+    pub drop_first: u64,
 }
 
 impl Default for SimNetConfig {
@@ -93,6 +104,8 @@ impl Default for SimNetConfig {
             duplicate: 0.0,
             base_latency_s: 1e-3,
             jitter_s: 5e-3,
+            silent_after: None,
+            drop_first: 0,
         }
     }
 }
@@ -117,6 +130,18 @@ impl SimNetConfig {
         self.jitter_s = jitter_s;
         self
     }
+
+    /// Go silent (half-open) after delivering the first `k` frames.
+    pub fn with_silent_after(mut self, k: u64) -> Self {
+        self.silent_after = Some(k);
+        self
+    }
+
+    /// Deterministically lose the first `k` sends.
+    pub fn with_drop_first(mut self, k: u64) -> Self {
+        self.drop_first = k;
+        self
+    }
 }
 
 /// Delivery counters — what the fault injector actually did.
@@ -127,6 +152,8 @@ pub struct SimNetStats {
     pub duplicated: u64,
     pub delivered: u64,
     pub bytes_sent: u64,
+    /// Frames swallowed by the half-open fault ([`SimNetConfig::silent_after`]).
+    pub silenced: u64,
 }
 
 /// One in-flight frame, min-ordered by (arrival, send sequence).
@@ -194,6 +221,20 @@ impl Channel for SimNet {
     fn send(&mut self, frame: Vec<u8>) {
         self.stats.sent += 1;
         self.stats.bytes_sent += frame.len() as u64;
+        // Deterministic prefix loss: the first k sends vanish, consuming
+        // no fault draws (the rest of the scenario is unchanged).
+        if self.stats.sent <= self.cfg.drop_first {
+            self.stats.lost += 1;
+            return;
+        }
+        // Half-open peer: everything past the first k frames vanishes,
+        // consuming no fault draws (the scenario prefix is unchanged).
+        if let Some(k) = self.cfg.silent_after {
+            if self.stats.sent > k {
+                self.stats.silenced += 1;
+                return;
+            }
+        }
         // Fixed draw order (loss, delay, dup, dup delay) keeps a scenario
         // reproducible from (seed, send sequence) alone.
         if self.rng.gen_bool(self.cfg.loss) {
@@ -305,6 +346,60 @@ mod tests {
         let got = drain(&mut net);
         assert!(got.len() > 110, "expected duplicates, got {}", got.len());
         assert_eq!(net.stats().duplicated as usize, got.len() - 100);
+    }
+
+    #[test]
+    fn silent_after_delivers_prefix_then_nothing() {
+        let mut net = SimNet::new(SimNetConfig::new(9).with_silent_after(3));
+        for f in frames(10) {
+            net.send(f);
+        }
+        let got = drain(&mut net);
+        assert_eq!(got.len(), 3, "exactly the pre-failure prefix arrives");
+        let mut ids: Vec<u8> = got.iter().map(|(_, f)| f[0]).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(net.stats().silenced, 7);
+        assert_eq!(net.stats().sent, 10);
+        assert_eq!(net.stats().lost, 0, "silence is not loss");
+    }
+
+    #[test]
+    fn drop_first_loses_exactly_the_prefix() {
+        let mut net = SimNet::new(SimNetConfig::new(4).with_drop_first(2));
+        for f in frames(6) {
+            net.send(f);
+        }
+        let got = drain(&mut net);
+        assert_eq!(got.len(), 4);
+        let mut ids: Vec<u8> = got.iter().map(|(_, f)| f[0]).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3, 4, 5], "exactly the first two sends are lost");
+        assert_eq!(net.stats().lost, 2);
+    }
+
+    #[test]
+    fn silence_preserves_the_scenario_prefix() {
+        // The fault draws for the surviving prefix are identical with and
+        // without the half-open fault configured — only the tail differs.
+        let run = |silent: Option<u64>| {
+            let mut cfg = SimNetConfig::new(12).with_loss(0.3).with_duplicate(0.2);
+            if let Some(k) = silent {
+                cfg = cfg.with_silent_after(k);
+            }
+            let mut net = SimNet::new(cfg);
+            for f in frames(20) {
+                net.send(f);
+            }
+            drain(&mut net)
+                .into_iter()
+                .map(|(t, f)| (t.to_bits(), f[0]))
+                .collect::<Vec<_>>()
+        };
+        let healthy = run(None);
+        let faulty = run(Some(8));
+        let prefix: Vec<_> = healthy.iter().filter(|(_, id)| (*id as u64) < 8).cloned().collect();
+        assert_eq!(faulty, prefix);
     }
 
     #[test]

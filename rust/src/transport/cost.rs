@@ -49,6 +49,16 @@ impl TrafficStats {
         self.sim_seconds += cost.batch_latency(len, bytes_per_msg);
     }
 
+    /// One coordinator↔shard wire frame of `wire_len` bytes (shard work,
+    /// `ShardOut`, handshake control — see [`crate::cluster`]). Charged as
+    /// a single message with no batch overhead, so `bytes_per_user` covers
+    /// the coordinator↔shard hop and not just client uplink.
+    pub fn record_frame(&mut self, wire_len: usize, cost: &CostModel) {
+        self.messages += 1;
+        self.bytes += wire_len as u64;
+        self.sim_seconds += cost.per_message_s + wire_len as f64 * cost.per_byte_s;
+    }
+
     pub fn merge(&mut self, other: &TrafficStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
@@ -106,6 +116,24 @@ mod tests {
         b.merge(&a);
         assert_eq!(b.messages, 16);
         assert_eq!(b.bytes, 220);
+    }
+
+    #[test]
+    fn record_frame_counts_shard_traffic() {
+        let c = CostModel::default();
+        let mut s = TrafficStats::default();
+        s.record_frame(100, &c);
+        s.record_frame(50, &c);
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, 150);
+        assert_eq!(s.batches, 0, "frames are not client batches");
+        let want = 2.0 * c.per_message_s + 150.0 * c.per_byte_s;
+        assert!((s.sim_seconds - want).abs() < 1e-12);
+        // and frames merge with batch traffic into one bytes_per_user
+        let mut t = TrafficStats::default();
+        t.record_batch(10, 8, &c);
+        t.merge(&s);
+        assert_eq!(t.bytes, 80 + 150);
     }
 
     #[test]

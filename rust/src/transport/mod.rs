@@ -50,7 +50,9 @@
 //! # Modules
 //!
 //! * [`wire`] — length-prefixed, checksummed frame codec (`Contribute`,
-//!   `Drop`, `Hello`, `Commit`, `ShardOut`).
+//!   `Drop`, `Hello`, `Commit`, `ShardOut`, and the cluster control
+//!   plane: `ShardAssign`, `ShardReady`, `ShardWork`, `ShardPool` — see
+//!   [`crate::cluster`]).
 //! * [`channel`] — [`Channel`] abstraction: in-process [`Loopback`] and
 //!   the seeded lossy [`SimNet`].
 //! * [`streaming`] — [`StreamingRound`] driver: dropout-tolerant round
@@ -65,4 +67,7 @@ pub mod wire;
 pub use channel::{Channel, Loopback, SimNet, SimNetConfig, SimNetStats};
 pub use cost::{CostModel, Envelope, TrafficStats};
 pub use streaming::{send_cohort, StreamConfig, StreamError, StreamOutcome, StreamingRound};
-pub use wire::{Frame, ShardOutMsg, WireError, WIRE_VERSION};
+pub use wire::{
+    Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg, ShardReadyMsg, ShardWorkMsg, WireError,
+    WIRE_VERSION,
+};

@@ -220,8 +220,15 @@ impl Ingest<'_> {
                     self.state.record_drop(client)?;
                     self.dropped[idx] = true;
                 }
-                // Control frames carry no contribution payload.
-                Frame::Hello { .. } | Frame::Commit { .. } | Frame::ShardOut(_) => {}
+                // Control frames (round lifecycle and the cluster's
+                // coordinator↔shard plane) carry no contribution payload.
+                Frame::Hello { .. }
+                | Frame::Commit { .. }
+                | Frame::ShardOut(_)
+                | Frame::ShardAssign(_)
+                | Frame::ShardReady(_)
+                | Frame::ShardWork(_)
+                | Frame::ShardPool(_) => {}
             }
             if self.state.outstanding() == 0 {
                 break; // whole cohort accounted for

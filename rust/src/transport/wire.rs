@@ -22,13 +22,21 @@
 //!
 //! # Frame types
 //!
-//! | type | frame        | payload                                        |
-//! |------|--------------|------------------------------------------------|
-//! | 0x01 | `Hello`      | round u64, client u32                          |
-//! | 0x02 | `Contribute` | round u64, client u32, n u32, n × share u64    |
-//! | 0x03 | `Drop`       | round u64, client u32                          |
-//! | 0x04 | `Commit`     | round u64, participants u32                    |
-//! | 0x05 | `ShardOut`   | round u64, shard u32, wall_ns u64, k u32, k × f64 |
+//! | type | frame         | payload                                        |
+//! |------|---------------|------------------------------------------------|
+//! | 0x01 | `Hello`       | round u64, client u32                          |
+//! | 0x02 | `Contribute`  | round u64, client u32, n u32, n × share u64    |
+//! | 0x03 | `Drop`        | round u64, client u32                          |
+//! | 0x04 | `Commit`      | round u64, participants u32                    |
+//! | 0x05 | `ShardOut`    | round u64, shard u32, wall_ns u64, k u32, k × f64 |
+//! | 0x06 | `ShardAssign` | shard u32, lo u32, hi u32, config_fnv u32      |
+//! | 0x07 | `ShardReady`  | shard u32, config_fnv u32                      |
+//! | 0x08 | `ShardWork`   | round u64, shard u32, lo u32, span u32, shard_seed u64, cohort u32, cohort × seed u64, span·cohort × f64 |
+//! | 0x09 | `ShardPool`   | round u64, shard u32, lo u32, span u32, participants u32, round_seed u64, count u32, count × u64 |
+//!
+//! Frames 0x06–0x09 are the cluster control plane (see [`crate::cluster`]):
+//! the coordinator assigns each shard server its instance range, scatters
+//! per-round work, and gathers `ShardOut` frames at the barrier.
 //!
 //! # Privacy boundary (read carefully — what the wire does and does NOT hide)
 //!
@@ -64,6 +72,10 @@ const TYPE_CONTRIBUTE: u8 = 0x02;
 const TYPE_DROP: u8 = 0x03;
 const TYPE_COMMIT: u8 = 0x04;
 const TYPE_SHARD_OUT: u8 = 0x05;
+const TYPE_SHARD_ASSIGN: u8 = 0x06;
+const TYPE_SHARD_READY: u8 = 0x07;
+const TYPE_SHARD_WORK: u8 = 0x08;
+const TYPE_SHARD_POOL: u8 = 0x09;
 
 /// A shard's merged round output, promoted to a wire message — the seam
 /// the deferred multi-host-shard work plugs a socket into (each remote
@@ -76,6 +88,67 @@ pub struct ShardOutMsg {
     pub wall_ns: u64,
     /// Per-instance estimates for this shard's contiguous instance range.
     pub estimates: Vec<f64>,
+}
+
+/// Coordinator→shard handshake: own the instance range `[lo, hi)` as
+/// shard `shard` of the cluster. `config_fnv` is the coordinator's
+/// protocol-config fingerprint (see [`crate::cluster::config_fingerprint`]);
+/// the shard echoes its own in [`ShardReadyMsg`] so a mis-deployed shard
+/// (wrong plan, wrong instance count) is caught before any work moves.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardAssignMsg {
+    pub shard: u32,
+    pub lo: u32,
+    pub hi: u32,
+    pub config_fnv: u32,
+}
+
+/// Shard→coordinator handshake reply, carrying the shard's own config
+/// fingerprint for the mismatch check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardReadyMsg {
+    pub shard: u32,
+    pub config_fnv: u32,
+}
+
+/// One shard's full-round work unit: simulate encode → shuffle → analyze
+/// for the instance range `[lo, lo + span)` over the whole cohort. Carries
+/// everything the shard needs, so a restarted shard server can serve a
+/// resent copy with no round state of its own.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardWorkMsg {
+    pub round: u64,
+    pub shard: u32,
+    pub lo: u32,
+    pub span: u32,
+    /// `derive_seed(derive_seed(shuffle_seed, round), shard)` — the same
+    /// chain [`crate::engine::Engine::run_round`] hands its shard workers.
+    pub shard_seed: u64,
+    /// Per-client round seeds (`derive_seed(client_seed, round)`); the
+    /// cohort size is the length.
+    pub client_round_seeds: Vec<u64>,
+    /// `span × cohort` values in [0, 1], instance-major.
+    pub values: Vec<f64>,
+}
+
+/// One shard's streaming work unit: shuffle + analyze already-cloaked
+/// per-instance pools for the range `[lo, lo + span)`, with Algorithm 2
+/// renormalized over `participants` survivors. Mixnet seeds derive from
+/// `(round_seed, global instance id)`, exactly as in
+/// [`crate::engine::Engine::run_round_streaming`], so the merge is
+/// bit-identical to the in-process path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPoolMsg {
+    pub round: u64,
+    pub shard: u32,
+    pub lo: u32,
+    pub span: u32,
+    pub participants: u32,
+    /// `derive_seed(shuffle_seed, round)` — per-instance mixnet seeds are
+    /// `derive_seed(round_seed, j)` for the *global* instance id `j`.
+    pub round_seed: u64,
+    /// `span × participants × m` residues in Z_N, instance-major.
+    pub pool: Vec<u64>,
 }
 
 /// Round-control and data frames of the streaming protocol.
@@ -91,6 +164,14 @@ pub enum Frame {
     Commit { round: u64, participants: u32 },
     /// A (possibly remote) shard's merged output for `round`.
     ShardOut(ShardOutMsg),
+    /// Coordinator→shard: own this instance range (cluster handshake).
+    ShardAssign(ShardAssignMsg),
+    /// Shard→coordinator: handshake reply with the shard's config print.
+    ShardReady(ShardReadyMsg),
+    /// Coordinator→shard: one full-round work unit (encode path).
+    ShardWork(ShardWorkMsg),
+    /// Coordinator→shard: one streaming work unit (pre-cloaked pools).
+    ShardPool(ShardPoolMsg),
 }
 
 /// Decode failures. Every variant is reachable from corrupted or hostile
@@ -228,6 +309,52 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             }
             p
         }),
+        Frame::ShardAssign(msg) => (TYPE_SHARD_ASSIGN, {
+            let mut p = Vec::with_capacity(16);
+            put_u32(&mut p, msg.shard);
+            put_u32(&mut p, msg.lo);
+            put_u32(&mut p, msg.hi);
+            put_u32(&mut p, msg.config_fnv);
+            p
+        }),
+        Frame::ShardReady(msg) => (TYPE_SHARD_READY, {
+            let mut p = Vec::with_capacity(8);
+            put_u32(&mut p, msg.shard);
+            put_u32(&mut p, msg.config_fnv);
+            p
+        }),
+        Frame::ShardWork(msg) => (TYPE_SHARD_WORK, {
+            let mut p = Vec::with_capacity(
+                32 + msg.client_round_seeds.len() * 8 + msg.values.len() * 8,
+            );
+            put_u64(&mut p, msg.round);
+            put_u32(&mut p, msg.shard);
+            put_u32(&mut p, msg.lo);
+            put_u32(&mut p, msg.span);
+            put_u64(&mut p, msg.shard_seed);
+            put_u32(&mut p, msg.client_round_seeds.len() as u32);
+            for &s in &msg.client_round_seeds {
+                put_u64(&mut p, s);
+            }
+            for &v in &msg.values {
+                put_u64(&mut p, v.to_bits());
+            }
+            p
+        }),
+        Frame::ShardPool(msg) => (TYPE_SHARD_POOL, {
+            let mut p = Vec::with_capacity(36 + msg.pool.len() * 8);
+            put_u64(&mut p, msg.round);
+            put_u32(&mut p, msg.shard);
+            put_u32(&mut p, msg.lo);
+            put_u32(&mut p, msg.span);
+            put_u32(&mut p, msg.participants);
+            put_u64(&mut p, msg.round_seed);
+            put_u32(&mut p, msg.pool.len() as u32);
+            for &r in &msg.pool {
+                put_u64(&mut p, r);
+            }
+            p
+        }),
     };
     let mut body = Vec::with_capacity(2 + payload.len());
     body.push(WIRE_VERSION);
@@ -312,6 +439,78 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
             }
             Frame::ShardOut(ShardOutMsg { round, shard, wall_ns, estimates })
         }
+        TYPE_SHARD_ASSIGN => {
+            let shard = r.u32()?;
+            let lo = r.u32()?;
+            let hi = r.u32()?;
+            let config_fnv = r.u32()?;
+            Frame::ShardAssign(ShardAssignMsg { shard, lo, hi, config_fnv })
+        }
+        TYPE_SHARD_READY => {
+            let shard = r.u32()?;
+            let config_fnv = r.u32()?;
+            Frame::ShardReady(ShardReadyMsg { shard, config_fnv })
+        }
+        TYPE_SHARD_WORK => {
+            let round = r.u64()?;
+            let shard = r.u32()?;
+            let lo = r.u32()?;
+            let span = r.u32()?;
+            let shard_seed = r.u64()?;
+            let cohort = r.u32()? as usize;
+            // Bound both vectors by the actual payload before allocating
+            // (u128 math: span × cohort × 8 can overflow u64 for hostile
+            // headers).
+            let need = (cohort as u128) * 8 + (span as u128) * (cohort as u128) * 8;
+            if ((r.b.len() - r.at) as u128) != need {
+                return Err(WireError::BadPayload { frame_type: ty, len: r.b.len() });
+            }
+            let mut client_round_seeds = Vec::with_capacity(cohort);
+            for _ in 0..cohort {
+                client_round_seeds.push(r.u64()?);
+            }
+            let nvals = span as usize * cohort;
+            let mut values = Vec::with_capacity(nvals);
+            for _ in 0..nvals {
+                values.push(f64::from_bits(r.u64()?));
+            }
+            Frame::ShardWork(ShardWorkMsg {
+                round,
+                shard,
+                lo,
+                span,
+                shard_seed,
+                client_round_seeds,
+                values,
+            })
+        }
+        TYPE_SHARD_POOL => {
+            let round = r.u64()?;
+            let shard = r.u32()?;
+            let lo = r.u32()?;
+            let span = r.u32()?;
+            let participants = r.u32()?;
+            let round_seed = r.u64()?;
+            let count = r.u32()? as usize;
+            // Same overflow-safe guard as ShardWork: on 32-bit targets a
+            // hostile count would wrap `count * 8` before the check.
+            if ((r.b.len() - r.at) as u128) != (count as u128) * 8 {
+                return Err(WireError::BadPayload { frame_type: ty, len: r.b.len() });
+            }
+            let mut pool = Vec::with_capacity(count);
+            for _ in 0..count {
+                pool.push(r.u64()?);
+            }
+            Frame::ShardPool(ShardPoolMsg {
+                round,
+                shard,
+                lo,
+                span,
+                participants,
+                round_seed,
+                pool,
+            })
+        }
         other => return Err(WireError::BadType(other)),
     };
     r.done()?;
@@ -342,7 +541,7 @@ mod tests {
     }
 
     fn gen_frame(g: &mut Gen) -> Frame {
-        match g.usize_in(0, 4) {
+        match g.usize_in(0, 8) {
             0 => Frame::Hello { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
             1 => Frame::Contribute {
                 round: g.seed(),
@@ -353,12 +552,48 @@ mod tests {
             },
             2 => Frame::Drop { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
             3 => Frame::Commit { round: g.seed(), participants: g.u64_below(1 << 20) as u32 },
-            _ => Frame::ShardOut(ShardOutMsg {
+            4 => Frame::ShardOut(ShardOutMsg {
                 round: g.seed(),
                 shard: g.u64_below(256) as u32,
                 wall_ns: g.seed(),
                 estimates: (0..g.usize_in(0, 16)).map(|_| g.f64_unit() * 1e6).collect(),
             }),
+            5 => Frame::ShardAssign(ShardAssignMsg {
+                shard: g.u64_below(256) as u32,
+                lo: g.u64_below(1 << 16) as u32,
+                hi: g.u64_below(1 << 16) as u32,
+                config_fnv: g.u64_below(u32::MAX as u64) as u32,
+            }),
+            6 => Frame::ShardReady(ShardReadyMsg {
+                shard: g.u64_below(256) as u32,
+                config_fnv: g.u64_below(u32::MAX as u64) as u32,
+            }),
+            7 => {
+                let cohort = g.usize_in(1, 6);
+                let span = g.usize_in(1, 4);
+                Frame::ShardWork(ShardWorkMsg {
+                    round: g.seed(),
+                    shard: g.u64_below(256) as u32,
+                    lo: g.u64_below(1 << 10) as u32,
+                    span: span as u32,
+                    shard_seed: g.seed(),
+                    client_round_seeds: g.vec_below(u64::MAX, cohort),
+                    values: (0..span * cohort).map(|_| g.f64_unit()).collect(),
+                })
+            }
+            _ => {
+                let span = g.usize_in(1, 3);
+                let per_instance = g.usize_in(0, 8);
+                Frame::ShardPool(ShardPoolMsg {
+                    round: g.seed(),
+                    shard: g.u64_below(256) as u32,
+                    lo: g.u64_below(1 << 10) as u32,
+                    span: span as u32,
+                    participants: g.u64_below(1 << 16) as u32,
+                    round_seed: g.seed(),
+                    pool: g.vec_below(u64::MAX, span * per_instance),
+                })
+            }
         }
     }
 
@@ -443,6 +678,48 @@ mod tests {
         let mut bytes = encode_frame(&f);
         // share-count field sits after len(4) + ver(1) + type(1) + round(8) + client(4)
         bytes[18] = 200;
+        let total = bytes.len();
+        let crc = fnv1a32(&bytes[4..total - 4]);
+        bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(WireError::BadPayload { .. })));
+    }
+
+    #[test]
+    fn shard_work_counts_must_match_payload() {
+        // A ShardWork frame claiming a larger cohort than its payload
+        // carries must be rejected before any allocation of the claimed
+        // size (same screen the Contribute frame has).
+        let f = Frame::ShardWork(ShardWorkMsg {
+            round: 1,
+            shard: 0,
+            lo: 0,
+            span: 2,
+            shard_seed: 9,
+            client_round_seeds: vec![1, 2, 3],
+            values: vec![0.5; 6],
+        });
+        let mut bytes = encode_frame(&f);
+        // cohort field sits after len(4) + ver(1) + type(1) + round(8) +
+        // shard(4) + lo(4) + span(4) + shard_seed(8)
+        bytes[34] = 200;
+        let total = bytes.len();
+        let crc = fnv1a32(&bytes[4..total - 4]);
+        bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(WireError::BadPayload { .. })));
+
+        let f = Frame::ShardPool(ShardPoolMsg {
+            round: 1,
+            shard: 0,
+            lo: 0,
+            span: 1,
+            participants: 2,
+            round_seed: 3,
+            pool: vec![7; 4],
+        });
+        let mut bytes = encode_frame(&f);
+        // count field sits after len(4) + ver(1) + type(1) + round(8) +
+        // shard(4) + lo(4) + span(4) + participants(4) + round_seed(8)
+        bytes[38] = 200;
         let total = bytes.len();
         let crc = fnv1a32(&bytes[4..total - 4]);
         bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());

@@ -1,0 +1,233 @@
+//! Integration: multi-host shard execution end-to-end — backend
+//! bit-identity (in-process vs in-memory channels vs real TCP sockets),
+//! the shard barrier's straggler/retry behavior under half-open links and
+//! a killed-and-restarted shard server, and the Theorem 1 error bound
+//! over survivors when a shard must be retried mid-round. Pure Rust.
+
+use cloak_agg::cluster::{
+    cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts, TcpShardHost,
+};
+use cloak_agg::engine::{
+    DerivedClientSeeds, Engine, EngineConfig, RoundInput, ShardBackendError,
+};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+
+fn exact_plan(n: usize) -> ProtocolPlan {
+    ProtocolPlan::exact_secure_agg(n, 100, 8)
+}
+
+fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+        .collect()
+}
+
+/// SimNet that deterministically loses exactly the first send — the
+/// "work frame lost once" fault for retry tests.
+fn drop_first_net(seed: u64) -> SimNet {
+    SimNet::new(SimNetConfig::new(seed).with_drop_first(1))
+}
+
+/// Spawn one healthy TCP shard host per shard of `cfg`.
+fn spawn_hosts(cfg: &EngineConfig) -> Vec<TcpShardHost> {
+    (0..cluster_layout(cfg).0)
+        .map(|_| TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default()).expect("bind host"))
+        .collect()
+}
+
+fn tcp_cluster(cfg: &EngineConfig, seed: u64) -> (ClusterEngine, Vec<TcpShardHost>) {
+    let hosts = spawn_hosts(cfg);
+    let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
+    let backend = RemoteShardBackend::over_tcp(cfg, &addrs).expect("tcp backend");
+    (ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), hosts)
+}
+
+#[test]
+fn fixed_seed_round_bit_identical_across_backends() {
+    // The ISSUE acceptance scenario: for S ∈ {1, 4}, the same fixed-seed
+    // round through InProcess, Remote(Loopback) and Remote(TcpStream)
+    // backends is bit-identical to the in-process Engine — including a
+    // second round, so round-id advance stays in lockstep too.
+    let (n, d, seed) = (24usize, 8usize, 4242u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    for shards in [1usize, 4] {
+        let cfg = EngineConfig::new(exact_plan(n), d).with_shards(shards);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let mut in_process = ClusterEngine::in_process(cfg.clone(), seed);
+        let mut loopback =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let (mut tcp, hosts) = tcp_cluster(&cfg, seed);
+        for round in 0..2u64 {
+            let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            for (label, cluster) in
+                [("inprocess", &mut in_process), ("loopback", &mut loopback), ("tcp", &mut tcp)]
+            {
+                let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+                assert_eq!(
+                    got.estimates, want.estimates,
+                    "S={shards} round={round} backend={label} must be bit-identical"
+                );
+                assert_eq!(got.round_id, round);
+                assert_eq!(got.participants, n);
+            }
+        }
+        drop(tcp);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+}
+
+#[test]
+fn streaming_round_bit_identical_across_backends() {
+    // Same property on the streaming path: pre-cloaked survivor pools
+    // scattered to shards reproduce Engine::run_round_streaming exactly.
+    let (n, d, seed) = (30usize, 8usize, 77u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let who: Vec<usize> = (0..n).filter(|i| i % 5 != 1).collect();
+    for shards in [1usize, 4] {
+        let cfg = EngineConfig::new(exact_plan(n), d).with_shards(shards);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let m = cfg.plan.num_messages;
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = engine
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+
+        let mut loopback =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let (mut tcp, hosts) = tcp_cluster(&cfg, seed);
+        let mut in_process = ClusterEngine::in_process(cfg.clone(), seed);
+        for (label, cluster) in
+            [("inprocess", &mut in_process), ("loopback", &mut loopback), ("tcp", &mut tcp)]
+        {
+            let got = cluster.run_round_streaming(&pools, who.len()).unwrap();
+            assert_eq!(
+                got.estimates, want.estimates,
+                "S={shards} backend={label} streaming must be bit-identical"
+            );
+            assert_eq!(got.participants, who.len());
+        }
+        drop(tcp);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+}
+
+#[test]
+fn tcp_shard_killed_and_restarted_mid_round_completes() {
+    // The ISSUE acceptance scenario: 4 shard servers on localhost TCP,
+    // one of which crashes after the handshake (its first connection dies
+    // the moment the work frame arrives). The barrier times out on the
+    // straggler, reconnects — the host accepts a FRESH ShardServer, i.e.
+    // a restarted shard — re-handshakes, resends the work, and the round
+    // completes with a sum bit-identical to the in-process engine.
+    let (n, d, seed) = (24usize, 8usize, 31u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let cfg = EngineConfig::new(exact_plan(n), d).with_shards(4);
+    let mut engine = Engine::new(cfg.clone(), seed);
+    let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap().estimates;
+
+    let hosts: Vec<TcpShardHost> = (0..4)
+        .map(|s| {
+            let opts = if s == 2 {
+                ServeOpts { die_after_frames: Some(1) } // dies on the work frame
+            } else {
+                ServeOpts::default()
+            };
+            TcpShardHost::spawn(cfg.clone(), 0, opts).expect("bind host")
+        })
+        .collect();
+    let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
+    let backend = RemoteShardBackend::over_tcp(&cfg, &addrs)
+        .expect("tcp backend")
+        .with_tuning(ClusterTuning { straggler_timeout_s: 1.0, ..ClusterTuning::default() });
+    let mut cluster = ClusterEngine::new(cfg, seed, Box::new(backend));
+    let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+    assert_eq!(got.estimates, want, "restarted shard must not change the sum");
+    assert!(cluster.shard_retries() >= 1, "the crash must have cost at least one resend");
+    drop(cluster);
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+#[test]
+fn half_open_shard_link_hits_straggler_timeout_then_shard_lost() {
+    // Satellite: SimNet's disconnect/half-open fault (peer silent after k
+    // frames) drives the shard-barrier straggler path. The handshake
+    // passes (frame 1), the work frame and every resend vanish, and after
+    // the retry budget the round fails with ShardLost — without consuming
+    // the round id.
+    let (n, d, seed) = (12usize, 6usize, 13u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let cfg = EngineConfig::new(exact_plan(n), d).with_shards(3);
+    let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+        let down: Box<dyn Channel> = if s == 2 {
+            // assign gets through, everything after is swallowed
+            Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+        } else {
+            Box::new(Loopback::new())
+        };
+        (down, Box::new(Loopback::new()) as _)
+    })
+    .with_tuning(ClusterTuning { max_retries: 2, ..ClusterTuning::default() });
+    let mut cluster = ClusterEngine::new(cfg, seed, Box::new(backend));
+    let err = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap_err();
+    assert_eq!(err, ShardBackendError::ShardLost { shard: 2, attempts: 3 });
+    assert_eq!(cluster.next_round(), 0, "failed barrier must not consume the round id");
+}
+
+#[test]
+fn thm1_error_bound_holds_over_survivors_with_a_retried_shard() {
+    // Satellite: Theorem 1 regime, 10% of the cohort dropped, and one
+    // shard's work frame lost once so the barrier must retry it — the
+    // streamed estimate still lands within the plan's expected-error
+    // bound against the SURVIVING cohort's true sum (same max-of-rounds
+    // headroom the transport tests use).
+    let n = 400;
+    let d = 4;
+    let plan = ProtocolPlan::theorem1(n, 1.0, 1e-4).unwrap();
+    let bound = plan.error_bound();
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(19);
+    let who: Vec<usize> = (0..n).filter(|i| i % 10 != 3).collect();
+    let cfg = EngineConfig::new(plan, d).with_shards(4);
+    let engine = Engine::new(cfg.clone(), 19);
+    let m = cfg.plan.num_messages;
+    let mut pools = vec![Vec::new(); d];
+    for &i in &who {
+        let shares = engine
+            .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+            .unwrap();
+        for (j, pool) in pools.iter_mut().enumerate() {
+            pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+        }
+    }
+    let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+        let down: Box<dyn Channel> =
+            if s == 1 { Box::new(drop_first_net(7)) } else { Box::new(Loopback::new()) };
+        (down, Box::new(Loopback::new()) as _)
+    });
+    let mut cluster = ClusterEngine::new(cfg, 19, Box::new(backend));
+    let got = cluster.run_round_streaming(&pools, who.len()).unwrap();
+    assert!(cluster.shard_retries() >= 1, "the dropped frame must have cost a resend");
+    assert_eq!(got.participants, who.len());
+    for j in 0..d {
+        let truth: f64 = who.iter().map(|&i| inputs[i][j]).sum();
+        let err = (got.estimates[j] - truth).abs();
+        assert!(err < 6.0 * bound + 1.0, "instance {j}: err={err} bound={bound}");
+    }
+}
