@@ -1,0 +1,99 @@
+//! ELASTIC: full-round throughput across rebalance policy × churn — what
+//! the control plane costs, and what it saves once a shard dies.
+//!
+//!     cargo bench --bench elastic_round
+//!
+//! Policies: `static` (dead shard keeps its range — every round pays the
+//! retry budget plus a takeover), `even-split` and `proportional` (the
+//! dead shard is parked after its first loss, so churn rounds cost the
+//! same as healthy ones). Churn: `none` (all links healthy — the control
+//! plane's overhead over the plain barrier) and `dead-shard` (one link
+//! silent past the retry budget from its first work frame). Every case is
+//! gate-checked bit-identical to the in-process `Engine` before the timer
+//! starts — takeover and re-ranging move wall-clock, never bits. Results
+//! land in BENCH_elastic_round.json (benchkit schema, `shards` axis
+//! populated).
+
+use std::time::Duration;
+
+use cloak_agg::cluster::{ClusterEngine, ClusterTuning, RemoteShardBackend};
+use cloak_agg::control::{
+    ElasticController, ElasticTuning, EvenSplit, Proportional, RebalancePolicy, StaticRanges,
+};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+use cloak_agg::util::benchkit::Bench;
+
+fn main() {
+    let (n, d, s, seed) = (96usize, 32usize, 4usize, 9u64);
+    let victim = s / 2;
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..d).map(|j| ((i * 3 + j * 11) % 100) as f64 / 100.0).collect())
+        .collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let cfg = EngineConfig::new(plan, d).with_shards(s);
+
+    // The reference every case must reproduce bit-exactly.
+    let mut reference = Engine::new(cfg.clone(), seed);
+    let want =
+        reference.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("reference").estimates;
+
+    let mut b = Bench::new("elastic_round").with_window(
+        Duration::from_millis(50),
+        Duration::from_millis(250),
+        5,
+    );
+
+    let make_policy = |name: &str| -> Box<dyn RebalancePolicy> {
+        match name {
+            "static" => Box::new(StaticRanges),
+            "even-split" => Box::new(EvenSplit),
+            _ => Box::new(Proportional::default()),
+        }
+    };
+
+    for policy_name in ["static", "even-split", "proportional"] {
+        for churn in ["none", "dead-shard"] {
+            let backend = RemoteShardBackend::over_channels(&cfg, |link| {
+                let down: Box<dyn Channel> = if churn == "dead-shard" && link == victim {
+                    // Handshake delivered, every work frame swallowed: the
+                    // link is dead past the retry budget from round 0 on.
+                    Box::new(SimNet::new(SimNetConfig::new(seed).with_silent_after(1)))
+                } else {
+                    Box::new(Loopback::new())
+                };
+                (down, Box::new(Loopback::new()) as _)
+            })
+            .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+            let controller = ElasticController::new(backend, make_policy(policy_name))
+                .with_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() });
+            let mut cluster = ClusterEngine::new(cfg.clone(), seed, Box::new(controller));
+
+            // Gate: the elastic round must reproduce the engine bit-exactly
+            // before this case's numbers mean anything — including through
+            // the takeover the dead-shard churn forces.
+            let gate = cluster
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("gate round");
+            assert_eq!(gate.estimates, want, "policy={policy_name} churn={churn} diverged");
+            if churn == "dead-shard" {
+                assert!(cluster.shard_takeovers() >= 1, "churn case must take over");
+            }
+
+            let name = format!("round n={n} d={d} S={s} policy={policy_name} churn={churn}");
+            b.run_sharded(&name, (n * d * m) as f64, s, || {
+                cluster
+                    .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                    .expect("elastic round")
+                    .estimates[0]
+            });
+        }
+    }
+
+    b.report();
+    b.write_json("BENCH_elastic_round.json").expect("write BENCH_elastic_round.json");
+    println!("\nwrote BENCH_elastic_round.json");
+}

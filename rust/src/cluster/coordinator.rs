@@ -23,20 +23,37 @@
 //! it. Work units carry every seed they need, so re-executions are
 //! bit-identical and duplicates harmless (the gather keeps the first
 //! matching reply and skips stale ones). Only a shard that stays silent
-//! through [`ClusterTuning::max_retries`] resends fails the round
-//! ([`ShardBackendError::ShardLost`]).
+//! through [`ClusterTuning::max_retries`] resends fails its unit — which
+//! the plain [`ShardBackend`] impl surfaces as
+//! [`ShardBackendError::ShardLost`], and the elastic control plane
+//! ([`crate::control`]) instead absorbs by re-scattering the lost range
+//! to survivors ([`RemoteShardBackend::run_attempts`] is that seam: it
+//! reports per-unit outcomes instead of failing the whole round).
+//!
+//! # Placement is per-work, not per-link
+//!
+//! A link is a *transport* to one shard host; which instance range that
+//! host executes is decided per round by whoever builds the work
+//! ([`ClusterEngine`] via [`ShardBackend::plan_ranges`]). The scatter
+//! handshakes each link for exactly the assignment its work unit needs
+//! — `(shard identity, [lo, hi))` — caching acks per connection, so
+//! re-ranging between rounds and takeover slices mid-round are ordinary
+//! handshakes, never config changes (see the identity/placement notes in
+//! [`super::shard_server`]).
 
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    validate_pools, ClientSeeds, EngineConfig, InProcessBackend, RoundInput, RoundResult,
-    ShardBackend, ShardBackendError, ShardRoundWork, SHUFFLE_SEED_TAG,
+    ranges_tile, validate_pools, ClientSeeds, EngineConfig, InProcessBackend, RoundInput,
+    RoundResult, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork,
+    SHUFFLE_SEED_TAG,
 };
 use crate::metrics::Registry as MetricsRegistry;
 use crate::rng::derive_seed;
 use crate::transport::channel::{Channel, Loopback};
 use crate::transport::wire::{
-    decode_frame, encode_frame, Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg, ShardWorkMsg,
+    decode_frame, encode_frame, Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg,
+    ShardRetireMsg, ShardWorkMsg,
 };
 use crate::transport::{CostModel, Envelope, TrafficStats};
 
@@ -78,12 +95,28 @@ enum LinkKind {
 }
 
 struct ShardLink {
+    /// Link identity — index into the backend's link table; also the
+    /// shard id [`ClusterEngine`] executes this link's own range under.
     shard: u32,
-    lo: u32,
-    hi: u32,
-    /// Handshake completed on the current connection/server.
-    ready: bool,
+    /// Assignments `(shard_id, lo, hi)` acked on the current
+    /// connection/server session — plural, because a survivor holds its
+    /// own placement plus takeover slices during a takeover round.
+    ready: Vec<(u32, u32, u32)>,
     kind: LinkKind,
+}
+
+/// Per-unit outcome of one [`RemoteShardBackend::run_attempts`] barrier
+/// pass — the elastic control plane's raw material.
+pub struct ShardAttempt {
+    /// Link the unit ran on.
+    pub link: usize,
+    /// The work unit, returned so callers can re-slice it on loss.
+    pub work: ShardRoundWork,
+    /// The shard's output, or `None` when the link stayed silent through
+    /// the whole retry budget.
+    pub out: Option<ShardOutMsg>,
+    /// Send attempts consumed (1 = first try succeeded).
+    pub attempts: usize,
 }
 
 /// [`ShardBackend`] over real links: wire frames, faults, stragglers,
@@ -100,19 +133,10 @@ pub struct RemoteShardBackend {
 
 impl RemoteShardBackend {
     fn assemble(cfg: &EngineConfig, kinds: Vec<LinkKind>, label: &'static str) -> Self {
-        let (_, ranges) = cluster_layout(cfg);
-        debug_assert_eq!(ranges.len(), kinds.len());
-        let links = ranges
-            .iter()
-            .zip(kinds)
+        let links = kinds
+            .into_iter()
             .enumerate()
-            .map(|(s, (&(lo, hi), kind))| ShardLink {
-                shard: s as u32,
-                lo: lo as u32,
-                hi: hi as u32,
-                ready: false,
-                kind,
-            })
+            .map(|(s, kind)| ShardLink { shard: s as u32, ready: Vec::new(), kind })
             .collect();
         RemoteShardBackend {
             links,
@@ -199,6 +223,17 @@ impl RemoteShardBackend {
         self
     }
 
+    pub fn tuning(&self) -> ClusterTuning {
+        self.tuning
+    }
+
+    /// Shard links this backend speaks to (fixed at construction; the
+    /// *ranges* they execute are per-round — see
+    /// [`ShardBackend::plan_ranges`]).
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
     fn timeout(&self) -> Duration {
         Duration::from_secs_f64(self.tuning.straggler_timeout_s.max(1e-3))
     }
@@ -218,17 +253,14 @@ impl RemoteShardBackend {
     }
 
     /// Drop whatever connection/handshake state a failed attempt left.
-    /// In-memory servers keep their assignment (the "process" is alive,
+    /// In-memory servers keep their assignments (the "process" is alive,
     /// only frames were lost); a TCP link reconnects and re-handshakes,
     /// because the far side may be a freshly restarted server.
     fn reset_link(&mut self, i: usize) {
         let link = &mut self.links[i];
-        let is_tcp = matches!(link.kind, LinkKind::Tcp { .. });
         if let LinkKind::Tcp { chan, .. } = &mut link.kind {
             *chan = None;
-        }
-        if is_tcp {
-            link.ready = false;
+            link.ready.clear();
         }
     }
 
@@ -258,7 +290,7 @@ impl RemoteShardBackend {
                 if chan.is_none() {
                     // A failed connect is not fatal here: the gather's
                     // timeout turns it into a retry, and only an exhausted
-                    // retry budget fails the round.
+                    // retry budget fails the unit.
                     if let Ok(c) = connect(poll) {
                         *chan = Some(c);
                     }
@@ -272,13 +304,13 @@ impl RemoteShardBackend {
                 }
             }
         }
-        // A TCP link without a live connection cannot have a valid
-        // handshake either: the next connection reaches a FRESH
-        // ShardServer with no assignment, so force a re-handshake instead
+        // A TCP link without a live connection cannot have valid
+        // handshakes either: the next connection reaches a FRESH
+        // ShardServer with no assignments, so force a re-handshake instead
         // of letting un-assigned work be silently rejected into a full
         // straggler timeout.
         if let LinkKind::Tcp { chan: None, .. } = &self.links[i].kind {
-            self.links[i].ready = false;
+            self.links[i].ready.clear();
         }
         Ok(())
     }
@@ -343,14 +375,23 @@ impl RemoteShardBackend {
         }
     }
 
-    /// Handshake link `i` if its current connection hasn't been yet.
-    fn ensure_ready(&mut self, i: usize) -> Result<(), ShardBackendError> {
-        if self.links[i].ready {
-            return Ok(());
+    /// Handshake link `i` so its current connection holds the placement
+    /// `(shard_id, [lo, hi))`. `Ok(true)` = acked (possibly cached from an
+    /// earlier handshake on this connection); `Ok(false)` = the link
+    /// stayed silent through the whole retry budget. Only a config
+    /// mismatch is a hard error — placement changes never are.
+    pub fn ensure_assigned(
+        &mut self,
+        i: usize,
+        shard_id: u32,
+        lo: u32,
+        hi: u32,
+    ) -> Result<bool, ShardBackendError> {
+        if self.links[i].ready.contains(&(shard_id, lo, hi)) {
+            return Ok(true);
         }
-        let (shard, lo, hi) = (self.links[i].shard, self.links[i].lo, self.links[i].hi);
         let frame = encode_frame(&Frame::ShardAssign(ShardAssignMsg {
-            shard,
+            shard: shard_id,
             lo,
             hi,
             config_fnv: self.fingerprint,
@@ -363,8 +404,8 @@ impl RemoteShardBackend {
             let deadline = Instant::now() + self.timeout();
             let reply = loop {
                 match self.next_frame(i, deadline)? {
-                    Some(Frame::ShardReady(r)) => break Some(r),
-                    Some(_) => continue, // stale frames from a prior round
+                    Some(Frame::ShardReady(r)) if r.shard == shard_id => break Some(r),
+                    Some(_) => continue, // stale frames from prior rounds/acks
                     None => break None,
                 }
             };
@@ -372,17 +413,20 @@ impl RemoteShardBackend {
                 Some(r) => {
                     if r.config_fnv != self.fingerprint {
                         return Err(ShardBackendError::ConfigMismatch {
-                            shard,
+                            shard: shard_id,
                             want: self.fingerprint,
                             got: r.config_fnv,
                         });
                     }
-                    self.links[i].ready = true;
-                    return Ok(());
+                    // The server replaces placements by shard id; mirror it.
+                    let ready = &mut self.links[i].ready;
+                    ready.retain(|&(s, _, _)| s != shard_id);
+                    ready.push((shard_id, lo, hi));
+                    return Ok(true);
                 }
                 None => {
                     if attempts > self.tuning.max_retries {
-                        return Err(ShardBackendError::ShardLost { shard, attempts });
+                        return Ok(false);
                     }
                     self.pace_retry(i, attempt_start);
                     self.retries += 1;
@@ -394,18 +438,34 @@ impl RemoteShardBackend {
         }
     }
 
-    /// Wait for link `i`'s `ShardOut` for `round`, skipping duplicates and
-    /// stale frames. `None` = straggler (nothing within the timeout).
-    fn gather(&mut self, i: usize, round: u64) -> Result<Option<ShardOutMsg>, ShardBackendError> {
-        let shard = self.links[i].shard;
-        let span = (self.links[i].hi - self.links[i].lo) as usize;
+    /// Fire-and-forget placement drop on link `i` — elastic hygiene after
+    /// a takeover slice or a round-boundary re-range. No ack is awaited
+    /// (see [`ShardRetireMsg`]): a lost retire leaves only a harmless
+    /// stale placement.
+    pub fn retire(&mut self, i: usize, shard_id: u32) -> Result<(), ShardBackendError> {
+        let frame = encode_frame(&Frame::ShardRetire(ShardRetireMsg { shard: shard_id }));
+        self.transmit(i, frame)?;
+        self.links[i].ready.retain(|&(s, _, _)| s != shard_id);
+        Ok(())
+    }
+
+    /// Wait for link `i`'s `ShardOut` for `(round, shard_id)`, skipping
+    /// duplicates and stale frames. `None` = straggler (nothing within the
+    /// timeout).
+    fn gather_on(
+        &mut self,
+        i: usize,
+        round: u64,
+        shard_id: u32,
+        span: usize,
+    ) -> Result<Option<ShardOutMsg>, ShardBackendError> {
         let deadline = Instant::now() + self.timeout();
         loop {
             match self.next_frame(i, deadline)? {
-                Some(Frame::ShardOut(msg)) if msg.round == round && msg.shard == shard => {
+                Some(Frame::ShardOut(msg)) if msg.round == round && msg.shard == shard_id => {
                     if msg.estimates.len() != span {
                         return Err(ShardBackendError::Merge {
-                            shard,
+                            shard: shard_id,
                             detail: format!(
                                 "{} estimates for an instance span of {span}",
                                 msg.estimates.len()
@@ -419,6 +479,101 @@ impl RemoteShardBackend {
             }
         }
     }
+
+    /// Run one barrier pass over explicitly-targeted work units —
+    /// `(link, work)` pairs — with the full straggler/retry discipline,
+    /// reporting **per-unit outcomes** instead of failing the round on the
+    /// first lost shard. This is the elastic control plane's seam: the
+    /// plain [`ShardBackend`] impl turns any lost unit into
+    /// [`ShardBackendError::ShardLost`], while
+    /// [`ElasticController`](crate::control::ElasticController) re-slices
+    /// lost units across survivors. Hard errors (config mismatch, a
+    /// mis-shaped reply) still fail the pass.
+    ///
+    /// Target each link **at most once per pass**: the per-unit gather
+    /// discards non-matching frames, so a second unit's in-flight reply
+    /// on the same link would be thrown away as stale and cost spurious
+    /// retries (and, over TCP, a mid-gather reconnect re-handshakes only
+    /// the unit being gathered). Units for the same link belong in
+    /// separate passes.
+    pub fn run_attempts(
+        &mut self,
+        batch: Vec<(usize, ShardRoundWork)>,
+    ) -> Result<Vec<ShardAttempt>, ShardBackendError> {
+        struct Pending {
+            link: usize,
+            work: ShardRoundWork,
+            frame: Vec<u8>,
+            sent: bool,
+            attempts: usize,
+        }
+        let mut pend = Vec::with_capacity(batch.len());
+        for (link, work) in batch {
+            if link >= self.links.len() {
+                return Err(ShardBackendError::Merge {
+                    shard: work.shard(),
+                    detail: format!("work targets link {link} of {}", self.links.len()),
+                });
+            }
+            // Zero-copy encode: move the payload into the frame, encode,
+            // move it back out — the work stays available for re-slicing.
+            let f = work.into_frame();
+            let frame = encode_frame(&f);
+            let work = ShardRoundWork::from_frame(f).expect("work frame shape");
+            pend.push(Pending { link, work, frame, sent: false, attempts: 1 });
+        }
+
+        // Scatter: every unit handshaken and sent before we wait on
+        // anyone, so remote shards compute concurrently.
+        for p in &mut pend {
+            let (shard, lo) = (p.work.shard(), p.work.lo());
+            match self.ensure_assigned(p.link, shard, lo, lo + p.work.span())? {
+                true => {
+                    self.transmit(p.link, p.frame.clone())?;
+                    p.sent = true;
+                }
+                false => {
+                    // Handshake budget exhausted — the unit is already
+                    // lost; don't burn the gather budget on it too.
+                    p.attempts = self.tuning.max_retries + 1;
+                }
+            }
+        }
+
+        // Gather with per-unit retry.
+        let mut outs = Vec::with_capacity(pend.len());
+        for mut p in pend {
+            let (round, shard, span) = (p.work.round(), p.work.shard(), p.work.span() as usize);
+            let mut attempt_start = Instant::now();
+            let out = loop {
+                if !p.sent {
+                    break None;
+                }
+                if let Some(msg) = self.gather_on(p.link, round, shard, span)? {
+                    break Some(msg);
+                }
+                if p.attempts > self.tuning.max_retries {
+                    break None;
+                }
+                self.pace_retry(p.link, attempt_start);
+                p.attempts += 1;
+                attempt_start = Instant::now();
+                self.retries += 1;
+                // A merely-slow shard keeps its connection (and its
+                // in-progress execution); only a down link is rebuilt.
+                if self.link_is_down(p.link) {
+                    self.reset_link(p.link);
+                    let lo = p.work.lo();
+                    if !self.ensure_assigned(p.link, shard, lo, lo + p.work.span())? {
+                        break None;
+                    }
+                }
+                self.transmit(p.link, p.frame.clone())?;
+            };
+            outs.push(ShardAttempt { link: p.link, work: p.work, out, attempts: p.attempts });
+        }
+        Ok(outs)
+    }
 }
 
 impl ShardBackend for RemoteShardBackend {
@@ -426,71 +581,22 @@ impl ShardBackend for RemoteShardBackend {
         &mut self,
         work: Vec<ShardRoundWork>,
     ) -> Result<Vec<ShardOutMsg>, ShardBackendError> {
-        if work.len() != self.links.len() {
-            return Err(ShardBackendError::Merge {
-                shard: 0,
-                detail: format!("{} work units for {} links", work.len(), self.links.len()),
-            });
-        }
-        for (i, w) in work.iter().enumerate() {
-            let link = &self.links[i];
-            if w.shard() != link.shard || w.lo() != link.lo || w.lo() + w.span() != link.hi {
-                return Err(ShardBackendError::Merge {
-                    shard: link.shard,
-                    detail: format!(
-                        "work (shard {}, [{}, {})) does not match link (shard {}, [{}, {}))",
-                        w.shard(),
-                        w.lo(),
-                        w.lo() + w.span(),
-                        link.shard,
-                        link.lo,
-                        link.hi
-                    ),
-                });
-            }
-        }
-        let round = work.first().map(|w| w.round()).unwrap_or(0);
-        // Serialize by moving the work's payload vectors into the frames —
-        // the only lasting copy is the encoded bytes themselves (recloned
-        // per transmit so the retry path can resend verbatim).
-        let frames: Vec<Vec<u8>> =
-            work.into_iter().map(|w| encode_frame(&w.into_frame())).collect();
-
-        // Scatter: every shard gets its work before we wait on anyone, so
-        // remote shards compute concurrently.
-        for i in 0..self.links.len() {
-            self.ensure_ready(i)?;
-            self.transmit(i, frames[i].clone())?;
-        }
-
-        // Gather with per-shard retry.
-        let mut outs = Vec::with_capacity(frames.len());
-        for i in 0..self.links.len() {
-            let mut attempts = 1usize;
-            let mut attempt_start = Instant::now();
-            let msg = loop {
-                if let Some(msg) = self.gather(i, round)? {
-                    break msg;
-                }
-                if attempts > self.tuning.max_retries {
+        // Without a control plane, a work unit's shard id IS its link
+        // index ([`ClusterEngine`] builds work that way).
+        let batch: Vec<(usize, ShardRoundWork)> =
+            work.into_iter().map(|w| (w.shard() as usize, w)).collect();
+        let attempts = self.run_attempts(batch)?;
+        let mut outs = Vec::with_capacity(attempts.len());
+        for a in attempts {
+            match a.out {
+                Some(o) => outs.push(o),
+                None => {
                     return Err(ShardBackendError::ShardLost {
-                        shard: self.links[i].shard,
-                        attempts,
-                    });
+                        shard: a.work.shard(),
+                        attempts: a.attempts,
+                    })
                 }
-                self.pace_retry(i, attempt_start);
-                attempts += 1;
-                attempt_start = Instant::now();
-                self.retries += 1;
-                // A merely-slow shard keeps its connection (and its
-                // in-progress execution); only a down link is rebuilt.
-                if self.link_is_down(i) {
-                    self.reset_link(i);
-                    self.ensure_ready(i)?;
-                }
-                self.transmit(i, frames[i].clone())?;
-            };
-            outs.push(msg);
+            }
         }
         Ok(outs)
     }
@@ -512,16 +618,20 @@ impl ShardBackend for RemoteShardBackend {
 /// [`Engine`](crate::engine::Engine), with the per-shard work executed by
 /// a pluggable [`ShardBackend`] and merged at the barrier. At the same
 /// `(seed, config, inputs)` every backend — in-process, in-memory
-/// channels, TCP — produces bit-identical estimates, because all round
-/// randomness derives from seeds carried in the work units.
+/// channels, TCP, elastic — produces bit-identical estimates, because all
+/// round randomness derives from seeds carried in the work units and the
+/// analyzer's modular sum is indifferent to which shard executes a range.
 pub struct ClusterEngine {
     cfg: EngineConfig,
+    /// Default (static) layout — what rounds use unless the backend's
+    /// [`ShardBackend::plan_ranges`] re-partitions.
     ranges: Vec<(usize, usize)>,
     backend: Box<dyn ShardBackend>,
     rounds_run: u64,
     shuffle_seed: u64,
     metrics: MetricsRegistry,
     last_retries: u64,
+    last_takeovers: u64,
 }
 
 impl ClusterEngine {
@@ -535,6 +645,7 @@ impl ClusterEngine {
             shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
             metrics: MetricsRegistry::new(),
             last_retries: 0,
+            last_takeovers: 0,
             cfg,
         }
     }
@@ -549,7 +660,7 @@ impl ClusterEngine {
         &self.cfg
     }
 
-    /// Resolved shard count (= number of links/work units per round).
+    /// Resolved shard count (= number of links per round).
     pub fn shards(&self) -> usize {
         self.ranges.len()
     }
@@ -573,8 +684,37 @@ impl ClusterEngine {
         self.backend.retries()
     }
 
+    /// Lost-range takeovers the backend has performed so far (zero unless
+    /// the backend is an elastic controller).
+    pub fn shard_takeovers(&self) -> u64 {
+        self.backend.takeovers()
+    }
+
+    /// Per-shard health, when the backend tracks it (elastic control
+    /// plane); empty otherwise.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.backend.health()
+    }
+
     pub fn backend_label(&self) -> &'static str {
         self.backend.label()
+    }
+
+    /// This round's instance ranges: the backend's re-partition if it has
+    /// one (validated to tile `[0, d)`), else the static layout.
+    fn round_ranges(&mut self, round: u64) -> Result<Vec<(usize, usize)>, ShardBackendError> {
+        let ranges = self.backend.plan_ranges(round, &self.ranges);
+        if ranges.len() != self.ranges.len() || !ranges_tile(&ranges, self.cfg.instances) {
+            return Err(ShardBackendError::Merge {
+                shard: 0,
+                detail: format!(
+                    "backend ranges {ranges:?} do not tile [0, {}) over {} links",
+                    self.cfg.instances,
+                    self.ranges.len()
+                ),
+            });
+        }
+        Ok(ranges)
     }
 
     /// Run one full round — the cluster counterpart of
@@ -592,13 +732,14 @@ impl ClusterEngine {
         let m = self.cfg.plan.num_messages;
         let round = self.rounds_run;
         let t0 = Instant::now();
+        let ranges = self.round_ranges(round)?;
         let round_seed = derive_seed(self.shuffle_seed, round);
         let client_round_seeds: Vec<u64> =
             (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), round)).collect();
-        let work: Vec<ShardRoundWork> = self
-            .ranges
+        let work: Vec<ShardRoundWork> = ranges
             .iter()
             .enumerate()
+            .filter(|(_, &(lo, hi))| hi > lo)
             .map(|(s, &(lo, hi))| {
                 let mut values = Vec::with_capacity((hi - lo) * n);
                 for j in lo..hi {
@@ -619,7 +760,7 @@ impl ClusterEngine {
             .collect();
 
         let outs = self.backend.run_shards(work)?;
-        let estimates = self.merge(round, outs)?;
+        let estimates = self.merge(round, &ranges, outs)?;
         self.rounds_run += 1;
 
         // Client uplink accounting identical to the in-process engine,
@@ -658,11 +799,12 @@ impl ClusterEngine {
         validate_pools(&self.cfg.plan, d, pools, participants)?;
         let round = self.rounds_run;
         let t0 = Instant::now();
+        let ranges = self.round_ranges(round)?;
         let round_seed = derive_seed(self.shuffle_seed, round);
-        let work: Vec<ShardRoundWork> = self
-            .ranges
+        let work: Vec<ShardRoundWork> = ranges
             .iter()
             .enumerate()
+            .filter(|(_, &(lo, hi))| hi > lo)
             .map(|(s, &(lo, hi))| {
                 ShardRoundWork::Pool(ShardPoolMsg {
                     round,
@@ -677,7 +819,7 @@ impl ClusterEngine {
             .collect();
 
         let outs = self.backend.run_shards(work)?;
-        let estimates = self.merge(round, outs)?;
+        let estimates = self.merge(round, &ranges, outs)?;
         self.rounds_run += 1;
 
         let cost = CostModel::default();
@@ -699,20 +841,36 @@ impl ClusterEngine {
         })
     }
 
-    /// Barrier merge: every shard present exactly once, for this round,
-    /// with the right estimate span, concatenated in instance order.
-    fn merge(&self, round: u64, outs: Vec<ShardOutMsg>) -> Result<Vec<f64>, ShardBackendError> {
+    /// Barrier merge: every non-empty range present exactly once, for this
+    /// round, with the right estimate span, concatenated in instance
+    /// order. (`ranges` is this round's tiling — which may differ from the
+    /// static layout under an elastic backend.)
+    fn merge(
+        &self,
+        round: u64,
+        ranges: &[(usize, usize)],
+        outs: Vec<ShardOutMsg>,
+    ) -> Result<Vec<f64>, ShardBackendError> {
         let mut sorted = outs;
         sorted.sort_by_key(|o| o.shard);
-        if sorted.len() != self.ranges.len() {
+        let active: Vec<(usize, usize, usize)> = ranges
+            .iter()
+            .enumerate()
+            .filter(|(_, &(lo, hi))| hi > lo)
+            .map(|(s, &(lo, hi))| (s, lo, hi))
+            .collect();
+        if sorted.len() != active.len() {
             return Err(ShardBackendError::Merge {
                 shard: 0,
-                detail: format!("{} shard outputs for {} shards", sorted.len(), self.ranges.len()),
+                detail: format!(
+                    "{} shard outputs for {} active ranges",
+                    sorted.len(),
+                    active.len()
+                ),
             });
         }
         let mut estimates = Vec::with_capacity(self.cfg.instances);
-        for (s, o) in sorted.iter().enumerate() {
-            let (lo, hi) = self.ranges[s];
+        for (&(s, lo, hi), o) in active.iter().zip(&sorted) {
             if o.shard != s as u32 || o.round != round || o.estimates.len() != hi - lo {
                 return Err(ShardBackendError::Merge {
                     shard: o.shard,
@@ -741,6 +899,9 @@ impl ClusterEngine {
         let retries = self.backend.retries();
         self.metrics.counter("cluster.shard_retries").add(retries - self.last_retries);
         self.last_retries = retries;
+        let takeovers = self.backend.takeovers();
+        self.metrics.counter("cluster.takeovers").add(takeovers - self.last_takeovers);
+        self.last_takeovers = takeovers;
     }
 }
 
@@ -855,6 +1016,57 @@ mod tests {
         let err = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap_err();
         assert_eq!(err, ShardBackendError::ShardLost { shard: 1, attempts: 2 });
         assert_eq!(cluster.next_round(), 0, "a failed barrier must not consume the round id");
+    }
+
+    #[test]
+    fn run_attempts_reports_losses_without_failing_the_pass() {
+        // The elastic seam: one silent link yields a per-unit loss while
+        // the healthy link's unit still completes in the same pass.
+        let (n, d, seed) = (8usize, 4usize, 7u64);
+        let inputs = inputs_for(n, d);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut backend = RemoteShardBackend::over_channels(&cfg, |s| {
+            let down: Box<dyn Channel> = if s == 1 {
+                Box::new(SimNet::new(SimNetConfig::new(1).with_silent_after(0)))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+        let seeds = DerivedClientSeeds::new(seed);
+        let round_seed = derive_seed(derive_seed(seed, SHUFFLE_SEED_TAG), 0);
+        let client_round_seeds: Vec<u64> =
+            (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), 0)).collect();
+        let batch: Vec<(usize, ShardRoundWork)> = [(0usize, 0usize, 2usize), (1, 2, 4)]
+            .iter()
+            .map(|&(s, lo, hi)| {
+                let mut values = Vec::new();
+                for j in lo..hi {
+                    for row in inputs.iter() {
+                        values.push(row[j]);
+                    }
+                }
+                (
+                    s,
+                    ShardRoundWork::Encode(ShardWorkMsg {
+                        round: 0,
+                        shard: s as u32,
+                        lo: lo as u32,
+                        span: (hi - lo) as u32,
+                        shard_seed: derive_seed(round_seed, s as u64),
+                        client_round_seeds: client_round_seeds.clone(),
+                        values,
+                    }),
+                )
+            })
+            .collect();
+        let attempts = backend.run_attempts(batch).unwrap();
+        assert_eq!(attempts.len(), 2);
+        assert!(attempts[0].out.is_some(), "healthy link completes");
+        assert!(attempts[1].out.is_none(), "silent link is a per-unit loss");
+        assert_eq!(attempts[1].attempts, 2, "budget consumed");
+        assert_eq!(attempts[1].work.span(), 2, "lost work returned for re-slicing");
     }
 
     #[test]

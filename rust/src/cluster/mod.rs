@@ -70,9 +70,14 @@
 //! bit-identically), half-open links ([`SimNetConfig::silent_after`]
 //! models a peer that goes silent mid-round), and config drift between
 //! coordinator and shard fleet (fingerprint mismatch fails fast instead
-//! of producing wrong sums). A shard silent past the retry budget fails
-//! the round with [`ShardBackendError::ShardLost`] — the round id is not
-//! consumed, so the caller can re-run against a repaired fleet.
+//! of producing wrong sums). On the plain backend a shard silent past the
+//! retry budget fails the round with [`ShardBackendError::ShardLost`] —
+//! the round id is not consumed, so the caller can re-run against a
+//! repaired fleet. Wrapped in the elastic control plane
+//! ([`crate::control`]), that loss is instead absorbed in-round: the lost
+//! range is re-scattered to surviving shards and the round completes
+//! bit-identically, with the dead shard parked (and periodically
+//! re-offered work) by a rebalance policy at the next round boundary.
 //!
 //! [`SimNetConfig::silent_after`]: crate::transport::channel::SimNetConfig::silent_after
 //! [`ShardBackendError::ShardLost`]: crate::engine::ShardBackendError::ShardLost
@@ -81,7 +86,7 @@ pub mod coordinator;
 pub mod shard_server;
 pub mod tcp;
 
-pub use coordinator::{ClusterEngine, ClusterTuning, RemoteShardBackend};
+pub use coordinator::{ClusterEngine, ClusterTuning, RemoteShardBackend, ShardAttempt};
 pub use shard_server::{config_fingerprint, ShardServer, ShardTelemetry};
 pub use tcp::{ServeOpts, TcpChannel, TcpShardHost};
 

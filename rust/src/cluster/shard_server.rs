@@ -7,10 +7,26 @@
 //! frame, so a server that crashes and restarts mid-round serves a resent
 //! copy of the same work bit-identically — the coordinator's barrier
 //! (see [`super::coordinator`]) leans on exactly this for its retry path.
-//! The only cross-frame state is the *assignment* (which shard id and
-//! instance range this server owns), established by the
-//! `ShardAssign`/`ShardReady` handshake and re-established from scratch
-//! on every fresh connection.
+//!
+//! # Identity vs placement
+//!
+//! The handshake separates two things that must never be conflated:
+//!
+//! * **Identity** — the protocol configuration both sides must agree on
+//!   (plan constants, instance count, mixnet depth), checked via
+//!   [`config_fingerprint`]. Identity is immutable for the life of the
+//!   deployment; a mismatch is a mis-deployed shard and fails fast.
+//! * **Placement** — which shard ids and instance ranges this server
+//!   currently executes. Placement is *mutable and plural*: the elastic
+//!   control plane ([`crate::control`]) re-ranges the fleet at round
+//!   boundaries (`ShardAssign` replaces the placement held under the same
+//!   shard id), parks ranges (`ShardRetire` drops one), and during
+//!   in-round takeover a surviving server holds its own placement *plus*
+//!   takeover slices of a lost shard's range under virtual shard ids.
+//!
+//! The fingerprint deliberately covers identity only — re-assigning a
+//! range never requires (or permits) a config change, so legitimate
+//! re-ranging can never trip the mismatch check.
 
 use crate::engine::{EngineConfig, ShardExecutor};
 use crate::params::NeighborNotion;
@@ -19,7 +35,10 @@ use crate::transport::wire::{fnv1a32, Frame, ShardAssignMsg, ShardReadyMsg};
 /// Fingerprint of everything two cluster members must agree on before
 /// exchanging work: the protocol plan's constants, the instance count and
 /// the mixnet depth. Seeds are deliberately excluded — they travel in the
-/// work frames, not in configuration.
+/// work frames, not in configuration — and so is *placement* (shard ids,
+/// instance ranges): ranges move between servers at round boundaries and
+/// mid-round (takeover), and binding them into the identity check would
+/// reject every legitimate re-assignment.
 pub fn config_fingerprint(cfg: &EngineConfig) -> u32 {
     let p = &cfg.plan;
     let notion = match p.notion {
@@ -55,6 +74,8 @@ pub struct ShardTelemetry {
     pub works: u64,
     /// Work rejected: no/mismatched assignment, or execution error.
     pub rejected: u64,
+    /// Placements dropped by `ShardRetire` frames.
+    pub retires: u64,
     /// Frames of types this server never answers (client-plane frames).
     pub ignored: u64,
 }
@@ -63,7 +84,9 @@ pub struct ShardTelemetry {
 pub struct ShardServer {
     exec: ShardExecutor,
     fingerprint: u32,
-    assignment: Option<ShardAssignMsg>,
+    /// Standing placements, at most one per shard id — the server's own
+    /// range plus any takeover slices it currently holds.
+    assignments: Vec<ShardAssignMsg>,
     telemetry: ShardTelemetry,
 }
 
@@ -73,7 +96,7 @@ impl ShardServer {
         ShardServer {
             exec: ShardExecutor::new(&cfg),
             fingerprint,
-            assignment: None,
+            assignments: Vec::new(),
             telemetry: ShardTelemetry::default(),
         }
     }
@@ -82,22 +105,21 @@ impl ShardServer {
         self.fingerprint
     }
 
-    /// `(shard, lo, hi)` once assigned.
-    pub fn assignment(&self) -> Option<(u32, u32, u32)> {
-        self.assignment.as_ref().map(|a| (a.shard, a.lo, a.hi))
+    /// Standing placements as `(shard, lo, hi)`, in assignment order.
+    pub fn assignments(&self) -> Vec<(u32, u32, u32)> {
+        self.assignments.iter().map(|a| (a.shard, a.lo, a.hi)).collect()
     }
 
     pub fn telemetry(&self) -> ShardTelemetry {
         self.telemetry
     }
 
-    /// True when `shard`'s work for `[lo, lo + span)` matches the standing
-    /// assignment exactly.
+    /// True when `shard`'s work for `[lo, lo + span)` matches a standing
+    /// placement exactly.
     fn assigned_to(&self, shard: u32, lo: u32, span: u32) -> bool {
-        matches!(
-            &self.assignment,
-            Some(a) if a.shard == shard && a.lo == lo && a.hi == lo + span
-        )
+        self.assignments
+            .iter()
+            .any(|a| a.shard == shard && a.lo == lo && a.hi == lo + span)
     }
 
     /// Serve one frame. Returns the reply to send back, or `None` for
@@ -108,7 +130,10 @@ impl ShardServer {
                 self.telemetry.assigns += 1;
                 let bounds_ok = a.lo < a.hi && a.hi as usize <= self.exec.instances();
                 if a.config_fnv == self.fingerprint && bounds_ok {
-                    self.assignment = Some(a.clone());
+                    // Placement is replace-by-shard-id: a re-assign moves
+                    // that identity's range, other placements stand.
+                    self.assignments.retain(|held| held.shard != a.shard);
+                    self.assignments.push(a.clone());
                 }
                 // Always reply with OUR fingerprint: a mismatch is the
                 // coordinator's error to surface, not silence to time out.
@@ -116,6 +141,13 @@ impl ShardServer {
                     shard: a.shard,
                     config_fnv: self.fingerprint,
                 }))
+            }
+            Frame::ShardRetire(r) => {
+                // Fire-and-forget placement drop; no ack (a lost retire
+                // leaves only a harmless stale placement).
+                self.telemetry.retires += 1;
+                self.assignments.retain(|held| held.shard != r.shard);
+                None
             }
             Frame::ShardWork(w) => {
                 if !self.assigned_to(w.shard, w.lo, w.span) {
@@ -187,7 +219,7 @@ mod tests {
         let Frame::ShardReady(r) = reply else { panic!("expected ShardReady") };
         assert_eq!(r.shard, 1);
         assert_eq!(r.config_fnv, s.fingerprint());
-        assert_eq!(s.assignment(), Some((1, 2, 5)));
+        assert_eq!(s.assignments(), vec![(1, 2, 5)]);
     }
 
     #[test]
@@ -202,16 +234,75 @@ mod tests {
             }))
             .expect("still replies");
         assert!(matches!(reply, Frame::ShardReady(_)));
-        assert_eq!(s.assignment(), None, "bad fingerprint must not take the assignment");
+        assert!(s.assignments().is_empty(), "bad fingerprint must not take the assignment");
     }
 
     #[test]
     fn bad_bounds_do_not_assign() {
         let mut s = ShardServer::new(cfg(8, 6));
         assign(&mut s, 0, 4, 9); // hi beyond the instance count
-        assert_eq!(s.assignment(), None);
+        assert!(s.assignments().is_empty());
         assign(&mut s, 0, 3, 3); // empty range
-        assert_eq!(s.assignment(), None);
+        assert!(s.assignments().is_empty());
+    }
+
+    #[test]
+    fn reassign_moves_placement_without_touching_identity() {
+        // The identity/placement split regression: re-ranging a server to
+        // a new range is a pure placement change — same fingerprint, no
+        // mismatch, old-range work rejected, new-range work served.
+        let n = 8;
+        let mut s = ShardServer::new(cfg(n, 6));
+        let fnv = s.fingerprint();
+        assign(&mut s, 0, 0, 3);
+        let work = |shard: u32, lo: u32, span: u32| {
+            Frame::ShardWork(ShardWorkMsg {
+                round: 0,
+                shard,
+                lo,
+                span,
+                shard_seed: 7,
+                client_round_seeds: vec![1; n],
+                values: vec![0.5; span as usize * n],
+            })
+        };
+        assert!(s.handle(&work(0, 0, 3)).is_some(), "original placement serves");
+        // Mid-epoch re-assign: shard 0 now owns [2, 6).
+        let reply = assign(&mut s, 0, 2, 6);
+        let Frame::ShardReady(r) = reply else { panic!("expected ShardReady") };
+        assert_eq!(r.config_fnv, fnv, "identity is untouched by re-ranging");
+        assert_eq!(s.assignments(), vec![(0, 2, 6)], "placement replaced by shard id");
+        assert!(s.handle(&work(0, 0, 3)).is_none(), "stale range rejected");
+        assert!(s.handle(&work(0, 2, 4)).is_some(), "new range serves");
+    }
+
+    #[test]
+    fn takeover_slice_coexists_with_own_placement_until_retired() {
+        use crate::transport::wire::ShardRetireMsg;
+        let n = 8;
+        let mut s = ShardServer::new(cfg(n, 6));
+        assign(&mut s, 1, 0, 3); // own range
+        assign(&mut s, 1 << 24, 3, 5); // takeover slice under a virtual id
+        assert_eq!(s.assignments(), vec![(1, 0, 3), (1 << 24, 3, 5)]);
+        let work = |shard: u32, lo: u32, span: u32| {
+            Frame::ShardWork(ShardWorkMsg {
+                round: 0,
+                shard,
+                lo,
+                span,
+                shard_seed: 7,
+                client_round_seeds: vec![1; n],
+                values: vec![0.5; span as usize * n],
+            })
+        };
+        assert!(s.handle(&work(1, 0, 3)).is_some(), "own work still serves");
+        assert!(s.handle(&work(1 << 24, 3, 2)).is_some(), "takeover slice serves");
+        // Retire the slice: it stops serving, the own placement stands.
+        assert!(s.handle(&Frame::ShardRetire(ShardRetireMsg { shard: 1 << 24 })).is_none());
+        assert_eq!(s.assignments(), vec![(1, 0, 3)]);
+        assert!(s.handle(&work(1 << 24, 3, 2)).is_none(), "retired slice rejected");
+        assert!(s.handle(&work(1, 0, 3)).is_some());
+        assert_eq!(s.telemetry().retires, 1);
     }
 
     #[test]

@@ -153,6 +153,12 @@ pub struct ServeOpts {
     /// (the "shard crashes mid-round" fault); every later connection —
     /// the restarted shard — serves normally. `None` = healthy.
     pub die_after_frames: Option<usize>,
+    /// Stop accepting after this many connections — the listener closes,
+    /// later connects are refused. With `die_after_frames`, this models a
+    /// host that crashes and never comes back (the scripted permanent
+    /// death the elastic takeover tests and `elastic-sim` use); without
+    /// it, the default `None` accepts forever.
+    pub accept_limit: Option<usize>,
 }
 
 /// Read one length-prefixed frame off a blocking stream. `Ok(None)` on
@@ -226,8 +232,11 @@ impl TcpShardHost {
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = Arc::clone(&stop);
         let handle = std::thread::spawn(move || {
-            let mut first = true;
+            let mut accepted = 0usize;
             loop {
+                if opts.accept_limit.is_some_and(|lim| accepted >= lim) {
+                    break; // listener drops here: later connects are refused
+                }
                 let (stream, _) = match listener.accept() {
                     Ok(x) => x,
                     Err(_) => break,
@@ -235,8 +244,8 @@ impl TcpShardHost {
                 if stop_flag.load(Ordering::Acquire) {
                     break;
                 }
-                let die_after = if first { opts.die_after_frames } else { None };
-                first = false;
+                let die_after = if accepted == 0 { opts.die_after_frames } else { None };
+                accepted += 1;
                 let mut server = ShardServer::new(cfg.clone());
                 let _ = serve_connection(&mut server, stream, die_after);
             }

@@ -1,0 +1,490 @@
+//! The elastic controller — a [`ShardBackend`] that wraps
+//! [`RemoteShardBackend`] with health tracking, round-boundary
+//! re-ranging, and in-round takeover of lost ranges.
+//!
+//! The controller turns the barrier's per-unit outcomes
+//! ([`RemoteShardBackend::run_attempts`]) into fleet decisions:
+//!
+//! * every outcome feeds the [`ShardDirectory`] (latency EWMA from the
+//!   shard-reported compute wall, loss counts, liveness);
+//! * at each round boundary the [`RebalancePolicy`] re-partitions the d
+//!   instances over the links the directory considers alive
+//!   ([`ShardBackend::plan_ranges`]);
+//! * when a unit is lost past the whole retry budget, the controller
+//!   **re-scatters the lost range to survivors** instead of failing the
+//!   round: the lost work is [`slice`](ShardRoundWork::slice)d into
+//!   sub-ranges under fresh *virtual shard ids*, handshaken onto surviving
+//!   links as additional placements, executed, and stitched back into the
+//!   lost shard's [`ShardOutMsg`] — so the caller's barrier merge never
+//!   learns anything happened. Retry-safe and bit-identical because work
+//!   units carry all their seeds and the analyzer's modular sum is
+//!   permutation-invariant.
+//!
+//! Dead links rejoin by *offering*: every [`ElasticTuning::revive_every`]
+//! rounds the directory optimistically marks the fleet alive, the policy
+//! hands the revived link a range again, and either it answers (rejoin)
+//! or the takeover path absorbs the loss and it drops back out. No
+//! separate probe protocol, no probe/true-traffic divergence.
+
+use crate::cluster::{RemoteShardBackend, ShardAttempt};
+use crate::engine::{ranges_tile, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork};
+use crate::transport::wire::ShardOutMsg;
+use crate::transport::TrafficStats;
+
+use super::directory::ShardDirectory;
+use super::policy::RebalancePolicy;
+
+/// Virtual shard ids for takeover slices start here — far above any real
+/// link id, so a slice's identity can never collide with a link's own.
+const TAKEOVER_SHARD_BASE: u32 = 1 << 24;
+
+/// Latency sample for the directory: the shard-reported compute wall
+/// normalized by the unit's span. Raw per-unit walls scale with the
+/// assigned range, so feeding them to a latency-weighted policy would
+/// punish a shard FOR holding a big range (and takeover slices — small
+/// spans — would bias survivors fast); per-instance walls make the
+/// EWMA an actual speed estimate that converges instead of oscillating.
+fn per_instance_ns(wall_ns: u64, work: &ShardRoundWork) -> u64 {
+    wall_ns / work.span().max(1) as u64
+}
+
+/// Control-plane tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticTuning {
+    /// EWMA smoothing factor for the latency estimate (weight of the
+    /// newest sample), in (0, 1].
+    pub ewma_alpha: f64,
+    /// Offer dead links work again every this many rounds (0 = never —
+    /// a lost shard stays parked forever). See the module notes on
+    /// probe-by-offering.
+    pub revive_every: u64,
+}
+
+impl Default for ElasticTuning {
+    fn default() -> Self {
+        ElasticTuning { ewma_alpha: 0.3, revive_every: 4 }
+    }
+}
+
+/// The elastic control plane over a remote shard fleet.
+pub struct ElasticController {
+    inner: RemoteShardBackend,
+    directory: ShardDirectory,
+    policy: Box<dyn RebalancePolicy>,
+    tuning: ElasticTuning,
+    takeovers: u64,
+    /// Next virtual shard id suffix — never reused, so a stale takeover
+    /// placement on a server can never match later work.
+    virt_next: u32,
+}
+
+impl ElasticController {
+    pub fn new(inner: RemoteShardBackend, policy: Box<dyn RebalancePolicy>) -> Self {
+        let tuning = ElasticTuning::default();
+        let directory = ShardDirectory::new(inner.link_count(), tuning.ewma_alpha);
+        ElasticController { inner, directory, policy, tuning, takeovers: 0, virt_next: 0 }
+    }
+
+    pub fn with_tuning(mut self, tuning: ElasticTuning) -> Self {
+        self.directory = ShardDirectory::new(self.inner.link_count(), tuning.ewma_alpha);
+        self.tuning = tuning;
+        self
+    }
+
+    pub fn directory(&self) -> &ShardDirectory {
+        &self.directory
+    }
+
+    pub fn policy_label(&self) -> &'static str {
+        self.policy.label()
+    }
+
+    /// Re-scatter one lost work unit's range across surviving links,
+    /// looping as survivors themselves fail (each failed survivor is
+    /// marked dead, shrinking the pool) until the range is covered or
+    /// nobody is left — only then does the round fail with the loss the
+    /// plain backend would have reported immediately.
+    fn takeover(&mut self, lost: ShardRoundWork) -> Result<ShardOutMsg, ShardBackendError> {
+        let (round, shard) = (lost.round(), lost.shard());
+        let (lo, hi) = (lost.lo(), lost.lo() + lost.span());
+        self.takeovers += 1;
+        let mut missing: Vec<(u32, u32)> = vec![(lo, hi)];
+        // (slice lo, output) pieces, stitched back together at the end.
+        let mut pieces: Vec<(u32, ShardOutMsg)> = Vec::new();
+        // (link, virtual id) placements to retire once the range is done.
+        let mut placements: Vec<(usize, u32)> = Vec::new();
+        while !missing.is_empty() {
+            let survivors = self.directory.alive_links();
+            if survivors.is_empty() {
+                return Err(ShardBackendError::ShardLost {
+                    shard,
+                    attempts: self.inner.tuning().max_retries + 1,
+                });
+            }
+            // Slice ONE missing range across the survivor pool per pass,
+            // each slice under a fresh virtual identity on a DISTINCT
+            // link — `run_attempts` wants at most one pending unit per
+            // link (a second unit's in-flight reply would be discarded as
+            // stale by the first's gather and cost spurious retries).
+            // Later missing ranges (only possible after a survivor also
+            // failed) wait for the next pass.
+            let (mlo, mhi) = missing.remove(0);
+            let span = (mhi - mlo) as usize;
+            let cuts = crate::engine::shard_ranges(span, survivors.len().min(span));
+            let mut batch: Vec<(usize, ShardRoundWork)> = Vec::new();
+            for (k, (a, b)) in cuts.into_iter().enumerate() {
+                let (slo, shi) = (mlo + a as u32, mlo + b as u32);
+                let virt = TAKEOVER_SHARD_BASE + self.virt_next;
+                self.virt_next += 1;
+                let slice = lost.slice(slo, shi, virt).expect("slice within lost range");
+                placements.push((survivors[k], virt));
+                batch.push((survivors[k], slice));
+            }
+            // Successes first, failures second: a link that lost its
+            // slice this pass ends the pass dead. Every pass either
+            // clears a missing range or shrinks the survivor pool, so
+            // the loop terminates.
+            let attempts = self.inner.run_attempts(batch)?;
+            for a in &attempts {
+                if let Some(out) = &a.out {
+                    self.directory.record_success(a.link, per_instance_ns(out.wall_ns, &a.work));
+                    self.directory.record_takeover(a.link);
+                }
+            }
+            for a in attempts {
+                match a.out {
+                    Some(out) => pieces.push((a.work.lo(), out)),
+                    None => {
+                        // This survivor is down too: mark it and put its
+                        // slice back on the missing list for the next
+                        // (smaller) survivor pool.
+                        self.directory.record_failure(a.link);
+                        missing.push((a.work.lo(), a.work.lo() + a.work.span()));
+                    }
+                }
+            }
+        }
+        // Placement hygiene: virtual ids are one-shot, drop them. Dead
+        // links just skip (nothing to say to a link that isn't answering).
+        for (link, virt) in placements {
+            if self.directory.alive(link) {
+                self.inner.retire(link, virt)?;
+            }
+        }
+        // Stitch the slices back into the lost shard's output, in
+        // instance order — the caller's merge sees a whole shard.
+        pieces.sort_by_key(|&(slo, _)| slo);
+        let mut estimates = Vec::with_capacity((hi - lo) as usize);
+        let mut wall_ns = 0u64;
+        let mut cursor = lo;
+        for (slo, out) in pieces {
+            if slo != cursor {
+                return Err(ShardBackendError::Merge {
+                    shard,
+                    detail: format!("takeover slices leave a gap at instance {cursor}"),
+                });
+            }
+            cursor += out.estimates.len() as u32;
+            wall_ns = wall_ns.max(out.wall_ns);
+            estimates.extend_from_slice(&out.estimates);
+        }
+        if cursor != hi {
+            return Err(ShardBackendError::Merge {
+                shard,
+                detail: format!("takeover covered [{lo}, {cursor}) of [{lo}, {hi})"),
+            });
+        }
+        Ok(ShardOutMsg { round, shard, wall_ns, estimates })
+    }
+}
+
+impl ShardBackend for ElasticController {
+    fn run_shards(
+        &mut self,
+        work: Vec<ShardRoundWork>,
+    ) -> Result<Vec<ShardOutMsg>, ShardBackendError> {
+        let batch: Vec<(usize, ShardRoundWork)> =
+            work.into_iter().map(|w| (w.shard() as usize, w)).collect();
+        let attempts: Vec<ShardAttempt> = self.inner.run_attempts(batch)?;
+        let mut outs = Vec::with_capacity(attempts.len());
+        let mut lost = Vec::new();
+        for a in attempts {
+            match a.out {
+                Some(o) => {
+                    self.directory.record_success(a.link, per_instance_ns(o.wall_ns, &a.work));
+                    outs.push(o);
+                }
+                None => {
+                    self.directory.record_failure(a.link);
+                    lost.push(a.work);
+                }
+            }
+        }
+        for w in lost {
+            let out = self.takeover(w)?;
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    fn plan_ranges(&mut self, round: u64, default: &[(usize, usize)]) -> Vec<(usize, usize)> {
+        if self.tuning.revive_every > 0 && round > 0 && round % self.tuning.revive_every == 0 {
+            self.directory.revive_all();
+        }
+        let instances = default.last().map(|&(_, hi)| hi).unwrap_or(0);
+        let ranges = self.policy.partition(instances, self.directory.health());
+        if ranges.len() != default.len() || !ranges_tile(&ranges, instances) {
+            // A malformed policy tiling must not fail the round — the
+            // static layout is always safe.
+            return default.to_vec();
+        }
+        ranges
+    }
+
+    fn health(&self) -> Vec<ShardHealth> {
+        self.directory.snapshot()
+    }
+
+    fn take_traffic(&mut self) -> TrafficStats {
+        self.inner.take_traffic()
+    }
+
+    fn retries(&self) -> u64 {
+        self.inner.retries()
+    }
+
+    fn takeovers(&self) -> u64 {
+        self.takeovers
+    }
+
+    fn label(&self) -> &'static str {
+        "elastic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterEngine, ClusterTuning};
+    use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+    use crate::params::ProtocolPlan;
+    use crate::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use crate::transport::wire::ShardPoolMsg;
+
+    fn small_plan(n: usize) -> ProtocolPlan {
+        ProtocolPlan::exact_secure_agg(n, 100, 8)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    /// An elastic cluster where `victim`'s inbound link goes silent after
+    /// `after` delivered frames (and optionally heals after `recover`).
+    fn elastic_cluster(
+        cfg: &EngineConfig,
+        seed: u64,
+        victim: usize,
+        after: u64,
+        recover: Option<u64>,
+        policy: Box<dyn RebalancePolicy>,
+        tuning: ElasticTuning,
+    ) -> ClusterEngine {
+        let backend = RemoteShardBackend::over_channels(cfg, |s| {
+            let down: Box<dyn Channel> = if s == victim {
+                let mut c = SimNetConfig::new(5).with_silent_after(after);
+                if let Some(r) = recover {
+                    c = c.with_recover_after(r);
+                }
+                Box::new(SimNet::new(c))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+        let controller = ElasticController::new(backend, policy).with_tuning(tuning);
+        ClusterEngine::new(cfg.clone(), seed, Box::new(controller))
+    }
+
+    #[test]
+    fn takeover_keeps_the_round_bit_identical() {
+        // Shard 1 of 3 dies after its handshake; the elastic controller
+        // re-scatters its range to shards 0 and 2 and the round completes
+        // with estimates bit-identical to the healthy in-process run.
+        let (n, d, seed) = (12usize, 9usize, 3u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(3);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let mut cluster = elastic_cluster(
+            &cfg,
+            seed,
+            1,
+            1, // assign delivered, work and every resend vanish
+            None,
+            Box::new(crate::control::EvenSplit),
+            ElasticTuning { revive_every: 0, ..Default::default() },
+        );
+        let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(got.estimates, want.estimates, "takeover must not change the sums");
+        assert_eq!(cluster.shard_takeovers(), 1);
+        assert_eq!(cluster.metrics().counter("cluster.takeovers").get(), 1);
+        let health = cluster.shard_health();
+        assert!(!health[1].alive, "victim marked dead");
+        assert_eq!(health[1].failures, 1);
+        assert!(
+            health[0].takeovers_absorbed + health[2].takeovers_absorbed >= 2,
+            "both survivors absorbed a slice of the 3-instance range"
+        );
+    }
+
+    #[test]
+    fn next_round_parks_the_dead_shard_and_stays_identical() {
+        // After a takeover round, the policy re-ranges: the dead shard's
+        // link gets an empty range and the round runs with no retries at
+        // all — still bit-identical to the engine.
+        let (n, d, seed) = (10usize, 8usize, 11u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(4);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let mut cluster = elastic_cluster(
+            &cfg,
+            seed,
+            2,
+            1,
+            None,
+            Box::new(crate::control::EvenSplit),
+            ElasticTuning { revive_every: 0, ..Default::default() },
+        );
+        for round in 0..3 {
+            let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            assert_eq!(got.estimates, want.estimates, "round {round}");
+        }
+        assert_eq!(cluster.shard_takeovers(), 1, "only the death round needed takeover");
+        let health = cluster.shard_health();
+        assert!(!health[2].alive);
+        assert_eq!(health[2].failures, 1, "a parked shard is never offered work to lose");
+    }
+
+    #[test]
+    fn flappy_link_rejoins_after_revival_offer() {
+        // The victim's link heals while parked; the periodic revival offer
+        // hands it a range again and it rejoins — takeover-then-rejoin.
+        let (n, d, seed) = (10usize, 8usize, 17u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        // Victim delivers its round-0 handshake+work (2 frames), loses
+        // everything in (2, 6], then heals — in time for the round-4
+        // revival offer (sends 3–6 are the round-1 loss and the round-2
+        // re-offer, both silenced).
+        let mut cluster = elastic_cluster(
+            &cfg,
+            seed,
+            1,
+            2,
+            Some(6),
+            Box::new(crate::control::EvenSplit),
+            ElasticTuning { revive_every: 2, ..Default::default() },
+        );
+        let mut rejoined = false;
+        for round in 0..6 {
+            let want = engine.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            assert_eq!(got.estimates, want.estimates, "round {round}");
+            let h = cluster.shard_health();
+            if round >= 1 && h[1].alive && h[1].rounds_ok >= 2 {
+                rejoined = true;
+            }
+        }
+        assert!(rejoined, "healed link must rejoin via the revival offer");
+        assert!(cluster.shard_takeovers() >= 1, "the flap must have cost a takeover");
+    }
+
+    #[test]
+    fn takeover_with_no_survivors_is_shard_lost() {
+        let (n, d, seed) = (8usize, 4usize, 7u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        // BOTH links go silent after their handshakes.
+        let backend = RemoteShardBackend::over_channels(&cfg, |_| {
+            let down: Box<dyn Channel> =
+                Box::new(SimNet::new(SimNetConfig::new(9).with_silent_after(1)));
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+        let controller =
+            ElasticController::new(backend, Box::new(crate::control::EvenSplit));
+        let mut cluster = ClusterEngine::new(cfg, seed, Box::new(controller));
+        let err = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap_err();
+        assert!(
+            matches!(err, ShardBackendError::ShardLost { .. }),
+            "a fleet with no survivors still fails the round: {err:?}"
+        );
+        assert_eq!(cluster.next_round(), 0, "failed round id is not consumed");
+    }
+
+    #[test]
+    fn takeover_slices_pool_work_too() {
+        // Streaming-path takeover at the work-unit level: a lost pool unit
+        // sliced across two survivors reproduces its estimates exactly.
+        let (n, d, seed) = (12usize, 6usize, 21u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(3);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let m = cfg.plan.num_messages;
+        let who: Vec<usize> = (0..n).filter(|i| i % 4 != 1).collect();
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = engine
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let mut cluster = elastic_cluster(
+            &cfg,
+            seed,
+            0, // the FIRST shard dies this time
+            1,
+            None,
+            Box::new(crate::control::EvenSplit),
+            ElasticTuning { revive_every: 0, ..Default::default() },
+        );
+        let got = cluster.run_round_streaming(&pools, who.len()).unwrap();
+        assert_eq!(got.estimates, want.estimates, "streaming takeover must be bit-identical");
+        assert_eq!(cluster.shard_takeovers(), 1);
+    }
+
+    #[test]
+    fn work_slice_shapes_are_exact() {
+        let w = ShardRoundWork::Pool(ShardPoolMsg {
+            round: 2,
+            shard: 1,
+            lo: 4,
+            span: 3,
+            participants: 2,
+            round_seed: 9,
+            pool: (0..3 * 2 * 4).map(|x| x as u64).collect(), // m = 4
+        });
+        let s = w.slice(5, 7, 77).unwrap();
+        assert_eq!(s.shard(), 77);
+        assert_eq!((s.lo(), s.span()), (5, 2));
+        let ShardRoundWork::Pool(p) = &s else { panic!("pool slice") };
+        assert_eq!(p.pool, ((2 * 4)..(3 * 2 * 4)).map(|x| x as u64).collect::<Vec<_>>());
+        assert!(w.slice(3, 5, 0).is_none(), "below the unit's range");
+        assert!(w.slice(5, 8, 0).is_none(), "beyond the unit's range");
+        assert!(w.slice(5, 5, 0).is_none(), "empty");
+    }
+}

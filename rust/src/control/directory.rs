@@ -1,0 +1,141 @@
+//! The shard directory — per-shard health observed from barrier outcomes.
+//!
+//! The directory is the control plane's *only* input: it sees which links
+//! answered (and how fast, via the shard-reported compute wall), which
+//! stayed silent past the retry budget, and which absorbed takeover
+//! slices. It never sees client data, shares, or estimates — see the
+//! trust-model notes in [`super`].
+//!
+//! The record type itself ([`ShardHealth`]) lives with the
+//! [`ShardBackend`](crate::engine::ShardBackend) seam in
+//! [`crate::engine`], which reports it — the dependency arrow points
+//! engine ← control, never back.
+
+use crate::engine::ShardHealth;
+
+/// Health table for a fleet of shard links, indexed by link id.
+pub struct ShardDirectory {
+    shards: Vec<ShardHealth>,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest sample.
+    alpha: f64,
+}
+
+impl ShardDirectory {
+    pub fn new(links: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        ShardDirectory { shards: vec![ShardHealth::default(); links], alpha }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn health(&self) -> &[ShardHealth] {
+        &self.shards
+    }
+
+    pub fn snapshot(&self) -> Vec<ShardHealth> {
+        self.shards.clone()
+    }
+
+    pub fn alive(&self, link: usize) -> bool {
+        self.shards[link].alive
+    }
+
+    /// Link ids currently considered alive, in id order.
+    pub fn alive_links(&self) -> Vec<usize> {
+        (0..self.shards.len()).filter(|&i| self.shards[i].alive).collect()
+    }
+
+    /// A work unit completed on `link`; `wall_ns` is its latency sample —
+    /// the controller passes the shard-reported compute wall normalized
+    /// per instance, so the EWMA estimates *speed*, not range size.
+    /// Marks the link alive (a reply from a dead-marked link IS the
+    /// rejoin signal) and folds the sample into the EWMA.
+    pub fn record_success(&mut self, link: usize, wall_ns: u64) {
+        let s = &mut self.shards[link];
+        s.alive = true;
+        s.consecutive_failures = 0;
+        s.rounds_ok += 1;
+        let sample = wall_ns as f64 * 1e-9;
+        s.latency_ewma_s = if s.latency_ewma_s == 0.0 {
+            sample
+        } else {
+            self.alpha * sample + (1.0 - self.alpha) * s.latency_ewma_s
+        };
+    }
+
+    /// A work unit on `link` was lost past the whole retry budget: mark
+    /// the link dead so the policy stops routing ranges at it.
+    pub fn record_failure(&mut self, link: usize) {
+        let s = &mut self.shards[link];
+        s.alive = false;
+        s.consecutive_failures += 1;
+        s.failures += 1;
+    }
+
+    /// `link` absorbed one takeover slice for a lost peer.
+    pub fn record_takeover(&mut self, link: usize) {
+        self.shards[link].takeovers_absorbed += 1;
+    }
+
+    /// Optimistically mark every link alive again — the probe-by-offering
+    /// move: a still-dead link fails its next work unit and drops straight
+    /// back out (the takeover path absorbs the cost), a recovered one
+    /// rejoins with no separate probe protocol.
+    pub fn revive_all(&mut self) {
+        for s in &mut self.shards {
+            if !s.alive {
+                s.alive = true;
+                s.consecutive_failures = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn success_marks_alive_and_tracks_ewma() {
+        let mut d = ShardDirectory::new(2, 0.5);
+        d.record_success(0, 1_000_000_000); // 1 s
+        assert!((d.health()[0].latency_ewma_s - 1.0).abs() < 1e-12, "first sample seeds");
+        d.record_success(0, 3_000_000_000); // 3 s
+        assert!((d.health()[0].latency_ewma_s - 2.0).abs() < 1e-12, "0.5·3 + 0.5·1");
+        assert_eq!(d.health()[0].rounds_ok, 2);
+        assert_eq!(d.health()[1].rounds_ok, 0, "other links untouched");
+    }
+
+    #[test]
+    fn failure_marks_dead_and_reply_rejoins() {
+        let mut d = ShardDirectory::new(3, 0.3);
+        d.record_failure(1);
+        d.record_failure(1);
+        assert!(!d.alive(1));
+        assert_eq!(d.alive_links(), vec![0, 2]);
+        assert_eq!(d.health()[1].consecutive_failures, 2);
+        assert_eq!(d.health()[1].failures, 2);
+        // A successful reply is the rejoin signal.
+        d.record_success(1, 5);
+        assert!(d.alive(1));
+        assert_eq!(d.health()[1].consecutive_failures, 0);
+        assert_eq!(d.health()[1].failures, 2, "history is kept");
+    }
+
+    #[test]
+    fn revive_all_resets_only_liveness() {
+        let mut d = ShardDirectory::new(2, 0.3);
+        d.record_failure(0);
+        d.record_takeover(1);
+        d.revive_all();
+        assert!(d.alive(0));
+        assert_eq!(d.health()[0].failures, 1, "failure history survives revival");
+        assert_eq!(d.health()[1].takeovers_absorbed, 1);
+    }
+}

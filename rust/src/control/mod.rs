@@ -1,0 +1,96 @@
+//! The elastic control plane — shard health, live re-ranging, and
+//! surviving-shard takeover for cluster rounds.
+//!
+//! [`crate::cluster`] gave the engine multi-host shards behind a
+//! straggler-tolerant barrier, but the fleet was *rigid*: ranges were
+//! fixed at construction and a shard lost past the retry budget failed
+//! the whole round. This subsystem makes the fleet elastic. It sits
+//! between [`ClusterEngine`](crate::cluster::ClusterEngine) and its
+//! transport backend, deciding per round *where* work runs — which the
+//! paper's construction makes safe to do freely: every user's
+//! contribution is a self-contained set of noise-masked shares, and the
+//! analyzer's modular sum is permutation-invariant, so the merged
+//! estimates are **indifferent to which shard executes an instance
+//! range**. Moving ranges between shards (or splitting a lost range
+//! across survivors mid-round) changes wall-clock and failure exposure,
+//! never bits.
+//!
+//! # Architecture
+//!
+//! ```text
+//!  ClusterEngine ── plan_ranges(round) ──► ElasticController
+//!       │                                   │  ├─ ShardDirectory
+//!       │ work units (per planned range)    │  │    per-link: alive,
+//!       ▼                                   │  │    latency EWMA,
+//!  ShardBackend::run_shards                 │  │    failures, takeovers
+//!       │                                   │  └─ RebalancePolicy
+//!       ▼                                   │       Static / EvenSplit /
+//!  ElasticController::run_shards            │       Proportional
+//!       │ run_attempts (per-unit outcomes)  │
+//!       ▼                                   ▼
+//!  RemoteShardBackend ── links ──► ShardServer fleet
+//!       │ lost unit?  slice × survivors, virtual shard ids,
+//!       │             handshake-as-placement, execute, stitch
+//!       └────────────► ShardOut(lost shard) — merge never knows
+//! ```
+//!
+//! Three moving parts:
+//!
+//! * [`ShardDirectory`] — per-link health observed from barrier outcomes:
+//!   a latency EWMA over the shard-reported compute wall, consecutive and
+//!   total losses, takeover slices absorbed, liveness. Updated by the
+//!   controller on every work-unit outcome.
+//! * [`RebalancePolicy`] ([`StaticRanges`], [`EvenSplit`],
+//!   [`Proportional`]) — re-partitions the d instances into per-link
+//!   ranges at round boundaries, via
+//!   [`ShardBackend::plan_ranges`](crate::engine::ShardBackend::plan_ranges).
+//!   Dead links are parked (empty range) and re-offered work every
+//!   [`ElasticTuning::revive_every`] rounds — a recovered link rejoins by
+//!   simply answering; a still-dead one fails back into the takeover path.
+//! * [`ElasticController`] — the [`ShardBackend`](crate::engine::ShardBackend)
+//!   wrapper that drives
+//!   [`RemoteShardBackend::run_attempts`](crate::cluster::RemoteShardBackend::run_attempts)
+//!   (per-unit outcomes instead of round failure) and performs **in-round
+//!   takeover**: a unit lost past the retry budget is
+//!   [`slice`](crate::engine::ShardRoundWork::slice)d across surviving
+//!   links under fresh virtual shard ids and its output stitched back
+//!   together, so the round completes bit-identical to the never-failed
+//!   run. Work units carry all their seeds, which is what makes the
+//!   re-execution retry-safe and duplicate-proof.
+//!
+//! # Handshake: identity vs placement
+//!
+//! Re-ranging leans on the split documented in
+//! [`cluster::shard_server`](crate::cluster::shard_server): the config
+//! fingerprint covers protocol *identity* only, while *placement* (shard
+//! id → instance range) is mutable, plural per server, established by
+//! `ShardAssign` and dropped by `ShardRetire`. A takeover round leaves a
+//! survivor holding its own placement plus one-shot virtual placements
+//! for the slices it absorbed; the controller retires them once the
+//! range is stitched.
+//!
+//! # Trust model
+//!
+//! The controller adds **no new observer** to the protocol. It consumes
+//! only link-level telemetry — who answered, how fast, how often frames
+//! were lost — never client data: shares stay inside the work units it
+//! forwards opaquely, and per-range estimates pass through it exactly as
+//! they pass through the barrier it wraps. A malicious controller could
+//! degrade liveness (park healthy shards, route all work to one place)
+//! but cannot weaken the shuffled-model guarantee, which is enforced
+//! below it: every shard shuffles each instance pool before its analyzer
+//! reads it, wherever the range lands. Re-ranging also never changes the
+//! DP accounting — the noise is per (client, instance, round), carried in
+//! the shares themselves.
+
+pub mod controller;
+pub mod directory;
+pub mod policy;
+
+pub use controller::{ElasticController, ElasticTuning};
+pub use directory::ShardDirectory;
+pub use policy::{EvenSplit, Proportional, RebalancePolicy, StaticRanges};
+
+/// Re-exported from [`crate::engine`], which owns the record type its
+/// [`ShardBackend`](crate::engine::ShardBackend) seam reports.
+pub use crate::engine::ShardHealth;

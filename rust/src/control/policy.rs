@@ -1,0 +1,271 @@
+//! Rebalance policies — how the d instances are re-partitioned across
+//! shard links at round boundaries, given the directory's health view.
+//!
+//! A policy returns one contiguous `(lo, hi)` per link, tiling
+//! `[0, instances)` in link order; `lo == hi` parks that link for the
+//! round. Re-partitioning is always estimate-safe: shares are a pure
+//! function of `(client, instance, round)` and the analyzer's modular sum
+//! is permutation-invariant, so any tiling produces bit-identical merged
+//! estimates (see [`crate::engine::ShardRoundWork::slice`]). Policies only
+//! move *wall-clock and failure exposure*, never bits.
+
+use crate::engine::{shard_ranges, ShardHealth};
+
+/// A round-boundary re-partitioning strategy.
+pub trait RebalancePolicy {
+    /// Label for reports and benches ("static", "even-split", …).
+    fn label(&self) -> &'static str;
+
+    /// Partition `instances` across `shards.len()` links. Must return one
+    /// range per link, tiling `[0, instances)` contiguously in link order
+    /// (the cluster engine validates and falls back to the static layout
+    /// on a malformed tiling).
+    fn partition(&self, instances: usize, shards: &[ShardHealth]) -> Vec<(usize, usize)>;
+}
+
+/// No elasticity: the engine's static near-equal layout, regardless of
+/// health. Dead shards keep their ranges, so every round they stay dead
+/// pays the retry budget and a takeover — the baseline the elastic
+/// policies are measured against.
+pub struct StaticRanges;
+
+impl RebalancePolicy for StaticRanges {
+    fn label(&self) -> &'static str {
+        "static"
+    }
+
+    fn partition(&self, instances: usize, shards: &[ShardHealth]) -> Vec<(usize, usize)> {
+        ranges_for_spans(&even_spans(instances, &vec![true; shards.len()]))
+    }
+}
+
+/// Even split over the links currently alive; dead links are parked
+/// (empty range) until they rejoin.
+pub struct EvenSplit;
+
+impl RebalancePolicy for EvenSplit {
+    fn label(&self) -> &'static str {
+        "even-split"
+    }
+
+    fn partition(&self, instances: usize, shards: &[ShardHealth]) -> Vec<(usize, usize)> {
+        ranges_for_spans(&even_spans(instances, &alive_mask(shards)))
+    }
+}
+
+/// Latency-weighted split: alive links get spans proportional to the
+/// inverse of their compute-wall EWMA (a shard twice as fast gets twice
+/// the instances), apportioned by largest remainder so spans are integral,
+/// deterministic and sum to `instances`. Links with no sample yet weigh as
+/// the average sampled latency (a fresh or just-rejoined shard is assumed
+/// ordinary, not infinitely fast), and — when there are at least as many
+/// instances as alive links — every alive link keeps a floor of one
+/// instance, so its latency stays measured and one bad EWMA can never
+/// starve it permanently.
+pub struct Proportional {
+    /// Latency floor in seconds — caps any single link's weight so one
+    /// near-zero EWMA cannot starve the rest of the fleet.
+    pub floor_s: f64,
+}
+
+impl Default for Proportional {
+    fn default() -> Self {
+        Proportional { floor_s: 1e-6 }
+    }
+}
+
+impl RebalancePolicy for Proportional {
+    fn label(&self) -> &'static str {
+        "proportional"
+    }
+
+    fn partition(&self, instances: usize, shards: &[ShardHealth]) -> Vec<(usize, usize)> {
+        let mask = alive_mask(shards);
+        let sampled: Vec<f64> = shards
+            .iter()
+            .zip(&mask)
+            .filter(|(s, &a)| a && s.latency_ewma_s > 0.0)
+            .map(|(s, _)| s.latency_ewma_s)
+            .collect();
+        let default_lat = if sampled.is_empty() {
+            1.0
+        } else {
+            sampled.iter().sum::<f64>() / sampled.len() as f64
+        };
+        let weights: Vec<f64> = shards
+            .iter()
+            .zip(&mask)
+            .map(|(s, &a)| {
+                if !a {
+                    0.0
+                } else {
+                    let lat = if s.latency_ewma_s > 0.0 { s.latency_ewma_s } else { default_lat };
+                    1.0 / lat.max(self.floor_s)
+                }
+            })
+            .collect();
+        let alive_n = mask.iter().filter(|&&a| a).count();
+        if alive_n == 0 || instances < alive_n {
+            return ranges_for_spans(&even_spans(instances, &mask));
+        }
+        // One-instance floor per alive link, remainder by weight.
+        let mut spans = apportion(instances - alive_n, &weights);
+        for (span, &a) in spans.iter_mut().zip(&mask) {
+            if a {
+                *span += 1;
+            }
+        }
+        ranges_for_spans(&spans)
+    }
+}
+
+/// Liveness mask with a last-resort fallback: a fleet where *every* link
+/// is marked dead still has to run somewhere, so it is treated as fully
+/// alive (the barrier's own loss handling then decides the round's fate).
+fn alive_mask(shards: &[ShardHealth]) -> Vec<bool> {
+    if shards.iter().any(|s| s.alive) {
+        shards.iter().map(|s| s.alive).collect()
+    } else {
+        vec![true; shards.len()]
+    }
+}
+
+/// Near-equal spans over the `true` entries of `mask`; `false` entries
+/// get 0.
+fn even_spans(instances: usize, mask: &[bool]) -> Vec<usize> {
+    let alive = mask.iter().filter(|&&a| a).count().max(1);
+    let shares = shard_ranges(instances, alive.min(instances.max(1)));
+    let mut spans = vec![0usize; mask.len()];
+    let mut next = shares.iter().map(|(lo, hi)| hi - lo);
+    for (span, &a) in spans.iter_mut().zip(mask) {
+        if a {
+            *span = next.next().unwrap_or(0);
+        }
+    }
+    spans
+}
+
+/// Largest-remainder apportionment of `total` into integer spans
+/// proportional to `weights` — deterministic (ties break on index) and
+/// exactly summing to `total`. A zero/negative weight sum falls back to an
+/// even split over all entries.
+fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return even_spans(total, &vec![true; weights.len()]);
+    }
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / wsum).collect();
+    let mut spans: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = spans.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for &i in order.iter().take(total.saturating_sub(assigned)) {
+        spans[i] += 1;
+    }
+    spans
+}
+
+/// Cumulative contiguous ranges from per-link spans.
+fn ranges_for_spans(spans: &[usize]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::with_capacity(spans.len());
+    let mut lo = 0usize;
+    for &span in spans {
+        ranges.push((lo, lo + span));
+        lo += span;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ranges_tile;
+
+    fn health(alive: &[bool], ewma: &[f64]) -> Vec<ShardHealth> {
+        alive
+            .iter()
+            .zip(ewma)
+            .map(|(&a, &l)| ShardHealth { alive: a, latency_ewma_s: l, ..Default::default() })
+            .collect()
+    }
+
+    #[test]
+    fn static_ranges_match_engine_layout() {
+        let h = health(&[true, false, true], &[0.0; 3]);
+        let ranges = StaticRanges.partition(7, &h);
+        assert_eq!(ranges, vec![(0, 3), (3, 5), (5, 7)], "health is ignored");
+        assert!(ranges_tile(&ranges, 7));
+    }
+
+    #[test]
+    fn even_split_parks_dead_links() {
+        let h = health(&[true, false, true, true], &[0.0; 4]);
+        let ranges = EvenSplit.partition(9, &h);
+        assert!(ranges_tile(&ranges, 9));
+        assert_eq!(ranges[1].0, ranges[1].1, "dead link is parked");
+        let spans: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+        assert_eq!(spans, vec![3, 0, 3, 3]);
+    }
+
+    #[test]
+    fn even_split_with_no_survivors_falls_back_to_everyone() {
+        let h = health(&[false, false], &[0.0; 2]);
+        let ranges = EvenSplit.partition(4, &h);
+        assert_eq!(ranges, vec![(0, 2), (2, 4)], "all-dead fleet runs as if alive");
+    }
+
+    #[test]
+    fn proportional_gives_slow_shards_fewer_instances() {
+        // Link 1 is 3× slower than links 0 and 2.
+        let h = health(&[true, true, true], &[0.1, 0.3, 0.1]);
+        let ranges = Proportional::default().partition(14, &h);
+        assert!(ranges_tile(&ranges, 14));
+        let spans: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+        assert_eq!(spans.iter().sum::<usize>(), 14);
+        assert!(spans[1] < spans[0] && spans[1] < spans[2], "slow link shrinks: {spans:?}");
+        // weights 10:3.33:10 → quotas 6:2:6
+        assert_eq!(spans, vec![6, 2, 6]);
+    }
+
+    #[test]
+    fn proportional_without_samples_is_even_and_deterministic() {
+        let h = health(&[true, true, true, false], &[0.0; 4]);
+        let a = Proportional::default().partition(10, &h);
+        let b = Proportional::default().partition(10, &h);
+        assert_eq!(a, b);
+        assert!(ranges_tile(&a, 10));
+        assert_eq!(a[3].0, a[3].1, "dead link parked");
+        let spans: Vec<usize> = a.iter().map(|(lo, hi)| hi - lo).collect();
+        assert_eq!(spans.iter().filter(|&&s| s > 0).count(), 3);
+        let max = spans.iter().max().unwrap();
+        let min = spans.iter().filter(|&&s| s > 0).min().unwrap();
+        assert!(max - min <= 1, "unsampled fleet splits evenly: {spans:?}");
+    }
+
+    #[test]
+    fn proportional_never_starves_an_alive_link() {
+        // A link 10⁴× slower than its peers still keeps one instance, so
+        // its EWMA keeps refreshing and it can earn its way back.
+        let h = health(&[true, true], &[1e-4, 1.0]);
+        let ranges = Proportional::default().partition(4, &h);
+        let spans: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+        assert_eq!(spans, vec![3, 1], "floor of one instance per alive link");
+        assert!(ranges_tile(&ranges, 4));
+    }
+
+    #[test]
+    fn apportion_sums_and_breaks_ties_by_index() {
+        assert_eq!(apportion(10, &[1.0, 1.0, 1.0, 1.0]), vec![3, 3, 2, 2]);
+        assert_eq!(apportion(0, &[1.0, 2.0]), vec![0, 0]);
+        assert_eq!(apportion(5, &[0.0, 0.0]), vec![3, 2], "zero weights fall back to even");
+        for total in [1usize, 7, 64] {
+            let spans = apportion(total, &[0.7, 0.1, 3.0, 0.0]);
+            assert_eq!(spans.iter().sum::<usize>(), total);
+            assert_eq!(spans[3], 0, "zero weight gets nothing when others exist");
+        }
+    }
+}

@@ -82,6 +82,63 @@ impl ShardRoundWork {
             ShardRoundWork::Pool(w) => Frame::ShardPool(w),
         }
     }
+
+    /// Inverse of [`ShardRoundWork::into_frame`] — recover the work unit
+    /// from a work frame (payload vectors move back, no clone). Lets the
+    /// remote backend encode a frame and still keep the work for the
+    /// takeover path's re-slicing, without ever copying the payload.
+    pub fn from_frame(frame: Frame) -> Option<ShardRoundWork> {
+        match frame {
+            Frame::ShardWork(w) => Some(ShardRoundWork::Encode(w)),
+            Frame::ShardPool(w) => Some(ShardRoundWork::Pool(w)),
+            _ => None,
+        }
+    }
+
+    /// Carve the sub-range `[lo, hi)` out of this unit as a new,
+    /// self-contained work unit executing under shard identity `as_shard`
+    /// — the takeover path's re-scatter primitive. Moving work between
+    /// shards never changes the merged sums: shares are a pure function of
+    /// `(client, instance, round)` and the analyzer's modular sum is
+    /// permutation-invariant, so the shuffle seed chain (which does differ
+    /// per executing shard) is invisible in the estimates. `None` when
+    /// `[lo, hi)` is not a nonempty sub-range of this unit.
+    pub fn slice(&self, lo: u32, hi: u32, as_shard: u32) -> Option<ShardRoundWork> {
+        if lo >= hi || lo < self.lo() || hi > self.lo() + self.span() {
+            return None;
+        }
+        Some(match self {
+            ShardRoundWork::Encode(w) => {
+                let n = w.client_round_seeds.len();
+                let a = (lo - w.lo) as usize * n;
+                let b = (hi - w.lo) as usize * n;
+                ShardRoundWork::Encode(ShardWorkMsg {
+                    round: w.round,
+                    shard: as_shard,
+                    lo,
+                    span: hi - lo,
+                    shard_seed: w.shard_seed,
+                    client_round_seeds: w.client_round_seeds.clone(),
+                    values: w.values[a..b].to_vec(),
+                })
+            }
+            ShardRoundWork::Pool(w) => {
+                // participants × m residues per instance.
+                let per = w.pool.len() / w.span.max(1) as usize;
+                let a = (lo - w.lo) as usize * per;
+                let b = (hi - w.lo) as usize * per;
+                ShardRoundWork::Pool(ShardPoolMsg {
+                    round: w.round,
+                    shard: as_shard,
+                    lo,
+                    span: hi - lo,
+                    participants: w.participants,
+                    round_seed: w.round_seed,
+                    pool: w.pool[a..b].to_vec(),
+                })
+            }
+        })
+    }
 }
 
 /// Why a backend failed to complete a round's shard work.
@@ -143,6 +200,42 @@ impl From<std::io::Error> for ShardBackendError {
     }
 }
 
+/// One shard link's observed health — plain data owned by this seam (the
+/// trait below reports it); tracked and updated by the control plane's
+/// [`ShardDirectory`](crate::control::ShardDirectory).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardHealth {
+    /// False once the link lost a work unit past the retry budget; set
+    /// true again by a successful reply (rejoin) or an optimistic revive.
+    pub alive: bool,
+    /// EWMA of the shard's self-reported compute wall **per instance**
+    /// (span-normalized — a speed estimate, independent of how big a
+    /// range the shard happened to hold), in seconds. `0.0` until the
+    /// first sample.
+    pub latency_ewma_s: f64,
+    /// Losses since the last successful reply.
+    pub consecutive_failures: u32,
+    /// Work units lost past the retry budget, ever.
+    pub failures: u64,
+    /// Work units answered, ever (own ranges and takeover slices alike).
+    pub rounds_ok: u64,
+    /// Takeover slices this shard absorbed for a lost peer.
+    pub takeovers_absorbed: u64,
+}
+
+impl Default for ShardHealth {
+    fn default() -> Self {
+        ShardHealth {
+            alive: true,
+            latency_ewma_s: 0.0,
+            consecutive_failures: 0,
+            failures: 0,
+            rounds_ok: 0,
+            takeovers_absorbed: 0,
+        }
+    }
+}
+
 /// Where one round's shard work runs.
 pub trait ShardBackend {
     /// Execute the round's per-shard work units, returning one
@@ -153,6 +246,24 @@ pub trait ShardBackend {
     fn run_shards(&mut self, work: Vec<ShardRoundWork>)
         -> Result<Vec<ShardOutMsg>, ShardBackendError>;
 
+    /// The instance ranges the backend wants the next round's work
+    /// scattered over — one `(lo, hi)` per shard link, tiling
+    /// `[0, instances)` contiguously in link order (`lo == hi` parks that
+    /// link for the round). The default keeps the engine's static layout;
+    /// the elastic control plane ([`crate::control`]) overrides this with
+    /// its rebalance policy over observed shard health. Estimates are
+    /// range-invariant (see [`ShardRoundWork::slice`]), so any tiling is
+    /// bit-identical to any other.
+    fn plan_ranges(&mut self, _round: u64, default: &[(usize, usize)]) -> Vec<(usize, usize)> {
+        default.to_vec()
+    }
+
+    /// Per-shard health snapshot, when the backend tracks one (see
+    /// [`crate::control::ShardDirectory`]); empty otherwise.
+    fn health(&self) -> Vec<ShardHealth> {
+        Vec::new()
+    }
+
     /// Coordinator↔shard wire traffic since the last call (zero for
     /// in-process backends — nothing crosses a wire).
     fn take_traffic(&mut self) -> TrafficStats {
@@ -161,6 +272,11 @@ pub trait ShardBackend {
 
     /// Work resends performed so far (straggler/retry telemetry).
     fn retries(&self) -> u64 {
+        0
+    }
+
+    /// Lost-range takeovers performed so far (elastic-control telemetry).
+    fn takeovers(&self) -> u64 {
         0
     }
 

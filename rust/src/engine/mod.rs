@@ -86,7 +86,10 @@ use crate::shuffler::{mixnet::Mixnet, Shuffler};
 use crate::transport::{CostModel, Envelope, TrafficStats};
 use crate::util::pool::ThreadPool;
 
-pub use backend::{InProcessBackend, ShardBackend, ShardBackendError, ShardExecutor, ShardRoundWork};
+pub use backend::{
+    InProcessBackend, ShardBackend, ShardBackendError, ShardExecutor, ShardHealth,
+    ShardRoundWork,
+};
 
 /// Stream tag splitting the engine's master seed into the shuffle-seed
 /// chain (`b"SHUF"`); shared with [`crate::cluster::ClusterEngine`] so a
@@ -785,6 +788,21 @@ pub(crate) fn resolve_shards(cfg: &EngineConfig) -> usize {
     } else {
         cfg.shards
     }
+}
+
+/// True when `ranges` tiles `[0, instances)` contiguously in order —
+/// empty `(c, c)` entries (parked shards) allowed anywhere. The shape
+/// contract between [`ShardBackend::plan_ranges`] and the cluster
+/// engine's scatter/merge.
+pub(crate) fn ranges_tile(ranges: &[(usize, usize)], instances: usize) -> bool {
+    let mut cursor = 0usize;
+    for &(lo, hi) in ranges {
+        if lo != cursor || hi < lo {
+            return false;
+        }
+        cursor = hi;
+    }
+    cursor == instances
 }
 
 /// Near-equal contiguous instance ranges for `shards` shards.

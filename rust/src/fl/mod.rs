@@ -10,11 +10,27 @@
 //! [`crate::privacy::accountant::PrivacyAccountant`] tracks the composed
 //! (ε, δ) budget across rounds.
 
+//! # Multi-host rounds
+//!
+//! The driver is engine-agnostic at the round boundary: construct it with
+//! [`FlDriver::new`] for the in-process [`Engine`], or with
+//! [`FlDriver::with_engine`] pointing at a
+//! [`ClusterEngine`](crate::cluster::ClusterEngine) to spread the padded
+//! gradient ranges across shard hosts (the round APIs match, and
+//! estimates are bit-identical across engines at the same seed). Use
+//! [`FlConfig::engine_config`] to build the exact engine configuration
+//! the driver derives, so the cluster fleet is deployed with the right
+//! plan — [`FlDriver::with_engine`] rejects a mismatched one via the
+//! cluster's config fingerprint.
+
 pub mod data;
 pub mod quantize;
 pub mod server;
 
-use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundResult};
+use crate::cluster::{config_fingerprint, ClusterEngine};
+use crate::engine::{
+    ClientSeeds, DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundResult,
+};
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::privacy::accountant::PrivacyAccountant;
 use crate::privacy::DpBudget;
@@ -85,6 +101,58 @@ impl Default for FlConfig {
     }
 }
 
+impl FlConfig {
+    /// The engine configuration this FL config derives for a model of
+    /// `model_dim` parameters — plan (theorem or custom), codec-aligned
+    /// scale/modulus, padded instance count. Build a
+    /// [`ClusterEngine`](crate::cluster::ClusterEngine) from this (plus
+    /// your shard count) to run the same training multi-host.
+    pub fn engine_config(&self, model_dim: usize) -> Result<EngineConfig> {
+        Ok(self.engine_config_and_codec(model_dim)?.0)
+    }
+
+    /// [`FlConfig::engine_config`] plus the gradient codec it was derived
+    /// with — ONE construction site, so the codec the driver quantizes
+    /// with can never drift from the instance count the engine was
+    /// configured for.
+    fn engine_config_and_codec(&self, model_dim: usize) -> Result<(EngineConfig, GradientCodec)> {
+        let codec = GradientCodec::new(model_dim, self.pad_to, self.scale, 1.0);
+        let plan = match self.custom_plan {
+            Some((modulus, scale, m)) => ProtocolPlan::custom(
+                self.clients,
+                self.eps_round,
+                self.delta_round,
+                self.notion,
+                modulus,
+                scale,
+                m,
+            ),
+            None => {
+                let mut p = match self.notion {
+                    NeighborNotion::SingleUser => {
+                        ProtocolPlan::theorem1(self.clients, self.eps_round, self.delta_round)?
+                    }
+                    NeighborNotion::SumPreserving => {
+                        ProtocolPlan::theorem2(self.clients, self.eps_round, self.delta_round)?
+                    }
+                };
+                // the gradient codec owns quantization; align the plan's k
+                p.scale = self.scale;
+                // keep N valid for the larger k: N > 3nk (+ slack)
+                let min_n = 3u64
+                    .saturating_mul(self.clients as u64)
+                    .saturating_mul(self.scale)
+                    .saturating_add((10.0 / self.delta_round) as u64);
+                if p.modulus <= min_n {
+                    p.modulus = crate::arith::next_odd_above(min_n as f64);
+                }
+                p
+            }
+        };
+        Ok((EngineConfig::new(plan, codec.padded()), codec))
+    }
+}
+
 /// One round's telemetry.
 #[derive(Clone, Debug)]
 pub struct RoundLog {
@@ -101,11 +169,32 @@ pub struct RoundLog {
     pub delta_spent: f64,
 }
 
+/// The aggregation engine behind one FL driver — in-process or cluster.
+/// Both speak the same round API and produce bit-identical estimates at
+/// the same seed, so which one a driver holds is invisible in training.
+enum AggEngine {
+    Local(Engine),
+    Cluster(ClusterEngine),
+}
+
+impl AggEngine {
+    fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult> {
+        match self {
+            AggEngine::Local(e) => Ok(e.run_round(inputs, seeds)?),
+            AggEngine::Cluster(e) => Ok(e.run_round(inputs, seeds)?),
+        }
+    }
+}
+
 /// The training driver.
 pub struct FlDriver<'a, O: GradOracle> {
     cfg: FlConfig,
     oracle: &'a O,
-    engine: Engine,
+    engine: AggEngine,
     seeds: DerivedClientSeeds,
     codec: GradientCodec,
     pub server: ServerState,
@@ -115,46 +204,50 @@ pub struct FlDriver<'a, O: GradOracle> {
 
 impl<'a, O: GradOracle> FlDriver<'a, O> {
     pub fn new(cfg: FlConfig, oracle: &'a O, init_params: Vec<f32>, seed: u64) -> Result<Self> {
-        let dim = init_params.len();
-        let codec = GradientCodec::new(dim, cfg.pad_to, cfg.scale, 1.0);
-        let plan = match cfg.custom_plan {
-            Some((modulus, scale, m)) => ProtocolPlan::custom(
-                cfg.clients,
-                cfg.eps_round,
-                cfg.delta_round,
-                cfg.notion,
-                modulus,
-                scale,
-                m,
-            ),
-            None => {
-                let mut p = match cfg.notion {
-                    NeighborNotion::SingleUser => {
-                        ProtocolPlan::theorem1(cfg.clients, cfg.eps_round, cfg.delta_round)?
-                    }
-                    NeighborNotion::SumPreserving => {
-                        ProtocolPlan::theorem2(cfg.clients, cfg.eps_round, cfg.delta_round)?
-                    }
-                };
-                // the gradient codec owns quantization; align the plan's k
-                p.scale = cfg.scale;
-                // keep N valid for the larger k: N > 3nk (+ slack)
-                let min_n = 3u64
-                    .saturating_mul(cfg.clients as u64)
-                    .saturating_mul(cfg.scale)
-                    .saturating_add((10.0 / cfg.delta_round) as u64);
-                if p.modulus <= min_n {
-                    p.modulus = crate::arith::next_odd_above(min_n as f64);
-                }
-                p
-            }
-        };
         // The FL server constructs the engine directly: gradient
         // aggregation is a pure engine workload, with no client registry or
         // streaming ingestion in between.
-        let engine = Engine::new(EngineConfig::new(plan, codec.padded()), seed);
+        let (ecfg, codec) = cfg.engine_config_and_codec(init_params.len())?;
+        let engine = AggEngine::Local(Engine::new(ecfg, seed));
+        Ok(Self::assemble(cfg, oracle, init_params, seed, engine, codec))
+    }
+
+    /// Multi-host training: drive the rounds through a
+    /// [`ClusterEngine`](crate::cluster::ClusterEngine) instead of the
+    /// in-process engine, spreading the padded gradient ranges across
+    /// shard hosts. The cluster must have been built from
+    /// [`FlConfig::engine_config`] (same plan, same instance count) —
+    /// checked via the cluster config fingerprint, the same screen the
+    /// coordinator↔shard handshake applies — and, for bit-identity with
+    /// an in-process driver, from the same `seed`.
+    pub fn with_engine(
+        cfg: FlConfig,
+        oracle: &'a O,
+        init_params: Vec<f32>,
+        seed: u64,
+        cluster: ClusterEngine,
+    ) -> Result<Self> {
+        let (want, codec) = cfg.engine_config_and_codec(init_params.len())?;
+        crate::ensure!(
+            config_fingerprint(cluster.config()) == config_fingerprint(&want),
+            "cluster engine config does not match this FL config \
+             (fingerprint {:#010x} != {:#010x}); build it from FlConfig::engine_config",
+            config_fingerprint(cluster.config()),
+            config_fingerprint(&want)
+        );
+        Ok(Self::assemble(cfg, oracle, init_params, seed, AggEngine::Cluster(cluster), codec))
+    }
+
+    fn assemble(
+        cfg: FlConfig,
+        oracle: &'a O,
+        init_params: Vec<f32>,
+        seed: u64,
+        engine: AggEngine,
+        codec: GradientCodec,
+    ) -> Self {
         let server = ServerState::new(init_params, cfg.lr, cfg.momentum);
-        Ok(FlDriver {
+        FlDriver {
             cfg,
             oracle,
             engine,
@@ -163,15 +256,28 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
             server,
             accountant: PrivacyAccountant::new(),
             logs: Vec::new(),
-        })
+        }
     }
 
     pub fn accountant(&self) -> &PrivacyAccountant {
         &self.accountant
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// The in-process engine, when this driver holds one (`None` for a
+    /// cluster-backed driver).
+    pub fn engine(&self) -> Option<&Engine> {
+        match &self.engine {
+            AggEngine::Local(e) => Some(e),
+            AggEngine::Cluster(_) => None,
+        }
+    }
+
+    /// The cluster engine, when this driver is multi-host.
+    pub fn cluster(&self) -> Option<&ClusterEngine> {
+        match &self.engine {
+            AggEngine::Cluster(e) => Some(e),
+            AggEngine::Local(_) => None,
+        }
     }
 
     /// Run one federated round over the given per-client batches.
@@ -196,8 +302,14 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         deadline_s: f64,
     ) -> Result<RoundLog> {
         let (inputs, loss_sum) = self.local_compute(batches)?;
+        let AggEngine::Local(engine) = &mut self.engine else {
+            crate::bail!(
+                "run_round_lossy needs the in-process engine (stream ingestion is \
+                 coordinator-side); cluster-backed drivers aggregate via run_round"
+            );
+        };
         send_cohort(
-            &self.engine,
+            &*engine,
             &self.seeds,
             &RoundInput::Vectors(&inputs),
             &vec![false; inputs.len()],
@@ -206,7 +318,7 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         let stream_cfg = StreamConfig::new(self.cfg.clients)
             .with_quorum(quorum)
             .with_deadline(deadline_s);
-        let out = StreamingRound::drive(&mut self.engine, channel, &stream_cfg)?;
+        let out = StreamingRound::drive(engine, channel, &stream_cfg)?;
         Ok(self.apply_round(loss_sum, out.result))
     }
 
@@ -434,6 +546,61 @@ mod tests {
         let lb = b.run_round_lossy(&dummy_batches(8), &mut ch, 8, 1.0).unwrap();
         assert_eq!(la.participants, lb.participants);
         assert_eq!(a.server.params(), b.server.params(), "wire path = in-process path");
+    }
+
+    #[test]
+    fn cluster_backed_fl_matches_in_process_bitwise() {
+        use crate::cluster::{ClusterEngine, RemoteShardBackend};
+        // Two FedAvg rounds through a Remote(Loopback) cluster engine —
+        // full wire codec coordinator↔shards — must leave the server
+        // parameters bit-identical to the in-process driver at the same
+        // seed.
+        let oracle = QuadraticOracle { target: vec![0.3, -0.2, 0.7, 0.1] };
+        let cfg = test_cfg(8, 2);
+        let mut local = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 11).unwrap();
+        let ecfg = cfg.engine_config(4).unwrap().with_shards(2);
+        let cluster =
+            ClusterEngine::new(ecfg.clone(), 11, Box::new(RemoteShardBackend::loopback(&ecfg)));
+        let mut remote =
+            FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 11, cluster).unwrap();
+        assert!(remote.engine().is_none() && remote.cluster().is_some());
+        for _ in 0..2 {
+            let a = local.run_round(&dummy_batches(8)).unwrap();
+            let b = remote.run_round(&dummy_batches(8)).unwrap();
+            assert_eq!(a.participants, b.participants);
+            assert_eq!(local.server.params(), remote.server.params(), "params diverged");
+        }
+        assert_eq!(remote.cluster().unwrap().rounds_run(), 2);
+        assert_eq!(remote.accountant().num_rounds(), 2);
+    }
+
+    #[test]
+    fn with_engine_rejects_mismatched_cluster_config() {
+        use crate::cluster::{ClusterEngine, RemoteShardBackend};
+        let oracle = QuadraticOracle { target: vec![0.0; 4] };
+        let cfg = test_cfg(8, 1);
+        // Wrong instance count: a fleet deployed for d=4, not the padded 8.
+        let mut ecfg = cfg.engine_config(4).unwrap();
+        ecfg.instances = 4;
+        let cluster =
+            ClusterEngine::new(ecfg.clone(), 1, Box::new(RemoteShardBackend::loopback(&ecfg)));
+        let err = FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 1, cluster).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn cluster_backed_driver_rejects_lossy_rounds() {
+        use crate::cluster::{ClusterEngine, RemoteShardBackend};
+        use crate::transport::channel::Loopback;
+        let oracle = QuadraticOracle { target: vec![0.0; 4] };
+        let cfg = test_cfg(4, 1);
+        let ecfg = cfg.engine_config(4).unwrap();
+        let cluster =
+            ClusterEngine::new(ecfg.clone(), 1, Box::new(RemoteShardBackend::loopback(&ecfg)));
+        let mut d = FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 1, cluster).unwrap();
+        let mut ch = Loopback::new();
+        let err = d.run_round_lossy(&dummy_batches(4), &mut ch, 2, 1.0).unwrap_err();
+        assert!(format!("{err}").contains("in-process engine"), "{err}");
     }
 
     #[test]

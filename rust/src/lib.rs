@@ -14,7 +14,9 @@
 //!   backpressure, the [`transport`] layer (wire codec, lossy-network
 //!   simulation and dropout-tolerant streaming rounds), the [`cluster`]
 //!   subsystem (engine shards as standalone servers over TCP or simulated
-//!   channels, gathered at a straggler-tolerant barrier), parameter planner
+//!   channels, gathered at a straggler-tolerant barrier), the [`control`]
+//!   plane (shard health directory, rebalance policies, in-round takeover
+//!   of lost ranges), parameter planner
 //!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
@@ -42,6 +44,7 @@ pub mod arith;
 pub mod baselines;
 pub mod cli;
 pub mod cluster;
+pub mod control;
 pub mod coordinator;
 pub mod encoder;
 pub mod engine;
@@ -64,6 +67,10 @@ pub mod prelude {
     pub use crate::arith::fixed::FixedCodec;
     pub use crate::arith::modring::ModRing;
     pub use crate::cluster::{ClusterEngine, ClusterTuning, RemoteShardBackend};
+    pub use crate::control::{
+        ElasticController, ElasticTuning, EvenSplit, Proportional, RebalancePolicy,
+        ShardDirectory, StaticRanges,
+    };
     pub use crate::encoder::prerandomizer::PreRandomizer;
     pub use crate::encoder::CloakEncoder;
     pub use crate::engine::{Engine, EngineConfig, InProcessBackend, RoundInput, ShardBackend};

@@ -10,6 +10,10 @@
 //!   cluster-sim   — rounds over N shard servers (localhost TCP, SimNet
 //!                   or loopback channels), gate-checked bit-identical to
 //!                   the in-process engine, benchkit JSON out
+//!   elastic-sim   — elastic control plane: shard servers with one
+//!                   scripted death, in-round takeover + policy re-ranging,
+//!                   every round gate-checked bit-identical to the
+//!                   in-process engine, benchkit JSON out
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -17,6 +21,7 @@
 //!   cloak-agg plan --n 100000 --eps 0.5 --delta 1e-8
 //!   cloak-agg transport-sim --n 256 --d 8 --loss 0.1 --seed 7
 //!   cloak-agg cluster-sim --n 64 --d 16 --shards 4 --net tcp --seed 7
+//!   cloak-agg elastic-sim --n 48 --d 16 --shards 4 --net tcp --policy proportional
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -28,7 +33,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -36,7 +41,10 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
   transport-sim: --n --d --loss --dup --shards (0=sweep) --quorum
                  --deadline --seed --out
   cluster-sim:   --n --d --shards (0=sweep) --net (tcp|sim|loopback|inprocess)
-                 --loss (sim net only) --seed --out";
+                 --loss (sim net only) --seed --out
+  elastic-sim:   --n --d --shards --rounds --kill (dies BY this round)
+                 --policy (static|even|proportional) --net (tcp|sim)
+                 --seed --out";
 
 fn main() {
     if let Err(e) = run() {
@@ -49,10 +57,10 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["aggregate", "fl", "plan", "smoke", "transport-sim", "cluster-sim"],
+        &["aggregate", "fl", "plan", "smoke", "transport-sim", "cluster-sim", "elastic-sim"],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
-            "loss", "dup", "shards", "quorum", "deadline", "out", "net",
+            "loss", "dup", "shards", "quorum", "deadline", "out", "net", "policy", "kill",
         ],
     )?;
     match args.command.as_str() {
@@ -62,6 +70,7 @@ fn run() -> Result<()> {
         "smoke" => cmd_smoke(&args),
         "transport-sim" => cmd_transport_sim(&args),
         "cluster-sim" => cmd_cluster_sim(&args),
+        "elastic-sim" => cmd_elastic_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -418,6 +427,245 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
         _ => bail!("benchkit JSON in {out} has no cases array"),
     };
     ensure!(cases.len() == sweep.len(), "expected {} cases, found {}", sweep.len(), cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Elastic control plane end-to-end: shard servers (localhost TCP or
+/// in-memory SimNet channels) with one scripted shard death, every round
+/// gate-checked bit-identical to the in-process engine — the death round
+/// completes via in-round takeover, later rounds re-range via the chosen
+/// policy, and (on the sim net) the flapped link heals and rejoins.
+/// Finishes with a streaming-path gate over a dropout cohort and a timed
+/// sweep written as benchkit JSON, re-validated through the crate's own
+/// parser (the CI smoke step keys on the final "benchkit JSON OK" line).
+fn cmd_elastic_sim(args: &Args) -> Result<()> {
+    use cloak_agg::cluster::{
+        cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts,
+        TcpShardHost,
+    };
+    use cloak_agg::control::{
+        ElasticController, ElasticTuning, EvenSplit, Proportional, RebalancePolicy,
+        StaticRanges,
+    };
+    use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 48)?;
+    let d = args.get_usize("d", 16)?;
+    let shards = args.get_usize("shards", 4)?;
+    let rounds = args.get_usize("rounds", 6)?;
+    let kill = args.get_usize("kill", 1)?;
+    let policy_name = args.get_str("policy", "proportional");
+    let net = args.get_str("net", "tcp");
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get_str("out", "BENCH_elastic_sim.json");
+    ensure!(n >= 2, "--n must be >= 2");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!(shards >= 2, "--shards must be >= 2 (takeover needs a survivor)");
+    ensure!(rounds >= 2 && kill < rounds, "need --kill < --rounds (death mid-run)");
+
+    let policy_by_name = |name: &str| -> Result<Box<dyn RebalancePolicy>> {
+        Ok(match name {
+            "static" => Box::new(StaticRanges),
+            "even" | "even-split" => Box::new(EvenSplit),
+            "proportional" | "prop" => Box::new(Proportional::default()),
+            other => bail!("--policy must be static|even|proportional, got '{other}'"),
+        })
+    };
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let cfg = EngineConfig::new(plan.clone(), d).with_shards(shards);
+    // The fleet is the RESOLVED layout (shards is capped at d): victim,
+    // host count and health indices must all use it, not the raw flag.
+    let links = cluster_layout(&cfg).0;
+    ensure!(links >= 2, "need at least 2 resolved shards (--shards capped at --d = {d})");
+    let victim = links / 2; // "shard 2 of 4"
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+
+    // The victim's frame budget before death: round 0 costs it a
+    // handshake + work frame, each later healthy round at least one more —
+    // so the death fires AT OR BEFORE round `kill` (a re-ranging policy's
+    // extra assign frames can only spend the budget sooner; the gates are
+    // death-round-agnostic either way).
+    let death_frames = (kill + 1) as u64;
+    let make_cluster = |policy: Box<dyn RebalancePolicy>,
+                        revive: u64|
+     -> Result<(ClusterEngine, Vec<TcpShardHost>)> {
+        let (backend, hosts) = match net.as_str() {
+            "tcp" => {
+                let hosts: Vec<TcpShardHost> = (0..links)
+                    .map(|s| {
+                        let opts = if s == victim {
+                            // crash for good once the budget is spent:
+                            // connection dropped, listener closed
+                            ServeOpts {
+                                die_after_frames: Some(death_frames as usize),
+                                accept_limit: Some(1),
+                            }
+                        } else {
+                            ServeOpts::default()
+                        };
+                        TcpShardHost::spawn(cfg.clone(), 0, opts)
+                    })
+                    .collect::<std::io::Result<_>>()?;
+                let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
+                let backend = RemoteShardBackend::over_tcp(&cfg, &addrs)?.with_tuning(
+                    ClusterTuning { straggler_timeout_s: 0.3, max_retries: 1, poll_s: 0.01 },
+                );
+                (backend, hosts)
+            }
+            "sim" => {
+                // Flappy victim: silent window starting at the death
+                // frame, healing a handful of swallowed sends later — the
+                // takeover-then-rejoin scenario on virtual time.
+                let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+                    let down: Box<dyn Channel> = if s == victim {
+                        Box::new(SimNet::new(
+                            SimNetConfig::new(derive_seed(seed, s as u64))
+                                .with_silent_after(death_frames)
+                                .with_recover_after(death_frames + 5),
+                        ))
+                    } else {
+                        Box::new(Loopback::new())
+                    };
+                    (down, Box::new(Loopback::new()) as _)
+                })
+                .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+                (backend, Vec::new())
+            }
+            other => bail!("--net must be tcp|sim, got '{other}'"),
+        };
+        let controller = ElasticController::new(backend, policy).with_tuning(ElasticTuning {
+            // A TCP victim never comes back (listener closed): probing it
+            // would only burn retry budgets. The sim victim heals.
+            revive_every: revive,
+            ..ElasticTuning::default()
+        });
+        Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(controller)), hosts))
+    };
+
+    // --- gate: every round bit-identical through death + re-ranging -----
+    let revive = if net == "sim" { 2 } else { 0 };
+    let mut reference = Engine::new(cfg.clone(), seed);
+    let (mut cluster, hosts) = make_cluster(policy_by_name(&policy_name)?, revive)?;
+    let mut table = Table::new(
+        &format!(
+            "elastic-sim: n={n} d={d} S={links} net={net} policy={policy_name} \
+             victim={victim} (dies by round {kill})"
+        ),
+        &["round", "alive", "takeovers", "retries", "victim", "inst0 est"],
+    );
+    for round in 0..rounds {
+        let want = reference.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+        let got = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+        ensure!(
+            got.estimates == want.estimates,
+            "round {round}: elastic estimates diverge from the in-process engine"
+        );
+        let health = cluster.shard_health();
+        let alive = health.iter().filter(|h| h.alive).count();
+        let victim_state = if health[victim].alive { "alive" } else { "dead" };
+        table.row(&[
+            round.to_string(),
+            format!("{alive}/{links}"),
+            cluster.shard_takeovers().to_string(),
+            cluster.shard_retries().to_string(),
+            victim_state.to_string(),
+            format!("{:.4}", got.estimates[0]),
+        ]);
+    }
+    ensure!(cluster.shard_takeovers() >= 1, "the scripted death must have cost a takeover");
+
+    // --- streaming-path gate over a dropout cohort ----------------------
+    let who: Vec<usize> = (0..n).filter(|i| i % 10 != 3).collect();
+    let round_id = reference.next_round();
+    let mut pools = vec![Vec::new(); d];
+    for &i in &who {
+        let shares = reference.encode_client_shares(
+            round_id,
+            i as u32,
+            &RoundInput::Vectors(&inputs),
+            &seeds,
+        )?;
+        for (j, pool) in pools.iter_mut().enumerate() {
+            pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+        }
+    }
+    let want = reference.run_round_streaming(&mut pools.clone(), who.len())?;
+    let got = cluster.run_round_streaming(&pools, who.len())?;
+    ensure!(
+        got.estimates == want.estimates,
+        "streaming round diverges from the in-process engine after the death"
+    );
+    println!("{}", table.render());
+    println!(
+        "gate: {rounds} elastic rounds + 1 streaming round bit-identical to the \
+         in-process engine through a shard death at round {kill}"
+    );
+    drop(cluster);
+    for h in hosts {
+        h.shutdown();
+    }
+
+    // --- timed sweep: policies over the post-death fleet ----------------
+    let mut bench = Bench::new("elastic_sim");
+    for policy in ["static", "even", "proportional"] {
+        let boxed = policy_by_name(policy)?;
+        // In-memory channels for the sweep: the timer measures control-
+        // plane + codec work, not socket scheduling noise. The victim is
+        // dead from its first work frame, so `static` pays a takeover
+        // every round while the elastic policies park it after one.
+        let backend = RemoteShardBackend::over_channels(&cfg, |s| {
+            let down: Box<dyn Channel> = if s == victim {
+                Box::new(SimNet::new(
+                    SimNetConfig::new(derive_seed(seed, 100 + s as u64)).with_silent_after(1),
+                ))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
+        let controller = ElasticController::new(backend, boxed)
+            .with_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() });
+        let mut cluster = ClusterEngine::new(cfg.clone(), seed, Box::new(controller));
+        let name = format!("round n={n} d={d} S={links} policy={policy} churn=dead-shard");
+        bench.run_sharded(&name, (n * d * m) as f64, links, || {
+            cluster
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("elastic round")
+                .estimates[0]
+        });
+    }
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -----
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("elastic_sim"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(cases.len() == 3, "expected 3 policy cases, found {}", cases.len());
     for c in cases {
         ensure!(
             c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,

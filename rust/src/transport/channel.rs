@@ -89,6 +89,16 @@ pub struct SimNetConfig {
     /// A silenced send consumes no fault draws, so the scenario up to the
     /// failure point is unchanged by the fault being configured.
     pub silent_after: Option<u64>,
+    /// Flappy-link companion to [`SimNetConfig::silent_after`]: the silence
+    /// window closes after send `r` — sends `silent_after < i ≤ r` vanish,
+    /// sends `i > r` deliver normally again (the crashed peer came back,
+    /// the partition healed). The elastic control plane's
+    /// takeover-then-rejoin path keys on exactly this shape. `None` with
+    /// `silent_after` set = silent forever. Recovered sends consume fault
+    /// draws again, exactly as if the silence window never happened to
+    /// them — the healthy-scenario suffix is NOT preserved (draw indices
+    /// shift by the number of silenced sends); only the prefix is.
+    pub recover_after: Option<u64>,
     /// Deterministically swallow the first `k` sends (counted as lost),
     /// then behave per the other knobs — the "frame lost exactly once"
     /// fault the cluster barrier's retry tests key on. Consumes no fault
@@ -105,6 +115,7 @@ impl Default for SimNetConfig {
             base_latency_s: 1e-3,
             jitter_s: 5e-3,
             silent_after: None,
+            recover_after: None,
             drop_first: 0,
         }
     }
@@ -134,6 +145,14 @@ impl SimNetConfig {
     /// Go silent (half-open) after delivering the first `k` frames.
     pub fn with_silent_after(mut self, k: u64) -> Self {
         self.silent_after = Some(k);
+        self
+    }
+
+    /// Heal the [`SimNetConfig::with_silent_after`] window after send `r`:
+    /// the link is silent for sends in `(silent_after, r]` and healthy
+    /// again from send `r + 1` — a flappy link rather than a dead one.
+    pub fn with_recover_after(mut self, r: u64) -> Self {
+        self.recover_after = Some(r);
         self
     }
 
@@ -229,8 +248,11 @@ impl Channel for SimNet {
         }
         // Half-open peer: everything past the first k frames vanishes,
         // consuming no fault draws (the scenario prefix is unchanged).
+        // With `recover_after` the silence is a window, not a terminal
+        // state — the flappy-link shape takeover-then-rejoin tests need.
         if let Some(k) = self.cfg.silent_after {
-            if self.stats.sent > k {
+            let healed = self.cfg.recover_after.is_some_and(|r| self.stats.sent > r);
+            if self.stats.sent > k && !healed {
                 self.stats.silenced += 1;
                 return;
             }
@@ -362,6 +384,59 @@ mod tests {
         assert_eq!(net.stats().silenced, 7);
         assert_eq!(net.stats().sent, 10);
         assert_eq!(net.stats().lost, 0, "silence is not loss");
+    }
+
+    #[test]
+    fn flappy_link_silences_only_the_window() {
+        // silent after 2, recovered after 5: sends 3..=5 vanish, the rest
+        // deliver — the takeover-then-rejoin fault shape.
+        let mut net =
+            SimNet::new(SimNetConfig::new(9).with_silent_after(2).with_recover_after(5));
+        for f in frames(8) {
+            net.send(f);
+        }
+        let got = drain(&mut net);
+        let mut ids: Vec<u8> = got.iter().map(|(_, f)| f[0]).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 5, 6, 7], "window (2, 5] is silenced");
+        assert_eq!(net.stats().silenced, 3);
+        assert_eq!(net.stats().lost, 0, "flap is silence, not loss");
+        assert_eq!(net.stats().delivered, 5);
+    }
+
+    #[test]
+    fn flap_preserves_the_scenario_prefix() {
+        // Fault draws before the window are identical with and without the
+        // flap configured (silenced sends consume no draws).
+        let run = |flap: bool| {
+            let mut cfg = SimNetConfig::new(31).with_loss(0.25).with_duplicate(0.2);
+            if flap {
+                cfg = cfg.with_silent_after(6).with_recover_after(10);
+            }
+            let mut net = SimNet::new(cfg);
+            for f in frames(20) {
+                net.send(f);
+            }
+            drain(&mut net)
+                .into_iter()
+                .map(|(t, f)| (t.to_bits(), f[0]))
+                .collect::<Vec<_>>()
+        };
+        let healthy = run(false);
+        let flappy = run(true);
+        let prefix: Vec<_> =
+            healthy.iter().filter(|(_, id)| (*id as u64) < 6).cloned().collect();
+        let flappy_prefix: Vec<_> =
+            flappy.iter().filter(|(_, id)| (*id as u64) < 6).cloned().collect();
+        assert_eq!(flappy_prefix, prefix);
+        assert!(
+            flappy.iter().any(|(_, id)| (*id as u64) >= 10),
+            "healed tail must deliver again"
+        );
+        assert!(
+            !flappy.iter().any(|(_, id)| (6..10).contains(&(*id as u64))),
+            "window must stay silent"
+        );
     }
 
     #[test]

@@ -228,7 +228,8 @@ impl Ingest<'_> {
                 | Frame::ShardAssign(_)
                 | Frame::ShardReady(_)
                 | Frame::ShardWork(_)
-                | Frame::ShardPool(_) => {}
+                | Frame::ShardPool(_)
+                | Frame::ShardRetire(_) => {}
             }
             if self.state.outstanding() == 0 {
                 break; // whole cohort accounted for

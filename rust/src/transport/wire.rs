@@ -33,10 +33,13 @@
 //! | 0x07 | `ShardReady`  | shard u32, config_fnv u32                      |
 //! | 0x08 | `ShardWork`   | round u64, shard u32, lo u32, span u32, shard_seed u64, cohort u32, cohort × seed u64, span·cohort × f64 |
 //! | 0x09 | `ShardPool`   | round u64, shard u32, lo u32, span u32, participants u32, round_seed u64, count u32, count × u64 |
+//! | 0x0A | `ShardRetire` | shard u32                                      |
 //!
-//! Frames 0x06–0x09 are the cluster control plane (see [`crate::cluster`]):
+//! Frames 0x06–0x0A are the cluster control plane (see [`crate::cluster`]):
 //! the coordinator assigns each shard server its instance range, scatters
-//! per-round work, and gathers `ShardOut` frames at the barrier.
+//! per-round work, gathers `ShardOut` frames at the barrier, and retires
+//! stale placements when the elastic control plane re-ranges the fleet
+//! (see [`crate::control`]).
 //!
 //! # Privacy boundary (read carefully — what the wire does and does NOT hide)
 //!
@@ -76,6 +79,7 @@ const TYPE_SHARD_ASSIGN: u8 = 0x06;
 const TYPE_SHARD_READY: u8 = 0x07;
 const TYPE_SHARD_WORK: u8 = 0x08;
 const TYPE_SHARD_POOL: u8 = 0x09;
+const TYPE_SHARD_RETIRE: u8 = 0x0A;
 
 /// A shard's merged round output, promoted to a wire message — the seam
 /// the deferred multi-host-shard work plugs a socket into (each remote
@@ -109,6 +113,17 @@ pub struct ShardAssignMsg {
 pub struct ShardReadyMsg {
     pub shard: u32,
     pub config_fnv: u32,
+}
+
+/// Coordinator→shard: drop the placement held under shard identity
+/// `shard` (the re-assign half of the elastic handshake — placement is
+/// mutable per round, identity is the config fingerprint and never
+/// changes). Fire-and-forget: the server sends no ack, because a lost
+/// retire only leaves a harmless stale placement behind (takeover shard
+/// ids are never reused, and ranges are always bounds-checked).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRetireMsg {
+    pub shard: u32,
 }
 
 /// One shard's full-round work unit: simulate encode → shuffle → analyze
@@ -172,6 +187,8 @@ pub enum Frame {
     ShardWork(ShardWorkMsg),
     /// Coordinator→shard: one streaming work unit (pre-cloaked pools).
     ShardPool(ShardPoolMsg),
+    /// Coordinator→shard: retire a placement (elastic re-assign; no ack).
+    ShardRetire(ShardRetireMsg),
 }
 
 /// Decode failures. Every variant is reachable from corrupted or hostile
@@ -339,6 +356,11 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             for &v in &msg.values {
                 put_u64(&mut p, v.to_bits());
             }
+            p
+        }),
+        Frame::ShardRetire(msg) => (TYPE_SHARD_RETIRE, {
+            let mut p = Vec::with_capacity(4);
+            put_u32(&mut p, msg.shard);
             p
         }),
         Frame::ShardPool(msg) => (TYPE_SHARD_POOL, {
@@ -511,6 +533,10 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
                 pool,
             })
         }
+        TYPE_SHARD_RETIRE => {
+            let shard = r.u32()?;
+            Frame::ShardRetire(ShardRetireMsg { shard })
+        }
         other => return Err(WireError::BadType(other)),
     };
     r.done()?;
@@ -541,7 +567,7 @@ mod tests {
     }
 
     fn gen_frame(g: &mut Gen) -> Frame {
-        match g.usize_in(0, 8) {
+        match g.usize_in(0, 9) {
             0 => Frame::Hello { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
             1 => Frame::Contribute {
                 round: g.seed(),
@@ -581,6 +607,7 @@ mod tests {
                     values: (0..span * cohort).map(|_| g.f64_unit()).collect(),
                 })
             }
+            8 => Frame::ShardRetire(ShardRetireMsg { shard: g.u64_below(1 << 26) as u32 }),
             _ => {
                 let span = g.usize_in(1, 3);
                 let per_instance = g.usize_in(0, 8);

@@ -142,7 +142,8 @@ fn tcp_shard_killed_and_restarted_mid_round_completes() {
     let hosts: Vec<TcpShardHost> = (0..4)
         .map(|s| {
             let opts = if s == 2 {
-                ServeOpts { die_after_frames: Some(1) } // dies on the work frame
+                // dies on the work frame (the restart serves normally)
+                ServeOpts { die_after_frames: Some(1), ..ServeOpts::default() }
             } else {
                 ServeOpts::default()
             };
