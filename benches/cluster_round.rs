@@ -7,16 +7,17 @@
 //! `loopback` (full wire codec through in-memory channels — the
 //! serialization cost in isolation) and `tcp` (shard servers on
 //! localhost sockets — serialization + syscalls + real scatter/gather).
-//! Every case is gate-checked bit-identical to the in-process `Engine`
-//! before the timer starts. Results land in BENCH_cluster_round.json
-//! (benchkit schema, `shards` axis populated), seeding the cluster bench
-//! trajectory.
+//! Every stack is built declaratively by `AggregatorBuilder` and timed
+//! through the `Aggregator` trait — ONE code path for every backend; the
+//! only per-backend line is the topology. Every case is gate-checked
+//! bit-identical to the in-process `Engine` before the timer starts.
+//! Results land in BENCH_cluster_round.json (benchkit schema, `shards`
+//! axis populated), seeding the cluster bench trajectory.
 
 use std::time::Duration;
 
-use cloak_agg::cluster::{
-    cluster_layout, ClusterEngine, RemoteShardBackend, ServeOpts, TcpShardHost,
-};
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+use cloak_agg::cluster::{cluster_layout, ServeOpts, TcpShardHost};
 use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
 use cloak_agg::params::ProtocolPlan;
 use cloak_agg::util::benchkit::Bench;
@@ -48,34 +49,32 @@ fn main() {
                 .expect("reference round")
                 .estimates;
 
-            let (mut cluster, hosts): (ClusterEngine, Vec<TcpShardHost>) = match backend_name {
-                "inprocess" => (ClusterEngine::in_process(cfg.clone(), seed), Vec::new()),
-                "loopback" => (
-                    ClusterEngine::new(
-                        cfg.clone(),
-                        seed,
-                        Box::new(RemoteShardBackend::loopback(&cfg)),
-                    ),
-                    Vec::new(),
-                ),
-                _ => {
-                    let hosts: Vec<TcpShardHost> = (0..cluster_layout(&cfg).0)
-                        .map(|_| {
-                            TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default())
-                                .expect("bind shard host")
-                        })
-                        .collect();
-                    let addrs: Vec<String> =
-                        hosts.iter().map(|h| h.addr().to_string()).collect();
-                    let backend =
-                        RemoteShardBackend::over_tcp(&cfg, &addrs).expect("tcp backend");
-                    (ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), hosts)
-                }
+            // TCP is the only topology with real hosts to spawn; the
+            // stack construction itself is one builder line per backend.
+            let hosts: Vec<TcpShardHost> = if backend_name == "tcp" {
+                (0..cluster_layout(&cfg).0)
+                    .map(|_| {
+                        TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default())
+                            .expect("bind shard host")
+                    })
+                    .collect()
+            } else {
+                Vec::new()
             };
+            let builder = AggregatorBuilder::new(cfg.clone(), seed);
+            let mut cluster: Box<dyn Aggregator> = match backend_name {
+                "inprocess" => builder.in_process(),
+                "loopback" => builder.loopback(),
+                _ => builder.tcp(hosts.iter().map(|h| h.addr().to_string()).collect()),
+            }
+            .build()
+            .expect("build stack");
+
             let gate = cluster
                 .run_round(&RoundInput::Vectors(&inputs), &seeds)
                 .expect("gate round");
             assert_eq!(gate.estimates, want, "backend={backend_name} S={s} diverged");
+            assert_eq!(cluster.backend_label(), backend_name);
 
             let name = format!("round n={n} d={d} backend={backend_name} S={s}");
             b.run_sharded(&name, (n * d * m) as f64, s, || {

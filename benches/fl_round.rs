@@ -5,11 +5,16 @@
 //!     cargo bench --bench fl_round
 //!
 //! Sweeps (clients, instances) at the default shard configuration and
-//! reports wall-clock and messages/s; then holds the widest round fixed
-//! and sweeps the shard count. The coordinator must stay near-linear in
-//! n·d·m, and sharding must not regress the single-shard round.
+//! reports wall-clock and messages/s; then holds a fixed round and sweeps
+//! backend × shard count through the `Aggregator` trait — the SAME
+//! timing loop drives the in-process engine, the no-wire cluster and the
+//! loopback cluster (stacks built by `AggregatorBuilder`, no per-backend
+//! code). The coordinator must stay near-linear in n·d·m, and sharding
+//! must not regress the single-shard round.
 
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
 use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
+use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
 use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::{fmt_f, Table};
 use cloak_agg::rng::{Rng, SeedableRng, SplitMix64};
@@ -59,24 +64,54 @@ fn main() {
     // absolute floor: ≥ 1M messages/s end-to-end on the largest round
     assert!(*rates.last().unwrap() > 1.0e6, "end-to-end rate {}", rates.last().unwrap());
 
-    // --- shard axis: same round, S = 1, 2, 4, cores ----------------------
+    // --- backend × shard axis through the Aggregator trait ---------------
+    // One timing loop for every stack; only the builder's topology line
+    // differs. `local` is the in-process engine (the floor), `inprocess`
+    // is the cluster barrier on local threads (barrier overhead in
+    // isolation), `loopback` adds the full wire codec.
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
     let mut sweep = vec![1usize, 2, 4, cores];
     sweep.sort_unstable();
     sweep.dedup();
-    let mut shard_table = Table::new(
-        "coordinator round vs shard count (clients=32, d=1024, m=16)",
-        &["shards", "secs", "msgs/sec"],
+    let (bn, bd) = (32usize, 1024usize);
+    let plan = ProtocolPlan::exact_secure_agg(bn, 1 << 16, m);
+    let mut rng = SplitMix64::seed_from_u64(5);
+    let inputs: Vec<Vec<f64>> =
+        (0..bn).map(|_| (0..bd).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(77);
+    let mut backend_table = Table::new(
+        "aggregator round vs backend x shard count (clients=32, d=1024, m=16)",
+        &["backend", "shards", "secs", "msgs/sec"],
     );
-    let mut secs_by_shards = Vec::new();
-    for &s in &sweep {
-        let (secs, msgs) = round_secs(32, 1024, m, s);
-        secs_by_shards.push((s, secs));
-        shard_table.row(&[s.to_string(), format!("{secs:.4}"), fmt_f(msgs as f64 / secs)]);
+    let mut local_secs = Vec::new();
+    for backend in ["local", "inprocess", "loopback"] {
+        for &s in &sweep {
+            let cfg = EngineConfig::new(plan.clone(), bd).with_shards(s);
+            let builder = AggregatorBuilder::new(cfg, 77);
+            let mut agg: Box<dyn Aggregator> = match backend {
+                "local" => builder.local(),
+                "inprocess" => builder.in_process(),
+                _ => builder.loopback(),
+            }
+            .build()
+            .expect("build stack");
+            let t0 = Instant::now();
+            let result = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("round");
+            let secs = t0.elapsed().as_secs_f64();
+            if backend == "local" {
+                local_secs.push((s, secs));
+            }
+            backend_table.row(&[
+                backend.to_string(),
+                s.to_string(),
+                format!("{secs:.4}"),
+                fmt_f(result.traffic.messages as f64 / secs),
+            ]);
+        }
     }
-    println!("{}", shard_table.render());
-    let (_, t1) = secs_by_shards[0];
-    let &(s_max, t_max) = secs_by_shards.last().unwrap();
+    println!("{}", backend_table.render());
+    let (_, t1) = local_secs[0];
+    let &(s_max, t_max) = local_secs.last().unwrap();
     assert!(
         t_max <= t1 * 1.6,
         "S={s_max} round slower than single shard: {t_max:.4}s vs {t1:.4}s"

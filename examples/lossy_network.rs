@@ -3,12 +3,17 @@
 //! A cohort of clients cloak-encodes its inputs and streams them to the
 //! coordinator as wire frames through a `SimNet` that loses, duplicates,
 //! delays and reorders traffic. The round closes on a deadline with
-//! whoever made it; the engine renormalizes the estimate over the actual
-//! participants, so the answer is *exact for the surviving cohort* in the
-//! Theorem 2 regime — no bias from who happened to drop.
+//! whoever made it; the aggregator renormalizes the estimate over the
+//! actual participants, so the answer is *exact for the surviving cohort*
+//! in the Theorem 2 regime — no bias from who happened to drop. The
+//! finale runs the very same lossy scenario with the coordinator's rounds
+//! executing on a multi-host cluster stack (built declaratively by
+//! `AggregatorBuilder`) — the frontends are generic over the `Aggregator`
+//! facade, so nothing else changes and the estimates stay bit-identical.
 //!
 //!     cargo run --release --example lossy_network
 
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
 use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
 use cloak_agg::params::ProtocolPlan;
 use cloak_agg::report::Table;
@@ -80,6 +85,27 @@ fn main() {
         "shard invariance: S=1 and S=4 agree on {} survivors, {} instances",
         s1.result.participants,
         s1.result.estimates.len()
+    );
+
+    // Backend invariance: the same scenario again, but the coordinator's
+    // rounds execute on a cluster stack — shard servers behind the full
+    // wire codec — built in one declarative line. Same SimNet seed, same
+    // survivors, bit-identical estimates.
+    let mut cfg = CoordinatorConfig::new(plan.clone(), d);
+    cfg.shards = 4;
+    let stack = AggregatorBuilder::new(cfg.engine_config(), 7)
+        .loopback()
+        .build()
+        .expect("cluster stack");
+    let mut coord = Coordinator::with_aggregator(cfg, 7, stack).expect("cluster coordinator");
+    let mut net = SimNet::new(SimNetConfig::new(99).with_loss(0.1).with_duplicate(0.05));
+    coord.stream_cohort(&inputs, &vec![false; n], &mut net).expect("send cohort");
+    let sc = coord.run_round_streaming(&mut net, n / 4, 1.0).expect("streaming round");
+    assert_eq!(sc.contributed, s4.contributed, "same survivors on the cluster stack");
+    assert_eq!(sc.result.estimates, s4.result.estimates, "bit-identical over the cluster");
+    println!(
+        "backend invariance: the same dropout round over a {}-shard cluster stack matches",
+        coord.aggregator().shards()
     );
     println!("lossy_network: OK");
 }

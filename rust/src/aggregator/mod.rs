@@ -1,0 +1,729 @@
+//! The aggregation facade — **one** round API over every engine the crate
+//! can run, so the frontends never know (or care) where shards execute.
+//!
+//! The paper's protocol is a single abstract primitive: a differentially
+//! private sum in the shuffled model. This crate grew three concrete ways
+//! to execute it — the in-process shard-parallel [`Engine`], the
+//! multi-host [`ClusterEngine`] over wire-frame shard servers, and
+//! elastic stacks (a `ClusterEngine` whose backend is the
+//! [`crate::control::ElasticController`]). The [`Aggregator`] trait is the
+//! contract they all satisfy, and every workload frontend —
+//! [`Pipeline`](crate::pipeline::Pipeline),
+//! [`Coordinator`](crate::coordinator::Coordinator),
+//! [`StreamingRound`](crate::transport::streaming::StreamingRound),
+//! [`FlDriver`](crate::fl::FlDriver), the sketch examples — is written
+//! against it. FedAvg, streaming ingestion and sketches run unchanged
+//! whether shards are threads, processes, or a TCP fleet that loses hosts
+//! mid-round.
+//!
+//! ```text
+//!   Pipeline   Coordinator   StreamingRound   FlDriver   sketches
+//!       │           │              │             │          │
+//!       └───────────┴──────┬───────┴─────────────┴──────────┘
+//!                          ▼
+//!                 dyn Aggregator  (this module: one round API)
+//!                   ├─ Engine                 (in-process shards)
+//!                   └─ ClusterEngine          (ShardBackend seam)
+//!                        ├─ InProcessBackend        (local threads)
+//!                        ├─ RemoteShardBackend      (loopback / SimNet / TCP)
+//!                        └─ ElasticController(Remote…)  (health, re-ranging,
+//!                                                        in-round takeover)
+//! ```
+//!
+//! # The contract
+//!
+//! * **Bit-identity.** At the same `(seed, config, inputs)` every
+//!   implementation produces bit-identical estimates, on both round paths:
+//!   client share streams are a pure function of `(client, instance,
+//!   round)`, mixnet seeds derive per global instance id, and the
+//!   analyzer's modular sum is permutation- and placement-invariant. The
+//!   facade adds no randomness and relays no seeds of its own.
+//! * **Streaming pools are borrowed read-only.** `run_round_streaming`
+//!   takes `&[Vec<u64>]`; implementations shuffle private copies behind
+//!   the privacy boundary. (Historically the in-process engine shuffled
+//!   the caller's pools in place while the cluster borrowed them —
+//!   signature drift this trait reconciled; the caller's pools are now
+//!   never mutated by either.)
+//! * **Round ids advance only on success**, so a failed barrier leaves
+//!   `next_round` unconsumed and the caller can re-run against a repaired
+//!   fleet.
+//! * **Client-side encode is part of the facade.** `encode_client_shares`
+//!   is the exact derivation the server-side shard workers use, on every
+//!   stack — the wire frontends encode against whichever aggregator they
+//!   will stream into.
+//!
+//! # Trust model
+//!
+//! The facade does not move the privacy boundary. Whatever implements it
+//! sits **inside** the analyzer boundary and is trusted exactly as far as
+//! the analyzer/coordinator it extends: an in-process engine keeps
+//! everything in one address space, a cluster engine extends the boundary
+//! over coordinator↔shard links (which need link encryption in a real
+//! deployment — see [`crate::cluster`]'s trust notes), and the elastic
+//! control plane sees only link telemetry, never shares. One method is
+//! deliberately *not* uniform: `run_round_with_views` captures pre-shuffle
+//! per-client messages for the collusion analyses (Lemmas 12–13) — a
+//! local-simulation affordance that would be a privacy bug to ship across
+//! a wire, so remote stacks refuse it with [`AggregatorError::Unsupported`]
+//! instead of pretending.
+//!
+//! # Building stacks
+//!
+//! [`AggregatorBuilder`] constructs any stack declaratively from one
+//! [`EngineConfig`] + a topology, with optional cluster tuning, an
+//! optional elastic wrap, and an optional config-fingerprint gate — the
+//! CLI subcommands, benches and examples use it instead of hand-wiring
+//! backends:
+//!
+//! ```
+//! use cloak_agg::prelude::*;
+//! let plan = ProtocolPlan::exact_secure_agg(8, 100, 8);
+//! let cfg = EngineConfig::new(plan, 4).with_shards(2);
+//! // Local, cluster-over-loopback, or elastic — same frontend code after.
+//! let mut agg = AggregatorBuilder::new(cfg, 7).loopback().build().unwrap();
+//! let inputs: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 / 8.0; 4]).collect();
+//! let r = agg
+//!     .run_round(&RoundInput::Vectors(&inputs), &DerivedClientSeeds::new(7))
+//!     .unwrap();
+//! assert_eq!(r.estimates.len(), 4);
+//! ```
+
+use crate::cluster::{config_fingerprint, ClusterEngine, ClusterTuning, RemoteShardBackend};
+use crate::control::{ElasticController, ElasticTuning, RebalancePolicy};
+use crate::engine::{
+    ClientSeeds, ClientView, Engine, EngineConfig, EngineError, RoundInput, RoundResult,
+    ShardBackendError, ShardHealth,
+};
+use crate::metrics::Registry as MetricsRegistry;
+use crate::transport::channel::Channel;
+
+/// Why an aggregation round failed, unified across implementations.
+/// Validation failures normalize to [`AggregatorError::Engine`] on every
+/// stack (a malformed pool is the same error whether the in-process
+/// engine or a cluster's coordinator-side screen rejected it), so callers
+/// can match on one shape.
+#[derive(Debug, PartialEq)]
+pub enum AggregatorError {
+    /// The protocol layer rejected the round's inputs/pools.
+    Engine(EngineError),
+    /// The shard execution layer failed (lost shard, config mismatch,
+    /// barrier merge, wire, io).
+    Backend(ShardBackendError),
+    /// The operation is not available on this implementation (e.g.
+    /// pre-shuffle view capture on a remote stack).
+    Unsupported { what: &'static str, backend: &'static str },
+}
+
+impl std::fmt::Display for AggregatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggregatorError::Engine(e) => write!(f, "engine: {e}"),
+            AggregatorError::Backend(e) => write!(f, "backend: {e}"),
+            AggregatorError::Unsupported { what, backend } => {
+                write!(f, "{what} is not supported by the '{backend}' aggregator")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AggregatorError {}
+
+impl From<EngineError> for AggregatorError {
+    fn from(e: EngineError) -> Self {
+        AggregatorError::Engine(e)
+    }
+}
+
+impl From<ShardBackendError> for AggregatorError {
+    fn from(e: ShardBackendError) -> Self {
+        match e {
+            // Normalize: a validation failure is the same error on every
+            // stack — don't make callers unwrap a backend envelope to see
+            // it.
+            ShardBackendError::Engine(e) => AggregatorError::Engine(e),
+            other => AggregatorError::Backend(other),
+        }
+    }
+}
+
+/// The unified round API — everything a workload frontend needs from an
+/// aggregation stack. Object-safe: frontends hold `Box<dyn Aggregator>`
+/// (or borrow `&mut dyn Aggregator`) and never dispatch on the concrete
+/// engine.
+pub trait Aggregator {
+    /// The engine configuration this stack was built from (plan, instance
+    /// count, shard/worker/mixnet knobs).
+    fn config(&self) -> &EngineConfig;
+
+    /// The id the *next* round will run under — what a cohort must encode
+    /// against before streaming contributions in. Advances only on
+    /// success.
+    fn next_round(&self) -> u64;
+
+    /// Rounds completed so far.
+    fn rounds_run(&self) -> u64;
+
+    /// Resolved shard count (before the per-round cap at `instances`).
+    fn shards(&self) -> usize;
+
+    /// This stack's metrics registry.
+    fn metrics(&self) -> &MetricsRegistry;
+
+    /// Label for reports and benches ("local", "inprocess", "loopback",
+    /// "tcp", "elastic", …).
+    fn backend_label(&self) -> &'static str;
+
+    /// Client-side encode for the wire path: `client`'s complete cloaked
+    /// contribution (flat `d × m` shares, instance-major) for `round` —
+    /// the same pure function of `(client, instance, round)` on every
+    /// implementation.
+    fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, AggregatorError>;
+
+    /// Run one full round (simulated clients: encode → shuffle → analyze).
+    fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, AggregatorError>;
+
+    /// Like [`Aggregator::run_round`], additionally returning every
+    /// client's pre-shuffle messages — the collusion analyses' raw
+    /// material. A local-simulation affordance: remote stacks return
+    /// [`AggregatorError::Unsupported`] (views must never cross a wire —
+    /// see the module's trust notes).
+    fn run_round_with_views(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<(RoundResult, Vec<ClientView>), AggregatorError> {
+        let _ = (inputs, seeds);
+        Err(AggregatorError::Unsupported {
+            what: "run_round_with_views (pre-shuffle view capture)",
+            backend: self.backend_label(),
+        })
+    }
+
+    /// Streaming entry point: run the server half of a round over a
+    /// partial cohort's per-instance pools of already-cloaked shares,
+    /// with Algorithm 2 renormalized over `participants`. Pools are
+    /// borrowed read-only on every implementation — shards shuffle
+    /// private copies behind the privacy boundary.
+    fn run_round_streaming(
+        &mut self,
+        pools: &[Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError>;
+
+    /// Work resends performed so far (straggler/retry telemetry; zero for
+    /// stacks without a wire).
+    fn shard_retries(&self) -> u64 {
+        0
+    }
+
+    /// Lost-range takeovers performed so far (zero unless the stack is
+    /// elastic).
+    fn shard_takeovers(&self) -> u64 {
+        0
+    }
+
+    /// Per-shard health snapshot, when the stack tracks one (elastic
+    /// control plane); empty otherwise.
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        Vec::new()
+    }
+}
+
+impl Aggregator for Engine {
+    fn config(&self) -> &EngineConfig {
+        Engine::config(self)
+    }
+
+    fn next_round(&self) -> u64 {
+        Engine::next_round(self)
+    }
+
+    fn rounds_run(&self) -> u64 {
+        Engine::rounds_run(self)
+    }
+
+    fn shards(&self) -> usize {
+        Engine::shards(self)
+    }
+
+    fn metrics(&self) -> &MetricsRegistry {
+        Engine::metrics(self)
+    }
+
+    fn backend_label(&self) -> &'static str {
+        "local"
+    }
+
+    fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, AggregatorError> {
+        Ok(Engine::encode_client_shares(self, round, client, inputs, seeds)?)
+    }
+
+    fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(Engine::run_round(self, inputs, seeds)?)
+    }
+
+    fn run_round_with_views(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<(RoundResult, Vec<ClientView>), AggregatorError> {
+        Ok(Engine::run_round_with_views(self, inputs, seeds)?)
+    }
+
+    fn run_round_streaming(
+        &mut self,
+        pools: &[Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(Engine::run_round_streaming(self, pools, participants)?)
+    }
+}
+
+impl Aggregator for ClusterEngine {
+    fn config(&self) -> &EngineConfig {
+        ClusterEngine::config(self)
+    }
+
+    fn next_round(&self) -> u64 {
+        ClusterEngine::next_round(self)
+    }
+
+    fn rounds_run(&self) -> u64 {
+        ClusterEngine::rounds_run(self)
+    }
+
+    fn shards(&self) -> usize {
+        ClusterEngine::shards(self)
+    }
+
+    fn metrics(&self) -> &MetricsRegistry {
+        ClusterEngine::metrics(self)
+    }
+
+    fn backend_label(&self) -> &'static str {
+        ClusterEngine::backend_label(self)
+    }
+
+    fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, AggregatorError> {
+        Ok(ClusterEngine::encode_client_shares(self, round, client, inputs, seeds)?)
+    }
+
+    fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(ClusterEngine::run_round(self, inputs, seeds)?)
+    }
+
+    fn run_round_streaming(
+        &mut self,
+        pools: &[Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(ClusterEngine::run_round_streaming(self, pools, participants)?)
+    }
+
+    fn shard_retries(&self) -> u64 {
+        ClusterEngine::shard_retries(self)
+    }
+
+    fn shard_takeovers(&self) -> u64 {
+        ClusterEngine::shard_takeovers(self)
+    }
+
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        ClusterEngine::shard_health(self)
+    }
+}
+
+/// Where an [`AggregatorBuilder`] stack executes its shards.
+enum Topology {
+    /// The in-process [`Engine`] — shards are local pool workers, no
+    /// wire, no backend seam.
+    Local,
+    /// [`ClusterEngine`] over [`InProcessBackend`](crate::engine::InProcessBackend)
+    /// — the engine's barrier with local threads (the no-wire cluster
+    /// baseline).
+    InProcess,
+    /// [`ClusterEngine`] over in-memory `Loopback` channels — the full
+    /// wire codec with zero faults.
+    Loopback,
+    /// [`ClusterEngine`] over TCP shard servers, one address per shard.
+    Tcp(Vec<String>),
+    /// [`ClusterEngine`] over caller-supplied channel pairs
+    /// `(coordinator→shard, shard→coordinator)` — SimNet fault injection,
+    /// custom transports.
+    #[allow(clippy::type_complexity)]
+    Channels(Box<dyn FnMut(usize) -> (Box<dyn Channel>, Box<dyn Channel>)>),
+}
+
+/// Declarative construction of any aggregation stack — local ⇄ cluster ⇄
+/// elastic — from one [`EngineConfig`] plus a topology spec. One builder
+/// call replaces the hand-wired backend plumbing the CLI subcommands and
+/// benches used to copy-paste; the optional fingerprint gate
+/// ([`AggregatorBuilder::expect_fingerprint`]) is the same screen the
+/// coordinator↔shard handshake and [`crate::fl::FlDriver`] apply, so a
+/// stack built for the wrong plan fails at construction, not mid-round.
+pub struct AggregatorBuilder {
+    cfg: EngineConfig,
+    seed: u64,
+    topology: Topology,
+    tuning: Option<ClusterTuning>,
+    elastic: Option<Box<dyn RebalancePolicy>>,
+    /// Applied only when [`AggregatorBuilder::elastic`] picked a policy —
+    /// tuning alone never turns a stack elastic.
+    elastic_tuning: ElasticTuning,
+    expect_fnv: Option<u32>,
+}
+
+impl AggregatorBuilder {
+    /// Start a builder for `cfg` with all round randomness derived from
+    /// `seed`. Defaults to the local in-process engine.
+    pub fn new(cfg: EngineConfig, seed: u64) -> Self {
+        AggregatorBuilder {
+            cfg,
+            seed,
+            topology: Topology::Local,
+            tuning: None,
+            elastic: None,
+            elastic_tuning: ElasticTuning::default(),
+            expect_fnv: None,
+        }
+    }
+
+    /// The config fingerprint this builder's stack will carry — what a
+    /// deployer records and later feeds back through
+    /// [`AggregatorBuilder::expect_fingerprint`].
+    pub fn fingerprint(&self) -> u32 {
+        config_fingerprint(&self.cfg)
+    }
+
+    /// The in-process [`Engine`] (default).
+    pub fn local(mut self) -> Self {
+        self.topology = Topology::Local;
+        self
+    }
+
+    /// A [`ClusterEngine`] with shard work on local threads (no wire).
+    pub fn in_process(mut self) -> Self {
+        self.topology = Topology::InProcess;
+        self
+    }
+
+    /// A [`ClusterEngine`] over in-memory loopback channels (full wire
+    /// codec, zero faults).
+    pub fn loopback(mut self) -> Self {
+        self.topology = Topology::Loopback;
+        self
+    }
+
+    /// A [`ClusterEngine`] over TCP shard servers — one address per shard
+    /// of the resolved layout (see [`crate::cluster::cluster_layout`]).
+    pub fn tcp(mut self, addrs: Vec<String>) -> Self {
+        self.topology = Topology::Tcp(addrs);
+        self
+    }
+
+    /// A [`ClusterEngine`] over caller-supplied channel pairs — the
+    /// fault-injection topology (`SimNet` links, custom transports).
+    pub fn over_channels(
+        mut self,
+        make: impl FnMut(usize) -> (Box<dyn Channel>, Box<dyn Channel>) + 'static,
+    ) -> Self {
+        self.topology = Topology::Channels(Box::new(make));
+        self
+    }
+
+    /// Barrier tuning for remote topologies (straggler timeout, retry
+    /// budget, poll tick). Ignored by `local` / `in_process`.
+    pub fn cluster_tuning(mut self, tuning: ClusterTuning) -> Self {
+        self.tuning = Some(tuning);
+        self
+    }
+
+    /// Wrap the remote backend in the elastic control plane
+    /// ([`ElasticController`]): health directory, round-boundary
+    /// re-ranging under `policy`, in-round takeover of lost ranges.
+    /// Requires a wire topology (`loopback` / `tcp` / `over_channels`).
+    pub fn elastic(mut self, policy: Box<dyn RebalancePolicy>) -> Self {
+        self.elastic = Some(policy);
+        self
+    }
+
+    /// Control-plane tuning for an [`AggregatorBuilder::elastic`] stack
+    /// (EWMA smoothing, revive cadence). Inert unless
+    /// [`AggregatorBuilder::elastic`] also picks a policy — tuning alone
+    /// never activates the control plane.
+    pub fn elastic_tuning(mut self, tuning: ElasticTuning) -> Self {
+        self.elastic_tuning = tuning;
+        self
+    }
+
+    /// Refuse to build unless the stack's config fingerprint equals
+    /// `fnv` — the deploy-time screen against plan drift.
+    pub fn expect_fingerprint(mut self, fnv: u32) -> Self {
+        self.expect_fnv = Some(fnv);
+        self
+    }
+
+    /// Assemble the stack.
+    pub fn build(self) -> Result<Box<dyn Aggregator>, AggregatorError> {
+        let AggregatorBuilder { cfg, seed, topology, tuning, elastic, elastic_tuning, expect_fnv } =
+            self;
+        if let Some(want) = expect_fnv {
+            let got = config_fingerprint(&cfg);
+            if got != want {
+                return Err(AggregatorError::Backend(ShardBackendError::ConfigMismatch {
+                    shard: 0,
+                    want,
+                    got,
+                }));
+            }
+        }
+        // The no-wire topologies have no remote backend to wrap.
+        if elastic.is_some() {
+            let label = match topology {
+                Topology::Local => Some("local"),
+                Topology::InProcess => Some("inprocess"),
+                _ => None,
+            };
+            if let Some(backend) = label {
+                return Err(AggregatorError::Unsupported {
+                    what: "the elastic control plane (needs a wire topology)",
+                    backend,
+                });
+            }
+        }
+        let remote = match topology {
+            Topology::Local => return Ok(Box::new(Engine::new(cfg, seed))),
+            Topology::InProcess => return Ok(Box::new(ClusterEngine::in_process(cfg, seed))),
+            Topology::Loopback => RemoteShardBackend::loopback(&cfg),
+            Topology::Tcp(addrs) => RemoteShardBackend::over_tcp(&cfg, &addrs)?,
+            Topology::Channels(make) => RemoteShardBackend::over_channels(&cfg, make),
+        };
+        let remote = match tuning {
+            Some(t) => remote.with_tuning(t),
+            None => remote,
+        };
+        let backend: Box<dyn crate::engine::ShardBackend> = match elastic {
+            Some(policy) => {
+                Box::new(ElasticController::new(remote, policy).with_tuning(elastic_tuning))
+            }
+            None => Box::new(remote),
+        };
+        Ok(Box::new(ClusterEngine::new(cfg, seed, backend)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::EvenSplit;
+    use crate::engine::DerivedClientSeeds;
+    use crate::params::ProtocolPlan;
+    use crate::transport::channel::{Loopback, SimNet, SimNetConfig};
+
+    fn small_cfg(n: usize, d: usize, shards: usize) -> EngineConfig {
+        EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d).with_shards(shards)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn every_builder_topology_is_bit_identical() {
+        // The facade's core promise: local, in-process-cluster, loopback
+        // and elastic stacks built from the same (config, seed) produce
+        // bit-identical estimates through the SAME trait-object code path.
+        let (n, d, seed) = (10usize, 6usize, 5u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let stacks: Vec<Box<dyn Aggregator>> = vec![
+            AggregatorBuilder::new(small_cfg(n, d, 2), seed).local().build().unwrap(),
+            AggregatorBuilder::new(small_cfg(n, d, 2), seed).in_process().build().unwrap(),
+            AggregatorBuilder::new(small_cfg(n, d, 2), seed).loopback().build().unwrap(),
+            AggregatorBuilder::new(small_cfg(n, d, 2), seed)
+                .loopback()
+                .elastic(Box::new(EvenSplit))
+                .build()
+                .unwrap(),
+        ];
+        let mut estimates: Vec<Vec<f64>> = Vec::new();
+        for mut agg in stacks {
+            let r = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            assert_eq!(r.participants, n, "{}", agg.backend_label());
+            estimates.push(r.estimates);
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
+        assert_eq!(estimates[0], estimates[3]);
+    }
+
+    #[test]
+    fn trait_object_drives_both_round_paths() {
+        // The satellite smoke test: a Box<dyn Aggregator> drives a full
+        // round AND a streaming round, with encode_client_shares off the
+        // same trait object feeding the pools.
+        let (n, d, seed) = (8usize, 4usize, 9u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut agg: Box<dyn Aggregator> =
+            AggregatorBuilder::new(small_cfg(n, d, 2), seed).loopback().build().unwrap();
+        let m = agg.config().plan.num_messages;
+        let round = agg.next_round();
+        let who: Vec<usize> = (0..n).filter(|i| i % 3 != 1).collect();
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = agg
+                .encode_client_shares(round, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let s = agg.run_round_streaming(&pools, who.len()).unwrap();
+        assert_eq!(s.participants, who.len());
+        let r = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(r.round_id, 1, "round ids advance through the trait");
+        assert_eq!(agg.rounds_run(), 2);
+    }
+
+    #[test]
+    fn views_are_local_only() {
+        let (n, d, seed) = (6usize, 3usize, 3u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut local: Box<dyn Aggregator> =
+            AggregatorBuilder::new(small_cfg(n, d, 1), seed).build().unwrap();
+        let (_, views) = local.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(views.len(), n);
+        let mut remote: Box<dyn Aggregator> =
+            AggregatorBuilder::new(small_cfg(n, d, 1), seed).loopback().build().unwrap();
+        let err = remote.run_round_with_views(&RoundInput::Vectors(&inputs), &seeds).unwrap_err();
+        assert!(
+            matches!(err, AggregatorError::Unsupported { backend: "loopback", .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn fingerprint_gate_refuses_plan_drift() {
+        let cfg = small_cfg(8, 4, 2);
+        let fnv = AggregatorBuilder::new(cfg.clone(), 1).fingerprint();
+        assert!(AggregatorBuilder::new(cfg.clone(), 1)
+            .loopback()
+            .expect_fingerprint(fnv)
+            .build()
+            .is_ok());
+        let drifted = small_cfg(9, 4, 2); // different n
+        let err = AggregatorBuilder::new(drifted, 1)
+            .loopback()
+            .expect_fingerprint(fnv)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, AggregatorError::Backend(ShardBackendError::ConfigMismatch { .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn elastic_needs_a_wire_topology() {
+        for (build, backend) in [
+            (AggregatorBuilder::new(small_cfg(8, 4, 2), 1).elastic(Box::new(EvenSplit)), "local"),
+            (
+                AggregatorBuilder::new(small_cfg(8, 4, 2), 1)
+                    .in_process()
+                    .elastic(Box::new(EvenSplit)),
+                "inprocess",
+            ),
+        ] {
+            let err = build.build().unwrap_err();
+            assert!(
+                matches!(err, AggregatorError::Unsupported { backend: b, .. } if b == backend),
+                "{err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_over_channels_absorbs_a_dead_shard() {
+        // Builder-constructed elastic stack over SimNet channels where one
+        // link goes silent after its handshake: the round still completes,
+        // bit-identical to the local stack, via in-round takeover.
+        let (n, d, seed) = (10usize, 6usize, 11u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut local =
+            AggregatorBuilder::new(small_cfg(n, d, 3), seed).local().build().unwrap();
+        let want = local.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let mut elastic = AggregatorBuilder::new(small_cfg(n, d, 3), seed)
+            .over_channels(|s| {
+                let down: Box<dyn Channel> = if s == 1 {
+                    Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+                } else {
+                    Box::new(Loopback::new())
+                };
+                (down, Box::new(Loopback::new()) as _)
+            })
+            .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+            .elastic(Box::new(EvenSplit))
+            .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+            .build()
+            .unwrap();
+        let got = elastic.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(got.estimates, want.estimates, "takeover must be invisible in the sums");
+        assert_eq!(elastic.shard_takeovers(), 1);
+        assert!(!elastic.shard_health()[1].alive, "victim parked in the health view");
+        assert_eq!(elastic.backend_label(), "elastic");
+    }
+
+    #[test]
+    fn errors_normalize_across_stacks() {
+        // The same malformed pool is the same AggregatorError on every
+        // implementation — no backend envelope to unwrap.
+        let (n, d) = (6usize, 2usize);
+        let mut local =
+            AggregatorBuilder::new(small_cfg(n, d, 1), 1).local().build().unwrap();
+        let mut remote =
+            AggregatorBuilder::new(small_cfg(n, d, 1), 1).loopback().build().unwrap();
+        for agg in [&mut local, &mut remote] {
+            let err = agg.run_round_streaming(&vec![Vec::new(); 3], 1).unwrap_err();
+            assert_eq!(
+                err,
+                AggregatorError::Engine(EngineError::WrongInstanceCount { expected: 2, got: 3 })
+            );
+            assert_eq!(agg.next_round(), 0, "failed rounds must not consume ids");
+        }
+    }
+}

@@ -627,6 +627,10 @@ pub struct ClusterEngine {
     /// [`ShardBackend::plan_ranges`] re-partitions.
     ranges: Vec<(usize, usize)>,
     backend: Box<dyn ShardBackend>,
+    /// Client-side codec for the wire path — identical to the in-process
+    /// engine's (one construction site, see `engine::client_codec`).
+    encoder: crate::encoder::CloakEncoder,
+    prerandomizer: crate::encoder::prerandomizer::PreRandomizer,
     rounds_run: u64,
     shuffle_seed: u64,
     metrics: MetricsRegistry,
@@ -638,9 +642,12 @@ impl ClusterEngine {
     pub fn new(cfg: EngineConfig, seed: u64, backend: Box<dyn ShardBackend>) -> Self {
         assert!(cfg.instances >= 1, "cluster engine needs at least one instance");
         let (_, ranges) = cluster_layout(&cfg);
+        let (encoder, prerandomizer) = crate::engine::client_codec(&cfg.plan);
         ClusterEngine {
             ranges,
             backend,
+            encoder,
+            prerandomizer,
             rounds_run: 0,
             shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
             metrics: MetricsRegistry::new(),
@@ -677,6 +684,34 @@ impl ClusterEngine {
     /// a failed barrier leaves the round id unconsumed for the re-run).
     pub fn next_round(&self) -> u64 {
         self.rounds_run
+    }
+
+    /// Client-side encode for the wire path — bit-identical to
+    /// [`Engine::encode_client_shares`](crate::engine::Engine::encode_client_shares)
+    /// (the share stream is a pure function of `(client, instance, round)`
+    /// and both engines build the same codec from the plan), so a cohort
+    /// can encode against either stack and stream into the other. This is
+    /// what lets the lossy-transport frontends
+    /// ([`StreamingRound`](crate::transport::streaming::StreamingRound),
+    /// [`FlDriver::run_round_lossy`](crate::fl::FlDriver::run_round_lossy))
+    /// drive a cluster exactly as they drive the in-process engine.
+    pub fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, crate::engine::EngineError> {
+        crate::engine::encode_client_shares_with(
+            &self.encoder,
+            &self.prerandomizer,
+            self.cfg.instances,
+            self.cfg.plan.num_messages,
+            round,
+            client,
+            inputs,
+            seeds,
+        )
     }
 
     /// Work resends the backend has performed so far.
@@ -782,10 +817,10 @@ impl ClusterEngine {
     /// [`Engine::run_round_streaming`](crate::engine::Engine::run_round_streaming):
     /// per-instance pools of already-cloaked shares are scattered by shard
     /// range; shards shuffle and analyze with Algorithm 2 renormalized
-    /// over `participants`. Unlike the in-process engine (which shuffles
-    /// the caller's pools in place), this borrows the pools read-only —
-    /// each shard permutes its own copy behind the privacy boundary — so
-    /// the signature says so.
+    /// over `participants`. Pools are borrowed read-only — the unified
+    /// [`Aggregator`](crate::aggregator::Aggregator) contract both engines
+    /// honor: each shard permutes its own copy behind the privacy
+    /// boundary, and the caller's pools are never mutated.
     pub fn run_round_streaming(
         &mut self,
         pools: &[Vec<u64>],
@@ -1110,7 +1145,7 @@ mod tests {
                 pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
             }
         }
-        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let want = engine.run_round_streaming(&pools, who.len()).unwrap();
         let mut cluster =
             ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
         let got = cluster.run_round_streaming(&pools, who.len()).unwrap();

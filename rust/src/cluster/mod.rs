@@ -8,8 +8,12 @@
 //! instance range and serves encode→shuffle→analyze for it, driven
 //! entirely by [`wire`](crate::transport::wire) frames over the
 //! [`Channel`](crate::transport::channel::Channel) trait, and a
-//! [`ClusterEngine`] speaks the same round API as the in-process
-//! [`Engine`](crate::engine::Engine).
+//! [`ClusterEngine`] implements the [`Aggregator`](crate::aggregator::Aggregator)
+//! facade — the same round API as the in-process
+//! [`Engine`](crate::engine::Engine), so every frontend (pipeline,
+//! coordinator, streaming ingestion, FL) drives a cluster without knowing
+//! it. Start at [`crate::aggregator`] for the facade contract and the
+//! declarative builder; this module documents the wire-level mechanics.
 //!
 //! # Architecture
 //!

@@ -452,7 +452,7 @@ mod tests {
                 pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
             }
         }
-        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let want = engine.run_round_streaming(&pools, who.len()).unwrap();
         let mut cluster = elastic_cluster(
             &cfg,
             seed,

@@ -52,8 +52,13 @@ impl InstancePools {
         &self.pools[j]
     }
 
-    pub fn pools_mut(&mut self) -> &mut [Vec<u64>] {
-        &mut self.pools
+    /// The collected pools, read-only — the shape
+    /// [`Aggregator::run_round_streaming`](crate::aggregator::Aggregator::run_round_streaming)
+    /// borrows. No mutable accessor exists: pools must reach the
+    /// aggregator exactly as ingested, or the facade's bit-identity
+    /// contract (every stack sees the same bytes) breaks silently.
+    pub fn pools(&self) -> &[Vec<u64>] {
+        &self.pools
     }
 
     pub fn total_messages(&self) -> usize {

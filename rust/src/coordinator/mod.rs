@@ -6,9 +6,16 @@
 //! queue ingestion for streaming transports ([`batcher::Batcher`]), and the
 //! per-round lifecycle state machine ([`round::RoundState`]) — and
 //! delegates the protocol round itself (encode → pre-randomize → shuffle →
-//! analyze, shard-parallel across instances) to [`crate::engine::Engine`].
+//! analyze, shard-parallel across instances) to whatever
+//! [`Aggregator`](crate::aggregator::Aggregator) it was built over: the
+//! in-process [`Engine`](crate::engine::Engine) by default
+//! ([`Coordinator::new`]), or any cluster / elastic stack handed to
+//! [`Coordinator::with_aggregator`] — the registry, batcher and round
+//! state machine neither know nor care where shards execute, and
+//! [`Coordinator::run_round_streaming`] drives dropout-tolerant rounds
+//! over a multi-host fleet exactly as it does in-process.
 //! One round aggregates `d` independent instances (e.g. every coordinate
-//! of a clipped gradient) across `n` registered clients; the engine
+//! of a clipped gradient) across `n` registered clients; the aggregator
 //! partitions the instances across shards and merges a single
 //! [`RoundResult`] at the barrier.
 //!
@@ -19,6 +26,8 @@ pub mod batcher;
 pub mod registry;
 pub mod round;
 
+use crate::aggregator::Aggregator;
+use crate::cluster::config_fingerprint;
 use crate::engine::{Engine, EngineConfig, RoundInput};
 use crate::metrics::Registry as MetricsRegistry;
 use crate::params::ProtocolPlan;
@@ -52,6 +61,17 @@ pub struct CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
+    /// The engine configuration this coordinator config derives — build
+    /// an [`AggregatorBuilder`](crate::aggregator::AggregatorBuilder)
+    /// stack from this to run the same service multi-host
+    /// ([`Coordinator::with_aggregator`] fingerprint-checks against it).
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig::new(self.plan.clone(), self.instances)
+            .with_shards(self.shards)
+            .with_workers_per_shard(self.workers)
+            .with_mixnet_hops(self.mixnet_hops)
+    }
+
     pub fn new(plan: ProtocolPlan, instances: usize) -> Self {
         // §Perf iteration 5: one mixnet hop by default. One uniform
         // permutation composed with anything IS a uniform permutation
@@ -74,19 +94,43 @@ impl CoordinatorConfig {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: ClientRegistry,
-    engine: Engine,
+    agg: Box<dyn Aggregator>,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, seed: u64) -> Self {
+        let agg = Box::new(Engine::new(cfg.engine_config(), seed));
+        Self::assemble(cfg, seed, agg)
+    }
+
+    /// A coordinator over any aggregation stack — a
+    /// [`ClusterEngine`](crate::cluster::ClusterEngine) spreading the
+    /// instance ranges across shard hosts, an elastic fleet, or the
+    /// in-process engine again. The stack must have been built from
+    /// [`CoordinatorConfig::engine_config`] (checked via the config
+    /// fingerprint, the same screen the coordinator↔shard handshake
+    /// applies) and, for bit-identity with an in-process coordinator,
+    /// from the same `seed`.
+    pub fn with_aggregator(
+        cfg: CoordinatorConfig,
+        seed: u64,
+        agg: Box<dyn Aggregator>,
+    ) -> Result<Self> {
+        let want = config_fingerprint(&cfg.engine_config());
+        let got = config_fingerprint(agg.config());
+        crate::ensure!(
+            got == want,
+            "aggregator config does not match this coordinator config \
+             (fingerprint {got:#010x} != {want:#010x}); build it from \
+             CoordinatorConfig::engine_config"
+        );
+        Ok(Self::assemble(cfg, seed, agg))
+    }
+
+    fn assemble(cfg: CoordinatorConfig, seed: u64, agg: Box<dyn Aggregator>) -> Self {
         let mut registry = ClientRegistry::new(seed);
         registry.register_many(cfg.plan.n);
-        let engine_cfg = EngineConfig::new(cfg.plan.clone(), cfg.instances)
-            .with_shards(cfg.shards)
-            .with_workers_per_shard(cfg.workers)
-            .with_mixnet_hops(cfg.mixnet_hops);
-        let engine = Engine::new(engine_cfg, seed);
-        Coordinator { cfg, registry, engine }
+        Coordinator { cfg, registry, agg }
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -101,12 +145,13 @@ impl Coordinator {
         &mut self.registry
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// The aggregation stack this coordinator drives.
+    pub fn aggregator(&self) -> &dyn Aggregator {
+        self.agg.as_ref()
     }
 
     pub fn metrics(&self) -> &MetricsRegistry {
-        self.engine.metrics()
+        self.agg.metrics()
     }
 
     /// Run one full round. `inputs[i]` is client i's d-vector, every
@@ -140,7 +185,7 @@ impl Coordinator {
         let n = self.registry.len();
         crate::ensure!(inputs.len() == n, "expected {n} client inputs, got {}", inputs.len());
         let round = send_cohort(
-            &self.engine,
+            self.agg.as_ref(),
             &self.registry,
             &RoundInput::Vectors(inputs),
             drop_mask,
@@ -154,7 +199,10 @@ impl Coordinator {
     /// full cohort — the streaming driver records contributions *and*
     /// dropouts on the round state machine straight from transport events
     /// (explicit `Drop` frames, lost frames, deadline expiry), and the
-    /// engine renormalizes the estimates over whoever actually showed up.
+    /// aggregator renormalizes the estimates over whoever actually showed
+    /// up. Works over any stack: a cluster-backed coordinator scatters the
+    /// collected pools to its shard fleet, bit-identically to the
+    /// in-process path at the same seed.
     pub fn run_round_streaming(
         &mut self,
         channel: &mut dyn Channel,
@@ -168,7 +216,7 @@ impl Coordinator {
             close_on_quorum: false,
             batch_capacity: self.cfg.batch_capacity,
         };
-        let outcome = StreamingRound::drive(&mut self.engine, channel, &cfg)?;
+        let outcome = StreamingRound::drive(self.agg.as_mut(), channel, &cfg)?;
         crate::ensure!(
             outcome.result.estimates.len() == self.cfg.instances,
             "engine returned {} estimates for {} instances",
@@ -191,20 +239,23 @@ impl Coordinator {
         }
 
         // Round lifecycle. The analyzer-only-sees-the-shuffled-multiset
-        // ordering is enforced *inside* the engine (per shard); in this
-        // in-process path the whole cohort arrives atomically, so the
+        // ordering is enforced *inside* the aggregator (per shard); in
+        // this in-process path the whole cohort arrives atomically, so the
         // state machine below RECORDS the lifecycle rather than gating it.
         // It gates for real when ingestion is streaming: a transport feeds
         // contributions through the batcher during Collecting, and
         // begin_shuffle refuses until the cohort is complete.
-        let mut state = RoundState::new(self.engine.rounds_run(), n);
+        let mut state = RoundState::new(self.agg.rounds_run(), n);
         state.begin_collect()?;
         let round_inputs = RoundInput::Vectors(inputs);
         let (result, views) = if capture_views {
-            let (r, v) = self.engine.run_round_with_views(&round_inputs, &self.registry)?;
+            // View capture is a local-simulation affordance — remote
+            // stacks refuse it with a typed Unsupported error (see the
+            // aggregator trust notes), which `?` surfaces here.
+            let (r, v) = self.agg.run_round_with_views(&round_inputs, &self.registry)?;
             (r, Some(v))
         } else {
-            (self.engine.run_round(&round_inputs, &self.registry)?, None)
+            (self.agg.run_round(&round_inputs, &self.registry)?, None)
         };
         for i in 0..n as u32 {
             state.record_contribution(i)?;
@@ -424,6 +475,29 @@ mod tests {
         c.stream_cohort(&inputs, &vec![true; 6], &mut ch).unwrap();
         let err = c.run_round_streaming(&mut ch, 3, 1.0).unwrap_err();
         assert!(format!("{err}").contains("quorum"), "{err}");
+    }
+
+    #[test]
+    fn cluster_backed_coordinator_matches_in_process() {
+        use crate::aggregator::AggregatorBuilder;
+        let inputs: Vec<Vec<f64>> = (0..12).map(|i| vec![i as f64 / 12.0, 0.5]).collect();
+        let cfg = CoordinatorConfig::new(small_plan(12), 2);
+        let mut local = Coordinator::new(cfg.clone(), 9);
+        let stack =
+            AggregatorBuilder::new(cfg.engine_config(), 9).loopback().build().unwrap();
+        let mut remote = Coordinator::with_aggregator(cfg.clone(), 9, stack).unwrap();
+        let a = local.run_round(&inputs).unwrap();
+        let b = remote.run_round(&inputs).unwrap();
+        assert_eq!(a.estimates, b.estimates, "same service over a cluster stack");
+        assert_eq!(remote.aggregator().backend_label(), "loopback");
+        // View capture is a local-only affordance: typed refusal, not wire
+        // leakage.
+        assert!(remote.run_round_with_views(&inputs).is_err());
+        // The fingerprint gate refuses a stack built for a different plan.
+        let drifted = CoordinatorConfig::new(small_plan(13), 2);
+        let bad = AggregatorBuilder::new(drifted.engine_config(), 9).loopback().build().unwrap();
+        let err = Coordinator::with_aggregator(cfg, 9, bad).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::time::Instant;
 use crate::analyzer::Analyzer;
 use crate::encoder::prerandomizer::PreRandomizer;
 use crate::encoder::CloakEncoder;
-use crate::params::{NeighborNotion, ProtocolPlan};
+use crate::params::ProtocolPlan;
 use crate::rng::derive_seed;
 use crate::shuffler::{mixnet::Mixnet, Shuffler};
 use crate::transport::wire::{Frame, ShardOutMsg, ShardPoolMsg, ShardWorkMsg, WireError};
@@ -305,13 +305,7 @@ pub struct ShardExecutor {
 impl ShardExecutor {
     pub fn new(cfg: &EngineConfig) -> Self {
         let plan = &cfg.plan;
-        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
-        let prerandomizer = match plan.notion {
-            NeighborNotion::SingleUser => {
-                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
-            }
-            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
-        };
+        let (encoder, prerandomizer) = super::client_codec(plan);
         let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
         ShardExecutor {
             plan: plan.clone(),
@@ -639,7 +633,7 @@ mod tests {
                 pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
             }
         }
-        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap().estimates;
+        let want = engine.run_round_streaming(&pools, who.len()).unwrap().estimates;
 
         let exec = ShardExecutor::new(&cfg);
         let round_seed = derive_seed(derive_seed(seed, SHUFFLE_SEED_TAG), 0);

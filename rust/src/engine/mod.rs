@@ -1,7 +1,15 @@
-//! The sharded aggregation engine — the one implementation of the
-//! encode → pre-randomize → shuffle → analyze round that every entry point
-//! ([`crate::pipeline::Pipeline`], [`crate::coordinator::Coordinator`],
-//! [`crate::fl::FlDriver`], the sketch examples) routes through.
+//! The sharded aggregation engine — the *in-process* implementation of
+//! the encode → pre-randomize → shuffle → analyze round.
+//!
+//! Frontends do not use this type directly: they program against the
+//! [`Aggregator`](crate::aggregator::Aggregator) facade, which `Engine`
+//! implements alongside the multi-host
+//! [`ClusterEngine`](crate::cluster::ClusterEngine) — start at
+//! [`crate::aggregator`] for the round API, the unified contract
+//! (read-only streaming pools, success-only round ids, stack-invariant
+//! client encode) and the declarative
+//! [`AggregatorBuilder`](crate::aggregator::AggregatorBuilder). This
+//! module documents how the in-process stack executes a round.
 //!
 //! # Shard layout
 //!
@@ -348,13 +356,7 @@ impl Engine {
     pub fn new(cfg: EngineConfig, seed: u64) -> Self {
         assert!(cfg.instances >= 1, "engine needs at least one instance");
         let plan = &cfg.plan;
-        let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
-        let prerandomizer = match plan.notion {
-            NeighborNotion::SingleUser => {
-                PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q)
-            }
-            NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
-        };
+        let (encoder, prerandomizer) = client_codec(plan);
         let analyzer = Analyzer::new(plan.modulus, plan.scale, plan.n);
         let shards = resolve_shards(&cfg);
         let workers = shards * cfg.workers_per_shard.max(1);
@@ -414,22 +416,16 @@ impl Engine {
         inputs: &RoundInput<'_>,
         seeds: &dyn ClientSeeds,
     ) -> Result<Vec<u64>, EngineError> {
-        let d = self.cfg.instances;
-        let m = self.cfg.plan.num_messages;
-        let i = client as usize;
-        if i >= inputs.clients() {
-            return Err(EngineError::UnknownClient { client, cohort: inputs.clients() });
-        }
-        inputs.covers(i, d)?;
-        let seed_i = derive_seed(seeds.client_seed(client), round);
-        let mut shares = vec![0u64; d * m];
-        for j in 0..d {
-            let mut rng = ChaCha20Rng::from_seed_and_stream(seed_i, j as u64);
-            let xbar = self.encoder.codec().encode(inputs.get(i, j));
-            let (noised, _w) = self.prerandomizer.apply(xbar, &mut rng);
-            self.encoder.encode_quantized_into(noised, &mut rng, &mut shares[j * m..(j + 1) * m]);
-        }
-        Ok(shares)
+        encode_client_shares_with(
+            &self.encoder,
+            &self.prerandomizer,
+            self.cfg.instances,
+            self.cfg.plan.num_messages,
+            round,
+            client,
+            inputs,
+            seeds,
+        )
     }
 
     /// Streaming entry point: run the server half of a round over a
@@ -451,12 +447,22 @@ impl Engine {
     ///   count — an S=1 and an S=4 engine at the same seed produce
     ///   bit-identical results over the same pools.
     ///
-    /// `pools[j]` must hold exactly `participants × m` residues in Z_N;
-    /// pools are shuffled in place (the privacy boundary: the analyzer
-    /// below only ever reads a pool after its mixnet permuted it).
+    /// `pools[j]` must hold exactly `participants × m` residues in Z_N.
+    /// Pools are borrowed **read-only** — the unified [`Aggregator`]
+    /// contract shared with [`crate::cluster::ClusterEngine`]: each shard
+    /// permutes a private copy behind the privacy boundary, and the
+    /// analyzer only ever reads that shuffled copy, so the caller's pools
+    /// are never mutated and the two engines cannot diverge in place.
+    /// The copy is the deliberate price of that contract (the cluster
+    /// path pays the same when it serializes pool ranges into frames);
+    /// it is taken per instance inside the shard dispatch, so it
+    /// parallelizes with the shuffle it feeds and costs a small fraction
+    /// of the per-element ChaCha permutation that follows.
+    ///
+    /// [`Aggregator`]: crate::aggregator::Aggregator
     pub fn run_round_streaming(
         &mut self,
-        pools: &mut [Vec<u64>],
+        pools: &[Vec<u64>],
         participants: usize,
     ) -> Result<RoundResult, EngineError> {
         let d = self.cfg.instances;
@@ -473,23 +479,20 @@ impl Engine {
         let round_seed = derive_seed(self.shuffle_seed, round);
         let hops = self.cfg.mixnet_hops;
 
-        // --- shuffle: the privacy boundary ------------------------------
-        let chunk = d.div_ceil(s_eff);
-        self.pool.for_each_chunk(pools, chunk, |base, chunk_pools| {
-            for (off, pool) in chunk_pools.iter_mut().enumerate() {
-                let j = base + off;
-                let mut net = Mixnet::honest(derive_seed(round_seed, j as u64), hops);
-                net.shuffle(pool);
-            }
-        });
-
-        // --- analyze per shard range, merged in instance order ----------
+        // --- shuffle (the privacy boundary) + analyze per shard range,
+        // merged in instance order -----------------------------------------
         let ranges = shard_ranges(d, s_eff);
         let ranges_ref: &[(usize, usize)] = &ranges;
-        let pools_ref: &[Vec<u64>] = pools;
         let outs: Vec<Vec<f64>> = self.pool.dispatch(s_eff, |s| {
             let (lo, hi) = ranges_ref[s];
-            (lo..hi).map(|j| ana.analyze(&pools_ref[j])).collect()
+            (lo..hi)
+                .map(|j| {
+                    let mut buf = pools[j].clone();
+                    let mut net = Mixnet::honest(derive_seed(round_seed, j as u64), hops);
+                    net.shuffle(&mut buf);
+                    ana.analyze(&buf)
+                })
+                .collect()
         });
         let mut estimates = Vec::with_capacity(d);
         for o in &outs {
@@ -736,6 +739,52 @@ pub(crate) fn encode_clients(
         let (noised, _w) = pre.apply(xbar, &mut rng);
         enc.encode_quantized_into(noised, &mut rng, row);
     }
+}
+
+/// The client-side half of the protocol state — encoder + pre-randomizer
+/// — built from a plan. ONE construction site shared by [`Engine::new`],
+/// [`backend::ShardExecutor::new`] and
+/// [`crate::cluster::ClusterEngine`], so the client-side derivation can
+/// never drift between the in-process and multi-host stacks.
+pub(crate) fn client_codec(plan: &ProtocolPlan) -> (CloakEncoder, PreRandomizer) {
+    let encoder = CloakEncoder::new(plan.modulus, plan.scale, plan.num_messages);
+    let prerandomizer = match plan.notion {
+        NeighborNotion::SingleUser => PreRandomizer::new(plan.modulus, plan.noise_p, plan.noise_q),
+        NeighborNotion::SumPreserving => PreRandomizer::disabled(plan.modulus),
+    };
+    (encoder, prerandomizer)
+}
+
+/// Client-side encode for the wire path — the body of
+/// [`Engine::encode_client_shares`], shared with
+/// [`crate::cluster::ClusterEngine`] so both [`crate::aggregator`] impls
+/// produce bit-identical cloaked contributions: the RNG stream is the same
+/// pure function of `(client, instance, round)` on every stack.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_client_shares_with(
+    enc: &CloakEncoder,
+    pre: &PreRandomizer,
+    d: usize,
+    m: usize,
+    round: u64,
+    client: u32,
+    inputs: &RoundInput<'_>,
+    seeds: &dyn ClientSeeds,
+) -> Result<Vec<u64>, EngineError> {
+    let i = client as usize;
+    if i >= inputs.clients() {
+        return Err(EngineError::UnknownClient { client, cohort: inputs.clients() });
+    }
+    inputs.covers(i, d)?;
+    let seed_i = derive_seed(seeds.client_seed(client), round);
+    let mut shares = vec![0u64; d * m];
+    for j in 0..d {
+        let mut rng = ChaCha20Rng::from_seed_and_stream(seed_i, j as u64);
+        let xbar = enc.codec().encode(inputs.get(i, j));
+        let (noised, _w) = pre.apply(xbar, &mut rng);
+        enc.encode_quantized_into(noised, &mut rng, &mut shares[j * m..(j + 1) * m]);
+    }
+    Ok(shares)
 }
 
 /// Validate a streaming round's pools: instance count, participant
@@ -1058,8 +1107,8 @@ mod tests {
         // 15 of 20 clients survive (arbitrary drop mask).
         let who: Vec<usize> = (0..n).filter(|i| i % 4 != 1).collect();
         let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(2), 3);
-        let mut pools = pools_for(&e, &inputs, &who, &seeds);
-        let r = e.run_round_streaming(&mut pools, who.len()).unwrap();
+        let pools = pools_for(&e, &inputs, &who, &seeds);
+        let r = e.run_round_streaming(&pools, who.len()).unwrap();
         assert_eq!(r.participants, who.len());
         for j in 0..d {
             let truth_bar: u64 =
@@ -1088,8 +1137,8 @@ mod tests {
         for shards in [1usize, 4, 32] {
             let plan = small_plan(n);
             let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(shards), 21);
-            let mut pools = pools_for(&e, &inputs, &who, &seeds);
-            results.push(e.run_round_streaming(&mut pools, who.len()).unwrap().estimates);
+            let pools = pools_for(&e, &inputs, &who, &seeds);
+            results.push(e.run_round_streaming(&pools, who.len()).unwrap().estimates);
         }
         assert_eq!(results[0], results[1]);
         assert_eq!(results[0], results[2]);
@@ -1104,25 +1153,25 @@ mod tests {
         let m = plan.num_messages;
         let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(1), 1);
         assert_eq!(
-            e.run_round_streaming(&mut vec![Vec::new(); 3], 1).unwrap_err(),
+            e.run_round_streaming(&vec![Vec::new(); 3], 1).unwrap_err(),
             EngineError::WrongInstanceCount { expected: 2, got: 3 }
         );
         assert_eq!(
-            e.run_round_streaming(&mut vec![Vec::new(); 2], 0).unwrap_err(),
+            e.run_round_streaming(&vec![Vec::new(); 2], 0).unwrap_err(),
             EngineError::NoParticipants
         );
         assert_eq!(
-            e.run_round_streaming(&mut vec![vec![0; 7 * m]; 2], 7).unwrap_err(),
+            e.run_round_streaming(&vec![vec![0; 7 * m]; 2], 7).unwrap_err(),
             EngineError::TooManyParticipants { plan_n: 6, got: 7 }
         );
         assert_eq!(
-            e.run_round_streaming(&mut vec![vec![0; m], vec![0; m + 1]], 1).unwrap_err(),
+            e.run_round_streaming(&vec![vec![0; m], vec![0; m + 1]], 1).unwrap_err(),
             EngineError::BadPoolLen { instance: 1, expected: m, got: m + 1 }
         );
         let mut pools = vec![vec![0; 2 * m], vec![0; 2 * m]];
         pools[1][3] = modulus;
         assert_eq!(
-            e.run_round_streaming(&mut pools, 2).unwrap_err(),
+            e.run_round_streaming(&pools, 2).unwrap_err(),
             EngineError::OutOfRing { instance: 1, index: 3, value: modulus }
         );
         // none of the rejects consumed a round id

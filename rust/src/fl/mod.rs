@@ -12,25 +12,26 @@
 
 //! # Multi-host rounds
 //!
-//! The driver is engine-agnostic at the round boundary: construct it with
-//! [`FlDriver::new`] for the in-process [`Engine`], or with
-//! [`FlDriver::with_engine`] pointing at a
-//! [`ClusterEngine`](crate::cluster::ClusterEngine) to spread the padded
-//! gradient ranges across shard hosts (the round APIs match, and
-//! estimates are bit-identical across engines at the same seed). Use
-//! [`FlConfig::engine_config`] to build the exact engine configuration
-//! the driver derives, so the cluster fleet is deployed with the right
-//! plan — [`FlDriver::with_engine`] rejects a mismatched one via the
-//! cluster's config fingerprint.
+//! The driver is written against the [`Aggregator`] facade: construct it
+//! with [`FlDriver::new`] for the in-process
+//! [`Engine`](crate::engine::Engine), or with
+//! [`FlDriver::with_aggregator`] pointing at any stack — a
+//! [`ClusterEngine`](crate::cluster::ClusterEngine) spreading the padded
+//! gradient ranges across shard hosts, an elastic fleet absorbing shard
+//! deaths mid-round — and both round paths (in-process FedAvg *and* the
+//! lossy-transport [`FlDriver::run_round_lossy`]) run unchanged,
+//! bit-identically at the same seed. Use [`FlConfig::engine_config`] to
+//! build the exact engine configuration the driver derives, so the fleet
+//! is deployed with the right plan — [`FlDriver::with_aggregator`]
+//! rejects a mismatched one via the config fingerprint.
 
 pub mod data;
 pub mod quantize;
 pub mod server;
 
-use crate::cluster::{config_fingerprint, ClusterEngine};
-use crate::engine::{
-    ClientSeeds, DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundResult,
-};
+use crate::aggregator::Aggregator;
+use crate::cluster::config_fingerprint;
+use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundResult};
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::privacy::accountant::PrivacyAccountant;
 use crate::privacy::DpBudget;
@@ -169,32 +170,15 @@ pub struct RoundLog {
     pub delta_spent: f64,
 }
 
-/// The aggregation engine behind one FL driver — in-process or cluster.
-/// Both speak the same round API and produce bit-identical estimates at
-/// the same seed, so which one a driver holds is invisible in training.
-enum AggEngine {
-    Local(Engine),
-    Cluster(ClusterEngine),
-}
-
-impl AggEngine {
-    fn run_round(
-        &mut self,
-        inputs: &RoundInput<'_>,
-        seeds: &dyn ClientSeeds,
-    ) -> Result<RoundResult> {
-        match self {
-            AggEngine::Local(e) => Ok(e.run_round(inputs, seeds)?),
-            AggEngine::Cluster(e) => Ok(e.run_round(inputs, seeds)?),
-        }
-    }
-}
-
 /// The training driver.
 pub struct FlDriver<'a, O: GradOracle> {
     cfg: FlConfig,
     oracle: &'a O,
-    engine: AggEngine,
+    /// The aggregation stack behind this driver — in-process, cluster, or
+    /// elastic; every stack speaks the same round API and produces
+    /// bit-identical estimates at the same seed, so which one a driver
+    /// holds is invisible in training.
+    agg: Box<dyn Aggregator>,
     seeds: DerivedClientSeeds,
     codec: GradientCodec,
     pub server: ServerState,
@@ -208,34 +192,35 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         // aggregation is a pure engine workload, with no client registry or
         // streaming ingestion in between.
         let (ecfg, codec) = cfg.engine_config_and_codec(init_params.len())?;
-        let engine = AggEngine::Local(Engine::new(ecfg, seed));
-        Ok(Self::assemble(cfg, oracle, init_params, seed, engine, codec))
+        let agg: Box<dyn Aggregator> = Box::new(Engine::new(ecfg, seed));
+        Ok(Self::assemble(cfg, oracle, init_params, seed, agg, codec))
     }
 
-    /// Multi-host training: drive the rounds through a
-    /// [`ClusterEngine`](crate::cluster::ClusterEngine) instead of the
-    /// in-process engine, spreading the padded gradient ranges across
-    /// shard hosts. The cluster must have been built from
-    /// [`FlConfig::engine_config`] (same plan, same instance count) —
-    /// checked via the cluster config fingerprint, the same screen the
-    /// coordinator↔shard handshake applies — and, for bit-identity with
-    /// an in-process driver, from the same `seed`.
-    pub fn with_engine(
+    /// Multi-host training: drive the rounds through any aggregation
+    /// stack — a [`ClusterEngine`](crate::cluster::ClusterEngine)
+    /// spreading the padded gradient ranges across shard hosts, an
+    /// elastic fleet, or a hand-built stack from
+    /// [`AggregatorBuilder`](crate::aggregator::AggregatorBuilder). The
+    /// stack must have been built from [`FlConfig::engine_config`] (same
+    /// plan, same instance count) — checked via the config fingerprint,
+    /// the same screen the coordinator↔shard handshake applies — and, for
+    /// bit-identity with an in-process driver, from the same `seed`.
+    pub fn with_aggregator(
         cfg: FlConfig,
         oracle: &'a O,
         init_params: Vec<f32>,
         seed: u64,
-        cluster: ClusterEngine,
+        agg: Box<dyn Aggregator>,
     ) -> Result<Self> {
         let (want, codec) = cfg.engine_config_and_codec(init_params.len())?;
         crate::ensure!(
-            config_fingerprint(cluster.config()) == config_fingerprint(&want),
-            "cluster engine config does not match this FL config \
+            config_fingerprint(agg.config()) == config_fingerprint(&want),
+            "aggregator config does not match this FL config \
              (fingerprint {:#010x} != {:#010x}); build it from FlConfig::engine_config",
-            config_fingerprint(cluster.config()),
+            config_fingerprint(agg.config()),
             config_fingerprint(&want)
         );
-        Ok(Self::assemble(cfg, oracle, init_params, seed, AggEngine::Cluster(cluster), codec))
+        Ok(Self::assemble(cfg, oracle, init_params, seed, agg, codec))
     }
 
     fn assemble(
@@ -243,14 +228,14 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         oracle: &'a O,
         init_params: Vec<f32>,
         seed: u64,
-        engine: AggEngine,
+        agg: Box<dyn Aggregator>,
         codec: GradientCodec,
     ) -> Self {
         let server = ServerState::new(init_params, cfg.lr, cfg.momentum);
         FlDriver {
             cfg,
             oracle,
-            engine,
+            agg,
             seeds: DerivedClientSeeds::new(seed),
             codec,
             server,
@@ -263,37 +248,31 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         &self.accountant
     }
 
-    /// The in-process engine, when this driver holds one (`None` for a
-    /// cluster-backed driver).
-    pub fn engine(&self) -> Option<&Engine> {
-        match &self.engine {
-            AggEngine::Local(e) => Some(e),
-            AggEngine::Cluster(_) => None,
-        }
-    }
-
-    /// The cluster engine, when this driver is multi-host.
-    pub fn cluster(&self) -> Option<&ClusterEngine> {
-        match &self.engine {
-            AggEngine::Cluster(e) => Some(e),
-            AggEngine::Local(_) => None,
-        }
+    /// The aggregation stack this driver trains over.
+    pub fn aggregator(&self) -> &dyn Aggregator {
+        self.agg.as_ref()
     }
 
     /// Run one federated round over the given per-client batches.
     pub fn run_round(&mut self, batches: &[Batch]) -> Result<RoundLog> {
         let (inputs, loss_sum) = self.local_compute(batches)?;
-        let result = self.engine.run_round(&RoundInput::Vectors(&inputs), &self.seeds)?;
+        let result = self.agg.run_round(&RoundInput::Vectors(&inputs), &self.seeds)?;
         Ok(self.apply_round(loss_sum, result))
     }
 
     /// Run one federated round over a lossy transport: every client's
     /// gradient is cloak-encoded locally and streamed through `channel`
     /// as wire frames; the round closes on `deadline_s` (or a full
-    /// cohort) and the engine renormalizes the mean gradient over the
+    /// cohort) and the aggregator renormalizes the mean gradient over the
     /// clients that actually arrived — dropout-tolerant FedAvg, the
     /// Bonawitz et al. failure model on the shuffled-model protocol.
     /// Errors if fewer than `quorum` gradients survive the network.
+    ///
+    /// Works over **any** stack: the ingestion loop is
+    /// coordinator-side either way, and the collected pools enter the
+    /// aggregator's streaming path — in-process shuffle+analyze, or a
+    /// scatter to shard servers — bit-identically at the same seed and
+    /// drop mask.
     pub fn run_round_lossy(
         &mut self,
         batches: &[Batch],
@@ -302,14 +281,8 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         deadline_s: f64,
     ) -> Result<RoundLog> {
         let (inputs, loss_sum) = self.local_compute(batches)?;
-        let AggEngine::Local(engine) = &mut self.engine else {
-            crate::bail!(
-                "run_round_lossy needs the in-process engine (stream ingestion is \
-                 coordinator-side); cluster-backed drivers aggregate via run_round"
-            );
-        };
         send_cohort(
-            &*engine,
+            self.agg.as_ref(),
             &self.seeds,
             &RoundInput::Vectors(&inputs),
             &vec![false; inputs.len()],
@@ -318,7 +291,7 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         let stream_cfg = StreamConfig::new(self.cfg.clients)
             .with_quorum(quorum)
             .with_deadline(deadline_s);
-        let out = StreamingRound::drive(engine, channel, &stream_cfg)?;
+        let out = StreamingRound::drive(self.agg.as_mut(), channel, &stream_cfg)?;
         Ok(self.apply_round(loss_sum, out.result))
     }
 
@@ -550,8 +523,8 @@ mod tests {
 
     #[test]
     fn cluster_backed_fl_matches_in_process_bitwise() {
-        use crate::cluster::{ClusterEngine, RemoteShardBackend};
-        // Two FedAvg rounds through a Remote(Loopback) cluster engine —
+        use crate::aggregator::AggregatorBuilder;
+        // Two FedAvg rounds through a Remote(Loopback) cluster stack —
         // full wire codec coordinator↔shards — must leave the server
         // parameters bit-identical to the in-process driver at the same
         // seed.
@@ -559,48 +532,57 @@ mod tests {
         let cfg = test_cfg(8, 2);
         let mut local = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 11).unwrap();
         let ecfg = cfg.engine_config(4).unwrap().with_shards(2);
-        let cluster =
-            ClusterEngine::new(ecfg.clone(), 11, Box::new(RemoteShardBackend::loopback(&ecfg)));
+        let cluster = AggregatorBuilder::new(ecfg, 11).loopback().build().unwrap();
         let mut remote =
-            FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 11, cluster).unwrap();
-        assert!(remote.engine().is_none() && remote.cluster().is_some());
+            FlDriver::with_aggregator(cfg, &oracle, vec![0.0; 4], 11, cluster).unwrap();
+        assert_eq!(remote.aggregator().backend_label(), "loopback");
+        assert_eq!(local.aggregator().backend_label(), "local");
         for _ in 0..2 {
             let a = local.run_round(&dummy_batches(8)).unwrap();
             let b = remote.run_round(&dummy_batches(8)).unwrap();
             assert_eq!(a.participants, b.participants);
             assert_eq!(local.server.params(), remote.server.params(), "params diverged");
         }
-        assert_eq!(remote.cluster().unwrap().rounds_run(), 2);
+        assert_eq!(remote.aggregator().rounds_run(), 2);
         assert_eq!(remote.accountant().num_rounds(), 2);
     }
 
     #[test]
-    fn with_engine_rejects_mismatched_cluster_config() {
-        use crate::cluster::{ClusterEngine, RemoteShardBackend};
+    fn with_aggregator_rejects_mismatched_config() {
+        use crate::aggregator::AggregatorBuilder;
         let oracle = QuadraticOracle { target: vec![0.0; 4] };
         let cfg = test_cfg(8, 1);
         // Wrong instance count: a fleet deployed for d=4, not the padded 8.
         let mut ecfg = cfg.engine_config(4).unwrap();
         ecfg.instances = 4;
-        let cluster =
-            ClusterEngine::new(ecfg.clone(), 1, Box::new(RemoteShardBackend::loopback(&ecfg)));
-        let err = FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 1, cluster).unwrap_err();
+        let cluster = AggregatorBuilder::new(ecfg, 1).loopback().build().unwrap();
+        let err =
+            FlDriver::with_aggregator(cfg, &oracle, vec![0.0; 4], 1, cluster).unwrap_err();
         assert!(format!("{err}").contains("fingerprint"), "{err}");
     }
 
     #[test]
-    fn cluster_backed_driver_rejects_lossy_rounds() {
-        use crate::cluster::{ClusterEngine, RemoteShardBackend};
-        use crate::transport::channel::Loopback;
-        let oracle = QuadraticOracle { target: vec![0.0; 4] };
-        let cfg = test_cfg(4, 1);
-        let ecfg = cfg.engine_config(4).unwrap();
-        let cluster =
-            ClusterEngine::new(ecfg.clone(), 1, Box::new(RemoteShardBackend::loopback(&ecfg)));
-        let mut d = FlDriver::with_engine(cfg, &oracle, vec![0.0; 4], 1, cluster).unwrap();
-        let mut ch = Loopback::new();
-        let err = d.run_round_lossy(&dummy_batches(4), &mut ch, 2, 1.0).unwrap_err();
-        assert!(format!("{err}").contains("in-process engine"), "{err}");
+    fn cluster_backed_driver_runs_lossy_rounds() {
+        use crate::aggregator::AggregatorBuilder;
+        use crate::transport::channel::{SimNet, SimNetConfig};
+        // The formerly-deferred path: dropout-tolerant FedAvg with the
+        // collected pools scattered to a cluster stack — same SimNet seed
+        // as the in-process driver, so the drop mask is identical and the
+        // resulting model must be bit-identical.
+        let oracle = QuadraticOracle { target: vec![0.5, -0.5, 0.25, 0.0] };
+        let cfg = test_cfg(16, 1);
+        let mut local = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 7).unwrap();
+        let ecfg = cfg.engine_config(4).unwrap().with_shards(2);
+        let cluster = AggregatorBuilder::new(ecfg, 7).loopback().build().unwrap();
+        let mut remote =
+            FlDriver::with_aggregator(cfg, &oracle, vec![0.0; 4], 7, cluster).unwrap();
+        let mut net_a = SimNet::new(SimNetConfig::new(19).with_loss(0.3));
+        let mut net_b = SimNet::new(SimNetConfig::new(19).with_loss(0.3));
+        let la = local.run_round_lossy(&dummy_batches(16), &mut net_a, 4, 1.0).unwrap();
+        let lb = remote.run_round_lossy(&dummy_batches(16), &mut net_b, 4, 1.0).unwrap();
+        assert_eq!(la.participants, lb.participants, "same drop mask, same survivors");
+        assert!(lb.participants < 16, "loss must bite for this to test anything");
+        assert_eq!(local.server.params(), remote.server.params(), "lossy FL over a cluster");
     }
 
     #[test]

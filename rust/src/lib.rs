@@ -9,8 +9,11 @@
 //!
 //! * **L3 (this crate)** — the coordination system: encoder / pre-randomizer
 //!   (Algorithm 1 + §2.4), shuffler (mixnet simulation), analyzer
-//!   (Algorithm 2), the shard-parallel aggregation [`engine`] every entry
-//!   point routes rounds through, the round coordinator with batching and
+//!   (Algorithm 2), the [`aggregator`] facade — ONE round API every
+//!   frontend programs against, implemented by the shard-parallel
+//!   in-process [`engine`] and the multi-host [`cluster`] engine, with a
+//!   declarative builder spanning local ⇄ cluster ⇄ elastic stacks — the
+//!   round coordinator with batching and
 //!   backpressure, the [`transport`] layer (wire codec, lossy-network
 //!   simulation and dropout-tolerant streaming rounds), the [`cluster`]
 //!   subsystem (engine shards as standalone servers over TCP or simulated
@@ -39,6 +42,7 @@
 //! assert!((est - truth).abs() < 40.0);
 //! ```
 
+pub mod aggregator;
 pub mod analyzer;
 pub mod arith;
 pub mod baselines;
@@ -61,19 +65,24 @@ pub mod sketch;
 pub mod transport;
 pub mod util;
 
-/// Convenience re-exports for the common entry points.
+/// Convenience re-exports for the common entry points. Backend plumbing
+/// (`ShardBackend`, `RemoteShardBackend`, `ElasticController`, …) is
+/// deliberately NOT here: stacks are built declaratively through
+/// [`aggregator::AggregatorBuilder`], and frontends program against
+/// [`aggregator::Aggregator`] — reach into [`engine`] / [`cluster`] /
+/// [`control`] only when wiring a backend by hand.
 pub mod prelude {
+    pub use crate::aggregator::{Aggregator, AggregatorBuilder, AggregatorError};
     pub use crate::analyzer::Analyzer;
     pub use crate::arith::fixed::FixedCodec;
     pub use crate::arith::modring::ModRing;
-    pub use crate::cluster::{ClusterEngine, ClusterTuning, RemoteShardBackend};
+    pub use crate::cluster::{ClusterEngine, ClusterTuning};
     pub use crate::control::{
-        ElasticController, ElasticTuning, EvenSplit, Proportional, RebalancePolicy,
-        ShardDirectory, StaticRanges,
+        ElasticTuning, EvenSplit, Proportional, RebalancePolicy, StaticRanges,
     };
     pub use crate::encoder::prerandomizer::PreRandomizer;
     pub use crate::encoder::CloakEncoder;
-    pub use crate::engine::{Engine, EngineConfig, InProcessBackend, RoundInput, ShardBackend};
+    pub use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
     pub use crate::params::{NeighborNotion, ProtocolPlan};
     pub use crate::pipeline::Pipeline;
     pub use crate::privacy::accountant::PrivacyAccountant;

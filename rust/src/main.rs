@@ -14,6 +14,10 @@
 //!                   scripted death, in-round takeover + policy re-ranging,
 //!                   every round gate-checked bit-identical to the
 //!                   in-process engine, benchkit JSON out
+//!   lossy-cluster-sim — streaming-over-cluster: a lossy cohort streamed
+//!                   through the SAME ingestion loop into local, cluster
+//!                   and elastic stacks (all built by AggregatorBuilder),
+//!                   gate-checked bit-identical, benchkit JSON out
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -22,6 +26,7 @@
 //!   cloak-agg transport-sim --n 256 --d 8 --loss 0.1 --seed 7
 //!   cloak-agg cluster-sim --n 64 --d 16 --shards 4 --net tcp --seed 7
 //!   cloak-agg elastic-sim --n 48 --d 16 --shards 4 --net tcp --policy proportional
+//!   cloak-agg lossy-cluster-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -33,7 +38,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -44,6 +49,8 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --loss (sim net only) --seed --out
   elastic-sim:   --n --d --shards --rounds --kill (dies BY this round)
                  --policy (static|even|proportional) --net (tcp|sim)
+                 --seed --out
+  lossy-cluster-sim: --n --d --loss --dup --shards --quorum --deadline
                  --seed --out";
 
 fn main() {
@@ -57,7 +64,16 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["aggregate", "fl", "plan", "smoke", "transport-sim", "cluster-sim", "elastic-sim"],
+        &[
+            "aggregate",
+            "fl",
+            "plan",
+            "smoke",
+            "transport-sim",
+            "cluster-sim",
+            "elastic-sim",
+            "lossy-cluster-sim",
+        ],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
             "loss", "dup", "shards", "quorum", "deadline", "out", "net", "policy", "kill",
@@ -71,6 +87,7 @@ fn run() -> Result<()> {
         "transport-sim" => cmd_transport_sim(&args),
         "cluster-sim" => cmd_cluster_sim(&args),
         "elastic-sim" => cmd_elastic_sim(&args),
+        "lossy-cluster-sim" => cmd_lossy_cluster_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -302,10 +319,8 @@ fn cmd_transport_sim(args: &Args) -> Result<()> {
 /// re-validate it through the crate's own parser (the CI smoke step keys
 /// on the final "benchkit JSON OK" line).
 fn cmd_cluster_sim(args: &Args) -> Result<()> {
-    use cloak_agg::cluster::{
-        cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts,
-        TcpShardHost,
-    };
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::cluster::{cluster_layout, ClusterTuning, ServeOpts, TcpShardHost};
     use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
     use cloak_agg::rng::derive_seed;
     use cloak_agg::transport::channel::{Channel, SimNet, SimNetConfig};
@@ -331,34 +346,36 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
     let seeds = DerivedClientSeeds::new(seed);
     let sweep: Vec<usize> = if shards == 0 { vec![1, 2, 4] } else { vec![shards] };
 
-    let make_cluster = |cfg: &EngineConfig| -> Result<(ClusterEngine, Vec<TcpShardHost>)> {
+    // Every stack is built declaratively from the same EngineConfig —
+    // only the topology line differs per --net.
+    let make_cluster = |cfg: &EngineConfig| -> Result<(Box<dyn Aggregator>, Vec<TcpShardHost>)> {
+        let builder = AggregatorBuilder::new(cfg.clone(), seed);
         match net.as_str() {
-            "inprocess" => Ok((ClusterEngine::in_process(cfg.clone(), seed), Vec::new())),
-            "loopback" => {
-                let backend = RemoteShardBackend::loopback(cfg);
-                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), Vec::new()))
-            }
+            "inprocess" => Ok((builder.in_process().build()?, Vec::new())),
+            "loopback" => Ok((builder.loopback().build()?, Vec::new())),
             "sim" => {
-                let backend = RemoteShardBackend::over_channels(cfg, |s| {
-                    let down = SimNet::new(
-                        SimNetConfig::new(derive_seed(seed, 2 * s as u64)).with_loss(loss),
-                    );
-                    let up = SimNet::new(
-                        SimNetConfig::new(derive_seed(seed, 2 * s as u64 + 1)).with_loss(loss),
-                    );
-                    (Box::new(down) as Box<dyn Channel>, Box::new(up) as _)
-                })
-                // Lossy links are expected to cost resends, not rounds.
-                .with_tuning(ClusterTuning { max_retries: 6, ..ClusterTuning::default() });
-                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), Vec::new()))
+                let stack = builder
+                    .over_channels(move |s| {
+                        let down = SimNet::new(
+                            SimNetConfig::new(derive_seed(seed, 2 * s as u64)).with_loss(loss),
+                        );
+                        let up = SimNet::new(
+                            SimNetConfig::new(derive_seed(seed, 2 * s as u64 + 1))
+                                .with_loss(loss),
+                        );
+                        (Box::new(down) as Box<dyn Channel>, Box::new(up) as _)
+                    })
+                    // Lossy links are expected to cost resends, not rounds.
+                    .cluster_tuning(ClusterTuning { max_retries: 6, ..ClusterTuning::default() })
+                    .build()?;
+                Ok((stack, Vec::new()))
             }
             "tcp" => {
                 let hosts: Vec<TcpShardHost> = (0..cluster_layout(cfg).0)
                     .map(|_| TcpShardHost::spawn(cfg.clone(), 0, ServeOpts::default()))
                     .collect::<std::io::Result<_>>()?;
                 let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
-                let backend = RemoteShardBackend::over_tcp(cfg, &addrs)?;
-                Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(backend)), hosts))
+                Ok((builder.tcp(addrs).build()?, hosts))
             }
             other => bail!("--net must be tcp|sim|loopback|inprocess, got '{other}'"),
         }
@@ -447,13 +464,10 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
 /// sweep written as benchkit JSON, re-validated through the crate's own
 /// parser (the CI smoke step keys on the final "benchkit JSON OK" line).
 fn cmd_elastic_sim(args: &Args) -> Result<()> {
-    use cloak_agg::cluster::{
-        cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts,
-        TcpShardHost,
-    };
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::cluster::{cluster_layout, ClusterTuning, ServeOpts, TcpShardHost};
     use cloak_agg::control::{
-        ElasticController, ElasticTuning, EvenSplit, Proportional, RebalancePolicy,
-        StaticRanges,
+        ElasticTuning, EvenSplit, Proportional, RebalancePolicy, StaticRanges,
     };
     use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
     use cloak_agg::rng::derive_seed;
@@ -502,10 +516,20 @@ fn cmd_elastic_sim(args: &Args) -> Result<()> {
     // extra assign frames can only spend the budget sooner; the gates are
     // death-round-agnostic either way).
     let death_frames = (kill + 1) as u64;
+    // One declarative builder per stack: topology + barrier tuning +
+    // elastic wrap, no hand-wired backend/controller plumbing.
     let make_cluster = |policy: Box<dyn RebalancePolicy>,
                         revive: u64|
-     -> Result<(ClusterEngine, Vec<TcpShardHost>)> {
-        let (backend, hosts) = match net.as_str() {
+     -> Result<(Box<dyn Aggregator>, Vec<TcpShardHost>)> {
+        let builder = AggregatorBuilder::new(cfg.clone(), seed).elastic(policy).elastic_tuning(
+            ElasticTuning {
+                // A TCP victim never comes back (listener closed): probing
+                // it would only burn retry budgets. The sim victim heals.
+                revive_every: revive,
+                ..ElasticTuning::default()
+            },
+        );
+        match net.as_str() {
             "tcp" => {
                 let hosts: Vec<TcpShardHost> = (0..links)
                     .map(|s| {
@@ -523,39 +547,39 @@ fn cmd_elastic_sim(args: &Args) -> Result<()> {
                     })
                     .collect::<std::io::Result<_>>()?;
                 let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
-                let backend = RemoteShardBackend::over_tcp(&cfg, &addrs)?.with_tuning(
-                    ClusterTuning { straggler_timeout_s: 0.3, max_retries: 1, poll_s: 0.01 },
-                );
-                (backend, hosts)
+                let stack = builder
+                    .tcp(addrs)
+                    .cluster_tuning(ClusterTuning {
+                        straggler_timeout_s: 0.3,
+                        max_retries: 1,
+                        poll_s: 0.01,
+                    })
+                    .build()?;
+                Ok((stack, hosts))
             }
             "sim" => {
                 // Flappy victim: silent window starting at the death
                 // frame, healing a handful of swallowed sends later — the
                 // takeover-then-rejoin scenario on virtual time.
-                let backend = RemoteShardBackend::over_channels(&cfg, |s| {
-                    let down: Box<dyn Channel> = if s == victim {
-                        Box::new(SimNet::new(
-                            SimNetConfig::new(derive_seed(seed, s as u64))
-                                .with_silent_after(death_frames)
-                                .with_recover_after(death_frames + 5),
-                        ))
-                    } else {
-                        Box::new(Loopback::new())
-                    };
-                    (down, Box::new(Loopback::new()) as _)
-                })
-                .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
-                (backend, Vec::new())
+                let stack = builder
+                    .over_channels(move |s| {
+                        let down: Box<dyn Channel> = if s == victim {
+                            Box::new(SimNet::new(
+                                SimNetConfig::new(derive_seed(seed, s as u64))
+                                    .with_silent_after(death_frames)
+                                    .with_recover_after(death_frames + 5),
+                            ))
+                        } else {
+                            Box::new(Loopback::new())
+                        };
+                        (down, Box::new(Loopback::new()) as _)
+                    })
+                    .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+                    .build()?;
+                Ok((stack, Vec::new()))
             }
             other => bail!("--net must be tcp|sim, got '{other}'"),
-        };
-        let controller = ElasticController::new(backend, policy).with_tuning(ElasticTuning {
-            // A TCP victim never comes back (listener closed): probing it
-            // would only burn retry budgets. The sim victim heals.
-            revive_every: revive,
-            ..ElasticTuning::default()
-        });
-        Ok((ClusterEngine::new(cfg.clone(), seed, Box::new(controller)), hosts))
+        }
     };
 
     // --- gate: every round bit-identical through death + re-ranging -----
@@ -605,7 +629,7 @@ fn cmd_elastic_sim(args: &Args) -> Result<()> {
             pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
         }
     }
-    let want = reference.run_round_streaming(&mut pools.clone(), who.len())?;
+    let want = reference.run_round_streaming(&pools, who.len())?;
     let got = cluster.run_round_streaming(&pools, who.len())?;
     ensure!(
         got.estimates == want.estimates,
@@ -629,20 +653,21 @@ fn cmd_elastic_sim(args: &Args) -> Result<()> {
         // plane + codec work, not socket scheduling noise. The victim is
         // dead from its first work frame, so `static` pays a takeover
         // every round while the elastic policies park it after one.
-        let backend = RemoteShardBackend::over_channels(&cfg, |s| {
-            let down: Box<dyn Channel> = if s == victim {
-                Box::new(SimNet::new(
-                    SimNetConfig::new(derive_seed(seed, 100 + s as u64)).with_silent_after(1),
-                ))
-            } else {
-                Box::new(Loopback::new())
-            };
-            (down, Box::new(Loopback::new()) as _)
-        })
-        .with_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() });
-        let controller = ElasticController::new(backend, boxed)
-            .with_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() });
-        let mut cluster = ClusterEngine::new(cfg.clone(), seed, Box::new(controller));
+        let mut cluster = AggregatorBuilder::new(cfg.clone(), seed)
+            .over_channels(move |s| {
+                let down: Box<dyn Channel> = if s == victim {
+                    Box::new(SimNet::new(
+                        SimNetConfig::new(derive_seed(seed, 100 + s as u64)).with_silent_after(1),
+                    ))
+                } else {
+                    Box::new(Loopback::new())
+                };
+                (down, Box::new(Loopback::new()) as _)
+            })
+            .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+            .elastic(boxed)
+            .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+            .build()?;
         let name = format!("round n={n} d={d} S={links} policy={policy} churn=dead-shard");
         bench.run_sharded(&name, (n * d * m) as f64, links, || {
             cluster
@@ -666,6 +691,201 @@ fn cmd_elastic_sim(args: &Args) -> Result<()> {
         _ => bail!("benchkit JSON in {out} has no cases array"),
     };
     ensure!(cases.len() == 3, "expected 3 policy cases, found {}", cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Streaming-over-cluster end-to-end: one lossy cohort's wire frames are
+/// ingested through the SAME `StreamingRound` loop into three
+/// builder-constructed stacks — the in-process engine, a loopback
+/// cluster, and an elastic cluster with one shard dead past its retry
+/// budget — and every stack must close the round bit-identically (same
+/// survivors, same renormalized estimates) at the same SimNet seed. This
+/// is the facade's acceptance gate: the frontends are generic, so the
+/// multi-host lossy path cannot drift from the in-process one. Finishes
+/// with a timed backend sweep written as benchkit JSON and re-validated
+/// through the crate's own parser (the CI smoke step keys on the final
+/// "benchkit JSON OK" line).
+fn cmd_lossy_cluster_sim(args: &Args) -> Result<()> {
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::cluster::ClusterTuning;
+    use cloak_agg::control::{ElasticTuning, Proportional};
+    use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 96)?;
+    let d = args.get_usize("d", 8)?;
+    let loss = args.get_f64("loss", 0.1)?;
+    let dup = args.get_f64("dup", 0.02)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_u64("seed", 42)?;
+    let deadline = args.get_f64("deadline", 1.0)?;
+    let quorum = args.get_usize("quorum", (n / 4).max(1))?;
+    let out = args.get_str("out", "BENCH_lossy_cluster.json");
+    ensure!(n >= 2, "--n must be >= 2");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!(shards >= 2, "--shards must be >= 2 (the elastic stack needs a survivor)");
+    ensure!((0.0..1.0).contains(&loss), "--loss must be in [0, 1)");
+    ensure!((0.0..1.0).contains(&dup), "--dup must be in [0, 1)");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let k = plan.scale;
+    let cfg = EngineConfig::new(plan.clone(), d).with_shards(shards);
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let no_drops = vec![false; n];
+    let stream_cfg = StreamConfig::new(n).with_quorum(quorum).with_deadline(deadline);
+    let client_net = |stream: u64| {
+        SimNet::new(
+            SimNetConfig::new(derive_seed(seed, stream)).with_loss(loss).with_duplicate(dup),
+        )
+    };
+
+    let backends = ["local", "loopback", "elastic"];
+    let build_stack = |kind: &str| -> Result<Box<dyn Aggregator>> {
+        let builder = AggregatorBuilder::new(cfg.clone(), seed);
+        Ok(match kind {
+            "local" => builder.local().build()?,
+            "loopback" => builder.loopback().build()?,
+            // Elastic stack with shard 1's link silent after its
+            // handshake: the streamed pools complete via in-round
+            // takeover, and must STILL be bit-identical.
+            "elastic" => builder
+                .over_channels(|s| {
+                    let down: Box<dyn Channel> = if s == 1 {
+                        Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+                    } else {
+                        Box::new(Loopback::new())
+                    };
+                    (down, Box::new(Loopback::new()) as _)
+                })
+                .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+                .elastic(Box::new(Proportional::default()))
+                .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+                .build()?,
+            other => bail!("unknown backend '{other}'"),
+        })
+    };
+
+    // --- gate: same lossy cohort, every stack closes identically ---------
+    let mut table = Table::new(
+        &format!("lossy-cluster-sim: n={n} d={d} loss={loss} dup={dup} S={shards}"),
+        &["backend", "participants", "dropped", "takeovers", "inst0 |err|"],
+    );
+    let mut want: Option<(Vec<u32>, Vec<f64>)> = None;
+    for kind in backends {
+        let mut stack = build_stack(kind)?;
+        let mut net = client_net(0);
+        send_cohort(stack.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+        let outcome = StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)?;
+        let survivors_truth: f64 = outcome
+            .contributed
+            .iter()
+            .map(|&i| (inputs[i as usize][0] * k as f64).floor() as u64)
+            .sum::<u64>() as f64
+            / k as f64;
+        table.row(&[
+            kind.to_string(),
+            outcome.result.participants.to_string(),
+            outcome.dropped.len().to_string(),
+            stack.shard_takeovers().to_string(),
+            format!("{:.2e}", (outcome.result.estimates[0] - survivors_truth).abs()),
+        ]);
+        if kind == "elastic" {
+            ensure!(
+                stack.shard_takeovers() >= 1,
+                "the dead shard must have cost the elastic stack a takeover"
+            );
+        }
+        match &want {
+            None => {
+                if loss > 0.0 {
+                    ensure!(
+                        outcome.result.participants < n,
+                        "loss must bite for the gate to test anything"
+                    );
+                }
+                want = Some((outcome.contributed.clone(), outcome.result.estimates.clone()));
+            }
+            Some((contributed, estimates)) => {
+                ensure!(
+                    &outcome.contributed == contributed,
+                    "backend '{kind}' saw different survivors at the same SimNet seed"
+                );
+                ensure!(
+                    &outcome.result.estimates == estimates,
+                    "backend '{kind}' streaming estimates diverge from the in-process engine"
+                );
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "gate: streaming round bit-identical to the in-process engine across \
+         {backends:?} at S={shards} (same survivors, same estimates)"
+    );
+
+    // --- timed sweep: backend axis through the trait ----------------------
+    // The cohort's frames are encoded ONCE (the encode is stack-invariant
+    // by the facade contract) and replayed per iteration through a fresh
+    // SimNet and a fresh builder-constructed stack.
+    let frames: Vec<Vec<u8>> = {
+        let reference = build_stack("local")?;
+        let mut ch = Loopback::new();
+        send_cohort(reference.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut ch)?;
+        std::iter::from_fn(|| ch.recv().map(|(_t, bytes)| bytes)).collect()
+    };
+    let mut bench = Bench::new("lossy_cluster");
+    for kind in backends {
+        let mut stream = 0u64;
+        let name = format!("stream n={n} d={d} loss={loss} backend={kind} S={shards}");
+        bench.run_sharded(&name, (n * d * m) as f64, shards, || {
+            stream += 1;
+            let mut stack = build_stack(kind).expect("stack");
+            let mut net = client_net(stream);
+            for f in &frames {
+                net.send(f.clone());
+            }
+            StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)
+                .expect("streaming round (quorum too high for this loss rate?)")
+                .result
+                .estimates[0]
+        });
+    }
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -------
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("lossy_cluster"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(
+        cases.len() == backends.len(),
+        "expected {} cases, found {}",
+        backends.len(),
+        cases.len()
+    );
     for c in cases {
         ensure!(
             c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,

@@ -17,8 +17,12 @@
 //! The full streaming system (many aggregation instances, batching,
 //! backpressure, shard parallelism) lives in [`crate::coordinator`] and
 //! [`crate::engine`]; this type is the reference entry point the
-//! integration tests compare them to.
+//! integration tests compare them to. Like every frontend it is generic
+//! over the [`Aggregator`](crate::aggregator::Aggregator) facade —
+//! [`Pipeline::with_aggregator`] runs the same one-shot sums over a
+//! cluster or elastic stack.
 
+use crate::aggregator::{Aggregator, AggregatorError};
 use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
 use crate::params::ProtocolPlan;
 use crate::transport::TrafficStats;
@@ -26,16 +30,22 @@ use crate::transport::TrafficStats;
 /// One-shot scalar aggregation under a [`ProtocolPlan`].
 pub struct Pipeline {
     plan: ProtocolPlan,
-    engine: Engine,
+    agg: Box<dyn Aggregator>,
     seeds: DerivedClientSeeds,
     /// Communication accounting for the last round.
     pub last_traffic: TrafficStats,
 }
 
 /// Pipeline failure modes.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, PartialEq)]
 pub enum PipelineError {
     WrongInputCount { expected: usize, got: usize },
+    /// The stack handed to [`Pipeline::with_aggregator`] is not a scalar
+    /// (d = 1) profile.
+    NotScalar { instances: usize },
+    /// The aggregation stack failed the round (cluster/elastic backends
+    /// can lose shards; the in-process engine cannot reach this).
+    Agg(AggregatorError),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -44,21 +54,49 @@ impl std::fmt::Display for PipelineError {
             PipelineError::WrongInputCount { expected, got } => {
                 write!(f, "expected {expected} inputs (plan n), got {got}")
             }
+            PipelineError::NotScalar { instances } => {
+                write!(f, "pipeline needs a d = 1 stack, got {instances} instances")
+            }
+            PipelineError::Agg(e) => write!(f, "aggregator: {e}"),
         }
     }
 }
 
 impl std::error::Error for PipelineError {}
 
+impl From<AggregatorError> for PipelineError {
+    fn from(e: AggregatorError) -> Self {
+        PipelineError::Agg(e)
+    }
+}
+
 impl Pipeline {
     pub fn new(plan: ProtocolPlan, seed: u64) -> Self {
-        let engine = Engine::new(EngineConfig::single(plan.clone()), seed);
+        let agg: Box<dyn Aggregator> =
+            Box::new(Engine::new(EngineConfig::single(plan.clone()), seed));
         Pipeline {
             plan,
-            engine,
+            agg,
             seeds: DerivedClientSeeds::new(seed),
             last_traffic: TrafficStats::default(),
         }
+    }
+
+    /// A pipeline over any scalar (d = 1) aggregation stack — typically
+    /// from [`AggregatorBuilder`](crate::aggregator::AggregatorBuilder).
+    /// `seed` derives the simulated cohort's client seeds; build the
+    /// stack from the same seed for bit-identity with [`Pipeline::new`].
+    pub fn with_aggregator(agg: Box<dyn Aggregator>, seed: u64) -> Result<Self, PipelineError> {
+        let d = agg.config().instances;
+        if d != 1 {
+            return Err(PipelineError::NotScalar { instances: d });
+        }
+        Ok(Pipeline {
+            plan: agg.config().plan.clone(),
+            agg,
+            seeds: DerivedClientSeeds::new(seed),
+            last_traffic: TrafficStats::default(),
+        })
     }
 
     pub fn plan(&self) -> &ProtocolPlan {
@@ -71,10 +109,7 @@ impl Pipeline {
         if xs.len() != self.plan.n {
             return Err(PipelineError::WrongInputCount { expected: self.plan.n, got: xs.len() });
         }
-        let result = self
-            .engine
-            .run_round(&RoundInput::Scalars(xs), &self.seeds)
-            .expect("pipeline inputs validated above");
+        let result = self.agg.run_round(&RoundInput::Scalars(xs), &self.seeds)?;
         self.last_traffic = result.traffic;
         Ok(result.estimates[0])
     }
@@ -161,6 +196,26 @@ mod tests {
         let mut p1 = Pipeline::new(plan.clone(), 9);
         let mut p2 = Pipeline::new(plan, 9);
         assert_eq!(p1.aggregate(&xs).unwrap(), p2.aggregate(&xs).unwrap());
+    }
+
+    #[test]
+    fn pipeline_over_a_cluster_stack_matches_local() {
+        use crate::aggregator::AggregatorBuilder;
+        let plan = ProtocolPlan::theorem2(24, 1.0, 1e-4).unwrap();
+        let xs: Vec<f64> = (0..24).map(|i| (i % 6) as f64 / 6.0).collect();
+        let mut local = Pipeline::new(plan.clone(), 13);
+        let stack = AggregatorBuilder::new(EngineConfig::single(plan.clone()), 13)
+            .loopback()
+            .build()
+            .unwrap();
+        let mut remote = Pipeline::with_aggregator(stack, 13).unwrap();
+        assert_eq!(local.aggregate(&xs).unwrap(), remote.aggregate(&xs).unwrap());
+        // a d > 1 stack is refused
+        let wide = AggregatorBuilder::new(EngineConfig::new(plan, 3), 13).build().unwrap();
+        assert!(matches!(
+            Pipeline::with_aggregator(wide, 13),
+            Err(PipelineError::NotScalar { instances: 3 })
+        ));
     }
 
     #[test]

@@ -14,14 +14,24 @@
 //! still unaccounted is recorded as dropped — the transport event, not a
 //! full-cohort requirement, is what drives `RoundState::record_drop`.
 //!
-//! The closed pools then enter
-//! [`Engine::run_round_streaming`](crate::engine::Engine::run_round_streaming),
+//! The closed pools then enter the aggregator's
+//! [`run_round_streaming`](crate::aggregator::Aggregator::run_round_streaming),
 //! which shuffles each instance pool (the privacy boundary) and analyzes
 //! with the estimate renormalized over the *actual* participants.
+//!
+//! The driver is written against the [`Aggregator`] facade, not a
+//! concrete engine: the same ingestion loop feeds the in-process
+//! [`Engine`](crate::engine::Engine), a
+//! [`ClusterEngine`](crate::cluster::ClusterEngine) scattering pools to
+//! shard servers, or an elastic stack absorbing a shard death mid-round —
+//! bit-identically at the same seed, because the pools it hands over are
+//! the same bytes and the facade's contract derives all round randomness
+//! from the stack's seed.
 
+use crate::aggregator::{Aggregator, AggregatorError};
 use crate::coordinator::batcher::{Batcher, ClientBatch, CollectError};
 use crate::coordinator::round::{RoundError, RoundState};
-use crate::engine::{ClientSeeds, Engine, EngineError, RoundInput, RoundResult};
+use crate::engine::{ClientSeeds, EngineError, RoundInput, RoundResult};
 use crate::transport::channel::Channel;
 use crate::transport::wire::{decode_frame, encode_frame, Frame};
 use crate::util::pool::BoundedQueue;
@@ -77,8 +87,9 @@ impl StreamConfig {
 pub enum StreamError {
     /// Fewer contributions than [`StreamConfig::quorum`] by close.
     QuorumNotReached { quorum: usize, participants: usize },
-    /// The engine rejected the collected pools.
-    Engine(EngineError),
+    /// The aggregator rejected the collected pools, or its backend failed
+    /// the round (lost shard past the retry budget, config mismatch, …).
+    Agg(AggregatorError),
     /// The round state machine rejected a transition (driver bug surface).
     Round(RoundError),
     /// The batcher under-filled relative to what the driver recorded.
@@ -91,7 +102,7 @@ impl std::fmt::Display for StreamError {
             StreamError::QuorumNotReached { quorum, participants } => {
                 write!(f, "round closed with {participants} participants, quorum {quorum}")
             }
-            StreamError::Engine(e) => write!(f, "engine: {e}"),
+            StreamError::Agg(e) => write!(f, "aggregator: {e}"),
             StreamError::Round(e) => write!(f, "round state: {e}"),
             StreamError::Collect(e) => write!(f, "collect: {e}"),
         }
@@ -100,9 +111,15 @@ impl std::fmt::Display for StreamError {
 
 impl std::error::Error for StreamError {}
 
+impl From<AggregatorError> for StreamError {
+    fn from(e: AggregatorError) -> Self {
+        StreamError::Agg(e)
+    }
+}
+
 impl From<EngineError> for StreamError {
     fn from(e: EngineError) -> Self {
-        StreamError::Engine(e)
+        StreamError::Agg(AggregatorError::Engine(e))
     }
 }
 
@@ -248,9 +265,11 @@ pub struct StreamingRound;
 
 impl StreamingRound {
     /// Ingest one round's traffic from `channel` and run the protocol
-    /// over whoever actually showed up.
+    /// over whoever actually showed up. Generic over the stack: any
+    /// [`Aggregator`] — the in-process engine, a cluster, an elastic
+    /// fleet — closes the round.
     pub fn drive(
-        engine: &mut Engine,
+        engine: &mut dyn Aggregator,
         channel: &mut dyn Channel,
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, StreamError> {
@@ -283,7 +302,7 @@ impl StreamingRound {
         // Pump the channel while a collector thread drains the bounded
         // queue into per-instance pools — ingestion and scatter overlap,
         // and a slow collector exerts backpressure through `sender.push`.
-        let (mut pools, got) = std::thread::scope(|scope| {
+        let (pools, got) = std::thread::scope(|scope| {
             let collector = scope.spawn(|| batcher.collect_counted(d, m, expected));
             let pumped = ing.pump(channel, &sender);
             batcher.close();
@@ -307,7 +326,7 @@ impl StreamingRound {
         }
 
         ing.state.begin_shuffle()?;
-        let result = engine.run_round_streaming(pools.pools_mut(), participants)?;
+        let result = engine.run_round_streaming(pools.pools(), participants)?;
         ing.state.begin_analyze()?;
         ing.state.finish()?;
 
@@ -330,20 +349,26 @@ impl StreamingRound {
 }
 
 /// Client-side half of the simulation: encode every client's input for
-/// the engine's *next* round and send it through `channel` as wire
+/// the aggregator's *next* round and send it through `channel` as wire
 /// frames. Clients flagged in `drop_mask` send an explicit [`Frame::Drop`]
 /// instead (graceful dropout); transport-level loss on top of this
 /// produces the silent kind. Returns the round id the cohort encoded for.
+/// The encode is the facade's `(client, instance, round)`-pure derivation,
+/// so a cohort encoded against one stack streams bit-identically into any
+/// other at the same seed.
 pub fn send_cohort(
-    engine: &Engine,
+    engine: &dyn Aggregator,
     seeds: &dyn ClientSeeds,
     inputs: &RoundInput<'_>,
     drop_mask: &[bool],
     channel: &mut dyn Channel,
-) -> Result<u64, EngineError> {
+) -> Result<u64, AggregatorError> {
     let n = inputs.clients();
     if drop_mask.len() != n {
-        return Err(EngineError::WrongClientCount { expected: n, got: drop_mask.len() });
+        return Err(AggregatorError::Engine(EngineError::WrongClientCount {
+            expected: n,
+            got: drop_mask.len(),
+        }));
     }
     let round = engine.next_round();
     for i in 0..n {
@@ -364,7 +389,7 @@ pub fn send_cohort(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{DerivedClientSeeds, EngineConfig};
+    use crate::engine::{DerivedClientSeeds, Engine, EngineConfig};
     use crate::params::ProtocolPlan;
     use crate::transport::channel::{Loopback, SimNet, SimNetConfig};
 

@@ -1,0 +1,245 @@
+//! Integration: the `Aggregator` facade end-to-end — every frontend is
+//! generic over the stack, so the formerly-deferred multi-host lossy
+//! paths must be bit-identical to the in-process ones at the same seed
+//! and drop mask:
+//!
+//! * dropout-tolerant FedAvg ([`FlDriver::run_round_lossy`]) over
+//!   `Remote(Loopback)` and elastic (`ElasticController`) stacks at
+//!   S ∈ {1, 4};
+//! * [`Coordinator::run_round_streaming`] over a `ClusterEngine`
+//!   (including one with a shard dead past its retry budget);
+//! * the unified streaming contract: read-only pools, no in-place
+//!   divergence between `Engine` and `ClusterEngine`, one `&mut dyn
+//!   Aggregator` loop driving every stack.
+
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+use cloak_agg::cluster::ClusterTuning;
+use cloak_agg::control::{ElasticTuning, EvenSplit};
+use cloak_agg::coordinator::{Coordinator, CoordinatorConfig};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::fl::{data::Batch, FlConfig, FlDriver, GradOracle};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+use cloak_agg::util::error::Result;
+
+fn exact_plan(n: usize) -> ProtocolPlan {
+    ProtocolPlan::exact_secure_agg(n, 100, 8)
+}
+
+fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+        .collect()
+}
+
+/// A builder over SimNet channels where `victim`'s inbound link delivers
+/// its handshake and then goes silent — dead past the retry budget from
+/// its very first work unit.
+fn elastic_with_dead_shard(cfg: EngineConfig, seed: u64, victim: usize) -> Box<dyn Aggregator> {
+    AggregatorBuilder::new(cfg, seed)
+        .over_channels(move |s| {
+            let down: Box<dyn Channel> = if s == victim {
+                Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+        .elastic(Box::new(EvenSplit))
+        .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+        .build()
+        .expect("elastic stack")
+}
+
+/// Closed-form oracle for FL tests: loss = ‖p − p*‖²/2, gradient clipped
+/// to unit norm (batch ignored).
+struct QuadraticOracle {
+    target: Vec<f32>,
+}
+
+impl GradOracle for QuadraticOracle {
+    fn loss_and_grad(&self, params: &[f32], _batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let diff: Vec<f32> = params.iter().zip(&self.target).map(|(p, t)| p - t).collect();
+        let loss = 0.5 * diff.iter().map(|d| d * d).sum::<f32>();
+        let norm = diff.iter().map(|d| d * d).sum::<f32>().sqrt().max(1e-12);
+        let scale = (1.0 / norm).min(1.0);
+        Ok((loss, diff.iter().map(|d| d * scale).collect()))
+    }
+}
+
+fn fl_cfg(clients: usize) -> FlConfig {
+    FlConfig {
+        clients,
+        rounds: 1,
+        eps_round: 1.0,
+        delta_round: 1e-4,
+        lr: 0.5,
+        momentum: 0.0,
+        batch_size: 1,
+        pad_to: 8,
+        scale: 1 << 16,
+        notion: NeighborNotion::SumPreserving,
+        custom_plan: Some((3 * clients as u64 * (1 << 16) + 1001, 1 << 16, 8)),
+    }
+}
+
+fn dummy_batches(n: usize) -> Vec<Batch> {
+    (0..n).map(|_| Batch { x: vec![0.0; 4], y: vec![0; 1] }).collect()
+}
+
+#[test]
+fn lossy_fedavg_bit_identical_across_backends() {
+    // The headline acceptance test: FlDriver::run_round_lossy — gradients
+    // cloak-encoded client-side, streamed through a lossy SimNet,
+    // renormalized over the survivors — over Remote(Loopback) and elastic
+    // stacks at S ∈ {1, 4}. Same SimNet seed ⇒ same drop mask ⇒ the model
+    // after the round must be bit-identical to the in-process driver, and
+    // the elastic run at S=4 absorbs a shard death on top.
+    let oracle = QuadraticOracle { target: vec![0.5, -0.5, 0.25, 0.0] };
+    let cfg = fl_cfg(16);
+    let seed = 7u64;
+    // Same (seed, loss) as fl::tests::lossy_round_renormalizes_mean_over_
+    // survivors, where the drop mask is known to leave 4 ≤ p < 16.
+    let net = || SimNet::new(SimNetConfig::new(19).with_loss(0.3));
+
+    for shards in [1usize, 4] {
+        let mut local = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], seed).unwrap();
+        let la = local.run_round_lossy(&dummy_batches(16), &mut net(), 4, 1.0).unwrap();
+        assert!(la.participants < 16, "loss must bite for this to test anything");
+
+        let ecfg = cfg.engine_config(4).unwrap().with_shards(shards);
+        let loopback = AggregatorBuilder::new(ecfg.clone(), seed).loopback().build().unwrap();
+        let mut remote =
+            FlDriver::with_aggregator(cfg.clone(), &oracle, vec![0.0; 4], seed, loopback)
+                .unwrap();
+        let lb = remote.run_round_lossy(&dummy_batches(16), &mut net(), 4, 1.0).unwrap();
+        assert_eq!(la.participants, lb.participants, "S={shards}: same drop mask");
+        assert_eq!(
+            local.server.params(),
+            remote.server.params(),
+            "S={shards}: lossy FedAvg over Remote(Loopback) diverged"
+        );
+
+        // Elastic stack: at S=1 there is no survivor to take over for, so
+        // the fleet is healthy; at S=4 shard 2's link is dead past its
+        // budget and the streamed pools complete via in-round takeover.
+        let elastic = if shards == 1 {
+            AggregatorBuilder::new(ecfg.clone(), seed)
+                .loopback()
+                .elastic(Box::new(EvenSplit))
+                .build()
+                .unwrap()
+        } else {
+            elastic_with_dead_shard(ecfg, seed, 2)
+        };
+        let mut elastic_driver =
+            FlDriver::with_aggregator(cfg.clone(), &oracle, vec![0.0; 4], seed, elastic)
+                .unwrap();
+        let le = elastic_driver.run_round_lossy(&dummy_batches(16), &mut net(), 4, 1.0).unwrap();
+        assert_eq!(la.participants, le.participants, "S={shards}: same drop mask (elastic)");
+        assert_eq!(
+            local.server.params(),
+            elastic_driver.server.params(),
+            "S={shards}: lossy FedAvg over the elastic stack diverged"
+        );
+        if shards == 4 {
+            assert_eq!(
+                elastic_driver.aggregator().shard_takeovers(),
+                1,
+                "the dead shard must have cost a takeover"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_streaming_over_cluster_matches_in_process() {
+    // Coordinator::run_round_streaming — registry-seeded cohort, batcher
+    // ingestion, RoundState lifecycle — over a ClusterEngine: same SimNet
+    // seed and graceful-drop mask as the in-process coordinator, so the
+    // survivors and the renormalized estimates must be bit-identical. An
+    // elastic stack with a dead shard must also converge to the same
+    // round.
+    let (n, d, seed) = (24usize, 6usize, 55u64);
+    let inputs = inputs_for(n, d);
+    let mut mask = vec![false; n];
+    mask[3] = true;
+    mask[17] = true;
+    let mut cfg = CoordinatorConfig::new(exact_plan(n), d);
+    cfg.shards = 3;
+
+    let mut local = Coordinator::new(cfg.clone(), seed);
+    let mut net = SimNet::new(SimNetConfig::new(8).with_loss(0.15));
+    local.stream_cohort(&inputs, &mask, &mut net).unwrap();
+    let want = local.run_round_streaming(&mut net, 1, 1.0).unwrap();
+    assert!(want.result.participants < n, "drops must bite");
+
+    let stacks: Vec<(&str, Box<dyn Aggregator>)> = vec![
+        (
+            "loopback",
+            AggregatorBuilder::new(cfg.engine_config(), seed).loopback().build().unwrap(),
+        ),
+        ("elastic", elastic_with_dead_shard(cfg.engine_config(), seed, 1)),
+    ];
+    for (label, stack) in stacks {
+        let mut remote = Coordinator::with_aggregator(cfg.clone(), seed, stack).unwrap();
+        let mut net = SimNet::new(SimNetConfig::new(8).with_loss(0.15));
+        remote.stream_cohort(&inputs, &mask, &mut net).unwrap();
+        let got = remote.run_round_streaming(&mut net, 1, 1.0).unwrap();
+        assert_eq!(got.contributed, want.contributed, "{label}: same survivors");
+        assert_eq!(got.dropped, want.dropped, "{label}: same dropouts");
+        assert_eq!(
+            got.result.estimates, want.result.estimates,
+            "{label}: streaming over a cluster must be bit-identical"
+        );
+        if label == "elastic" {
+            assert_eq!(remote.aggregator().shard_takeovers(), 1, "takeover happened");
+        }
+    }
+}
+
+#[test]
+fn unified_streaming_contract_no_in_place_divergence() {
+    // The pools are borrowed read-only by EVERY stack: one pool set,
+    // encoded once, is handed to four different aggregators in sequence —
+    // if any of them mutated the caller's pools the later runs would see
+    // shuffled residues and diverge. All four must agree bit-for-bit.
+    let (n, d, seed) = (20usize, 8usize, 33u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let who: Vec<usize> = (0..n).filter(|i| i % 4 != 1).collect();
+
+    let cfg = |s: usize| EngineConfig::new(exact_plan(n), d).with_shards(s);
+    let reference = Engine::new(cfg(1), seed);
+    let m = reference.config().plan.num_messages;
+    let mut pools = vec![Vec::new(); d];
+    for &i in &who {
+        let shares = reference
+            .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+            .unwrap();
+        for (j, pool) in pools.iter_mut().enumerate() {
+            pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+        }
+    }
+    let snapshot = pools.clone();
+
+    let mut stacks: Vec<(&str, Box<dyn Aggregator>)> = vec![
+        ("local S=1", AggregatorBuilder::new(cfg(1), seed).local().build().unwrap()),
+        ("local S=4", AggregatorBuilder::new(cfg(4), seed).local().build().unwrap()),
+        ("loopback S=4", AggregatorBuilder::new(cfg(4), seed).loopback().build().unwrap()),
+        ("elastic S=4", elastic_with_dead_shard(cfg(4), seed, 2)),
+    ];
+    // ONE generic loop drives every stack — the Box<dyn Aggregator>
+    // smoke test and the contract check in one.
+    let mut estimates: Vec<Vec<f64>> = Vec::new();
+    for (label, stack) in &mut stacks {
+        let r = stack.run_round_streaming(&pools, who.len()).unwrap();
+        assert_eq!(r.participants, who.len(), "{label}");
+        assert_eq!(pools, snapshot, "{label}: caller's pools must never be mutated");
+        estimates.push(r.estimates);
+    }
+    for (i, est) in estimates.iter().enumerate().skip(1) {
+        assert_eq!(est, &estimates[0], "stack {i} diverged from local S=1");
+    }
+}

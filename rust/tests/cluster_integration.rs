@@ -101,7 +101,7 @@ fn streaming_round_bit_identical_across_backends() {
                 pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
             }
         }
-        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let want = engine.run_round_streaming(&pools, who.len()).unwrap();
 
         let mut loopback =
             ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));

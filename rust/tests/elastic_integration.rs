@@ -5,6 +5,7 @@
 //! survivors through a takeover, re-ranging over real TCP sockets after a
 //! host death, and multi-host federated learning. Pure Rust.
 
+use cloak_agg::aggregator::Aggregator;
 use cloak_agg::cluster::{
     cluster_layout, ClusterEngine, ClusterTuning, RemoteShardBackend, ServeOpts, TcpShardHost,
 };
@@ -107,7 +108,7 @@ fn takeover_round_bit_identical_for_s2_and_s4_streaming() {
         let cfg = EngineConfig::new(exact_plan(n), d).with_shards(shards);
         let mut engine = Engine::new(cfg.clone(), seed);
         let pools = pools_for(&engine, &inputs, &who, &seeds);
-        let want = engine.run_round_streaming(&mut pools.clone(), who.len()).unwrap();
+        let want = engine.run_round_streaming(&pools, who.len()).unwrap();
         let mut cluster = elastic_with_dead_shard(&cfg, seed, victim);
         let got = cluster.run_round_streaming(&pools, who.len()).unwrap();
         assert_eq!(
@@ -247,7 +248,8 @@ fn multi_host_fl_two_rounds_bit_identical_to_in_process() {
     let ecfg = cfg.engine_config(init.len()).unwrap().with_shards(4);
     let cluster =
         ClusterEngine::new(ecfg.clone(), 42, Box::new(RemoteShardBackend::loopback(&ecfg)));
-    let mut remote = FlDriver::with_engine(cfg, &oracle, init, 42, cluster).unwrap();
+    let mut remote =
+        FlDriver::with_aggregator(cfg, &oracle, init, 42, Box::new(cluster)).unwrap();
 
     for round in 0..2 {
         let a = local.run_round(&batches).unwrap();
@@ -260,5 +262,5 @@ fn multi_host_fl_two_rounds_bit_identical_to_in_process() {
             "round {round}: multi-host FL must be bit-identical"
         );
     }
-    assert_eq!(remote.cluster().unwrap().rounds_run(), 2);
+    assert_eq!(remote.aggregator().rounds_run(), 2);
 }
