@@ -20,6 +20,11 @@ use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
 use cloak_agg::cluster::{cluster_layout, ServeOpts, TcpShardHost};
 use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
 use cloak_agg::params::ProtocolPlan;
+use cloak_agg::transport::channel::Loopback;
+use cloak_agg::transport::{
+    contribute_batch_wire_len, contribute_wire_len, send_cohort, send_cohort_batched,
+    StreamConfig, StreamingRound,
+};
 use cloak_agg::util::benchkit::Bench;
 
 fn main() {
@@ -87,6 +92,69 @@ fn main() {
             for h in hosts {
                 h.shutdown();
             }
+        }
+    }
+
+    // Batched-wire sweep: the same streamed cohort as per-client
+    // Contribute frames (batch=1) vs ContributeBatch coalescing — frames
+    // and bytes per round drop with batch size while the estimates stay
+    // bit-identical to the per-client wire (gate-checked per case).
+    {
+        let per_client = d * m;
+        let cfg = EngineConfig::new(plan.clone(), d).with_shards(2);
+        let mut reference = Engine::new(cfg.clone(), seed);
+        let mut refch = Loopback::new();
+        send_cohort(&reference, &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut refch)
+            .expect("reference cohort");
+        let want = StreamingRound::drive(&mut reference, &mut refch, &StreamConfig::new(n))
+            .expect("reference streamed round");
+        for batch in [1usize, 8, 32] {
+            let mut engine = Engine::new(cfg.clone(), seed);
+            let mut ch = Loopback::new();
+            send_cohort_batched(
+                &engine,
+                &seeds,
+                &RoundInput::Vectors(&inputs),
+                &vec![false; n],
+                &mut ch,
+                batch,
+            )
+            .expect("batched cohort");
+            let frames = ch.pending();
+            let out = StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n))
+                .expect("batched streamed round");
+            assert_eq!(
+                out.result.estimates, want.result.estimates,
+                "wire-batch={batch} diverged from per-client frames"
+            );
+            let bytes = if batch <= 1 {
+                n * contribute_wire_len(per_client)
+            } else {
+                let rem = n % batch;
+                (n / batch) * contribute_batch_wire_len(batch, per_client)
+                    + if rem > 0 { contribute_batch_wire_len(rem, per_client) } else { 0 }
+            };
+            println!(
+                "wire-batch={batch}: {frames} frames/round, {:.1} bytes/user",
+                bytes as f64 / n as f64
+            );
+            let name = format!("streamed round n={n} d={d} wire-batch={batch}");
+            b.run_items(&name, (n * per_client) as f64, || {
+                let mut ch = Loopback::new();
+                send_cohort_batched(
+                    &engine,
+                    &seeds,
+                    &RoundInput::Vectors(&inputs),
+                    &vec![false; n],
+                    &mut ch,
+                    batch,
+                )
+                .expect("cohort");
+                StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n))
+                    .expect("streamed round")
+                    .result
+                    .estimates[0]
+            });
         }
     }
 

@@ -133,6 +133,56 @@ fn main() {
         }
     }
 
+    // streaming round on the same shard axis: nested Vec<Vec<u64>> pools
+    // vs the flat-arena entry — identical bytes, different memory layout,
+    // so the delta is pure allocation/locality (the tentpole's target)
+    {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        let (n, d, enc_m) = (64usize, 128usize, 8usize);
+        let plan = ProtocolPlan::exact_secure_agg(n, 1 << 10, enc_m);
+        let stream_m = plan.num_messages;
+        let seeds = DerivedClientSeeds::new(11);
+        let mut rng = ChaCha20Rng::seed_from_u64(11);
+        let inputs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+        let reference = Engine::new(EngineConfig::new(plan.clone(), d).with_shards(1), 11);
+        let mut pools = vec![Vec::new(); d];
+        for i in 0..n {
+            let shares = reference
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .expect("encode");
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * stream_m..(j + 1) * stream_m]);
+            }
+        }
+        let flat: Vec<u64> = pools.concat();
+        let mut sweep = vec![1usize, cores];
+        sweep.sort_unstable();
+        sweep.dedup();
+        for s in sweep {
+            let items = (n * d * stream_m) as f64;
+            let mut nested =
+                Engine::new(EngineConfig::new(plan.clone(), d).with_shards(s), 11);
+            b.run_sharded(
+                &format!("streaming nested pools (n={n}, d={d}, S={s})"),
+                items,
+                s,
+                || nested.run_round_streaming(&pools, n).expect("nested round").estimates[0],
+            );
+            let mut arena =
+                Engine::new(EngineConfig::new(plan.clone(), d).with_shards(s), 11);
+            b.run_sharded(
+                &format!("streaming flat arena (n={n}, d={d}, S={s})"),
+                items,
+                s,
+                || {
+                    arena.run_round_streaming_flat(&flat, n).expect("flat round").estimates
+                        [0]
+                },
+            );
+        }
+    }
+
     b.report();
     b.write_json("BENCH_encoder_hotpath.json").expect("write BENCH_encoder_hotpath.json");
 

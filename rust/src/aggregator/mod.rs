@@ -220,6 +220,31 @@ pub trait Aggregator {
         participants: usize,
     ) -> Result<RoundResult, AggregatorError>;
 
+    /// Flat-layout twin of [`Aggregator::run_round_streaming`]: the pools
+    /// arrive as **one** instance-major `d × participants × m` slice
+    /// (instance `j` at `flat[j·participants·m ..][.. participants·m]` —
+    /// the `engine::arena::PoolArena` layout), sparing hot callers the
+    /// nested `Vec<Vec<u64>>`. Same contract: read-only borrow, same
+    /// validation errors, estimates bit-identical to the nested entry
+    /// over the same shares in arrival order. Both engines override this
+    /// with a no-restructure path; the default bridges to the nested
+    /// entry so any implementation accepts both layouts.
+    fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        crate::engine::validate_pools_flat(
+            &self.config().plan,
+            self.config().instances,
+            flat,
+            participants,
+        )?;
+        let stride = participants * self.config().plan.num_messages;
+        let pools: Vec<Vec<u64>> = flat.chunks_exact(stride).map(<[u64]>::to_vec).collect();
+        self.run_round_streaming(&pools, participants)
+    }
+
     /// Work resends performed so far (straggler/retry telemetry; zero for
     /// stacks without a wire).
     fn shard_retries(&self) -> u64 {
@@ -297,6 +322,14 @@ impl Aggregator for Engine {
     ) -> Result<RoundResult, AggregatorError> {
         Ok(Engine::run_round_streaming(self, pools, participants)?)
     }
+
+    fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(Engine::run_round_streaming_flat(self, flat, participants)?)
+    }
 }
 
 impl Aggregator for ClusterEngine {
@@ -348,6 +381,14 @@ impl Aggregator for ClusterEngine {
         participants: usize,
     ) -> Result<RoundResult, AggregatorError> {
         Ok(ClusterEngine::run_round_streaming(self, pools, participants)?)
+    }
+
+    fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        Ok(ClusterEngine::run_round_streaming_flat(self, flat, participants)?)
     }
 
     fn shard_retries(&self) -> u64 {

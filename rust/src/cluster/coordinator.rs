@@ -44,9 +44,9 @@
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    ranges_tile, validate_pools, ClientSeeds, EngineConfig, InProcessBackend, RoundInput,
-    RoundResult, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork,
-    SHUFFLE_SEED_TAG,
+    ranges_tile, validate_pools, validate_pools_flat, ClientSeeds, EngineConfig,
+    InProcessBackend, RoundInput, RoundResult, ShardBackend, ShardBackendError, ShardHealth,
+    ShardRoundWork, SHUFFLE_SEED_TAG,
 };
 use crate::metrics::Registry as MetricsRegistry;
 use crate::rng::derive_seed;
@@ -826,12 +826,39 @@ impl ClusterEngine {
         pools: &[Vec<u64>],
         participants: usize,
     ) -> Result<RoundResult, ShardBackendError> {
-        let d = self.cfg.instances;
-        let m = self.cfg.plan.num_messages;
         // Same screen Engine::run_round_streaming applies — and the reason
         // hostile pools fail with a typed error here instead of a remote
         // shard silently rejecting the work and the barrier timing out.
-        validate_pools(&self.cfg.plan, d, pools, participants)?;
+        validate_pools(&self.cfg.plan, self.cfg.instances, pools, participants)?;
+        self.stream_pools(participants, |lo, hi| pools[lo..hi].concat())
+    }
+
+    /// Flat-layout twin of [`ClusterEngine::run_round_streaming`]: pools
+    /// arrive as one instance-major `d × participants × m` slice (see
+    /// [`Engine::run_round_streaming_flat`](crate::engine::Engine::run_round_streaming_flat)).
+    /// Each shard's work frame carries exactly the bytes the nested path
+    /// would have concatenated, so the two entries are bit-identical on
+    /// every backend.
+    pub fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, ShardBackendError> {
+        validate_pools_flat(&self.cfg.plan, self.cfg.instances, flat, participants)?;
+        let stride = participants * self.cfg.plan.num_messages;
+        self.stream_pools(participants, |lo, hi| flat[lo * stride..hi * stride].to_vec())
+    }
+
+    /// Shared streaming scatter/merge: `slice_pool(lo, hi)` yields the
+    /// contiguous instance-major residues for the range `[lo, hi)` that
+    /// land in that shard's [`ShardPoolMsg`]. Callers validated already.
+    fn stream_pools(
+        &mut self,
+        participants: usize,
+        slice_pool: impl Fn(usize, usize) -> Vec<u64>,
+    ) -> Result<RoundResult, ShardBackendError> {
+        let d = self.cfg.instances;
+        let m = self.cfg.plan.num_messages;
         let round = self.rounds_run;
         let t0 = Instant::now();
         let ranges = self.round_ranges(round)?;
@@ -848,7 +875,7 @@ impl ClusterEngine {
                     span: (hi - lo) as u32,
                     participants: participants as u32,
                     round_seed,
-                    pool: pools[lo..hi].concat(),
+                    pool: slice_pool(lo, hi),
                 })
             })
             .collect();
@@ -1152,6 +1179,44 @@ mod tests {
         assert_eq!(got.estimates, want.estimates, "streamed cluster round must be bit-identical");
         assert_eq!(got.participants, who.len());
         assert_eq!(cluster.metrics().counter("cluster.streaming_rounds").get(), 1);
+    }
+
+    #[test]
+    fn streaming_flat_matches_nested_on_the_wire() {
+        // The flat entry point scatters exactly the bytes the nested one
+        // concatenates, so both wire paths stay bit-identical to the
+        // in-process engine.
+        let (n, d, seed) = (12usize, 5usize, 9u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let who: Vec<usize> = (0..n).filter(|i| i % 4 != 2).collect();
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut engine = Engine::new(cfg.clone(), seed);
+        let m = cfg.plan.num_messages;
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = engine
+                .encode_client_shares(0, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let flat: Vec<u64> = pools.concat();
+        let want = engine.run_round_streaming_flat(&flat, who.len()).unwrap();
+        let mut nested =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let mut flat_c =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        let a = nested.run_round_streaming(&pools, who.len()).unwrap();
+        let b = flat_c.run_round_streaming_flat(&flat, who.len()).unwrap();
+        assert_eq!(a.estimates, want.estimates);
+        assert_eq!(b.estimates, want.estimates);
+        // flat rejects malformed input with the same typed errors
+        assert_eq!(
+            flat_c.run_round_streaming_flat(&flat, 0).unwrap_err(),
+            ShardBackendError::Engine(EngineError::NoParticipants)
+        );
     }
 
     #[test]

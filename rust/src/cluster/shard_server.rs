@@ -184,6 +184,7 @@ impl ShardServer {
             // Client-plane and barrier-output frames are not ours to answer.
             Frame::Hello { .. }
             | Frame::Contribute { .. }
+            | Frame::ContributeBatch { .. }
             | Frame::Drop { .. }
             | Frame::Commit { .. }
             | Frame::ShardOut(_)

@@ -95,6 +95,23 @@ impl Channel for TcpChannel {
         }
     }
 
+    fn send_all(&mut self, frames: Vec<Vec<u8>>) {
+        // One buffered write for the whole burst: frames are already
+        // length-prefixed, so concatenation IS the stream format, and a
+        // single write_all replaces one syscall per frame.
+        if self.dead || frames.is_empty() {
+            return;
+        }
+        let total = frames.iter().map(Vec::len).sum();
+        let mut buf = Vec::with_capacity(total);
+        for f in &frames {
+            buf.extend_from_slice(f);
+        }
+        if self.stream.write_all(&buf).is_err() {
+            self.dead = true;
+        }
+    }
+
     fn recv(&mut self) -> Option<(f64, Vec<u8>)> {
         loop {
             if self.rbuf.len() >= 4 {

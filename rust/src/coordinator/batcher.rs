@@ -138,6 +138,45 @@ impl Batcher {
         (pools, got)
     }
 
+    /// Flat-layout twin of [`Batcher::collect_counted`]: drains into one
+    /// instance-major `instances × got × m` buffer — the
+    /// [`PoolArena`](crate::engine::PoolArena) layout that
+    /// [`run_round_streaming_flat`](crate::aggregator::Aggregator::run_round_streaming_flat)
+    /// borrows — instead of `instances` separately allocated pools.
+    /// Batches are staged client-major as they arrive (one bump append
+    /// per client) and transposed once at close, so instance `j`'s region
+    /// holds exactly the residues `collect_counted` would have put in
+    /// `pools()[j]`, in the same arrival order: the two drains are
+    /// bit-identical views of the same round.
+    pub fn collect_flat_counted(
+        &self,
+        instances: usize,
+        num_messages: usize,
+        expected_clients: usize,
+    ) -> (Vec<u64>, usize) {
+        let m = num_messages;
+        let per_client = instances * m;
+        let mut staged: Vec<u64> = Vec::with_capacity(expected_clients * per_client);
+        let mut got = 0usize;
+        while let Some(batch) = self.queue.pop() {
+            debug_assert_eq!(batch.shares.len(), per_client);
+            staged.extend_from_slice(&batch.shares);
+            got += 1;
+        }
+        // Transpose client-major → instance-major: client c's instance-j
+        // block lands at arrival position c inside instance j's region.
+        let stride = got * m;
+        let mut flat = vec![0u64; instances * stride];
+        for c in 0..got {
+            let src = &staged[c * per_client..(c + 1) * per_client];
+            for j in 0..instances {
+                flat[j * stride + c * m..j * stride + (c + 1) * m]
+                    .copy_from_slice(&src[j * m..(j + 1) * m]);
+            }
+        }
+        (flat, got)
+    }
+
     pub fn close(&self) {
         self.queue.close();
     }
@@ -213,5 +252,36 @@ mod tests {
         assert_eq!(got, 3);
         assert_eq!(pools.total_messages(), 6);
         assert_eq!(pools.pool(0), &[0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn collect_flat_counted_matches_nested_drain() {
+        // The flat drain must be the nested drain's pools concatenated in
+        // instance order — bit-identity across the two layouts.
+        let feed = |batcher: &Batcher| {
+            let tx = batcher.sender();
+            for i in 0..3u32 {
+                // 2 instances × m=2, distinct residues per (client, slot)
+                let base = i as u64 * 10;
+                tx.push(ClientBatch {
+                    client_stream: i,
+                    shares: vec![base, base + 1, base + 2, base + 3],
+                });
+            }
+            tx.close();
+        };
+        let nested = Batcher::new(8);
+        feed(&nested);
+        let (pools, got_n) = nested.collect_counted(2, 2, 5);
+        let flat_b = Batcher::new(8);
+        feed(&flat_b);
+        let (flat, got_f) = flat_b.collect_flat_counted(2, 2, 5);
+        assert_eq!(got_n, got_f);
+        let stride = got_f * 2;
+        for j in 0..2 {
+            assert_eq!(&flat[j * stride..(j + 1) * stride], pools.pool(j));
+        }
+        // instance-major spot check: client 1's instance-1 block
+        assert_eq!(&flat[stride + 2..stride + 4], &[12, 13]);
     }
 }

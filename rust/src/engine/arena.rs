@@ -1,0 +1,152 @@
+//! Flat pool arena — one contiguous round buffer, reused across rounds.
+//!
+//! The round hot path used to move `Vec<Vec<u64>>` pools: one heap
+//! allocation per instance per round, cloned again wherever a shard
+//! needed its own copy. [`PoolArena`] replaces the nesting with a single
+//! `instances × stride` block and index arithmetic:
+//!
+//! ```text
+//! buf: [ instance 0 (stride words) | instance 1 | ... | instance d-1 ]
+//!                                    ^ instance j starts at j * stride
+//! ```
+//!
+//! The layout is **instance-major** — the same order the nested pools
+//! were laid out in memory one Vec at a time — so byte-for-byte the
+//! content of `arena.instance(j)` equals the seed path's `pools[j]`, and
+//! every consumer (mixnet shuffle, `Analyzer::analyze`) sees identical
+//! input. For the encode path the stride is `n·m` (cohort × messages);
+//! for the streaming path it is `participants·m`.
+//!
+//! # Reuse contract
+//!
+//! [`PoolArena::reset`] re-shapes the arena for the next round:
+//! it zero-fills `instances × stride` words but **keeps the backing
+//! capacity**, so steady-state rounds of the same shape perform zero
+//! heap allocations. Zero-filling matters: the seed path started from
+//! `vec![0u64; ..]`, and encode workers add shares into the buffer —
+//! starting from anything else would break bit-identity.
+
+/// One contiguous `instances × stride` round buffer (see module docs).
+#[derive(Debug, Default)]
+pub struct PoolArena {
+    buf: Vec<u64>,
+    instances: usize,
+    stride: usize,
+}
+
+impl PoolArena {
+    /// An empty arena; the first [`PoolArena::reset`] sizes it.
+    pub fn new() -> Self {
+        PoolArena { buf: Vec::new(), instances: 0, stride: 0 }
+    }
+
+    /// Re-shape for a round of `instances` pools of `stride` words each,
+    /// zero-filled. Keeps the backing allocation when capacity suffices.
+    pub fn reset(&mut self, instances: usize, stride: usize) {
+        self.instances = instances;
+        self.stride = stride;
+        self.buf.clear();
+        self.buf.resize(instances * stride, 0);
+    }
+
+    /// Pools currently laid out.
+    pub fn instances(&self) -> usize {
+        self.instances
+    }
+
+    /// Words per pool.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Total words (`instances × stride`).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Backing capacity in words — stable across same-shape resets.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Instance `j`'s pool.
+    pub fn instance(&self, j: usize) -> &[u64] {
+        &self.buf[j * self.stride..(j + 1) * self.stride]
+    }
+
+    /// Instance `j`'s pool, mutable.
+    pub fn instance_mut(&mut self, j: usize) -> &mut [u64] {
+        &mut self.buf[j * self.stride..(j + 1) * self.stride]
+    }
+
+    /// The whole arena as one flat slice (instance-major).
+    pub fn as_flat(&self) -> &[u64] {
+        &self.buf
+    }
+
+    /// The whole arena as one flat mutable slice — callers split this
+    /// into disjoint per-shard regions with `split_at_mut` /
+    /// `chunks_exact_mut(stride)` for parallel fill and in-place shuffles.
+    pub fn as_flat_mut(&mut self) -> &mut [u64] {
+        &mut self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_major_index_math() {
+        let mut a = PoolArena::new();
+        a.reset(3, 4);
+        assert_eq!(a.instances(), 3);
+        assert_eq!(a.stride(), 4);
+        assert_eq!(a.len(), 12);
+        for j in 0..3 {
+            for k in 0..4 {
+                a.instance_mut(j)[k] = (j * 100 + k) as u64;
+            }
+        }
+        // flat view is instance-major: pool j occupies [j*stride, (j+1)*stride)
+        for j in 0..3 {
+            assert_eq!(&a.as_flat()[j * 4..(j + 1) * 4], a.instance(j));
+            assert_eq!(a.instance(j)[0], (j * 100) as u64);
+        }
+        // chunks_exact_mut walks the same regions in instance order
+        for (j, chunk) in a.as_flat_mut().chunks_exact_mut(4).enumerate() {
+            assert_eq!(chunk[3], (j * 100 + 3) as u64);
+        }
+    }
+
+    #[test]
+    fn reset_zero_fills_and_keeps_capacity() {
+        let mut a = PoolArena::new();
+        a.reset(4, 8);
+        a.as_flat_mut().fill(7);
+        let cap = a.capacity();
+        assert!(cap >= 32);
+        // same shape: no realloc, content back to the seed's zero state
+        a.reset(4, 8);
+        assert_eq!(a.capacity(), cap);
+        assert!(a.as_flat().iter().all(|&w| w == 0));
+        // smaller shape still reuses the block
+        a.reset(2, 8);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a.capacity(), cap);
+    }
+
+    #[test]
+    fn empty_arena_is_harmless() {
+        let mut a = PoolArena::new();
+        assert!(a.is_empty());
+        assert_eq!(a.capacity(), 0);
+        a.reset(0, 5);
+        assert!(a.is_empty());
+        assert_eq!(a.as_flat(), &[] as &[u64]);
+    }
+}

@@ -474,14 +474,22 @@ impl ShardExecutor {
         }
         let t0 = Instant::now();
         let ana = Analyzer::new(self.plan.modulus, self.plan.scale, participants);
-        let mut buf = w.pool.clone();
-        for jj in 0..span {
-            let j = lo + jj;
-            let mut net = Mixnet::honest(derive_seed(w.round_seed, j as u64), self.hops);
-            net.shuffle(&mut buf[jj * per_instance..(jj + 1) * per_instance]);
-        }
-        let estimates: Vec<f64> = (0..span)
-            .map(|jj| ana.analyze(&buf[jj * per_instance..(jj + 1) * per_instance]))
+        // One per-instance scratch reused across the span (not a clone of
+        // the whole pool): copy in, shuffle in place, analyze. The work
+        // unit stays read-only — re-executions after a straggler resend
+        // see the same bytes.
+        let mut scratch = vec![0u64; per_instance];
+        let estimates: Vec<f64> = w
+            .pool
+            .chunks_exact(per_instance)
+            .enumerate()
+            .map(|(jj, inst)| {
+                scratch.copy_from_slice(inst);
+                let j = lo + jj;
+                let mut net = Mixnet::honest(derive_seed(w.round_seed, j as u64), self.hops);
+                net.shuffle(&mut scratch);
+                ana.analyze(&scratch)
+            })
             .collect();
         Ok(ShardOutMsg {
             round: w.round,

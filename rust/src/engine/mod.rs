@@ -79,7 +79,33 @@
 //! [`crate::cluster`] runs the *same* work on shard servers behind real
 //! sockets, gathering `transport::wire::ShardOutMsg`s at the barrier —
 //! bit-identical to this module's in-process rounds by construction.
+//!
+//! # Flat round arena
+//!
+//! All round-local share storage lives in one [`arena::PoolArena`] owned
+//! by the engine — a single contiguous block, **instance-major**, reused
+//! across rounds ([`arena::PoolArena::reset`] re-shapes without
+//! reallocating once capacity is reached):
+//!
+//! * **Full rounds** reset the arena to `d × (n·m)`: shard `s` owning
+//!   instances `[lo, hi)` fills the region `[lo·n·m, hi·n·m)`, with
+//!   instance `j`'s client `i` at `((j−lo)·n + i)·m` inside it. Regions
+//!   are split off with `split_at_mut` before the shard dispatch, so
+//!   shards encode, shuffle (`chunks_exact_mut(n·m)` in place) and
+//!   analyze concurrently without a nested Vec anywhere.
+//! * **Streaming rounds** reset the arena to `s_eff × (participants·m)`:
+//!   one scratch region per shard, reused across that shard's instances
+//!   (copy pool → shuffle in place → analyze), replacing the seed path's
+//!   per-instance `pools[j].clone()`.
+//!
+//! The zero-fill on reset keeps the fill semantics identical to the
+//! nested-Vec seed path (`vec![0u64; ..]` per shard), which is what keeps
+//! estimates bit-identical — see `arena`'s module docs for the index math
+//! and the reuse contract.
 
+#![deny(clippy::redundant_clone)]
+
+pub mod arena;
 pub mod backend;
 
 use std::time::Instant;
@@ -94,6 +120,7 @@ use crate::shuffler::{mixnet::Mixnet, Shuffler};
 use crate::transport::{CostModel, Envelope, TrafficStats};
 use crate::util::pool::ThreadPool;
 
+pub use arena::PoolArena;
 pub use backend::{
     InProcessBackend, ShardBackend, ShardBackendError, ShardExecutor, ShardHealth,
     ShardRoundWork,
@@ -347,6 +374,8 @@ pub struct Engine {
     prerandomizer: PreRandomizer,
     analyzer: Analyzer,
     pool: ThreadPool,
+    /// Flat round buffer, reused across rounds (see module docs).
+    arena: PoolArena,
     metrics: MetricsRegistry,
     rounds_run: u64,
     shuffle_seed: u64,
@@ -367,6 +396,7 @@ impl Engine {
             prerandomizer,
             analyzer,
             pool: ThreadPool::new(workers),
+            arena: PoolArena::new(),
             metrics: MetricsRegistry::new(),
             rounds_run: 0,
             shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
@@ -455,9 +485,10 @@ impl Engine {
     /// are never mutated and the two engines cannot diverge in place.
     /// The copy is the deliberate price of that contract (the cluster
     /// path pays the same when it serializes pool ranges into frames);
-    /// it is taken per instance inside the shard dispatch, so it
-    /// parallelizes with the shuffle it feeds and costs a small fraction
-    /// of the per-element ChaCha permutation that follows.
+    /// it lands in a per-shard arena region reused across that shard's
+    /// instances, so a round allocates nothing in steady state and the
+    /// copy costs a small fraction of the per-element ChaCha permutation
+    /// that follows.
     ///
     /// [`Aggregator`]: crate::aggregator::Aggregator
     pub fn run_round_streaming(
@@ -465,9 +496,41 @@ impl Engine {
         pools: &[Vec<u64>],
         participants: usize,
     ) -> Result<RoundResult, EngineError> {
+        validate_pools(&self.cfg.plan, self.cfg.instances, pools, participants)?;
+        self.run_streaming_core(participants, |j| pools[j].as_slice())
+    }
+
+    /// Flat-layout twin of [`Engine::run_round_streaming`]: the pools
+    /// arrive as **one** instance-major `d × participants × m` slice
+    /// (instance `j` at `flat[j·participants·m ..][.. participants·m]` —
+    /// the [`PoolArena`] layout), so hot callers like
+    /// [`StreamingRound`](crate::transport::streaming::StreamingRound)
+    /// never build a nested Vec at all. Same validation, same seeds, same
+    /// renormalized analyzer: estimates are bit-identical to the nested
+    /// entry point over the same shares in the same arrival order.
+    pub fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, EngineError> {
+        validate_pools_flat(&self.cfg.plan, self.cfg.instances, flat, participants)?;
+        let stride = participants * self.cfg.plan.num_messages;
+        self.run_streaming_core(participants, move |j| &flat[j * stride..(j + 1) * stride])
+    }
+
+    /// The streaming server half, generic over how instance `j`'s pool is
+    /// fetched. Callers validated already; `get_pool(j)` must return
+    /// exactly `participants × m` in-ring residues for `j ∈ [0, d)`.
+    fn run_streaming_core<'p, F>(
+        &mut self,
+        participants: usize,
+        get_pool: F,
+    ) -> Result<RoundResult, EngineError>
+    where
+        F: Fn(usize) -> &'p [u64] + Sync,
+    {
         let d = self.cfg.instances;
         let m = self.cfg.plan.num_messages;
-        validate_pools(&self.cfg.plan, d, pools, participants)?;
         let modulus = self.cfg.plan.modulus;
         let round = self.rounds_run;
         self.rounds_run += 1;
@@ -478,19 +541,34 @@ impl Engine {
         let s_eff = self.shards.min(d).max(1);
         let round_seed = derive_seed(self.shuffle_seed, round);
         let hops = self.cfg.mixnet_hops;
+        let stride = participants * m;
 
         // --- shuffle (the privacy boundary) + analyze per shard range,
         // merged in instance order -----------------------------------------
+        // One arena region per shard, reused for every instance in its
+        // range (and across rounds): copy the pool in, shuffle in place,
+        // analyze — no per-instance allocation anywhere on this path.
         let ranges = shard_ranges(d, s_eff);
         let ranges_ref: &[(usize, usize)] = &ranges;
-        let outs: Vec<Vec<f64>> = self.pool.dispatch(s_eff, |s| {
+        self.arena.reset(s_eff, stride);
+        let pool = &self.pool;
+        let slots: Vec<std::sync::Mutex<Option<&mut [u64]>>> = self
+            .arena
+            .as_flat_mut()
+            .chunks_exact_mut(stride.max(1))
+            .map(|c| std::sync::Mutex::new(Some(c)))
+            .collect();
+        let get = &get_pool;
+        let outs: Vec<Vec<f64>> = pool.dispatch(s_eff, |s| {
             let (lo, hi) = ranges_ref[s];
+            let scratch: &mut [u64] =
+                slots[s].lock().unwrap().take().expect("streaming scratch taken once per shard");
             (lo..hi)
                 .map(|j| {
-                    let mut buf = pools[j].clone();
+                    scratch.copy_from_slice(get(j));
                     let mut net = Mixnet::honest(derive_seed(round_seed, j as u64), hops);
-                    net.shuffle(&mut buf);
-                    ana.analyze(&buf)
+                    net.shuffle(scratch);
+                    ana.analyze(scratch)
                 })
                 .collect()
         });
@@ -566,24 +644,43 @@ impl Engine {
         let seeds_ref: &[u64] = &client_seeds;
         let ranges_ref: &[(usize, usize)] = &ranges;
 
+        // The whole round's share storage is one arena block (d × n·m,
+        // instance-major — zero-filled like the seed path's per-shard
+        // `vec![0u64; ..]`), pre-split here into disjoint per-shard
+        // regions each dispatch worker claims exactly once.
+        self.arena.reset(d, n * m);
+        let pool = &self.pool;
+        let slots: Vec<std::sync::Mutex<Option<&mut [u64]>>> = {
+            let mut rest = self.arena.as_flat_mut();
+            ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * n * m);
+                    rest = tail;
+                    std::sync::Mutex::new(Some(head))
+                })
+                .collect()
+        };
+
         // KEEP IN SYNC with backend::ShardExecutor::execute_encode_workers:
         // this closure is the same per-shard computation plus the views
         // capture the executor deliberately lacks. Any change to the
         // split/shuffle/analyze sequence here must land there too — the
         // cross-backend bit-identity tests (engine::backend and
         // tests/cluster_integration.rs) are the tripwire.
-        let outs: Vec<ShardOut> = self.pool.dispatch(s_eff, |s| {
+        let outs: Vec<ShardOut> = pool.dispatch(s_eff, |s| {
             let shard_t0 = Instant::now();
             let (lo, hi) = ranges_ref[s];
             let span = hi - lo;
-            let mut buf = vec![0u64; span * n * m];
+            let buf: &mut [u64] =
+                slots[s].lock().unwrap().take().expect("shard region taken once per round");
 
             // --- encode + pre-randomize (client side) -------------------
             if wps > 1 && span > 1 {
                 // wide shard: split the instance range across workers
                 let block = span.div_ceil(wps);
                 std::thread::scope(|scope| {
-                    let mut rest: &mut [u64] = &mut buf;
+                    let mut rest: &mut [u64] = &mut buf[..];
                     let mut jlo = lo;
                     while !rest.is_empty() {
                         let take = block.min(hi - jlo);
@@ -600,7 +697,7 @@ impl Engine {
                 // narrow shard (single instance): split the cohort instead
                 let cblock = n.div_ceil(wps);
                 std::thread::scope(|scope| {
-                    let mut rest: &mut [u64] = &mut buf;
+                    let mut rest: &mut [u64] = &mut buf[..];
                     let mut ilo = 0usize;
                     while !rest.is_empty() {
                         let take = cblock.min(n - ilo);
@@ -614,7 +711,7 @@ impl Engine {
                     }
                 });
             } else {
-                encode_block(&enc, pre, inputs, seeds_ref, lo, n, m, &mut buf);
+                encode_block(&enc, pre, inputs, seeds_ref, lo, n, m, buf);
             }
 
             // --- client views (the server-visible pre-shuffle messages) --
@@ -633,9 +730,9 @@ impl Engine {
 
             // --- shuffle: the privacy boundary ---------------------------
             let shard_seed = derive_seed(round_seed, s as u64);
-            for jj in 0..span {
+            for (jj, inst) in buf.chunks_exact_mut(n * m).enumerate() {
                 let mut net = Mixnet::honest(derive_seed(shard_seed, jj as u64), hops);
-                net.shuffle(&mut buf[jj * n * m..(jj + 1) * n * m]);
+                net.shuffle(inst);
             }
 
             // --- analyze --------------------------------------------------
@@ -823,6 +920,47 @@ pub(crate) fn validate_pools(
         if let Some(pos) = pool.iter().position(|&y| y >= plan.modulus) {
             return Err(EngineError::OutOfRing { instance: j, index: pos, value: pool[pos] });
         }
+    }
+    Ok(())
+}
+
+/// Flat-layout twin of [`validate_pools`]: same screens over one
+/// instance-major `instances × participants × m` slice (the
+/// [`arena::PoolArena`] layout). A length that is a whole number of
+/// pools of the wrong count reads as [`EngineError::WrongInstanceCount`];
+/// a ragged tail as [`EngineError::BadPoolLen`] on the partial pool.
+pub(crate) fn validate_pools_flat(
+    plan: &ProtocolPlan,
+    instances: usize,
+    flat: &[u64],
+    participants: usize,
+) -> Result<(), EngineError> {
+    if participants == 0 {
+        return Err(EngineError::NoParticipants);
+    }
+    if participants > plan.n {
+        return Err(EngineError::TooManyParticipants { plan_n: plan.n, got: participants });
+    }
+    let stride = participants * plan.num_messages;
+    if flat.len() != instances * stride {
+        if flat.len() % stride == 0 {
+            return Err(EngineError::WrongInstanceCount {
+                expected: instances,
+                got: flat.len() / stride,
+            });
+        }
+        return Err(EngineError::BadPoolLen {
+            instance: flat.len() / stride,
+            expected: stride,
+            got: flat.len() % stride,
+        });
+    }
+    if let Some(pos) = flat.iter().position(|&y| y >= plan.modulus) {
+        return Err(EngineError::OutOfRing {
+            instance: pos / stride,
+            index: pos % stride,
+            value: flat[pos],
+        });
     }
     Ok(())
 }
@@ -1142,6 +1280,71 @@ mod tests {
         }
         assert_eq!(results[0], results[1]);
         assert_eq!(results[0], results[2]);
+    }
+
+    #[test]
+    fn streaming_flat_matches_nested() {
+        // The flat arena entry point is bit-identical to the nested seed
+        // path: same shares in the same arrival order, same estimates —
+        // at S = 1 and S = 4, and across arena-reusing rounds.
+        let n = 16;
+        let d = 5;
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(11);
+        let who: Vec<usize> = (0..n).filter(|i| i % 3 != 1).collect();
+        for shards in [1usize, 4] {
+            let plan = small_plan(n);
+            let mut nested =
+                Engine::new(EngineConfig::new(plan.clone(), d).with_shards(shards), 11);
+            let mut flat_e = Engine::new(EngineConfig::new(plan, d).with_shards(shards), 11);
+            let pools = pools_for(&nested, &inputs, &who, &seeds);
+            let flat: Vec<u64> = pools.concat();
+            let want = nested.run_round_streaming(&pools, who.len()).unwrap();
+            let got = flat_e.run_round_streaming_flat(&flat, who.len()).unwrap();
+            assert_eq!(got.estimates, want.estimates, "S={shards}");
+            assert_eq!(got.participants, want.participants);
+            // second round: the reused (re-zeroed) arena must not leak
+            // state between rounds
+            let want2 = nested.run_round_streaming(&pools, who.len()).unwrap();
+            let got2 = flat_e.run_round_streaming_flat(&flat, who.len()).unwrap();
+            assert_eq!(got2.estimates, want2.estimates, "S={shards} round 2");
+        }
+    }
+
+    #[test]
+    fn flat_pool_validation_mirrors_nested() {
+        let n = 6;
+        let d = 2;
+        let plan = small_plan(n);
+        let m = plan.num_messages;
+        let modulus = plan.modulus;
+        let mut e = Engine::new(EngineConfig::new(plan, d).with_shards(1), 1);
+        assert_eq!(
+            e.run_round_streaming_flat(&[], 0).unwrap_err(),
+            EngineError::NoParticipants
+        );
+        assert_eq!(
+            e.run_round_streaming_flat(&vec![0; d * 7 * m], 7).unwrap_err(),
+            EngineError::TooManyParticipants { plan_n: 6, got: 7 }
+        );
+        // three whole pools for d = 2 read as a wrong instance count
+        assert_eq!(
+            e.run_round_streaming_flat(&vec![0; 3 * 2 * m], 2).unwrap_err(),
+            EngineError::WrongInstanceCount { expected: 2, got: 3 }
+        );
+        // a ragged tail reads as a bad length on the partial pool
+        assert_eq!(
+            e.run_round_streaming_flat(&vec![0; 2 * 2 * m + 1], 2).unwrap_err(),
+            EngineError::BadPoolLen { instance: 2, expected: 2 * m, got: 1 }
+        );
+        let mut flat = vec![0; d * 2 * m];
+        flat[2 * m + 3] = modulus;
+        assert_eq!(
+            e.run_round_streaming_flat(&flat, 2).unwrap_err(),
+            EngineError::OutOfRing { instance: 1, index: 3, value: modulus }
+        );
+        // none of the rejects consumed a round id
+        assert_eq!(e.next_round(), 0);
     }
 
     #[test]

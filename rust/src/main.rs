@@ -9,7 +9,8 @@
 //!                   benchkit JSON out (self-validated)
 //!   cluster-sim   — rounds over N shard servers (localhost TCP, SimNet
 //!                   or loopback channels), gate-checked bit-identical to
-//!                   the in-process engine, benchkit JSON out
+//!                   the in-process engine, benchkit JSON out; --batch N
+//!                   additionally gates the ContributeBatch wire path
 //!   elastic-sim   — elastic control plane: shard servers with one
 //!                   scripted death, in-round takeover + policy re-ranging,
 //!                   every round gate-checked bit-identical to the
@@ -46,7 +47,8 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
   transport-sim: --n --d --loss --dup --shards (0=sweep) --quorum
                  --deadline --seed --out
   cluster-sim:   --n --d --shards (0=sweep) --net (tcp|sim|loopback|inprocess)
-                 --loss (sim net only) --seed --out
+                 --loss (sim net only) --batch (ContributeBatch coalescing,
+                 0=off) --seed --out
   elastic-sim:   --n --d --shards --rounds --kill (dies BY this round)
                  --policy (static|even|proportional) --net (tcp|sim)
                  --seed --out
@@ -77,6 +79,7 @@ fn run() -> Result<()> {
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
             "loss", "dup", "shards", "quorum", "deadline", "out", "net", "policy", "kill",
+            "batch",
         ],
     )?;
     match args.command.as_str() {
@@ -332,6 +335,7 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 0)?;
     let net = args.get_str("net", "tcp");
     let loss = args.get_f64("loss", 0.0)?;
+    let batch = args.get_usize("batch", 0)?;
     let seed = args.get_u64("seed", 42)?;
     let out = args.get_str("out", "BENCH_cluster_sim.json");
     ensure!(n >= 2, "--n must be >= 2");
@@ -411,6 +415,55 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
     }
     println!("{}", table.render());
     println!("gate: cluster rounds bit-identical to the in-process engine for S in {sweep:?}");
+
+    // --- batched-wire gate: ContributeBatch frames must land on the same
+    // estimates as the per-client wire AND the in-process engine. The
+    // cohort is streamed twice per sweep point — once as n Contribute
+    // frames into a fresh in-process engine, once coalesced --batch
+    // clients per ContributeBatch frame into a fresh --net stack.
+    if batch >= 2 {
+        use cloak_agg::transport::channel::Loopback;
+        use cloak_agg::transport::{
+            send_cohort, send_cohort_batched, StreamConfig, StreamingRound,
+        };
+        let drop_mask = vec![false; n];
+        for &s in &sweep {
+            let cfg = EngineConfig::new(plan.clone(), d).with_shards(s);
+            let mut reference = Engine::new(cfg.clone(), seed);
+            let mut refch = Loopback::new();
+            send_cohort(&reference, &seeds, &RoundInput::Vectors(&inputs), &drop_mask, &mut refch)?;
+            let want =
+                StreamingRound::drive(&mut reference, &mut refch, &StreamConfig::new(n))?;
+            let (mut cluster, hosts) = make_cluster(&cfg)?;
+            let mut ch = Loopback::new();
+            send_cohort_batched(
+                &*cluster,
+                &seeds,
+                &RoundInput::Vectors(&inputs),
+                &drop_mask,
+                &mut ch,
+                batch,
+            )?;
+            let frames = ch.pending();
+            let got = StreamingRound::drive(&mut *cluster, &mut ch, &StreamConfig::new(n))?;
+            ensure!(
+                got.result.estimates == want.result.estimates,
+                "batched wire estimates diverge from the in-process engine at S={s}"
+            );
+            ensure!(
+                frames < n,
+                "batch={batch} still sent {frames} frames for {n} clients at S={s}"
+            );
+            drop(cluster);
+            for h in hosts {
+                h.shutdown();
+            }
+        }
+        println!(
+            "gate: batched wire path bit-identical to the in-process engine \
+             (batch={batch}) for S in {sweep:?}"
+        );
+    }
 
     // --- timed sweep over shard counts ------------------------------------
     let mut bench = Bench::new("cluster_sim");

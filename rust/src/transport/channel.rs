@@ -29,6 +29,16 @@ pub trait Channel {
     /// Queue one frame's wire bytes for delivery.
     fn send(&mut self, frame: Vec<u8>);
 
+    /// Queue many frames at once. The default loops [`Channel::send`], so
+    /// ordering and per-frame fault draws are exactly those of sending
+    /// one at a time; buffered transports (TCP) override this to coalesce
+    /// the burst into a single write.
+    fn send_all(&mut self, frames: Vec<Vec<u8>>) {
+        for f in frames {
+            self.send(f);
+        }
+    }
+
     /// Next delivered frame in arrival order, with its arrival time in
     /// simulated seconds. `None` when nothing is in flight.
     fn recv(&mut self) -> Option<(f64, Vec<u8>)>;

@@ -59,6 +59,20 @@ impl TrafficStats {
         self.sim_seconds += cost.per_message_s + wire_len as f64 * cost.per_byte_s;
     }
 
+    /// One batched wire frame ([`Frame::ContributeBatch`](crate::transport::wire::Frame))
+    /// carrying `clients` logical messages in `wire_len` bytes: the
+    /// message count reflects every embedded client (so per-client
+    /// telemetry stays comparable with the unbatched path), while the
+    /// bytes are the amortized on-the-wire total — one header + checksum
+    /// for the whole batch. `bytes_per_user` therefore *shows* the framing
+    /// savings instead of hiding them behind per-client accounting.
+    pub fn record_batched_frame(&mut self, clients: usize, wire_len: usize, cost: &CostModel) {
+        self.messages += clients as u64;
+        self.bytes += wire_len as u64;
+        self.batches += 1;
+        self.sim_seconds += cost.per_message_s + wire_len as f64 * cost.per_byte_s;
+    }
+
     pub fn merge(&mut self, other: &TrafficStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
@@ -134,6 +148,63 @@ mod tests {
         t.record_batch(10, 8, &c);
         t.merge(&s);
         assert_eq!(t.bytes, 80 + 150);
+    }
+
+    #[test]
+    fn batched_frame_beats_per_client_frames_on_bytes() {
+        use crate::transport::wire::{contribute_batch_wire_len, contribute_wire_len};
+        let c = CostModel::default();
+        let per_client = 24; // d×m residues per client
+        for n in [2usize, 7, 32] {
+            // n single-client frames...
+            let mut single = TrafficStats::default();
+            for _ in 0..n {
+                single.record_frame(contribute_wire_len(per_client), &c);
+            }
+            // ...vs the same shares under one amortized frame.
+            let mut batched = TrafficStats::default();
+            batched.record_batched_frame(n, contribute_batch_wire_len(n, per_client), &c);
+            assert_eq!(batched.messages, single.messages, "same logical messages");
+            assert!(
+                batched.bytes < single.bytes,
+                "batch of {n}: {} bytes must beat {} bytes",
+                batched.bytes,
+                single.bytes
+            );
+            // The saving is exactly (n−1) fixed frame costs, minus the
+            // n × 4-byte client-id vector the batch adds.
+            let saved = (n - 1) * FRAME_OVERHEAD_PLUS_FIELDS - n * 4;
+            assert_eq!(single.bytes - batched.bytes, saved as u64);
+        }
+    }
+
+    /// Fixed per-frame cost of a Contribute frame beyond its shares:
+    /// overhead(10) + round(8) + client/count fields(8). ContributeBatch
+    /// pays the same 26 once per batch (nclients + per_client in place of
+    /// client + count).
+    const FRAME_OVERHEAD_PLUS_FIELDS: usize = 26;
+
+    #[test]
+    fn bytes_per_user_monotone_in_batch_size() {
+        use crate::transport::wire::contribute_batch_wire_len;
+        let c = CostModel::default();
+        let (cohort, per_client) = (96usize, 40usize);
+        let mut last = f64::INFINITY;
+        for batch in [1usize, 2, 4, 8, 16, 32, 96] {
+            let mut s = TrafficStats::default();
+            let mut sent = 0;
+            while sent < cohort {
+                let k = batch.min(cohort - sent);
+                s.record_batched_frame(k, contribute_batch_wire_len(k, per_client), &c);
+                sent += k;
+            }
+            let bpu = s.bytes_per_user(cohort);
+            assert!(
+                bpu < last,
+                "bytes/user must strictly shrink as batches grow: {bpu} !< {last}"
+            );
+            last = bpu;
+        }
     }
 
     #[test]

@@ -59,6 +59,10 @@
 //!   collection with deadline/quorum close.
 //! * [`cost`] — [`CostModel`] / [`TrafficStats`] accounting (Fig. 1).
 
+// The round hot path lives here; an accidental clone of a share buffer
+// is a real regression, not style. Enforced under CI clippy.
+#![deny(clippy::redundant_clone)]
+
 pub mod channel;
 pub mod cost;
 pub mod streaming;
@@ -66,8 +70,10 @@ pub mod wire;
 
 pub use channel::{Channel, Loopback, SimNet, SimNetConfig, SimNetStats};
 pub use cost::{CostModel, Envelope, TrafficStats};
-pub use streaming::{send_cohort, StreamConfig, StreamError, StreamOutcome, StreamingRound};
+pub use streaming::{
+    send_cohort, send_cohort_batched, StreamConfig, StreamError, StreamOutcome, StreamingRound,
+};
 pub use wire::{
-    Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg, ShardReadyMsg, ShardWorkMsg, WireError,
-    WIRE_VERSION,
+    contribute_batch_wire_len, contribute_wire_len, Frame, ShardAssignMsg, ShardOutMsg,
+    ShardPoolMsg, ShardReadyMsg, ShardWorkMsg, WireError, WIRE_VERSION,
 };

@@ -6,9 +6,12 @@
 //! contributions and dropouts on the coordinator's
 //! [`RoundState`](crate::coordinator::round::RoundState) state machine,
 //! and feeds accepted [`ClientBatch`]es incrementally into the
-//! [`Batcher`]'s bounded queue — a collector thread scatters them into
-//! per-instance pools concurrently, so ingestion is pipelined with
-//! backpressure exactly like the in-process path. The round closes when
+//! [`Batcher`]'s bounded queue — a collector thread stages them into one
+//! instance-major flat buffer (the arena layout) concurrently, so
+//! ingestion is pipelined with backpressure exactly like the in-process
+//! path. Contributions arrive either as per-client `Contribute` frames
+//! or coalesced `ContributeBatch` frames ([`send_cohort_batched`]); both
+//! fill the same pools in the same order. The round closes when
 //! the full cohort is accounted for, when the simulated deadline passes,
 //! or (optionally) as soon as a quorum of contributions is in; everyone
 //! still unaccounted is recorded as dropped — the transport event, not a
@@ -220,6 +223,43 @@ impl Ingest<'_> {
                     self.contributed[idx] = true;
                     sender.push(batch);
                 }
+                Frame::ContributeBatch { round, per_client, clients, shares } => {
+                    if round != self.round {
+                        self.stale += 1;
+                        continue;
+                    }
+                    // Frame-level shape screen; the codec already enforced
+                    // shares.len() == clients.len() × per_client, but a
+                    // well-formed frame can still carry the wrong width.
+                    let width = per_client as usize;
+                    if width != self.d * self.m || shares.len() != clients.len() * width {
+                        self.malformed += 1;
+                        continue;
+                    }
+                    // Per embedded client, in block order: exactly the
+                    // checks the single-client arm applies, so a batched
+                    // cohort fills pools bit-identically to per-client
+                    // frames (bad blocks are rejected individually — one
+                    // hostile client cannot sink its batch-mates).
+                    for (i, &client) in clients.iter().enumerate() {
+                        let idx = client as usize;
+                        let block = &shares[i * width..(i + 1) * width];
+                        if idx >= expected || block.iter().any(|&s| s >= self.modulus) {
+                            self.malformed += 1;
+                            continue;
+                        }
+                        if self.contributed[idx] || self.dropped[idx] {
+                            self.dups += 1;
+                            continue;
+                        }
+                        self.state.record_contribution(client)?;
+                        self.contributed[idx] = true;
+                        sender.push(ClientBatch {
+                            client_stream: client,
+                            shares: block.to_vec(),
+                        });
+                    }
+                }
                 Frame::Drop { round, client } => {
                     if round != self.round {
                         self.stale += 1;
@@ -300,10 +340,13 @@ impl StreamingRound {
         let sender = batcher.sender();
 
         // Pump the channel while a collector thread drains the bounded
-        // queue into per-instance pools — ingestion and scatter overlap,
-        // and a slow collector exerts backpressure through `sender.push`.
-        let (pools, got) = std::thread::scope(|scope| {
-            let collector = scope.spawn(|| batcher.collect_counted(d, m, expected));
+        // queue — ingestion and collection overlap, and a slow collector
+        // exerts backpressure through `sender.push`. The collector stages
+        // into ONE instance-major flat buffer (the arena layout) instead
+        // of d separate pools; `collect_flat_counted` is bit-identical to
+        // the nested drain, so the round's estimates are unchanged.
+        let (flat, got) = std::thread::scope(|scope| {
+            let collector = scope.spawn(|| batcher.collect_flat_counted(d, m, expected));
             let pumped = ing.pump(channel, &sender);
             batcher.close();
             let collected = collector.join().expect("collector thread");
@@ -326,7 +369,7 @@ impl StreamingRound {
         }
 
         ing.state.begin_shuffle()?;
-        let result = engine.run_round_streaming(pools.pools(), participants)?;
+        let result = engine.run_round_streaming_flat(&flat, participants)?;
         ing.state.begin_analyze()?;
         ing.state.finish()?;
 
@@ -383,6 +426,72 @@ pub fn send_cohort(
         };
         channel.send(encode_frame(&frame));
     }
+    Ok(round)
+}
+
+/// Batched variant of [`send_cohort`]: contributions coalesce into
+/// [`Frame::ContributeBatch`] frames of up to `batch` clients each, so
+/// fixed framing (header + checksum) is paid once per batch instead of
+/// once per client, and the whole round goes out in one
+/// [`Channel::send_all`] burst — a single buffered write on TCP. Graceful
+/// dropouts still send their own [`Frame::Drop`]. The embedded share
+/// blocks are the same bytes in the same client order as [`send_cohort`]
+/// produces, so ingestion fills bit-identical pools and the round's
+/// estimates are unchanged. `batch ≤ 1` degenerates to [`send_cohort`].
+///
+/// Fault-model caveat: [`SimNet`](super::channel::SimNet) draws faults
+/// per *frame*, so at the same seed a batched cohort sees different
+/// loss/duplication outcomes than a per-client one (whole batches share a
+/// fate) — which is why `send_cohort` stays the default and batching is
+/// opt-in.
+pub fn send_cohort_batched(
+    engine: &dyn Aggregator,
+    seeds: &dyn ClientSeeds,
+    inputs: &RoundInput<'_>,
+    drop_mask: &[bool],
+    channel: &mut dyn Channel,
+    batch: usize,
+) -> Result<u64, AggregatorError> {
+    if batch <= 1 {
+        return send_cohort(engine, seeds, inputs, drop_mask, channel);
+    }
+    let n = inputs.clients();
+    if drop_mask.len() != n {
+        return Err(AggregatorError::Engine(EngineError::WrongClientCount {
+            expected: n,
+            got: drop_mask.len(),
+        }));
+    }
+    let round = engine.next_round();
+    let per_client = engine.config().instances * engine.config().plan.num_messages;
+    let mut frames: Vec<Vec<u8>> = Vec::new();
+    let mut clients: Vec<u32> = Vec::with_capacity(batch);
+    let mut shares: Vec<u64> = Vec::with_capacity(batch * per_client);
+    for i in 0..n {
+        if drop_mask[i] {
+            frames.push(encode_frame(&Frame::Drop { round, client: i as u32 }));
+        } else {
+            clients.push(i as u32);
+            shares.extend(engine.encode_client_shares(round, i as u32, inputs, seeds)?);
+            if clients.len() == batch {
+                frames.push(encode_frame(&Frame::ContributeBatch {
+                    round,
+                    per_client: per_client as u32,
+                    clients: std::mem::take(&mut clients),
+                    shares: std::mem::take(&mut shares),
+                }));
+            }
+        }
+    }
+    if !clients.is_empty() {
+        frames.push(encode_frame(&Frame::ContributeBatch {
+            round,
+            per_client: per_client as u32,
+            clients,
+            shares,
+        }));
+    }
+    channel.send_all(frames);
     Ok(round)
 }
 
@@ -545,6 +654,90 @@ mod tests {
         assert_eq!(out.result.participants, n);
         assert_eq!(out.malformed_frames, 1);
         assert_eq!(out.stale_frames, 1);
+    }
+
+    #[test]
+    fn batched_wire_matches_per_client_frames() {
+        // The whole point of ContributeBatch: fewer frames, same bytes in
+        // the pools, bit-identical estimates — including with dropouts
+        // (whose Drop frames now precede the batches on the wire) and a
+        // final partial batch.
+        let (n, d) = (11, 3);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(13);
+        let mut mask = vec![false; n];
+        mask[4] = true;
+        let run = |batch: usize| {
+            let mut engine = small_engine(n, d, 2, 13);
+            let mut ch = Loopback::new();
+            send_cohort_batched(
+                &engine,
+                &seeds,
+                &RoundInput::Vectors(&inputs),
+                &mask,
+                &mut ch,
+                batch,
+            )
+            .unwrap();
+            let frames = ch.pending();
+            let out =
+                StreamingRound::drive(&mut engine, &mut ch, &StreamConfig::new(n)).unwrap();
+            (frames, out)
+        };
+        let (frames_single, want) = run(1); // degenerates to send_cohort
+        let (frames_batched, got) = run(4); // 10 contributions → 4+4+2
+        assert_eq!(frames_single, n, "per-client path: one frame per client");
+        assert_eq!(frames_batched, 1 + 3, "one Drop + three batches");
+        assert_eq!(got.result.estimates, want.result.estimates, "bit-identical round");
+        assert_eq!(got.contributed, want.contributed);
+        assert_eq!(got.dropped, vec![4]);
+    }
+
+    #[test]
+    fn hostile_block_in_batch_rejected_individually() {
+        // One out-of-ring block inside a batch must not sink its
+        // batch-mates; width mismatch rejects the whole frame.
+        let (n, d) = (4, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(3);
+        let mut engine = small_engine(n, d, 1, 3);
+        let modulus = engine.config().plan.modulus;
+        let m = engine.config().plan.num_messages;
+        let round = engine.next_round();
+        let mut ch = Loopback::new();
+        // Clients 0 and 1 share a frame; client 0's block is hostile.
+        let mut shares = vec![modulus; m]; // out of ring
+        shares.extend(
+            engine
+                .encode_client_shares(round, 1, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap(),
+        );
+        ch.send(encode_frame(&Frame::ContributeBatch {
+            round,
+            per_client: m as u32,
+            clients: vec![0, 1],
+            shares,
+        }));
+        // A batch with the wrong width is malformed at the frame level.
+        ch.send(encode_frame(&Frame::ContributeBatch {
+            round,
+            per_client: (m + 1) as u32,
+            clients: vec![2],
+            shares: vec![0; m + 1],
+        }));
+        let mut mask = vec![false; n];
+        mask[0] = true;
+        mask[1] = true; // honest copies bow out; their frames above decide
+        send_cohort(&engine, &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch).unwrap();
+        let out = StreamingRound::drive(
+            &mut engine,
+            &mut ch,
+            &StreamConfig::new(n).with_quorum(1),
+        )
+        .unwrap();
+        assert_eq!(out.malformed_frames, 2, "hostile block + bad-width frame");
+        assert_eq!(out.contributed, vec![1, 2, 3], "batch-mate survives");
+        assert_eq!(out.result.participants, 3);
     }
 
     #[test]

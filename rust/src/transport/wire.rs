@@ -34,6 +34,14 @@
 //! | 0x08 | `ShardWork`   | round u64, shard u32, lo u32, span u32, shard_seed u64, cohort u32, cohort × seed u64, span·cohort × f64 |
 //! | 0x09 | `ShardPool`   | round u64, shard u32, lo u32, span u32, participants u32, round_seed u64, count u32, count × u64 |
 //! | 0x0A | `ShardRetire` | shard u32                                      |
+//! | 0x0B | `ContributeBatch` | round u64, nclients u32, per_client u32, nclients × client u32, nclients·per_client × share u64 |
+//!
+//! `ContributeBatch` is the amortized form of `Contribute`: many clients'
+//! complete share blocks ride under **one** header and **one** checksum,
+//! so fixed framing overhead is paid once per batch instead of once per
+//! client. Block `i` of the share vector belongs to `clients[i]`; the
+//! count invariant `shares.len() == clients.len() × per_client` is
+//! enforced at decode before any allocation.
 //!
 //! Frames 0x06–0x0A are the cluster control plane (see [`crate::cluster`]):
 //! the coordinator assigns each shard server its instance range, scatters
@@ -80,6 +88,22 @@ const TYPE_SHARD_READY: u8 = 0x07;
 const TYPE_SHARD_WORK: u8 = 0x08;
 const TYPE_SHARD_POOL: u8 = 0x09;
 const TYPE_SHARD_RETIRE: u8 = 0x0A;
+const TYPE_CONTRIBUTE_BATCH: u8 = 0x0B;
+
+/// Wire bytes of a single-client [`Frame::Contribute`] carrying `shares`
+/// residues: overhead + round + client + count + the shares themselves.
+pub fn contribute_wire_len(shares: usize) -> usize {
+    FRAME_OVERHEAD + 8 + 4 + 4 + shares * 8
+}
+
+/// Wire bytes of a [`Frame::ContributeBatch`] carrying `clients` blocks of
+/// `per_client` residues each. The header + checksum (and the round /
+/// count fields) are paid once for the whole batch, so for any
+/// `clients > 1` this is strictly smaller than `clients ×`
+/// [`contribute_wire_len`]`(per_client)`.
+pub fn contribute_batch_wire_len(clients: usize, per_client: usize) -> usize {
+    FRAME_OVERHEAD + 8 + 4 + 4 + clients * 4 + clients * per_client * 8
+}
 
 /// A shard's merged round output, promoted to a wire message — the seam
 /// the deferred multi-host-shard work plugs a socket into (each remote
@@ -173,6 +197,14 @@ pub enum Frame {
     Hello { round: u64, client: u32 },
     /// A client's complete cloaked contribution for `round`.
     Contribute { round: u64, batch: ClientBatch },
+    /// Many clients' complete cloaked contributions for `round` under one
+    /// amortized header + checksum. Block `i` of `shares` (length
+    /// `per_client`) belongs to `clients[i]`, in send order. Encoders must
+    /// uphold `shares.len() == clients.len() × per_client`; the decoder
+    /// rejects anything else as [`WireError::BadPayload`]. Same privacy
+    /// caveat as `Contribute`: client ids travel next to their full share
+    /// blocks, so this hop needs link encryption in a real deployment.
+    ContributeBatch { round: u64, per_client: u32, clients: Vec<u32>, shares: Vec<u64> },
     /// A client abandons `round` (graceful dropout).
     Drop { round: u64, client: u32 },
     /// The server closes `round` over `participants` contributions.
@@ -303,6 +335,21 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             }
             p
         }),
+        Frame::ContributeBatch { round, per_client, clients, shares } => {
+            (TYPE_CONTRIBUTE_BATCH, {
+                let mut p = Vec::with_capacity(16 + clients.len() * 4 + shares.len() * 8);
+                put_u64(&mut p, *round);
+                put_u32(&mut p, clients.len() as u32);
+                put_u32(&mut p, *per_client);
+                for &c in clients {
+                    put_u32(&mut p, c);
+                }
+                for &s in shares {
+                    put_u64(&mut p, s);
+                }
+                p
+            })
+        }
         Frame::Drop { round, client } => (TYPE_DROP, {
             let mut p = Vec::with_capacity(12);
             put_u64(&mut p, *round);
@@ -437,6 +484,28 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
             }
             Frame::Contribute { round, batch: ClientBatch { client_stream, shares } }
         }
+        TYPE_CONTRIBUTE_BATCH => {
+            let round = r.u64()?;
+            let nclients = r.u32()? as usize;
+            let per_client = r.u32()?;
+            // Bound both vectors by the actual payload before allocating
+            // (u128 math: nclients × per_client × 8 can overflow for
+            // hostile headers, as with ShardWork).
+            let need = (nclients as u128) * 4 + (nclients as u128) * (per_client as u128) * 8;
+            if ((r.b.len() - r.at) as u128) != need {
+                return Err(WireError::BadPayload { frame_type: ty, len: r.b.len() });
+            }
+            let mut clients = Vec::with_capacity(nclients);
+            for _ in 0..nclients {
+                clients.push(r.u32()?);
+            }
+            let nshares = nclients * per_client as usize;
+            let mut shares = Vec::with_capacity(nshares);
+            for _ in 0..nshares {
+                shares.push(r.u64()?);
+            }
+            Frame::ContributeBatch { round, per_client, clients, shares }
+        }
         TYPE_DROP => {
             let round = r.u64()?;
             let client = r.u32()?;
@@ -567,7 +636,7 @@ mod tests {
     }
 
     fn gen_frame(g: &mut Gen) -> Frame {
-        match g.usize_in(0, 9) {
+        match g.usize_in(0, 10) {
             0 => Frame::Hello { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
             1 => Frame::Contribute {
                 round: g.seed(),
@@ -608,6 +677,16 @@ mod tests {
                 })
             }
             8 => Frame::ShardRetire(ShardRetireMsg { shard: g.u64_below(1 << 26) as u32 }),
+            9 => {
+                let nclients = g.usize_in(0, 8);
+                let per_client = g.usize_in(0, 12);
+                Frame::ContributeBatch {
+                    round: g.seed(),
+                    per_client: per_client as u32,
+                    clients: (0..nclients).map(|_| g.u64_below(1 << 20) as u32).collect(),
+                    shares: g.vec_below(u64::MAX, nclients * per_client),
+                }
+            }
             _ => {
                 let span = g.usize_in(1, 3);
                 let per_instance = g.usize_in(0, 8);
@@ -709,6 +788,54 @@ mod tests {
         let crc = fnv1a32(&bytes[4..total - 4]);
         bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
         assert!(matches!(decode_frame(&bytes), Err(WireError::BadPayload { .. })));
+    }
+
+    #[test]
+    fn batch_counts_must_match_payload() {
+        // A ContributeBatch claiming more clients (or wider blocks) than
+        // its payload carries must be rejected before any allocation of
+        // the claimed size — the same screen Contribute has.
+        let f = Frame::ContributeBatch {
+            round: 1,
+            per_client: 3,
+            clients: vec![4, 5],
+            shares: vec![10, 11, 12, 20, 21, 22],
+        };
+        let mut bytes = encode_frame(&f);
+        // nclients field sits after len(4) + ver(1) + type(1) + round(8)
+        bytes[14] = 200;
+        let total = bytes.len();
+        let crc = fnv1a32(&bytes[4..total - 4]);
+        bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(WireError::BadPayload { .. })));
+
+        let mut bytes = encode_frame(&f);
+        // per_client field sits right after nclients
+        bytes[18] = 200;
+        let total = bytes.len();
+        let crc = fnv1a32(&bytes[4..total - 4]);
+        bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(WireError::BadPayload { .. })));
+    }
+
+    #[test]
+    fn wire_len_helpers_match_encoder() {
+        let single = Frame::Contribute {
+            round: 7,
+            batch: ClientBatch { client_stream: 1, shares: vec![9; 5] },
+        };
+        assert_eq!(encode_frame(&single).len(), contribute_wire_len(5));
+
+        let batch = Frame::ContributeBatch {
+            round: 7,
+            per_client: 5,
+            clients: vec![1, 2, 3],
+            shares: vec![9; 15],
+        };
+        assert_eq!(encode_frame(&batch).len(), contribute_batch_wire_len(3, 5));
+        // The whole point of the batch frame: strictly fewer bytes than
+        // the same shares as per-client frames, for every batch ≥ 2.
+        assert!(contribute_batch_wire_len(3, 5) < 3 * contribute_wire_len(5));
     }
 
     #[test]

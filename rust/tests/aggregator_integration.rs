@@ -200,6 +200,79 @@ fn coordinator_streaming_over_cluster_matches_in_process() {
 }
 
 #[test]
+fn flat_arena_rounds_bit_identical_across_stacks() {
+    // Tentpole acceptance: the flat-arena layouts change where round
+    // bytes live, never what they are. For every stack at S ∈ {1, 4},
+    // two copies of the same stack run (a) the full encode path — now
+    // arena-backed on every engine — and (b) the same streamed cohort
+    // once through the nested entry and once through the flat entry.
+    // All of it must agree bit-for-bit, across stacks too.
+    let (n, d, seed) = (18usize, 5usize, 21u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let who: Vec<usize> = (0..n).filter(|i| i % 3 != 1).collect();
+
+    for shards in [1usize, 4] {
+        let cfg = || EngineConfig::new(exact_plan(n), d).with_shards(shards);
+        // Encode the streamed cohort for round 1 (the round after the full
+        // round below) once, in both layouts: nested pools and their
+        // instance-major flat twin — the same bytes, concatenated.
+        let reference = Engine::new(cfg(), seed);
+        let m = reference.config().plan.num_messages;
+        let mut pools = vec![Vec::new(); d];
+        for &i in &who {
+            let shares = reference
+                .encode_client_shares(1, i as u32, &RoundInput::Vectors(&inputs), &seeds)
+                .unwrap();
+            for (j, pool) in pools.iter_mut().enumerate() {
+                pool.extend_from_slice(&shares[j * m..(j + 1) * m]);
+            }
+        }
+        let flat: Vec<u64> = pools.concat();
+
+        let mk = |flavor: &str| -> Box<dyn Aggregator> {
+            match flavor {
+                "local" => AggregatorBuilder::new(cfg(), seed).local().build().unwrap(),
+                "in-process" => {
+                    AggregatorBuilder::new(cfg(), seed).in_process().build().unwrap()
+                }
+                "loopback" => AggregatorBuilder::new(cfg(), seed).loopback().build().unwrap(),
+                _ if shards == 1 => AggregatorBuilder::new(cfg(), seed)
+                    .loopback()
+                    .elastic(Box::new(EvenSplit))
+                    .build()
+                    .unwrap(),
+                _ => elastic_with_dead_shard(cfg(), seed, 2),
+            }
+        };
+        let mut full_est: Vec<Vec<f64>> = Vec::new();
+        let mut stream_est: Vec<Vec<f64>> = Vec::new();
+        for flavor in ["local", "in-process", "loopback", "elastic"] {
+            let mut nested = mk(flavor);
+            let mut flattened = mk(flavor);
+            // Round 0: the full encode→shuffle→analyze path on both copies.
+            let a = nested.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            let b = flattened.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            assert_eq!(a.estimates, b.estimates, "{flavor} S={shards}: full round");
+            // Round 1: the same streamed bytes, nested vs flat entry.
+            let rn = nested.run_round_streaming(&pools, who.len()).unwrap();
+            let rf = flattened.run_round_streaming_flat(&flat, who.len()).unwrap();
+            assert_eq!(rn.participants, who.len(), "{flavor} S={shards}");
+            assert_eq!(
+                rn.estimates, rf.estimates,
+                "{flavor} S={shards}: flat entry diverged from nested"
+            );
+            full_est.push(a.estimates);
+            stream_est.push(rn.estimates);
+        }
+        for i in 1..full_est.len() {
+            assert_eq!(full_est[i], full_est[0], "stack {i} S={shards}: full round");
+            assert_eq!(stream_est[i], stream_est[0], "stack {i} S={shards}: streaming");
+        }
+    }
+}
+
+#[test]
 fn unified_streaming_contract_no_in_place_divergence() {
     // The pools are borrowed read-only by EVERY stack: one pool set,
     // encoded once, is handed to four different aggregators in sequence —
