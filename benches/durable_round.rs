@@ -1,0 +1,104 @@
+//! DURABLE: what write-ahead durability costs on the round hot path —
+//! the bare stack vs the same stack behind a `DurableCoordinator`
+//! journaling manifest + work units + commit per round, across
+//! shards × cohort.
+//!
+//!     cargo bench --bench durable_round
+//!
+//! Every journal-on case is gate-checked bit-identical to its journal-off
+//! twin before the timer starts (the journal must never perturb the
+//! round). Results land in BENCH_durable_round.json (benchkit schema,
+//! `shards` axis populated) and the file is re-validated through the
+//! crate's own JSON parser before the process exits.
+
+use std::time::Duration;
+
+use cloak_agg::aggregator::AggregatorBuilder;
+use cloak_agg::coordinator::durable::DurableCoordinator;
+use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::storage::Store;
+use cloak_agg::util::benchkit::Bench;
+use cloak_agg::util::json::Json;
+
+fn main() {
+    let (d, seed) = (32usize, 13u64);
+    let mut b = Bench::new("durable_round").with_window(
+        Duration::from_millis(50),
+        Duration::from_millis(250),
+        5,
+    );
+
+    let mut expected_cases = 0usize;
+    for s in [1usize, 2, 4] {
+        for n in [32usize, 96] {
+            let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+            let m = plan.num_messages;
+            let cfg = EngineConfig::new(plan, d).with_shards(s);
+            let inputs: Vec<Vec<f64>> = (0..n)
+                .map(|i| (0..d).map(|j| ((i * 3 + j * 11) % 100) as f64 / 100.0).collect())
+                .collect();
+            let seeds = DerivedClientSeeds::new(seed);
+            let items = (n * d * m) as f64;
+
+            // Journal-off: the bare stack, and the gate reference.
+            let mut bare = AggregatorBuilder::new(cfg.clone(), seed).build().expect("stack");
+            let want = bare
+                .run_round(&RoundInput::Vectors(&inputs), &seeds)
+                .expect("reference round")
+                .estimates;
+            b.run_sharded(&format!("round n={n} d={d} S={s} journal=off"), items, s, || {
+                bare.run_round(&RoundInput::Vectors(&inputs), &seeds)
+                    .expect("bare round")
+                    .estimates[0]
+            });
+
+            // Journal-on: same stack shape behind the write-ahead journal
+            // (fresh store per case; the journal grows across the timed
+            // rounds, as a real campaign's would).
+            let mut root = std::env::temp_dir();
+            root.push(format!("cloak_bench_durable_{}_{s}_{n}", std::process::id()));
+            let store = Store::new(&root).expect("store");
+            let agg = AggregatorBuilder::new(cfg, seed).build().expect("stack");
+            let mut dur = DurableCoordinator::create(agg, seed, &store).expect("durable");
+            let gate = dur.run_round(&inputs, &seeds).expect("gate round");
+            assert_eq!(gate.estimates, want, "S={s} n={n}: journal perturbed the round");
+            b.run_sharded(&format!("round n={n} d={d} S={s} journal=on"), items, s, || {
+                dur.run_round(&inputs, &seeds).expect("durable round").estimates[0]
+            });
+            println!(
+                "S={s} n={n}: journal holds {} KiB after the timed rounds",
+                dur.journal_len_bytes() / 1024
+            );
+            drop(dur);
+            let _ = std::fs::remove_dir_all(&root);
+            expected_cases += 2;
+        }
+    }
+
+    b.report();
+    b.write_json("BENCH_durable_round.json").expect("write BENCH_durable_round.json");
+
+    // --- validate the emitted benchkit JSON with the crate's parser -----
+    let text = std::fs::read_to_string("BENCH_durable_round.json").expect("read back");
+    let json = Json::parse(&text).expect("parse back");
+    assert_eq!(
+        json.get("group").and_then(|g| g.as_str()),
+        Some("durable_round"),
+        "bad benchkit group"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => panic!("benchkit JSON has no cases array"),
+    };
+    assert_eq!(cases.len(), expected_cases, "case count drifted");
+    for c in cases {
+        assert!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns"
+        );
+        assert!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: BENCH_durable_round.json ({} cases)", cases.len());
+    println!("\nwrote BENCH_durable_round.json");
+}

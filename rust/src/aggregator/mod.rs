@@ -245,6 +245,20 @@ pub trait Aggregator {
         self.run_round_streaming(&pools, participants)
     }
 
+    /// Advance the stack's round counter to `next_round` without running
+    /// the skipped rounds — the crash-recovery fast path
+    /// ([`crate::coordinator::durable`]). Safe because every per-round
+    /// seed derives from the *absolute* round id, not from history; never
+    /// rewinds. Implementations without a round counter to restore return
+    /// [`AggregatorError::Unsupported`].
+    fn fast_forward(&mut self, next_round: u64) -> Result<(), AggregatorError> {
+        let _ = next_round;
+        Err(AggregatorError::Unsupported {
+            what: "fast_forward (round-counter restore)",
+            backend: self.backend_label(),
+        })
+    }
+
     /// Work resends performed so far (straggler/retry telemetry; zero for
     /// stacks without a wire).
     fn shard_retries(&self) -> u64 {
@@ -330,6 +344,11 @@ impl Aggregator for Engine {
     ) -> Result<RoundResult, AggregatorError> {
         Ok(Engine::run_round_streaming_flat(self, flat, participants)?)
     }
+
+    fn fast_forward(&mut self, next_round: u64) -> Result<(), AggregatorError> {
+        Engine::fast_forward(self, next_round);
+        Ok(())
+    }
 }
 
 impl Aggregator for ClusterEngine {
@@ -389,6 +408,11 @@ impl Aggregator for ClusterEngine {
         participants: usize,
     ) -> Result<RoundResult, AggregatorError> {
         Ok(ClusterEngine::run_round_streaming_flat(self, flat, participants)?)
+    }
+
+    fn fast_forward(&mut self, next_round: u64) -> Result<(), AggregatorError> {
+        ClusterEngine::fast_forward(self, next_round);
+        Ok(())
     }
 
     fn shard_retries(&self) -> u64 {

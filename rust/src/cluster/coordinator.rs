@@ -686,6 +686,16 @@ impl ClusterEngine {
         self.rounds_run
     }
 
+    /// Advance the round counter so the next round runs as `next_round`,
+    /// without executing the skipped rounds — same recovery fast path as
+    /// [`Engine::fast_forward`](crate::engine::Engine::fast_forward), and
+    /// safe for the same reason: every seed a work unit carries derives
+    /// from the absolute round id, never from execution history. Never
+    /// rewinds.
+    pub fn fast_forward(&mut self, next_round: u64) {
+        self.rounds_run = self.rounds_run.max(next_round);
+    }
+
     /// Client-side encode for the wire path — bit-identical to
     /// [`Engine::encode_client_shares`](crate::engine::Engine::encode_client_shares)
     /// (the share stream is a pure function of `(client, instance, round)`

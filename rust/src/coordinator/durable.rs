@@ -1,0 +1,902 @@
+//! Crash-recoverable coordination: a write-ahead wrapper over any
+//! [`Aggregator`] stack.
+//!
+//! [`DurableCoordinator`] journals every round state transition to an
+//! append-only [`RoundJournal`] BEFORE acting on it — round manifest,
+//! derived work units (encode path) or accepted client frames (streaming
+//! path), then the merged estimates and a fsynced commit. A coordinator
+//! that dies mid-round leaves a journal whose clean prefix fully
+//! determines the round: [`DurableCoordinator::recover`] replays the log,
+//! fast-forwards the stack past committed rounds, and finishes the
+//! interrupted one by re-executing ONLY the work units without a
+//! journaled output — producing estimates bit-identical to the run that
+//! never crashed (see [`crate::storage`] for why replay is exact).
+//!
+//! The wrapper is stack-agnostic the same way every frontend is: it holds
+//! a `Box<dyn Aggregator>`, so the journal protects a local engine, a
+//! cluster over TCP, or an elastic fleet identically. Recovery re-executes
+//! unfinished units through [`ShardExecutor`] on the coordinator host —
+//! correctness does not depend on the original fleet being reachable —
+//! and re-executed outputs are journaled incrementally, so a second crash
+//! during recovery resumes from wherever the first recovery got to.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::aggregator::Aggregator;
+use crate::cluster::{cluster_layout, config_fingerprint};
+use crate::engine::{
+    ClientSeeds, EngineConfig, RoundInput, RoundResult, ShardExecutor, ShardRoundWork,
+    SHUFFLE_SEED_TAG,
+};
+use crate::rng::derive_seed;
+use crate::storage::{Locator, RoundJournal, Store, MERGED_SHARD};
+use crate::transport::channel::Channel;
+use crate::transport::streaming::{StreamConfig, StreamOutcome, StreamingRound};
+use crate::transport::wire::{
+    decode_frame, encode_frame, Frame, ShardOutMsg, ShardReadyMsg, ShardWorkMsg,
+};
+use crate::transport::TrafficStats;
+use crate::util::error::{Context as _, Error, Result};
+
+/// Derive the full-round work units the journal write-ahead records —
+/// one [`ShardRoundWork::Encode`] per shard of the config's resolved
+/// layout, carrying the complete seed chain and the shard's instance-major
+/// value slice. This is the cluster scatter derivation
+/// ([`crate::cluster::cluster_layout`] ranges, the engine's
+/// `shuffle seed → round seed → shard seed` chain), so a journaled unit is
+/// executable by [`ShardExecutor`] on any host. Recovery does not need the
+/// tiling to match what the crashed engine used: estimates are
+/// tiling-invariant (any contiguous cover merges to the same sums — see
+/// `ShardRoundWork::slice`), the tiling only shapes the parallelism.
+pub fn derive_round_works(
+    cfg: &EngineConfig,
+    seed: u64,
+    round: u64,
+    inputs: &[Vec<f64>],
+    seeds: &dyn ClientSeeds,
+) -> Vec<ShardRoundWork> {
+    let n = inputs.len();
+    let round_seed = derive_seed(derive_seed(seed, SHUFFLE_SEED_TAG), round);
+    let client_round_seeds: Vec<u64> =
+        (0..n).map(|i| derive_seed(seeds.client_seed(i as u32), round)).collect();
+    let (_, ranges) = cluster_layout(cfg);
+    let mut works = Vec::with_capacity(ranges.len());
+    for (s, &(lo, hi)) in ranges.iter().enumerate() {
+        if hi <= lo {
+            continue; // parked shard: no instances this round
+        }
+        let mut values = Vec::with_capacity((hi - lo) * n);
+        for j in lo..hi {
+            for row in inputs {
+                values.push(row[j]);
+            }
+        }
+        works.push(ShardRoundWork::Encode(ShardWorkMsg {
+            round,
+            shard: s as u32,
+            lo: lo as u32,
+            span: (hi - lo) as u32,
+            shard_seed: derive_seed(round_seed, s as u64),
+            client_round_seeds: client_round_seeds.clone(),
+            values,
+        }));
+    }
+    works
+}
+
+/// What [`DurableCoordinator::recover`] found in the journal and did
+/// about it.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Rounds the journal shows committed — the stack was fast-forwarded
+    /// past them (their results live in the log, nothing re-runs).
+    pub committed_rounds: u64,
+    /// Torn trailing bytes dropped when opening the journal (0 for a
+    /// clean shutdown).
+    pub truncated_bytes: u64,
+    /// An interrupted encode-path round recovery finished from the log.
+    pub resumed_round: Option<u64>,
+    /// Work units re-executed because no output was journaled for them.
+    pub reissued_units: usize,
+    /// Work units whose journaled output was reused as-is.
+    pub skipped_units: usize,
+    /// The finished result of [`RecoveryReport::resumed_round`].
+    pub resumed_estimates: Option<RoundResult>,
+    /// An interrupted streaming round whose accepted client frames were
+    /// replayed into [`DurableCoordinator::resume_streaming`] state.
+    pub pending_streaming: Option<u64>,
+    /// An uncommitted round whose journal prefix was too incomplete to
+    /// resume (manifest without full work coverage); the next
+    /// [`DurableCoordinator::run_round`] re-manifests the same round id.
+    pub abandoned_round: Option<u64>,
+}
+
+/// The journal's view of the in-flight (uncommitted) round, accumulated
+/// while [`DurableCoordinator::recover`] replays the log.
+struct Scan {
+    round: u64,
+    expected: usize,
+    works: Vec<ShardRoundWork>,
+    /// Per-unit recovery outputs, keyed by the unit's shard id.
+    outs: BTreeMap<u32, ShardOutMsg>,
+    merged: Option<ShardOutMsg>,
+    client_frames: Vec<Vec<u8>>,
+}
+
+/// An interrupted streaming round carried from recovery to
+/// [`DurableCoordinator::resume_streaming`].
+struct PendingStream {
+    round: u64,
+    expected: usize,
+    /// Accepted client frames in original acceptance order, verbatim wire
+    /// bytes.
+    frames: Vec<Vec<u8>>,
+}
+
+/// A crash-recoverable coordinator: any [`Aggregator`] stack behind a
+/// write-ahead [`RoundJournal`]. See the module docs for the protocol.
+pub struct DurableCoordinator {
+    agg: Box<dyn Aggregator>,
+    /// The stack's master seed — recovery re-derives work units from it,
+    /// so it must equal the seed the aggregator was built with.
+    seed: u64,
+    journal: RoundJournal,
+    pending: Option<PendingStream>,
+}
+
+impl DurableCoordinator {
+    /// Start a fresh campaign: truncates any journal at the store's
+    /// [`Locator::RoundJournal`] slot. Use [`DurableCoordinator::recover`]
+    /// after a crash.
+    pub fn create(agg: Box<dyn Aggregator>, seed: u64, store: &Store) -> Result<Self> {
+        let journal = RoundJournal::create(store.path(&Locator::RoundJournal))?;
+        Ok(DurableCoordinator { agg, seed, journal, pending: None })
+    }
+
+    /// Rebuild coordinator state from the journal: replay the clean
+    /// prefix, fast-forward past committed rounds, finish an interrupted
+    /// encode-path round (re-executing only unit lacking a journaled
+    /// output, journaling each as it completes), or stage an interrupted
+    /// streaming round for [`DurableCoordinator::resume_streaming`].
+    /// `agg` and `seed` must match what the crashed coordinator ran with —
+    /// the config fingerprint in the journal manifest is checked, and a
+    /// mismatch is a hard error (replaying under a different plan would
+    /// produce silently different sums).
+    pub fn recover(
+        mut agg: Box<dyn Aggregator>,
+        seed: u64,
+        store: &Store,
+    ) -> Result<(Self, RecoveryReport)> {
+        let (mut journal, frames, truncated) =
+            RoundJournal::open(store.path(&Locator::RoundJournal))?;
+        let fnv = config_fingerprint(agg.config());
+        let mut report = RecoveryReport { truncated_bytes: truncated, ..Default::default() };
+
+        let mut committed: u64 = 0; // next_round implied by the last commit
+        let mut current: Option<Scan> = None;
+        for frame in frames {
+            match frame {
+                // A manifest starts (or restarts — retry after an
+                // abandoned attempt) the in-flight round; the LAST
+                // manifest in the log wins.
+                Frame::Hello { round, client } => {
+                    current = Some(Scan {
+                        round,
+                        expected: client as usize,
+                        works: Vec::new(),
+                        outs: BTreeMap::new(),
+                        merged: None,
+                        client_frames: Vec::new(),
+                    });
+                }
+                Frame::ShardReady(r) => {
+                    crate::ensure!(
+                        r.config_fnv == fnv,
+                        "journal was written under config fingerprint {:#010x}, \
+                         this stack is {got:#010x} — refusing to replay under a \
+                         different plan",
+                        r.config_fnv,
+                        got = fnv
+                    );
+                }
+                f @ (Frame::ShardWork(_) | Frame::ShardPool(_)) => {
+                    if let Some(scan) = current.as_mut() {
+                        let w = ShardRoundWork::from_frame(f).expect("matched a work frame");
+                        if w.round() == scan.round {
+                            scan.works.push(w);
+                        }
+                    }
+                }
+                Frame::ShardOut(out) => {
+                    if let Some(scan) = current.as_mut() {
+                        if out.round == scan.round {
+                            if out.shard == MERGED_SHARD {
+                                scan.merged = Some(out);
+                            } else {
+                                scan.outs.insert(out.shard, out);
+                            }
+                        }
+                    }
+                }
+                f @ (Frame::Contribute { .. }
+                | Frame::ContributeBatch { .. }
+                | Frame::Drop { .. }) => {
+                    if let Some(scan) = current.as_mut() {
+                        if client_event_round(&f) == Some(scan.round) {
+                            scan.client_frames.push(encode_frame(&f));
+                        }
+                    }
+                }
+                Frame::Commit { round, .. } => {
+                    if current.as_ref().is_some_and(|s| s.round == round) {
+                        committed = committed.max(round + 1);
+                        current = None;
+                    }
+                }
+                Frame::ShardAssign(_) | Frame::ShardRetire(_) => {}
+            }
+        }
+        report.committed_rounds = committed;
+        if committed > 0 {
+            agg.fast_forward(committed)?;
+        }
+
+        let mut pending = None;
+        if let Some(scan) = current {
+            if scan.round != committed {
+                // Defensive: our writer fsyncs every commit before the
+                // next manifest, so an in-flight round id other than
+                // `committed` means a journal we did not write. Abandon
+                // rather than guess.
+                report.abandoned_round = Some(scan.round);
+            } else if !scan.works.is_empty() {
+                Self::resume_encode_round(&mut agg, &mut journal, scan, &mut report)?;
+            } else {
+                // Streaming round: manifest (and possibly accepted client
+                // frames) without a commit. Stage it for resume — the
+                // journaled frames replay first, then live traffic.
+                report.pending_streaming = Some(scan.round);
+                pending = Some(PendingStream {
+                    round: scan.round,
+                    expected: scan.expected,
+                    frames: scan.client_frames,
+                });
+            }
+        }
+        Ok((DurableCoordinator { agg, seed, journal, pending }, report))
+    }
+
+    /// Finish an interrupted encode-path round from its journaled work
+    /// units: reuse journaled per-unit outputs, execute the rest through
+    /// [`ShardExecutor`] (journaling each output as it lands, so a crash
+    /// *during recovery* resumes incrementally), then journal the merged
+    /// estimates and commit.
+    fn resume_encode_round(
+        agg: &mut Box<dyn Aggregator>,
+        journal: &mut RoundJournal,
+        scan: Scan,
+        report: &mut RecoveryReport,
+    ) -> Result<()> {
+        let d = agg.config().instances;
+        let round = scan.round;
+        let mut works: Vec<&ShardRoundWork> = scan.works.iter().collect();
+        works.sort_by_key(|w| w.lo());
+        let mut covered = 0u32;
+        for w in &works {
+            if w.lo() != covered {
+                covered = u32::MAX; // gap or overlap: not a tiling
+                break;
+            }
+            covered = w.lo() + w.span();
+        }
+        if covered as usize != d {
+            // Crashed while the write-ahead itself was being appended —
+            // the units on disk don't tile [0, d), so the round never
+            // started. Nothing to finish; the caller just re-runs it.
+            report.abandoned_round = Some(round);
+            return Ok(());
+        }
+        crate::ensure!(
+            works.iter().map(|w| w.shard()).collect::<std::collections::BTreeSet<_>>().len()
+                == works.len(),
+            "journaled work units for round {round} reuse a shard id"
+        );
+
+        let mut estimates = vec![0.0f64; d];
+        let mut reissued = 0usize;
+        let mut skipped = 0usize;
+        if let Some(merged) = &scan.merged {
+            // Crashed between the merged-out append and the commit fsync:
+            // the result is already on disk, nothing re-executes.
+            crate::ensure!(
+                merged.estimates.len() == d,
+                "journaled merged estimates hold {} instances, config says {d}",
+                merged.estimates.len()
+            );
+            estimates.copy_from_slice(&merged.estimates);
+            skipped = works.len();
+        } else {
+            let exec = ShardExecutor::new(agg.config());
+            for w in &works {
+                let (lo, span) = (w.lo() as usize, w.span() as usize);
+                if let Some(out) = scan.outs.get(&w.shard()) {
+                    crate::ensure!(
+                        out.estimates.len() == span,
+                        "journaled output for shard {} holds {} instances, its work unit {span}",
+                        w.shard(),
+                        out.estimates.len()
+                    );
+                    estimates[lo..lo + span].copy_from_slice(&out.estimates);
+                    skipped += 1;
+                } else {
+                    let shard = w.shard();
+                    let out = exec
+                        .execute(w)
+                        .with_context(|| format!("re-running journaled unit for shard {shard}"))?;
+                    estimates[lo..lo + span].copy_from_slice(&out.estimates);
+                    journal.append(&Frame::ShardOut(out))?;
+                    reissued += 1;
+                }
+            }
+        }
+        journal.append(&Frame::ShardOut(ShardOutMsg {
+            round,
+            shard: MERGED_SHARD,
+            wall_ns: 0,
+            estimates: estimates.clone(),
+        }))?;
+        journal.append(&Frame::Commit { round, participants: scan.expected as u32 })?;
+        agg.fast_forward(round + 1)?;
+        report.resumed_round = Some(round);
+        report.reissued_units = reissued;
+        report.skipped_units = skipped;
+        report.resumed_estimates = Some(RoundResult {
+            round_id: round,
+            estimates,
+            participants: scan.expected,
+            traffic: TrafficStats::default(),
+            wall_seconds: 0.0,
+        });
+        Ok(())
+    }
+
+    /// The aggregation stack behind the journal.
+    pub fn aggregator(&self) -> &dyn Aggregator {
+        self.agg.as_ref()
+    }
+
+    /// The id the next round will run under (committed rounds consumed
+    /// their ids; an interrupted round's id is re-used).
+    pub fn next_round(&self) -> u64 {
+        self.agg.next_round()
+    }
+
+    /// The round id a recovered-but-unfinished streaming round is waiting
+    /// under, if any (see [`DurableCoordinator::resume_streaming`]).
+    pub fn pending_streaming_round(&self) -> Option<u64> {
+        self.pending.as_ref().map(|p| p.round)
+    }
+
+    /// Bytes of complete records currently journaled.
+    pub fn journal_len_bytes(&self) -> u64 {
+        self.journal.len_bytes()
+    }
+
+    /// Unwrap the stack (drops the journal handle; the file stays).
+    pub fn into_inner(self) -> Box<dyn Aggregator> {
+        self.agg
+    }
+
+    /// Run one full round with write-ahead durability: manifest + derived
+    /// work units are journaled and fsynced BEFORE the stack runs, the
+    /// merged estimates and commit after. Estimates are bit-identical to
+    /// running the wrapped stack bare — the journal adds no randomness
+    /// and touches nothing on the data path.
+    pub fn run_round(
+        &mut self,
+        inputs: &[Vec<f64>],
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult> {
+        self.pending = None;
+        let round_inputs = RoundInput::Vectors(inputs);
+        // Validate BEFORE journaling: the log should never hold a round
+        // that could not possibly run (recovery would try to finish it).
+        round_inputs.validate(self.agg.config().plan.n, self.agg.config().instances)?;
+        let round = self.agg.next_round();
+        let fnv = config_fingerprint(self.agg.config());
+        self.journal.append(&Frame::Hello { round, client: inputs.len() as u32 })?;
+        self.journal.append(&Frame::ShardReady(ShardReadyMsg { shard: 0, config_fnv: fnv }))?;
+        for w in derive_round_works(self.agg.config(), self.seed, round, inputs, seeds) {
+            self.journal.append(&w.into_frame())?;
+        }
+        // The write-ahead barrier: once this returns, a crash at ANY later
+        // point leaves a journal that finishes the round bit-identically.
+        self.journal.sync()?;
+        let result = self.agg.run_round(&round_inputs, seeds)?;
+        self.journal.append(&Frame::ShardOut(ShardOutMsg {
+            round,
+            shard: MERGED_SHARD,
+            wall_ns: 0,
+            estimates: result.estimates.clone(),
+        }))?;
+        self.journal.append(&Frame::Commit { round, participants: result.participants as u32 })?;
+        Ok(result)
+    }
+
+    /// Run one streaming round with write-ahead durability: the manifest
+    /// is journaled up front, every ACCEPTED client frame (current-round
+    /// `Contribute` / `ContributeBatch` / `Drop`, within the deadline) is
+    /// journaled verbatim as it arrives, and the merged estimates +
+    /// commit land after the round closes. A failed drive (e.g. quorum
+    /// not reached) journals no commit — the round id stays unconsumed,
+    /// exactly as on the bare stack.
+    pub fn run_round_streaming(
+        &mut self,
+        channel: &mut dyn Channel,
+        expected: usize,
+        quorum: usize,
+        deadline_s: f64,
+    ) -> Result<StreamOutcome> {
+        self.pending = None;
+        let round = self.agg.next_round();
+        let fnv = config_fingerprint(self.agg.config());
+        self.journal.append(&Frame::Hello { round, client: expected as u32 })?;
+        self.journal.append(&Frame::ShardReady(ShardReadyMsg { shard: 0, config_fnv: fnv }))?;
+        self.journal.sync()?;
+        let cfg = StreamConfig::new(expected).with_quorum(quorum).with_deadline(deadline_s);
+        let outcome = {
+            let mut tap = JournalTap {
+                inner: channel,
+                journal: &mut self.journal,
+                round,
+                deadline_s,
+                io_error: None,
+            };
+            let driven = StreamingRound::drive(self.agg.as_mut(), &mut tap, &cfg);
+            if let Some(e) = tap.io_error.take() {
+                return Err(e.context("journaling streamed client frames"));
+            }
+            driven?
+        };
+        self.journal.append(&Frame::ShardOut(ShardOutMsg {
+            round,
+            shard: MERGED_SHARD,
+            wall_ns: 0,
+            estimates: outcome.result.estimates.clone(),
+        }))?;
+        self.journal
+            .append(&Frame::Commit { round, participants: outcome.result.participants as u32 })?;
+        Ok(outcome)
+    }
+
+    /// Finish a streaming round interrupted by a crash: the journaled
+    /// accepted frames replay first (in original acceptance order, so the
+    /// pools fill identically), then live traffic from `channel` fills the
+    /// gap. Clients re-send after a coordinator restart; re-sent copies of
+    /// already-journaled contributions dedup at ingestion, so the round
+    /// closes over the same cohort — and the same bytes — as the run that
+    /// never crashed. Only callable after [`DurableCoordinator::recover`]
+    /// staged a pending round.
+    pub fn resume_streaming(
+        &mut self,
+        channel: &mut dyn Channel,
+        quorum: usize,
+        deadline_s: f64,
+    ) -> Result<StreamOutcome> {
+        let pending = self
+            .pending
+            .take()
+            .context("no interrupted streaming round to resume (see recover())")?;
+        crate::ensure!(
+            pending.round == self.agg.next_round(),
+            "journal staged round {} but the stack is at round {}",
+            pending.round,
+            self.agg.next_round()
+        );
+        let round = pending.round;
+        let cfg = StreamConfig::new(pending.expected).with_quorum(quorum).with_deadline(deadline_s);
+        let outcome = {
+            let tap = JournalTap {
+                inner: channel,
+                journal: &mut self.journal,
+                round,
+                deadline_s,
+                io_error: None,
+            };
+            let mut replay = ReplayChannel { replay: pending.frames.into(), live: tap };
+            let driven = StreamingRound::drive(self.agg.as_mut(), &mut replay, &cfg);
+            if let Some(e) = replay.live.io_error.take() {
+                return Err(e.context("journaling streamed client frames"));
+            }
+            driven?
+        };
+        self.journal.append(&Frame::ShardOut(ShardOutMsg {
+            round,
+            shard: MERGED_SHARD,
+            wall_ns: 0,
+            estimates: outcome.result.estimates.clone(),
+        }))?;
+        self.journal
+            .append(&Frame::Commit { round, participants: outcome.result.participants as u32 })?;
+        Ok(outcome)
+    }
+}
+
+/// The round id of a client-event frame, `None` for anything else.
+fn client_event_round(f: &Frame) -> Option<u64> {
+    match f {
+        Frame::Contribute { round, .. }
+        | Frame::ContributeBatch { round, .. }
+        | Frame::Drop { round, .. } => Some(*round),
+        _ => None,
+    }
+}
+
+/// A [`Channel`] shim that journals every accepted-looking client frame
+/// as it is received — the streaming path's write-ahead. Journaling is a
+/// superset screen of the driver's acceptance (round id, deadline, frame
+/// type, exactly one frame per message); frames the driver later rejects
+/// (duplicates, malformed payloads) may land in the journal, which is
+/// harmless: replay runs them through the SAME ingestion screens again.
+struct JournalTap<'a> {
+    inner: &'a mut dyn Channel,
+    journal: &'a mut RoundJournal,
+    round: u64,
+    deadline_s: f64,
+    /// Journal I/O failure latched here (the `Channel` trait has no error
+    /// path); the caller surfaces it after the drive.
+    io_error: Option<Error>,
+}
+
+impl Channel for JournalTap<'_> {
+    fn send(&mut self, frame: Vec<u8>) {
+        self.inner.send(frame);
+    }
+
+    fn send_all(&mut self, frames: Vec<Vec<u8>>) {
+        self.inner.send_all(frames);
+    }
+
+    fn recv(&mut self) -> Option<(f64, Vec<u8>)> {
+        let (t, bytes) = self.inner.recv()?;
+        if self.io_error.is_none() && t <= self.deadline_s {
+            let journal_it = match decode_frame(&bytes) {
+                Ok((frame, used)) if used == bytes.len() => {
+                    client_event_round(&frame) == Some(self.round)
+                }
+                _ => false,
+            };
+            if journal_it {
+                if let Err(e) = self.journal.append_raw(&bytes) {
+                    self.io_error = Some(e);
+                }
+            }
+        }
+        Some((t, bytes))
+    }
+
+    fn pending(&self) -> usize {
+        self.inner.pending()
+    }
+}
+
+/// Resume channel: journaled frames first (already on disk — they bypass
+/// the tap so they are not journaled twice), then live traffic through
+/// the [`JournalTap`]. Replayed frames arrive at t = 0.0, inside any
+/// deadline, in original acceptance order.
+struct ReplayChannel<'a> {
+    replay: VecDeque<Vec<u8>>,
+    live: JournalTap<'a>,
+}
+
+impl Channel for ReplayChannel<'_> {
+    fn send(&mut self, frame: Vec<u8>) {
+        self.live.send(frame);
+    }
+
+    fn send_all(&mut self, frames: Vec<Vec<u8>>) {
+        self.live.send_all(frames);
+    }
+
+    fn recv(&mut self) -> Option<(f64, Vec<u8>)> {
+        if let Some(bytes) = self.replay.pop_front() {
+            return Some((0.0, bytes));
+        }
+        self.live.recv()
+    }
+
+    fn pending(&self) -> usize {
+        self.replay.len() + self.live.pending()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregator::AggregatorBuilder;
+    use crate::engine::DerivedClientSeeds;
+    use crate::params::ProtocolPlan;
+    use crate::transport::channel::Loopback;
+    use crate::transport::streaming::send_cohort;
+    use std::path::PathBuf;
+
+    fn small_cfg(n: usize, d: usize, shards: usize) -> EngineConfig {
+        EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d).with_shards(shards)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cloak_durable_{}_{tag}", std::process::id()));
+        p
+    }
+
+    /// Decode a journal file into (start, end, frame) spans.
+    fn frame_spans(bytes: &[u8]) -> Vec<(usize, usize, Frame)> {
+        let mut off = 0usize;
+        let mut spans = Vec::new();
+        while off < bytes.len() {
+            let (f, used) = decode_frame(&bytes[off..]).unwrap();
+            spans.push((off, off + used, f));
+            off += used;
+        }
+        spans
+    }
+
+    #[test]
+    fn derived_works_merge_to_the_engine_round() {
+        // The write-ahead's foundation: executing the journaled units and
+        // concatenating by range reproduces the stack's own round exactly.
+        let (n, d, seed) = (10usize, 6usize, 7u64);
+        let cfg = small_cfg(n, d, 3);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let want = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+
+        let works = derive_round_works(&cfg, seed, 0, &inputs, &seeds);
+        assert!(works.len() > 1, "want a real multi-shard tiling");
+        let exec = ShardExecutor::new(&cfg);
+        let mut est = vec![0.0f64; d];
+        for w in &works {
+            let out = exec.execute(w).unwrap();
+            est[w.lo() as usize..(w.lo() + w.span()) as usize].copy_from_slice(&out.estimates);
+        }
+        assert_eq!(est, want.estimates, "unit re-execution must be bit-identical");
+    }
+
+    #[test]
+    fn committed_rounds_replay_as_done() {
+        let (n, d, seed) = (8usize, 4usize, 9u64);
+        let cfg = small_cfg(n, d, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let root = tmp_root("committed");
+        let store = Store::new(&root).unwrap();
+
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let want = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+
+        let agg = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let mut dur = DurableCoordinator::create(agg, seed, &store).unwrap();
+        let got = dur.run_round(&inputs, &seeds).unwrap();
+        assert_eq!(got.estimates, want.estimates, "journal must not perturb the round");
+        drop(dur);
+
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let (dur, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.committed_rounds, 1);
+        assert_eq!(report.truncated_bytes, 0);
+        assert!(report.resumed_round.is_none());
+        assert!(report.pending_streaming.is_none());
+        assert_eq!(dur.next_round(), 1, "recovered stack resumes after the commit");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn crash_after_write_ahead_resumes_bit_identical() {
+        // Kill the coordinator right after the work units hit the disk
+        // (the earliest point recovery promises to finish the round):
+        // recovery must re-execute every unit and produce the exact
+        // estimates of the run that never crashed — then keep running.
+        let (n, d, seed) = (10usize, 5usize, 11u64);
+        let cfg = small_cfg(n, d, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+
+        // Uninterrupted 2-round reference.
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let want0 = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let want1 = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+
+        // A complete durable round, whose journal we truncate to the
+        // post-write-ahead crash point.
+        let root = tmp_root("crash_encode");
+        let store = Store::new(&root).unwrap();
+        let agg = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let mut dur = DurableCoordinator::create(agg, seed, &store).unwrap();
+        dur.run_round(&inputs, &seeds).unwrap();
+        drop(dur);
+        let path = store.path(&Locator::RoundJournal);
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = frame_spans(&bytes)
+            .iter()
+            .filter(|(_, _, f)| matches!(f, Frame::ShardWork(_)))
+            .map(|&(_, end, _)| end)
+            .max()
+            .unwrap();
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+
+        let agg = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let (mut dur, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.resumed_round, Some(0));
+        assert_eq!(report.reissued_units, 2, "every unit lacked an output");
+        assert_eq!(report.skipped_units, 0);
+        let resumed = report.resumed_estimates.unwrap();
+        assert_eq!(resumed.estimates, want0.estimates, "resumed round bit-identical");
+        assert_eq!(resumed.participants, n);
+        assert_eq!(dur.next_round(), 1);
+
+        // The recovered coordinator continues the campaign normally.
+        let got1 = dur.run_round(&inputs, &seeds).unwrap();
+        assert_eq!(got1.estimates, want1.estimates);
+        assert_eq!(got1.round_id, want1.round_id);
+        drop(dur);
+
+        // And the recovery itself committed durably: a second recovery
+        // sees two committed rounds and nothing in flight.
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let (_, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.committed_rounds, 2);
+        assert!(report.resumed_round.is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn journaled_unit_outputs_are_not_reexecuted() {
+        // Crash *during recovery*: some units already journaled their
+        // outputs. The second recovery reuses them and re-executes only
+        // the remainder — same estimates either way.
+        let (n, d, seed) = (8usize, 6usize, 13u64);
+        let cfg = small_cfg(n, d, 3);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let want = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+
+        let root = tmp_root("partial_outs");
+        let store = Store::new(&root).unwrap();
+        let works = derive_round_works(&cfg, seed, 0, &inputs, &seeds);
+        assert_eq!(works.len(), 3);
+        let first_out = ShardExecutor::new(&cfg).execute(&works[0]).unwrap();
+        {
+            let mut j = RoundJournal::create(store.path(&Locator::RoundJournal)).unwrap();
+            j.append(&Frame::Hello { round: 0, client: n as u32 }).unwrap();
+            j.append(&Frame::ShardReady(ShardReadyMsg {
+                shard: 0,
+                config_fnv: config_fingerprint(&cfg),
+            }))
+            .unwrap();
+            for w in works {
+                j.append(&w.into_frame()).unwrap();
+            }
+            j.append(&Frame::ShardOut(first_out)).unwrap();
+        }
+
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let (_, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.resumed_round, Some(0));
+        assert_eq!(report.skipped_units, 1, "the journaled output is reused");
+        assert_eq!(report.reissued_units, 2);
+        assert_eq!(report.resumed_estimates.unwrap().estimates, want.estimates);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn streaming_crash_resumes_over_replay_plus_resend() {
+        // Kill the coordinator after k accepted client frames: recovery
+        // stages them, the cohort re-sends, and the resumed round closes
+        // bit-identical to the uninterrupted one (replays dedup re-sends).
+        let (n, d, seed, k) = (9usize, 3usize, 17u64, 4usize);
+        let cfg = small_cfg(n, d, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+
+        // Uninterrupted streaming reference.
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let mut ch = Loopback::new();
+        send_cohort(plain.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &vec![false; n], &mut ch)
+            .unwrap();
+        let want = StreamingRound::drive(plain.as_mut(), &mut ch, &StreamConfig::new(n)).unwrap();
+
+        // Post-crash journal: manifest + the first k client frames.
+        let root = tmp_root("crash_stream");
+        let store = Store::new(&root).unwrap();
+        let encoder = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let mut wire = Loopback::new();
+        send_cohort(
+            encoder.as_ref(),
+            &seeds,
+            &RoundInput::Vectors(&inputs),
+            &vec![false; n],
+            &mut wire,
+        )
+        .unwrap();
+        {
+            let mut j = RoundJournal::create(store.path(&Locator::RoundJournal)).unwrap();
+            j.append(&Frame::Hello { round: 0, client: n as u32 }).unwrap();
+            j.append(&Frame::ShardReady(ShardReadyMsg {
+                shard: 0,
+                config_fnv: config_fingerprint(&cfg),
+            }))
+            .unwrap();
+            for _ in 0..k {
+                let (_, bytes) = wire.recv().unwrap();
+                j.append_raw(&bytes).unwrap();
+            }
+        }
+
+        let agg = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let (mut dur, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.pending_streaming, Some(0));
+        assert_eq!(dur.pending_streaming_round(), Some(0));
+
+        // Restarted clients re-send the whole cohort.
+        let mut live = Loopback::new();
+        send_cohort(
+            dur.aggregator(),
+            &seeds,
+            &RoundInput::Vectors(&inputs),
+            &vec![false; n],
+            &mut live,
+        )
+        .unwrap();
+        let got = dur.resume_streaming(&mut live, 1, 1.0).unwrap();
+        assert_eq!(got.result.estimates, want.result.estimates, "resume bit-identical");
+        assert_eq!(got.result.participants, n);
+        assert_eq!(got.duplicate_frames, k, "replayed frames dedup their re-sends");
+        drop(dur);
+
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let (_, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.committed_rounds, 1);
+        assert!(report.pending_streaming.is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn recover_refuses_a_different_plan() {
+        let (n, d, seed) = (8usize, 2usize, 3u64);
+        let cfg = small_cfg(n, d, 1);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let root = tmp_root("drift");
+        let store = Store::new(&root).unwrap();
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let mut dur = DurableCoordinator::create(agg, seed, &store).unwrap();
+        dur.run_round(&inputs, &seeds).unwrap();
+        drop(dur);
+        let drifted = AggregatorBuilder::new(small_cfg(n + 1, d, 1), seed).build().unwrap();
+        let err = DurableCoordinator::recover(drifted, seed, &store).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn resume_without_pending_round_is_an_error() {
+        let (n, d, seed) = (6usize, 2usize, 5u64);
+        let cfg = small_cfg(n, d, 1);
+        let root = tmp_root("no_pending");
+        let store = Store::new(&root).unwrap();
+        let agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let mut dur = DurableCoordinator::create(agg, seed, &store).unwrap();
+        let err = dur.resume_streaming(&mut Loopback::new(), 1, 1.0).unwrap_err();
+        assert!(format!("{err}").contains("resume"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

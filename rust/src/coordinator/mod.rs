@@ -23,6 +23,7 @@
 //! the sketch analytics (d = sketch width), and the benches.
 
 pub mod batcher;
+pub mod durable;
 pub mod registry;
 pub mod round;
 

@@ -433,6 +433,17 @@ impl Engine {
         self.rounds_run
     }
 
+    /// Advance the round counter so the next round runs as `next_round`,
+    /// without executing the skipped rounds — the recovery path's "these
+    /// rounds are already committed in the journal" fast path. Safe
+    /// because ALL per-round randomness derives from the absolute round
+    /// id (never from history), so round `r` is bit-identical whether
+    /// rounds `0..r` executed or were skipped. Never rewinds: a
+    /// `next_round` at or below the current counter is a no-op.
+    pub fn fast_forward(&mut self, next_round: u64) {
+        self.rounds_run = self.rounds_run.max(next_round);
+    }
+
     /// Client-side encode for the wire path: client `client`'s complete
     /// cloaked contribution (flat `d × m` shares, instance-major) for
     /// round `round`. Bit-identical to what [`Engine::run_round`]'s shard

@@ -35,6 +35,7 @@ use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput, RoundR
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::privacy::accountant::PrivacyAccountant;
 use crate::privacy::DpBudget;
+use crate::storage::CampaignCheckpoint;
 use crate::transport::channel::Channel;
 use crate::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
 use crate::util::error::Result;
@@ -180,6 +181,9 @@ pub struct FlDriver<'a, O: GradOracle> {
     /// holds is invisible in training.
     agg: Box<dyn Aggregator>,
     seeds: DerivedClientSeeds,
+    /// The campaign seed — carried in checkpoints so a resumed driver
+    /// re-derives the identical per-client seed chain.
+    seed: u64,
     codec: GradientCodec,
     pub server: ServerState,
     accountant: PrivacyAccountant,
@@ -237,10 +241,88 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
             oracle,
             agg,
             seeds: DerivedClientSeeds::new(seed),
+            seed,
             codec,
             server,
             accountant: PrivacyAccountant::new(),
             logs: Vec::new(),
+        }
+    }
+
+    /// Resume a checkpointed campaign on a fresh coordinator: the stack
+    /// fast-forwards to the checkpoint's round (per-round seeds derive
+    /// from absolute round ids, so skipping the replay is exact), the
+    /// server optimizer restores bit-for-bit, and the accountant
+    /// re-composes the budget already spent. Continued training is
+    /// bit-identical to the campaign that never stopped; only the round
+    /// telemetry in [`FlDriver::logs`] restarts (it numbers from the
+    /// resume point).
+    ///
+    /// `agg` must be a freshly built stack for this campaign's config and
+    /// seed — both the checkpoint's fingerprint and the one this
+    /// [`FlConfig`] derives are checked against it.
+    pub fn resume(
+        cfg: FlConfig,
+        oracle: &'a O,
+        ckpt: &CampaignCheckpoint,
+        mut agg: Box<dyn Aggregator>,
+    ) -> Result<Self> {
+        let (want, codec) = cfg.engine_config_and_codec(ckpt.params.len())?;
+        crate::ensure!(
+            config_fingerprint(&want) == ckpt.config_fnv,
+            "checkpoint was taken under config fingerprint {:#010x}, this FL \
+             config derives {:#010x}; resume with the campaign's original config",
+            ckpt.config_fnv,
+            config_fingerprint(&want)
+        );
+        crate::ensure!(
+            config_fingerprint(agg.config()) == ckpt.config_fnv,
+            "aggregator config does not match the checkpoint \
+             (fingerprint {:#010x} != {:#010x}); build it from FlConfig::engine_config",
+            config_fingerprint(agg.config()),
+            ckpt.config_fnv
+        );
+        if ckpt.rounds_done > 0 {
+            agg.fast_forward(ckpt.rounds_done)?;
+        }
+        let server = ServerState::restore(
+            ckpt.params.clone(),
+            ckpt.velocity.clone(),
+            cfg.lr,
+            cfg.momentum,
+            ckpt.steps,
+        );
+        let mut accountant = PrivacyAccountant::new();
+        for _ in 0..ckpt.rounds_done {
+            accountant.spend(DpBudget::new(cfg.eps_round, cfg.delta_round));
+        }
+        Ok(FlDriver {
+            cfg,
+            oracle,
+            agg,
+            seeds: DerivedClientSeeds::new(ckpt.seed),
+            seed: ckpt.seed,
+            codec,
+            server,
+            accountant,
+            logs: Vec::new(),
+        })
+    }
+
+    /// Snapshot everything [`FlDriver::resume`] needs: model weights,
+    /// optimizer velocity, rounds done, config fingerprint, campaign
+    /// seed. Write it through
+    /// [`Store::write_checkpoint`](crate::storage::Store::write_checkpoint)
+    /// (atomic replace) between rounds; a coordinator that dies after the
+    /// write resumes the campaign bit-identically.
+    pub fn checkpoint(&self) -> CampaignCheckpoint {
+        CampaignCheckpoint {
+            rounds_done: self.agg.rounds_run(),
+            steps: self.server.steps(),
+            config_fnv: config_fingerprint(self.agg.config()),
+            seed: self.seed,
+            params: self.server.params().to_vec(),
+            velocity: self.server.velocity().to_vec(),
         }
     }
 
@@ -583,6 +665,54 @@ mod tests {
         assert_eq!(la.participants, lb.participants, "same drop mask, same survivors");
         assert!(lb.participants < 16, "loss must bite for this to test anything");
         assert_eq!(local.server.params(), remote.server.params(), "lossy FL over a cluster");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        // Train 2+2 rounds with a checkpoint/resume seam in the middle
+        // (fresh driver, fresh engine) vs 4 uninterrupted rounds: the
+        // weights, velocity, and accounting must match exactly.
+        let oracle = QuadraticOracle { target: vec![0.3, -0.2, 0.7, 0.1] };
+        let cfg = test_cfg(8, 4);
+        let batches = dummy_batches(8);
+        let mut full = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 11).unwrap();
+        for _ in 0..4 {
+            full.run_round(&batches).unwrap();
+        }
+
+        let mut first = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 11).unwrap();
+        for _ in 0..2 {
+            first.run_round(&batches).unwrap();
+        }
+        let ckpt = first.checkpoint();
+        assert_eq!(ckpt.rounds_done, 2);
+        assert_eq!(ckpt.steps, 2);
+        drop(first); // the original coordinator dies here
+
+        let ecfg = cfg.engine_config(4).unwrap();
+        let agg: Box<dyn Aggregator> = Box::new(Engine::new(ecfg, 11));
+        let mut resumed = FlDriver::resume(cfg, &oracle, &ckpt, agg).unwrap();
+        assert_eq!(resumed.aggregator().next_round(), 2, "stack fast-forwarded");
+        assert_eq!(resumed.accountant().num_rounds(), 2, "budget re-composed");
+        for _ in 0..2 {
+            resumed.run_round(&batches).unwrap();
+        }
+        assert_eq!(full.server.params(), resumed.server.params(), "weights diverged");
+        assert_eq!(full.server.velocity(), resumed.server.velocity());
+        assert_eq!(full.accountant().num_rounds(), resumed.accountant().num_rounds());
+    }
+
+    #[test]
+    fn resume_rejects_a_drifted_checkpoint() {
+        let oracle = QuadraticOracle { target: vec![0.0; 4] };
+        let cfg = test_cfg(8, 1);
+        let d = FlDriver::new(cfg.clone(), &oracle, vec![0.0; 4], 1).unwrap();
+        let mut ckpt = d.checkpoint();
+        ckpt.config_fnv ^= 1;
+        let agg: Box<dyn Aggregator> =
+            Box::new(Engine::new(cfg.engine_config(4).unwrap(), 1));
+        let err = FlDriver::resume(cfg, &oracle, &ckpt, agg).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
     }
 
     #[test]

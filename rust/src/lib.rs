@@ -19,7 +19,10 @@
 //!   subsystem (engine shards as standalone servers over TCP or simulated
 //!   channels, gathered at a straggler-tolerant barrier), the [`control`]
 //!   plane (shard health directory, rebalance policies, in-round takeover
-//!   of lost ranges), parameter planner
+//!   of lost ranges), the [`storage`] layer (append-only round journal +
+//!   locator-keyed checkpoint store — a crashed coordinator replays the
+//!   log and resumes mid-round bit-identically, see
+//!   [`coordinator::durable`]), parameter planner
 //!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
@@ -62,6 +65,7 @@ pub mod rng;
 pub mod runtime;
 pub mod shuffler;
 pub mod sketch;
+pub mod storage;
 pub mod transport;
 pub mod util;
 

@@ -19,6 +19,12 @@
 //!                   through the SAME ingestion loop into local, cluster
 //!                   and elastic stacks (all built by AggregatorBuilder),
 //!                   gate-checked bit-identical, benchkit JSON out
+//!   crash-recovery-sim — durable rounds: a journaling coordinator is
+//!                   killed at scripted points (write-ahead barrier, torn
+//!                   tail, mid-stream) and recovered from its append-only
+//!                   journal, every resume gate-checked bit-identical to
+//!                   the uninterrupted run; a checkpointed FedAvg campaign
+//!                   survives a coordinator death; benchkit JSON out
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -28,6 +34,7 @@
 //!   cloak-agg cluster-sim --n 64 --d 16 --shards 4 --net tcp --seed 7
 //!   cloak-agg elastic-sim --n 48 --d 16 --shards 4 --net tcp --policy proportional
 //!   cloak-agg lossy-cluster-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
+//!   cloak-agg crash-recovery-sim --n 24 --d 8 --seed 7
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -39,7 +46,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -53,7 +60,8 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --policy (static|even|proportional) --net (tcp|sim)
                  --seed --out
   lossy-cluster-sim: --n --d --loss --dup --shards --quorum --deadline
-                 --seed --out";
+                 --seed --out
+  crash-recovery-sim: --n --d --shards (0=sweep 1,4) --seed --out";
 
 fn main() {
     if let Err(e) = run() {
@@ -75,6 +83,7 @@ fn run() -> Result<()> {
             "cluster-sim",
             "elastic-sim",
             "lossy-cluster-sim",
+            "crash-recovery-sim",
         ],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
@@ -91,6 +100,7 @@ fn run() -> Result<()> {
         "cluster-sim" => cmd_cluster_sim(&args),
         "elastic-sim" => cmd_elastic_sim(&args),
         "lossy-cluster-sim" => cmd_lossy_cluster_sim(&args),
+        "crash-recovery-sim" => cmd_crash_recovery_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -937,6 +947,325 @@ fn cmd_lossy_cluster_sim(args: &Args) -> Result<()> {
         cases.len() == backends.len(),
         "expected {} cases, found {}",
         backends.len(),
+        cases.len()
+    );
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Closed-form gradient oracle for the crash-recovery campaign gate:
+/// loss = ‖p − p*‖²/2 with the gradient clipped to unit norm (the client
+/// batch is ignored — the gate is about state recovery, not learning).
+struct QuadraticOracle {
+    target: Vec<f32>,
+}
+
+impl cloak_agg::fl::GradOracle for QuadraticOracle {
+    fn loss_and_grad(
+        &self,
+        params: &[f32],
+        _batch: &cloak_agg::fl::data::Batch,
+    ) -> Result<(f32, Vec<f32>)> {
+        let diff: Vec<f32> = params.iter().zip(&self.target).map(|(p, t)| p - t).collect();
+        let loss = 0.5 * diff.iter().map(|d| d * d).sum::<f32>();
+        let norm = diff.iter().map(|d| d * d).sum::<f32>().sqrt().max(1e-12);
+        let scale = (1.0 / norm).min(1.0);
+        Ok((loss, diff.iter().map(|d| d * scale).collect()))
+    }
+}
+
+/// Durable rounds end-to-end: a `DurableCoordinator` journaling every
+/// state transition is killed at scripted points — right after the
+/// write-ahead barrier, with a torn trailing record, and mid-stream after
+/// k accepted client frames — then recovered from its append-only journal
+/// and required to finish bit-identical to the run that never crashed,
+/// across local and cluster stacks at every sweep point. A checkpointed
+/// FedAvg campaign likewise survives a coordinator death between rounds
+/// with bit-identical final weights. Finishes with a timed journal-off/on
+/// sweep written as benchkit JSON and re-validated through the crate's
+/// own parser (the CI smoke step keys on the final "benchkit JSON OK"
+/// line).
+fn cmd_crash_recovery_sim(args: &Args) -> Result<()> {
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::coordinator::durable::DurableCoordinator;
+    use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+    use cloak_agg::fl::data::Batch;
+    use cloak_agg::params::NeighborNotion;
+    use cloak_agg::storage::{Locator, Store};
+    use cloak_agg::transport::channel::Loopback;
+    use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+    use cloak_agg::transport::wire::{decode_frame, Frame};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::error::Context as _;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 24)?;
+    let d = args.get_usize("d", 8)?;
+    let shards = args.get_usize("shards", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get_str("out", "BENCH_crash_recovery.json");
+    ensure!(n >= 4, "--n must be >= 4 (the streaming kill keeps n/4 frames)");
+    ensure!(d >= 1, "--d must be >= 1");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let sweep: Vec<usize> = if shards == 0 { vec![1, 4] } else { vec![shards] };
+    let backends = ["local", "cluster"];
+
+    let build = |kind: &str, s: usize| -> Result<Box<dyn Aggregator>> {
+        let b = AggregatorBuilder::new(EngineConfig::new(plan.clone(), d).with_shards(s), seed);
+        Ok(match kind {
+            "local" => b.local().build()?,
+            _ => b.loopback().build()?,
+        })
+    };
+    let fresh_root = |tag: &str| {
+        let mut root = std::env::temp_dir();
+        root.push(format!("cloak_crashsim_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        root
+    };
+    // Decode a clean journal into (start, end, frame) record spans — the
+    // kill points below are exact record boundaries (plus a torn offset).
+    let spans = |bytes: &[u8]| -> Vec<(usize, usize, Frame)> {
+        let mut off = 0usize;
+        let mut spans = Vec::new();
+        while off < bytes.len() {
+            let (f, used) = decode_frame(&bytes[off..]).expect("clean journal prefix");
+            spans.push((off, off + used, f));
+            off += used;
+        }
+        spans
+    };
+
+    // --- encode-path kills: write-ahead barrier + torn tail --------------
+    // The reference run is stack- and shard-invariant by the facade
+    // contract, so one local S=1 campaign anchors every cell below.
+    let mut reference = build("local", 1)?;
+    let want0 = reference.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+    let want1 = reference.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+    let mut table = Table::new(
+        &format!("crash-recovery-sim: n={n} d={d} encode-path kills"),
+        &["S", "backend", "kill", "truncated", "reissued", "round-1 est"],
+    );
+    for &s in &sweep {
+        for kind in backends {
+            let root = fresh_root(&format!("enc_{s}_{kind}"));
+            let store = Store::new(&root)?;
+            let mut dur = DurableCoordinator::create(build(kind, s)?, seed, &store)?;
+            let got = dur.run_round(&inputs, &seeds)?;
+            ensure!(
+                got.estimates == want0.estimates,
+                "S={s} {kind}: journaling perturbed the round"
+            );
+            drop(dur);
+            let path = store.path(&Locator::RoundJournal);
+            let clean = std::fs::read(&path)?;
+            let work_ends: Vec<usize> = spans(&clean)
+                .iter()
+                .filter(|(_, _, f)| matches!(f, Frame::ShardWork(_)))
+                .map(|&(_, end, _)| end)
+                .collect();
+            ensure!(!work_ends.is_empty(), "journal holds no work units");
+            let barrier = *work_ends.last().unwrap();
+            for (tag, cut, torn) in [("barrier", barrier, 0u64), ("torn", barrier + 7, 7u64)] {
+                std::fs::write(&path, &clean[..cut])?;
+                let (mut dur, report) =
+                    DurableCoordinator::recover(build(kind, s)?, seed, &store)?;
+                ensure!(report.truncated_bytes == torn, "S={s} {kind} {tag}: torn bytes");
+                ensure!(report.resumed_round == Some(0), "S={s} {kind} {tag}: resumed round");
+                ensure!(
+                    report.reissued_units == work_ends.len(),
+                    "S={s} {kind} {tag}: every unit was unfinished at the kill"
+                );
+                let resumed = report.resumed_estimates.context("no resumed estimates")?;
+                ensure!(
+                    resumed.estimates == want0.estimates && resumed.participants == n,
+                    "S={s} {kind} {tag}: recovery diverged from the uninterrupted run"
+                );
+                let got1 = dur.run_round(&inputs, &seeds)?;
+                ensure!(
+                    got1.estimates == want1.estimates && got1.round_id == 1,
+                    "S={s} {kind} {tag}: the recovered campaign diverged at round 1"
+                );
+                table.row(&[
+                    s.to_string(),
+                    kind.to_string(),
+                    tag.to_string(),
+                    report.truncated_bytes.to_string(),
+                    report.reissued_units.to_string(),
+                    format!("{:.4}", got1.estimates[0]),
+                ]);
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+    println!("{}", table.render());
+
+    // --- streaming kills: dead after k accepted client frames ------------
+    let k = (n / 4).max(1);
+    let mask = vec![false; n];
+    for &s in &sweep {
+        for kind in backends {
+            let mut plain = build(kind, s)?;
+            let mut ch = Loopback::new();
+            send_cohort(plain.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch)?;
+            let want = StreamingRound::drive(
+                plain.as_mut(),
+                &mut ch,
+                &StreamConfig::new(n).with_quorum(1),
+            )?;
+
+            let root = fresh_root(&format!("stream_{s}_{kind}"));
+            let store = Store::new(&root)?;
+            let mut dur = DurableCoordinator::create(build(kind, s)?, seed, &store)?;
+            let mut ch = Loopback::new();
+            send_cohort(dur.aggregator(), &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch)?;
+            let got = dur.run_round_streaming(&mut ch, n, 1, 1.0)?;
+            ensure!(
+                got.result.estimates == want.result.estimates,
+                "S={s} {kind}: journaling perturbed the streamed round"
+            );
+            drop(dur);
+            let path = store.path(&Locator::RoundJournal);
+            let clean = std::fs::read(&path)?;
+            let contrib_ends: Vec<usize> = spans(&clean)
+                .iter()
+                .filter(|(_, _, f)| matches!(f, Frame::Contribute { .. }))
+                .map(|&(_, end, _)| end)
+                .collect();
+            ensure!(contrib_ends.len() == n, "every accepted frame must be journaled");
+            std::fs::write(&path, &clean[..contrib_ends[k - 1]])?;
+
+            let (mut dur, report) = DurableCoordinator::recover(build(kind, s)?, seed, &store)?;
+            ensure!(report.pending_streaming == Some(0), "S={s} {kind}: pending stream round");
+            let mut live = Loopback::new();
+            let cohort = RoundInput::Vectors(&inputs);
+            send_cohort(dur.aggregator(), &seeds, &cohort, &mask, &mut live)?;
+            let resumed = dur.resume_streaming(&mut live, 1, 1.0)?;
+            ensure!(
+                resumed.result.estimates == want.result.estimates
+                    && resumed.result.participants == n,
+                "S={s} {kind}: resumed streaming round diverged"
+            );
+            ensure!(
+                resumed.duplicate_frames == k,
+                "S={s} {kind}: the {k} replayed frames must dedup their re-sends"
+            );
+            drop(dur);
+            let (_, report) = DurableCoordinator::recover(build(kind, s)?, seed, &store)?;
+            ensure!(report.committed_rounds == 1, "S={s} {kind}: resume must commit durably");
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+    println!(
+        "gate: crash recovery bit-identical to the uninterrupted run \
+         (run_round + run_round_streaming) for S in {sweep:?} across {backends:?}"
+    );
+
+    // --- checkpointed campaign: die between rounds, resume from store ----
+    let oracle = QuadraticOracle { target: vec![0.3, -0.2, 0.7, 0.1] };
+    let fcfg = FlConfig {
+        clients: 8,
+        rounds: 4,
+        eps_round: 1.0,
+        delta_round: 1e-4,
+        lr: 0.5,
+        momentum: 0.9,
+        batch_size: 1,
+        pad_to: 8,
+        scale: 1 << 16,
+        notion: NeighborNotion::SumPreserving,
+        custom_plan: Some((3 * 8u64 * (1 << 16) + 1001, 1 << 16, 8)),
+    };
+    let batches: Vec<Batch> = (0..8).map(|_| Batch { x: vec![0.0; 4], y: vec![0; 1] }).collect();
+    let mut full = FlDriver::new(fcfg.clone(), &oracle, vec![0.0; 4], seed)?;
+    for _ in 0..4 {
+        full.run_round(&batches)?;
+    }
+    for kind in backends {
+        let root = fresh_root(&format!("fedavg_{kind}"));
+        let store = Store::new(&root)?;
+        let ecfg = fcfg.engine_config(4)?.with_shards(2);
+        let mk = || -> Result<Box<dyn Aggregator>> {
+            let b = AggregatorBuilder::new(ecfg.clone(), seed);
+            Ok(match kind {
+                "local" => b.local().build()?,
+                _ => b.loopback().build()?,
+            })
+        };
+        let mut a = FlDriver::with_aggregator(fcfg.clone(), &oracle, vec![0.0; 4], seed, mk()?)?;
+        for _ in 0..2 {
+            a.run_round(&batches)?;
+        }
+        store.write_checkpoint(&a.checkpoint())?;
+        drop(a); // the coordinator dies between rounds 1 and 2
+        let ckpt = store.read_latest_checkpoint()?.context("no checkpoint on disk")?;
+        ensure!(ckpt.rounds_done == 2 && ckpt.seed == seed, "checkpoint metadata drifted");
+        let mut b = FlDriver::resume(fcfg.clone(), &oracle, &ckpt, mk()?)?;
+        ensure!(b.aggregator().next_round() == 2, "{kind}: stack not fast-forwarded");
+        for _ in 0..2 {
+            b.run_round(&batches)?;
+        }
+        ensure!(
+            full.server.params() == b.server.params()
+                && full.server.velocity() == b.server.velocity(),
+            "{kind}: resumed campaign weights diverged from the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    println!(
+        "gate: campaign recovery bit-identical final weights after a coordinator \
+         death between rounds across {backends:?}"
+    );
+
+    // --- timed sweep: what the write-ahead journal costs ------------------
+    let mut bench = Bench::new("crash_recovery");
+    for &s in &sweep {
+        let mut bare = build("local", s)?;
+        let name = format!("round n={n} d={d} S={s} journal=off");
+        bench.run_sharded(&name, (n * d * m) as f64, s, || {
+            bare.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("bare round").estimates[0]
+        });
+        let root = fresh_root(&format!("bench_{s}"));
+        let store = Store::new(&root)?;
+        let mut dur = DurableCoordinator::create(build("local", s)?, seed, &store)?;
+        let name = format!("round n={n} d={d} S={s} journal=on");
+        bench.run_sharded(&name, (n * d * m) as f64, s, || {
+            dur.run_round(&inputs, &seeds).expect("durable round").estimates[0]
+        });
+        drop(dur);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -------
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("crash_recovery"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(
+        cases.len() == 2 * sweep.len(),
+        "expected {} cases, found {}",
+        2 * sweep.len(),
         cases.len()
     );
     for c in cases {

@@ -1,0 +1,332 @@
+//! The append-only round journal: wire frames on disk.
+//!
+//! A journal is a single file of concatenated
+//! [`wire`](crate::transport::wire) frames, written by exactly one
+//! coordinator and only ever appended to. That single-writer/append-only
+//! discipline is what makes torn-tail recovery sound: the first byte that
+//! fails to decode (length prefix cut short, checksum mismatch from a
+//! half-flushed record) can only be the crash frontier, so everything
+//! before it is a complete record and everything after it is trash —
+//! [`RoundJournal::open`] truncates the file back to that boundary and
+//! hands the clean prefix to the caller for replay.
+//!
+//! Append durability is tiered: ordinary records are buffered writes
+//! (the OS flushes them well before a process crash loses them; a kernel
+//! crash costs at most the uncommitted tail, which recovery re-derives),
+//! while [`Frame::Commit`] records — the "this round is done" barrier —
+//! fsync before returning, so a committed round can never be replayed
+//! into a different result.
+
+use std::fs::OpenOptions;
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use crate::transport::wire::{decode_frame, encode_frame, Frame};
+use crate::util::error::{Context as _, Result};
+
+/// An open, appendable round journal. See the module docs for the
+/// durability contract.
+pub struct RoundJournal {
+    file: std::fs::File,
+    path: PathBuf,
+    bytes: u64,
+}
+
+impl RoundJournal {
+    /// Start a fresh journal at `path`, truncating any existing file —
+    /// the "new campaign" entry point. Use [`RoundJournal::open`] to
+    /// preserve and replay an existing log.
+    pub fn create(path: impl Into<PathBuf>) -> Result<RoundJournal> {
+        let path = path.into();
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        Ok(RoundJournal { file, path, bytes: 0 })
+    }
+
+    /// Open (or create) the journal at `path`, replaying every complete
+    /// record and truncating a torn tail. Returns the journal positioned
+    /// for appends, the decoded records in append order, and how many
+    /// trailing bytes were dropped as torn (0 for a clean shutdown).
+    pub fn open(path: impl Into<PathBuf>) -> Result<(RoundJournal, Vec<Frame>, u64)> {
+        let path = path.into();
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let mut frames = Vec::new();
+        let mut off = 0usize;
+        while off < buf.len() {
+            match decode_frame(&buf[off..]) {
+                Ok((frame, used)) => {
+                    frames.push(frame);
+                    off += used;
+                }
+                // Single writer, append-only: the first undecodable byte
+                // is the crash frontier — drop it and everything after.
+                Err(_) => break,
+            }
+        }
+        let dropped = (buf.len() - off) as u64;
+        if dropped > 0 {
+            file.set_len(off as u64).context("truncating torn journal tail")?;
+        }
+        file.seek(SeekFrom::Start(off as u64)).context("seeking journal end")?;
+        Ok((RoundJournal { file, path, bytes: off as u64 }, frames, dropped))
+    }
+
+    /// Append one record. `Commit` records fsync before returning (the
+    /// round-done barrier); everything else is a buffered write.
+    pub fn append(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = encode_frame(frame);
+        self.file
+            .write_all(&bytes)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.bytes += bytes.len() as u64;
+        if matches!(frame, Frame::Commit { .. }) {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Append an already-encoded frame verbatim — the streaming tap uses
+    /// this to journal accepted client traffic without a re-encode.
+    /// Rejects bytes that are not exactly one well-formed frame, so a bug
+    /// in the caller can never poison the log.
+    pub fn append_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        let (_, used) = decode_frame(bytes).context("append_raw: not a valid frame")?;
+        crate::ensure!(
+            used == bytes.len(),
+            "append_raw: {} trailing bytes after one frame",
+            bytes.len() - used
+        );
+        self.file
+            .write_all(bytes)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.bytes += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Force buffered records to disk (the write-ahead barrier the
+    /// durable coordinator takes after journaling a round's work units).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("syncing journal {}", self.path.display()))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes of complete records currently in the journal.
+    pub fn len_bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::ClientBatch;
+    use crate::transport::wire::{ShardOutMsg, ShardWorkMsg};
+    use crate::util::proptest_lite::{forall, Gen};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cloak_journal_{}_{tag}.wal", std::process::id()));
+        p
+    }
+
+    /// Same harness shape as the wire codec's 0x01–0x0B prop tests: a
+    /// random frame of the types a journal actually holds.
+    fn gen_frame(g: &mut Gen) -> Frame {
+        match g.usize_in(0, 5) {
+            0 => Frame::Hello { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
+            1 => Frame::Contribute {
+                round: g.seed(),
+                batch: ClientBatch {
+                    client_stream: g.u64_below(1 << 20) as u32,
+                    shares: g.vec_below(u64::MAX, g.usize_in(0, 32)),
+                },
+            },
+            2 => Frame::Drop { round: g.seed(), client: g.u64_below(1 << 20) as u32 },
+            3 => Frame::Commit { round: g.seed(), participants: g.u64_below(1 << 20) as u32 },
+            4 => Frame::ShardOut(ShardOutMsg {
+                round: g.seed(),
+                shard: g.u64_below(256) as u32,
+                wall_ns: g.seed(),
+                estimates: (0..g.usize_in(0, 8)).map(|_| g.f64_unit() * 1e6).collect(),
+            }),
+            _ => {
+                let cohort = g.usize_in(1, 4);
+                let span = g.usize_in(1, 3);
+                Frame::ShardWork(ShardWorkMsg {
+                    round: g.seed(),
+                    shard: g.u64_below(256) as u32,
+                    lo: g.u64_below(1 << 10) as u32,
+                    span: span as u32,
+                    shard_seed: g.seed(),
+                    client_round_seeds: g.vec_below(u64::MAX, cohort),
+                    values: (0..span * cohort).map(|_| g.f64_unit()).collect(),
+                })
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_reopen() {
+        let path = tmp("roundtrip");
+        let frames = vec![
+            Frame::Hello { round: 0, client: 12 },
+            Frame::Commit { round: 0, participants: 12 },
+            Frame::Hello { round: 1, client: 12 },
+        ];
+        {
+            let mut j = RoundJournal::create(&path).unwrap();
+            for f in &frames {
+                j.append(f).unwrap();
+            }
+        }
+        let (mut j, back, dropped) = RoundJournal::open(&path).unwrap();
+        assert_eq!(back, frames);
+        assert_eq!(dropped, 0);
+        // Appends after a reopen land after the replayed records.
+        j.append(&Frame::Commit { round: 1, participants: 10 }).unwrap();
+        drop(j);
+        let (_, back2, dropped2) = RoundJournal::open(&path).unwrap();
+        assert_eq!(back2.len(), 4);
+        assert_eq!(back2[..3], frames[..]);
+        assert_eq!(dropped2, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_truncated_and_appendable() {
+        // Satellite: recovery from a half-written trailing record. Build
+        // the exact post-crash disk state — two clean records plus the
+        // first half of a third — and require open() to recover the clean
+        // prefix, truncate the file, and accept new appends.
+        let path = tmp("torn");
+        let clean = vec![
+            Frame::Hello { round: 3, client: 7 },
+            Frame::ShardOut(ShardOutMsg {
+                round: 3,
+                shard: 0,
+                wall_ns: 5,
+                estimates: vec![1.5, 2.5],
+            }),
+        ];
+        let mut bytes = Vec::new();
+        for f in &clean {
+            bytes.extend_from_slice(&encode_frame(f));
+        }
+        let torn = encode_frame(&Frame::Commit { round: 3, participants: 7 });
+        let clean_len = bytes.len();
+        bytes.extend_from_slice(&torn[..torn.len() / 2]);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (mut j, back, dropped) = RoundJournal::open(&path).unwrap();
+        assert_eq!(back, clean);
+        assert_eq!(dropped, (torn.len() / 2) as u64);
+        assert_eq!(j.len_bytes(), clean_len as u64);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len as u64);
+
+        j.append(&Frame::Commit { round: 3, participants: 7 }).unwrap();
+        drop(j);
+        let (_, back2, dropped2) = RoundJournal::open(&path).unwrap();
+        assert_eq!(back2.len(), 3);
+        assert_eq!(back2[2], Frame::Commit { round: 3, participants: 7 });
+        assert_eq!(dropped2, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prop_truncation_recovers_longest_clean_prefix() {
+        let path = tmp("prop_trunc");
+        forall("journal truncation", 60, |g: &mut Gen| {
+            let frames: Vec<Frame> = (0..g.usize_in(1, 6)).map(|_| gen_frame(g)).collect();
+            let mut bytes = Vec::new();
+            let mut ends = Vec::new();
+            for f in &frames {
+                bytes.extend_from_slice(&encode_frame(f));
+                ends.push(bytes.len());
+            }
+            let cut = g.usize_in(0, bytes.len());
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let (_, back, dropped) = RoundJournal::open(&path).unwrap();
+            let want = ends.iter().filter(|&&e| e <= cut).count();
+            assert_eq!(back[..], frames[..want], "cut at {cut}");
+            let clean = ends[..want].last().copied().unwrap_or(0);
+            assert_eq!(dropped, (cut - clean) as u64);
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prop_corruption_ends_the_log_at_the_bad_record() {
+        // A flipped bit inside record i (past its length prefix) must
+        // yield exactly records 0..i — never a silently different record.
+        let path = tmp("prop_corrupt");
+        forall("journal corruption", 60, |g: &mut Gen| {
+            let frames: Vec<Frame> = (0..g.usize_in(2, 6)).map(|_| gen_frame(g)).collect();
+            let mut bytes = Vec::new();
+            let mut starts = Vec::new();
+            for f in &frames {
+                starts.push(bytes.len());
+                bytes.extend_from_slice(&encode_frame(f));
+            }
+            let victim = g.usize_in(0, frames.len() - 1);
+            let rec_start = starts[victim];
+            let rec_end = *starts.get(victim + 1).unwrap_or(&bytes.len());
+            let pos = g.usize_in(rec_start + 4, rec_end - 1);
+            bytes[pos] ^= 1 << g.usize_in(0, 7);
+            std::fs::write(&path, &bytes).unwrap();
+            let (_, back, dropped) = RoundJournal::open(&path).unwrap();
+            assert_eq!(back[..], frames[..victim], "corrupt byte {pos} in record {victim}");
+            assert_eq!(dropped, (bytes.len() - rec_start) as u64);
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_raw_validates() {
+        let path = tmp("raw");
+        let mut j = RoundJournal::create(&path).unwrap();
+        let good = encode_frame(&Frame::Drop { round: 2, client: 5 });
+        j.append_raw(&good).unwrap();
+        assert!(j.append_raw(&good[..good.len() - 1]).is_err(), "partial frame rejected");
+        assert!(j.append_raw(b"garbage").is_err(), "garbage rejected");
+        let mut two = good.clone();
+        two.extend_from_slice(&good);
+        assert!(j.append_raw(&two).is_err(), "more than one frame rejected");
+        drop(j);
+        let (_, back, dropped) = RoundJournal::open(&path).unwrap();
+        assert_eq!(back, vec![Frame::Drop { round: 2, client: 5 }]);
+        assert_eq!(dropped, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn create_truncates_existing() {
+        let path = tmp("create");
+        {
+            let mut j = RoundJournal::create(&path).unwrap();
+            j.append(&Frame::Hello { round: 0, client: 1 }).unwrap();
+        }
+        let j = RoundJournal::create(&path).unwrap();
+        assert_eq!(j.len_bytes(), 0);
+        drop(j);
+        let (_, back, _) = RoundJournal::open(&path).unwrap();
+        assert!(back.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

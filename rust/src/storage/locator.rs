@@ -1,0 +1,347 @@
+//! `Locator`-keyed artifact store + FedAvg campaign checkpoints.
+//!
+//! The store follows the aleo-setup disk coordinator's scheme: every
+//! persistent artifact has a [`Locator`] naming it, the store maps
+//! locators to files under one root, and writes are atomic (tmp file +
+//! fsync + rename) so a crash mid-write can never leave a half-written
+//! artifact under a real name — readers see the old version or the new
+//! one, nothing in between. The round journal gets its durability from
+//! append-only framing instead (see [`journal`](super::journal)); the
+//! store is for whole-file artifacts that are replaced, not appended.
+//!
+//! [`CampaignCheckpoint`] is the FL driver's between-rounds snapshot:
+//! everything needed to resume a FedAvg campaign on a fresh coordinator —
+//! model weights, optimizer velocity, rounds done, the config fingerprint
+//! (so a checkpoint cannot resume under a drifted plan) and the campaign
+//! seed. Serialization is the crate's usual hand-rolled little-endian
+//! layout with an FNV-1a trailer; f32s travel as raw bits so a
+//! checkpoint→resume round trip is bit-exact.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::transport::wire::fnv1a32;
+use crate::util::error::{Context as _, Result};
+
+/// A durable artifact's name — the single place on-disk layout is decided.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Locator {
+    /// The campaign's append-only round journal.
+    RoundJournal,
+    /// The FedAvg checkpoint taken after `round` rounds completed.
+    Checkpoint { round: u64 },
+}
+
+impl Locator {
+    /// The file name this locator resolves to under a store root.
+    pub fn file_name(&self) -> String {
+        match self {
+            Locator::RoundJournal => "round_journal.wal".to_string(),
+            Locator::Checkpoint { round } => format!("checkpoint_{round:08}.bin"),
+        }
+    }
+}
+
+/// A directory of locator-addressed artifacts with atomic replacement.
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> Result<Store> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        Ok(Store { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The on-disk path for `loc` — handed to [`RoundJournal`]
+    /// (journal appends bypass the atomic-replace path by design).
+    ///
+    /// [`RoundJournal`]: super::RoundJournal
+    pub fn path(&self, loc: &Locator) -> PathBuf {
+        self.root.join(loc.file_name())
+    }
+
+    pub fn exists(&self, loc: &Locator) -> bool {
+        self.path(loc).exists()
+    }
+
+    /// Atomically replace `loc` with `bytes`: write a tmp file, fsync it,
+    /// rename over the real name. A crash anywhere in that sequence
+    /// leaves either the old artifact or the new one, never a torn mix.
+    pub fn write(&self, loc: &Locator, bytes: &[u8]) -> Result<()> {
+        let name = loc.file_name();
+        let tmp = self.root.join(format!("{name}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, self.path(loc)).with_context(|| format!("publishing {name}"))?;
+        Ok(())
+    }
+
+    pub fn read(&self, loc: &Locator) -> Result<Vec<u8>> {
+        fs::read(self.path(loc)).with_context(|| format!("reading {}", self.path(loc).display()))
+    }
+
+    /// The highest checkpoint round present, scanning the store root.
+    pub fn latest_checkpoint(&self) -> Option<u64> {
+        let entries = fs::read_dir(&self.root).ok()?;
+        let mut best: Option<u64> = None;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(digits) =
+                name.strip_prefix("checkpoint_").and_then(|r| r.strip_suffix(".bin"))
+            {
+                if let Ok(round) = digits.parse::<u64>() {
+                    best = Some(best.map_or(round, |b| b.max(round)));
+                }
+            }
+        }
+        best
+    }
+
+    pub fn write_checkpoint(&self, ckpt: &CampaignCheckpoint) -> Result<()> {
+        self.write(&Locator::Checkpoint { round: ckpt.rounds_done }, &ckpt.to_bytes())
+    }
+
+    pub fn read_checkpoint(&self, round: u64) -> Result<CampaignCheckpoint> {
+        CampaignCheckpoint::from_bytes(&self.read(&Locator::Checkpoint { round })?)
+    }
+
+    /// The newest readable checkpoint, if any exists.
+    pub fn read_latest_checkpoint(&self) -> Result<Option<CampaignCheckpoint>> {
+        match self.latest_checkpoint() {
+            Some(round) => Ok(Some(self.read_checkpoint(round)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Checkpoint serialization version (first byte of every checkpoint).
+pub const CHECKPOINT_VERSION: u8 = 1;
+
+/// Everything a FedAvg campaign needs to resume on a fresh coordinator.
+///
+/// Layout (little-endian, FNV-1a 32 trailer over all preceding bytes):
+///
+/// ```text
+/// ver:u8 | rounds_done:u64 | steps:u64 | config_fnv:u32 | seed:u64
+///   | nparams:u32 | params[n]:f32-bits | velocity[n]:f32-bits | fnv:u32
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignCheckpoint {
+    /// Aggregation rounds completed (the resumed stack fast-forwards here).
+    pub rounds_done: u64,
+    /// Optimizer steps taken (equals `rounds_done` for the plain driver).
+    pub steps: u64,
+    /// Fingerprint of the engine config the campaign runs under — resume
+    /// refuses a checkpoint taken under a different plan.
+    pub config_fnv: u32,
+    /// The campaign seed (client seed derivation + engine randomness).
+    pub seed: u64,
+    /// Model weights after `rounds_done` rounds.
+    pub params: Vec<f32>,
+    /// Momentum velocity after `rounds_done` rounds (same length).
+    pub velocity: Vec<f32>,
+}
+
+impl CampaignCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.params.len();
+        debug_assert_eq!(n, self.velocity.len());
+        let mut out = Vec::with_capacity(1 + 8 + 8 + 4 + 8 + 4 + 8 * n + 4);
+        out.push(CHECKPOINT_VERSION);
+        out.extend_from_slice(&self.rounds_done.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&self.config_fnv.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for p in &self.params {
+            out.extend_from_slice(&p.to_bits().to_le_bytes());
+        }
+        for v in &self.velocity {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let crc = fnv1a32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<CampaignCheckpoint> {
+        const HEADER: usize = 1 + 8 + 8 + 4 + 8 + 4;
+        crate::ensure!(bytes.len() >= HEADER + 4, "checkpoint too short: {} bytes", bytes.len());
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let got = fnv1a32(body);
+        crate::ensure!(got == want, "checkpoint checksum mismatch: {got:#010x} != {want:#010x}");
+        let mut r = Reader { b: body, at: 0 };
+        let ver = r.u8()?;
+        crate::ensure!(
+            ver == CHECKPOINT_VERSION,
+            "checkpoint version {ver} (this build reads {CHECKPOINT_VERSION})"
+        );
+        let rounds_done = r.u64()?;
+        let steps = r.u64()?;
+        let config_fnv = r.u32()?;
+        let seed = r.u64()?;
+        let n = r.u32()? as usize;
+        // Overflow-safe length check, same screen as the wire decoders.
+        crate::ensure!(
+            (body.len() - r.at) as u128 == n as u128 * 8,
+            "checkpoint claims {n} params but carries {} payload bytes",
+            body.len() - r.at
+        );
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            params.push(f32::from_bits(r.u32()?));
+        }
+        let mut velocity = Vec::with_capacity(n);
+        for _ in 0..n {
+            velocity.push(f32::from_bits(r.u32()?));
+        }
+        Ok(CampaignCheckpoint { rounds_done, steps, config_fnv, seed, params, velocity })
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        crate::ensure!(self.at + n <= self.b.len(), "checkpoint truncated at byte {}", self.at);
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, Gen};
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cloak_store_{}_{tag}", std::process::id()));
+        p
+    }
+
+    fn sample(rounds_done: u64, n: usize) -> CampaignCheckpoint {
+        CampaignCheckpoint {
+            rounds_done,
+            steps: rounds_done,
+            config_fnv: 0xdead_beef,
+            seed: 42,
+            params: (0..n).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            velocity: (0..n).map(|i| -(i as f32) * 0.125).collect(),
+        }
+    }
+
+    #[test]
+    fn store_write_read_replace() {
+        let root = tmp_root("rw");
+        let store = Store::new(&root).unwrap();
+        let loc = Locator::Checkpoint { round: 3 };
+        assert!(!store.exists(&loc));
+        store.write(&loc, b"one").unwrap();
+        assert!(store.exists(&loc));
+        assert_eq!(store.read(&loc).unwrap(), b"one");
+        store.write(&loc, b"two").unwrap();
+        assert_eq!(store.read(&loc).unwrap(), b"two");
+        // No tmp residue after a clean publish.
+        assert!(!root.join(format!("{}.tmp", loc.file_name())).exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn latest_checkpoint_picks_the_max() {
+        let root = tmp_root("latest");
+        let store = Store::new(&root).unwrap();
+        assert_eq!(store.latest_checkpoint(), None);
+        for round in [2u64, 11, 5] {
+            store.write_checkpoint(&sample(round, 4)).unwrap();
+        }
+        assert_eq!(store.latest_checkpoint(), Some(11));
+        let back = store.read_latest_checkpoint().unwrap().unwrap();
+        assert_eq!(back, sample(11, 4));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_bit_exact() {
+        let mut c = sample(7, 5);
+        // Adversarial f32s: the round trip must be raw-bits exact.
+        c.params[0] = f32::MIN_POSITIVE;
+        c.params[1] = -0.0;
+        c.velocity[2] = 1e38;
+        let back = CampaignCheckpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back, c);
+        for (a, b) in c.params.iter().zip(&back.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in c.velocity.iter().zip(&back.velocity) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn prop_checkpoint_corruption_detected() {
+        forall("checkpoint corruption", 120, |g: &mut Gen| {
+            let n = g.usize_in(1, 12);
+            let c = CampaignCheckpoint {
+                rounds_done: g.seed(),
+                steps: g.seed(),
+                config_fnv: g.u64_below(u32::MAX as u64) as u32,
+                seed: g.seed(),
+                params: (0..n).map(|_| g.f64_unit() as f32).collect(),
+                velocity: (0..n).map(|_| -(g.f64_unit() as f32)).collect(),
+            };
+            let clean = c.to_bytes();
+            assert_eq!(CampaignCheckpoint::from_bytes(&clean).unwrap(), c);
+            let mut bad = clean.clone();
+            let pos = g.usize_in(0, bad.len() - 1);
+            bad[pos] ^= 1 << g.usize_in(0, 7);
+            assert!(CampaignCheckpoint::from_bytes(&bad).is_err(), "bit flip at {pos} accepted");
+            // Truncation at any point is rejected too.
+            let cut = g.usize_in(0, clean.len() - 1);
+            assert!(CampaignCheckpoint::from_bytes(&clean[..cut]).is_err());
+        });
+    }
+
+    #[test]
+    fn checkpoint_version_screened() {
+        let mut bytes = sample(1, 2).to_bytes();
+        bytes[0] = 9;
+        // Re-stamp the checksum so only the version differs.
+        let total = bytes.len();
+        let crc = fnv1a32(&bytes[..total - 4]);
+        bytes[total - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = CampaignCheckpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Durable round state — the append-only journal and keyed checkpoint
+//! store that make a coordinator crash survivable.
+//!
+//! # Architecture
+//!
+//! ```text
+//!   DurableCoordinator (coordinator::durable)
+//!        │  write-ahead: journal every transition BEFORE acting on it
+//!        ▼
+//!   RoundJournal (storage::journal)         Store + Locator (storage::locator)
+//!        │  append-only wire frames              │  keyed whole-file artifacts
+//!        ▼                                       ▼
+//!   round_journal.wal                       checkpoint_<round>.bin
+//! ```
+//!
+//! [`RoundJournal`] is an append-only log of [`wire`](crate::transport::wire)
+//! frames — the SAME length-prefixed, FNV-checksummed codec the cluster
+//! links speak, so one decoder serves sockets and disk alike. A journal
+//! replay walks the file with `decode_frame`; the first undecodable byte
+//! (torn tail from a crash mid-`write`, flipped bit from a bad sector)
+//! ends the log, and `open` truncates the file back to the last clean
+//! record boundary. [`Store`] is a `Locator`-keyed whole-file store
+//! (atomic tmp-file + rename writes) for FedAvg campaign checkpoints
+//! ([`CampaignCheckpoint`]), following the aleo-setup disk coordinator's
+//! locator scheme.
+//!
+//! # What is journaled, and what is derivable
+//!
+//! One round's journal records, in append order:
+//!
+//! | record                   | frame                     | why |
+//! |--------------------------|---------------------------|-----|
+//! | round manifest           | `Hello` + `ShardReady`    | round id, cohort size, config fingerprint |
+//! | issued work units        | `ShardWork` / `ShardPool` | the write-ahead: everything a shard needs |
+//! | client events (streaming)| `Contribute` / `ContributeBatch` / `Drop` | accepted traffic, verbatim bytes |
+//! | per-unit outputs (recovery) | `ShardOut` (real shard id) | incremental recovery progress |
+//! | merged estimates         | `ShardOut` with [`MERGED_SHARD`] | the round's result |
+//! | round commit             | `Commit` (fsync barrier)  | the round is done; replay skips it |
+//!
+//! Everything else is *derivable* and deliberately NOT journaled: client
+//! shares are a pure function of `(client, instance, round)` seeds, the
+//! shuffle seed chain derives from `(engine seed, round, shard)`, and
+//! work units carry all of those seeds already (the property the cluster
+//! layer's retry/resend paths rely on). So the journal stores one copy
+//! of each input value and zero randomness.
+//!
+//! # Why replay is bit-identical
+//!
+//! Re-executing a journaled work unit through
+//! [`ShardExecutor`](crate::engine::ShardExecutor) reproduces the exact
+//! estimates of the uninterrupted run: encode streams are seeded per
+//! `(client, instance, round)` (all in the work unit), and the analyzer's
+//! modular sum is permutation-invariant, so the mixnet permutation — the
+//! only place the executing shard's identity enters — is invisible in
+//! the estimates. The same argument makes recovery indifferent to the
+//! engine's internal shard tiling: ANY contiguous tiling of the instance
+//! range merges to the same result (see `ShardRoundWork::slice`), so the
+//! journal's work units need not match how the crashed engine happened
+//! to partition the round.
+//!
+//! # Trust model
+//!
+//! The journal lives on the coordinator's own disk and holds exactly what
+//! the coordinator already knows — client values (encode path) or cloaked
+//! shares (streaming path). It never stores anything the analyzer could
+//! not see; durability adds no new observer. Checkpoints store model
+//! weights and optimizer state, which the FL server owns in memory anyway.
+
+pub mod journal;
+pub mod locator;
+
+pub use journal::RoundJournal;
+pub use locator::{CampaignCheckpoint, Locator, Store, CHECKPOINT_VERSION};
+
+/// Sentinel shard id marking a journaled `ShardOut` frame as the round's
+/// FINAL merged estimates (all instances), distinguishing it from the
+/// per-work-unit outputs recovery journals under real shard ids.
+pub const MERGED_SHARD: u32 = u32::MAX;

@@ -140,7 +140,9 @@ impl Bench {
 
     /// All results as a JSON document (the BENCH_*.json schema): group +
     /// one record per case with timing percentiles, the optional
-    /// throughput denominator and the optional `shards` axis.
+    /// throughput denominator and the optional `shards` axis — plus a
+    /// `machine` block (os/arch/cpus) so committed baselines say what
+    /// hardware produced them.
     pub fn to_json(&self) -> Json {
         let cases: Vec<Json> = self
             .results
@@ -166,7 +168,17 @@ impl Bench {
                 obj(entries)
             })
             .collect();
-        obj(vec![("group", s(&self.group)), ("cases", Json::Arr(cases))])
+        let cpus = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let machine = obj(vec![
+            ("os", s(std::env::consts::OS)),
+            ("arch", s(std::env::consts::ARCH)),
+            ("cpus", num(cpus as f64)),
+        ]);
+        obj(vec![
+            ("group", s(&self.group)),
+            ("cases", Json::Arr(cases)),
+            ("machine", machine),
+        ])
     }
 
     /// Write the JSON report to `path` (conventionally `BENCH_<group>.json`).
@@ -285,6 +297,12 @@ mod tests {
         assert!(cases[0].get("shards").is_none(), "unsharded case has no shards field");
         assert_eq!(cases[1].get("shards").and_then(|v| v.as_u64()), Some(8));
         assert!(cases[1].get("mean_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // machine metadata rides along so committed baselines are
+        // attributable to the hardware that produced them
+        let machine = j.get("machine").expect("machine block");
+        assert_eq!(machine.get("os").and_then(|v| v.as_str()), Some(std::env::consts::OS));
+        assert_eq!(machine.get("arch").and_then(|v| v.as_str()), Some(std::env::consts::ARCH));
+        assert!(machine.get("cpus").and_then(|v| v.as_u64()).unwrap() >= 1);
         // and the document round-trips through the JSON parser
         let text = j.to_string_pretty();
         assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);

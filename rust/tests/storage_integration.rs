@@ -1,0 +1,327 @@
+//! Integration: durable rounds end-to-end — the crash-recovery
+//! acceptance matrix.
+//!
+//! * Encode-path crash recovery: a [`DurableCoordinator`] killed right
+//!   after the write-ahead barrier (and again with a torn trailing
+//!   record) is recovered from its journal and must finish the round with
+//!   estimates bit-identical to the run that never crashed — across local
+//!   and cluster (`Remote(Loopback)`) stacks at S ∈ {1, 4} — then keep
+//!   running the campaign.
+//! * Streaming crash recovery: killed after k accepted client frames,
+//!   recovered, and resumed over a full cohort re-send; replayed frames
+//!   dedup the re-sends and the round closes bit-identical.
+//! * Checkpointed FedAvg: a 2-round campaign checkpoints to the
+//!   [`Store`], the coordinator dies, and a fresh driver resumed from the
+//!   checkpoint finishes with final weights bit-identical to the
+//!   4-round uninterrupted reference.
+
+use std::path::PathBuf;
+
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+use cloak_agg::coordinator::durable::DurableCoordinator;
+use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+use cloak_agg::fl::{data::Batch, FlConfig, FlDriver, GradOracle};
+use cloak_agg::params::{NeighborNotion, ProtocolPlan};
+use cloak_agg::storage::{Locator, Store};
+use cloak_agg::transport::channel::Loopback;
+use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+use cloak_agg::transport::wire::{decode_frame, Frame};
+use cloak_agg::util::error::Result;
+
+fn cfg(n: usize, d: usize, shards: usize) -> EngineConfig {
+    EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d).with_shards(shards)
+}
+
+fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+        .collect()
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cloak_storage_it_{}_{tag}", std::process::id()));
+    p
+}
+
+/// Build one stack flavor: in-process `local` or full-wire-codec cluster
+/// `loopback` — the two the recovery acceptance matrix runs over.
+fn stack(flavor: &str, ecfg: EngineConfig, seed: u64) -> Box<dyn Aggregator> {
+    let b = AggregatorBuilder::new(ecfg, seed);
+    match flavor {
+        "local" => b.local().build().unwrap(),
+        _ => b.loopback().build().unwrap(),
+    }
+}
+
+/// Decode a journal file into (start, end) spans of its records.
+fn frame_spans(bytes: &[u8]) -> Vec<(usize, usize, Frame)> {
+    let mut off = 0usize;
+    let mut spans = Vec::new();
+    while off < bytes.len() {
+        let (f, used) = decode_frame(&bytes[off..]).unwrap();
+        spans.push((off, off + used, f));
+        off += used;
+    }
+    spans
+}
+
+#[test]
+fn encode_crash_recovery_bit_identical_across_stacks() {
+    let (n, d, seed) = (12usize, 6usize, 77u64);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+
+    // Uninterrupted 2-round reference (stack-independent by the facade
+    // invariant, so one local run anchors every flavor below).
+    let mut reference = AggregatorBuilder::new(cfg(n, d, 1), seed).build().unwrap();
+    let want0 = reference.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+    let want1 = reference.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+
+    for shards in [1usize, 4] {
+        for flavor in ["local", "loopback"] {
+            let mk = || stack(flavor, cfg(n, d, shards), seed);
+            let root = tmp_root(&format!("enc_{shards}_{flavor}"));
+            let store = Store::new(&root).unwrap();
+
+            // One complete durable round — its journal is the crash-site
+            // template, and the journaled run itself must be unperturbed.
+            let mut dur = DurableCoordinator::create(mk(), seed, &store).unwrap();
+            let got = dur.run_round(&inputs, &seeds).unwrap();
+            assert_eq!(
+                got.estimates, want0.estimates,
+                "S={shards} {flavor}: journaling changed the round"
+            );
+            drop(dur);
+            let path = store.path(&Locator::RoundJournal);
+            let clean = std::fs::read(&path).unwrap();
+            let work_ends: Vec<usize> = frame_spans(&clean)
+                .iter()
+                .filter(|(_, _, f)| matches!(f, Frame::ShardWork(_)))
+                .map(|&(_, end, _)| end)
+                .collect();
+            let nworks = work_ends.len();
+            assert_eq!(nworks, shards.min(d), "S={shards}: one unit per non-empty shard");
+            let barrier = *work_ends.last().unwrap();
+
+            // Kill point A: right after the write-ahead barrier (no unit
+            // finished). Kill point B: a torn tail 7 bytes into the next
+            // record — open() must drop exactly those bytes and recovery
+            // proceed as from A.
+            for (tag, cut, want_truncated) in
+                [("barrier", barrier, 0u64), ("torn", barrier + 7, 7u64)]
+            {
+                std::fs::write(&path, &clean[..cut]).unwrap();
+                let (mut dur, report) =
+                    DurableCoordinator::recover(mk(), seed, &store).unwrap();
+                assert_eq!(report.truncated_bytes, want_truncated, "{tag}");
+                assert_eq!(report.resumed_round, Some(0), "S={shards} {flavor} {tag}");
+                assert_eq!(report.reissued_units, nworks, "every unit was unfinished");
+                assert_eq!(report.skipped_units, 0);
+                let resumed = report.resumed_estimates.unwrap();
+                assert_eq!(
+                    resumed.estimates, want0.estimates,
+                    "S={shards} {flavor} {tag}: recovery diverged from the \
+                     uninterrupted run"
+                );
+                assert_eq!(resumed.participants, n);
+                // The recovered coordinator continues the campaign with
+                // the round ids — and estimates — of the run that never
+                // crashed.
+                assert_eq!(dur.next_round(), 1);
+                let got1 = dur.run_round(&inputs, &seeds).unwrap();
+                assert_eq!(got1.estimates, want1.estimates, "S={shards} {flavor} {tag}");
+                assert_eq!(got1.round_id, 1);
+            }
+
+            // Kill point C: mid write-ahead (only the first unit on
+            // disk, S > 1). The units don't tile the instance range, so
+            // the round never started — recovery abandons it and a plain
+            // re-run produces the reference round under the same id.
+            if nworks > 1 {
+                std::fs::write(&path, &clean[..work_ends[0]]).unwrap();
+                let (mut dur, report) =
+                    DurableCoordinator::recover(mk(), seed, &store).unwrap();
+                assert_eq!(report.abandoned_round, Some(0), "S={shards} {flavor}");
+                assert!(report.resumed_round.is_none());
+                assert_eq!(dur.next_round(), 0, "abandoned id is re-used");
+                let got0 = dur.run_round(&inputs, &seeds).unwrap();
+                assert_eq!(got0.estimates, want0.estimates, "S={shards} {flavor}");
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+#[test]
+fn streaming_crash_recovery_bit_identical_across_stacks() {
+    let (n, d, seed, k) = (10usize, 4usize, 99u64, 4usize);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+    let mask = vec![false; n];
+
+    for shards in [1usize, 4] {
+        for flavor in ["local", "loopback"] {
+            let mk = || stack(flavor, cfg(n, d, shards), seed);
+
+            // Uninterrupted streaming reference on this stack shape.
+            let mut plain = mk();
+            let mut ch = Loopback::new();
+            send_cohort(plain.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &mask, &mut ch)
+                .unwrap();
+            let want = StreamingRound::drive(
+                plain.as_mut(),
+                &mut ch,
+                &StreamConfig::new(n).with_quorum(1),
+            )
+            .unwrap();
+
+            // A complete durable streaming round (unperturbed), then cut
+            // its journal to "killed after k accepted client frames".
+            let root = tmp_root(&format!("stream_{shards}_{flavor}"));
+            let store = Store::new(&root).unwrap();
+            let mut dur = DurableCoordinator::create(mk(), seed, &store).unwrap();
+            let mut ch = Loopback::new();
+            send_cohort(
+                dur.aggregator(),
+                &seeds,
+                &RoundInput::Vectors(&inputs),
+                &mask,
+                &mut ch,
+            )
+            .unwrap();
+            let got = dur.run_round_streaming(&mut ch, n, 1, 1.0).unwrap();
+            assert_eq!(
+                got.result.estimates, want.result.estimates,
+                "S={shards} {flavor}: journaling changed the streamed round"
+            );
+            drop(dur);
+            let path = store.path(&Locator::RoundJournal);
+            let clean = std::fs::read(&path).unwrap();
+            let contrib_ends: Vec<usize> = frame_spans(&clean)
+                .iter()
+                .filter(|(_, _, f)| matches!(f, Frame::Contribute { .. }))
+                .map(|&(_, end, _)| end)
+                .collect();
+            assert_eq!(contrib_ends.len(), n, "every accepted frame was journaled");
+            std::fs::write(&path, &clean[..contrib_ends[k - 1]]).unwrap();
+
+            let (mut dur, report) = DurableCoordinator::recover(mk(), seed, &store).unwrap();
+            assert_eq!(report.pending_streaming, Some(0), "S={shards} {flavor}");
+            assert_eq!(dur.pending_streaming_round(), Some(0));
+
+            // The restarted cohort re-sends everything; the k replayed
+            // frames dedup their re-sent copies and the round closes over
+            // the same n contributions in the same pool order.
+            let mut live = Loopback::new();
+            send_cohort(
+                dur.aggregator(),
+                &seeds,
+                &RoundInput::Vectors(&inputs),
+                &mask,
+                &mut live,
+            )
+            .unwrap();
+            let resumed = dur.resume_streaming(&mut live, 1, 1.0).unwrap();
+            assert_eq!(
+                resumed.result.estimates, want.result.estimates,
+                "S={shards} {flavor}: resumed streaming round diverged"
+            );
+            assert_eq!(resumed.result.participants, n);
+            assert_eq!(resumed.duplicate_frames, k, "replays dedup the re-sends");
+            drop(dur);
+
+            // The resume committed durably.
+            let (_, report) = DurableCoordinator::recover(mk(), seed, &store).unwrap();
+            assert_eq!(report.committed_rounds, 1, "S={shards} {flavor}");
+            assert!(report.pending_streaming.is_none());
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+/// Closed-form oracle for the FL campaign: loss = ‖p − p*‖²/2, gradient
+/// clipped to unit norm (batch ignored).
+struct QuadraticOracle {
+    target: Vec<f32>,
+}
+
+impl GradOracle for QuadraticOracle {
+    fn loss_and_grad(&self, params: &[f32], _batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let diff: Vec<f32> = params.iter().zip(&self.target).map(|(p, t)| p - t).collect();
+        let loss = 0.5 * diff.iter().map(|d| d * d).sum::<f32>();
+        let norm = diff.iter().map(|d| d * d).sum::<f32>().sqrt().max(1e-12);
+        let scale = (1.0 / norm).min(1.0);
+        Ok((loss, diff.iter().map(|d| d * scale).collect()))
+    }
+}
+
+fn fl_cfg(clients: usize) -> FlConfig {
+    FlConfig {
+        clients,
+        rounds: 4,
+        eps_round: 1.0,
+        delta_round: 1e-4,
+        lr: 0.5,
+        momentum: 0.9,
+        batch_size: 1,
+        pad_to: 8,
+        scale: 1 << 16,
+        notion: NeighborNotion::SumPreserving,
+        custom_plan: Some((3 * clients as u64 * (1 << 16) + 1001, 1 << 16, 8)),
+    }
+}
+
+fn dummy_batches(n: usize) -> Vec<Batch> {
+    (0..n).map(|_| Batch { x: vec![0.0; 4], y: vec![0; 1] }).collect()
+}
+
+#[test]
+fn checkpointed_fedavg_campaign_survives_coordinator_death() {
+    // Rounds 0–1 on coordinator A (checkpoint to the store, then die);
+    // rounds 2–3 on a fresh coordinator B resumed from the latest
+    // checkpoint. Final weights must be bit-identical to the 4-round
+    // campaign that never died — over the local and cluster stacks.
+    let oracle = QuadraticOracle { target: vec![0.3, -0.2, 0.7, 0.1] };
+    let fcfg = fl_cfg(8);
+    let batches = dummy_batches(8);
+    let seed = 11u64;
+
+    let mut full = FlDriver::new(fcfg.clone(), &oracle, vec![0.0; 4], seed).unwrap();
+    for _ in 0..4 {
+        full.run_round(&batches).unwrap();
+    }
+
+    for flavor in ["local", "loopback"] {
+        let root = tmp_root(&format!("fedavg_{flavor}"));
+        let store = Store::new(&root).unwrap();
+        let ecfg = fcfg.engine_config(4).unwrap().with_shards(2);
+        let mk = || stack(flavor, ecfg.clone(), seed);
+
+        let mut a =
+            FlDriver::with_aggregator(fcfg.clone(), &oracle, vec![0.0; 4], seed, mk()).unwrap();
+        for _ in 0..2 {
+            a.run_round(&batches).unwrap();
+        }
+        store.write_checkpoint(&a.checkpoint()).unwrap();
+        drop(a); // coordinator A dies between rounds 1 and 2
+
+        let ckpt = store.read_latest_checkpoint().unwrap().expect("checkpoint on disk");
+        assert_eq!(ckpt.rounds_done, 2);
+        assert_eq!(ckpt.steps, 2);
+        assert_eq!(ckpt.seed, seed, "campaign seed travels in the checkpoint");
+        let mut b = FlDriver::resume(fcfg.clone(), &oracle, &ckpt, mk()).unwrap();
+        assert_eq!(b.aggregator().next_round(), 2, "{flavor}: stack fast-forwarded");
+        for _ in 0..2 {
+            b.run_round(&batches).unwrap();
+        }
+        assert_eq!(
+            full.server.params(),
+            b.server.params(),
+            "{flavor}: resumed campaign weights diverged"
+        );
+        assert_eq!(full.server.velocity(), b.server.velocity(), "{flavor}: velocity");
+        assert_eq!(b.accountant().num_rounds(), 4, "{flavor}: budget re-composed");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
