@@ -95,6 +95,7 @@ use crate::engine::{
     ShardBackendError, ShardHealth,
 };
 use crate::metrics::Registry as MetricsRegistry;
+use crate::telemetry::Tracer;
 use crate::transport::channel::Channel;
 
 /// Why an aggregation round failed, unified across implementations.
@@ -276,6 +277,22 @@ pub trait Aggregator {
     fn shard_health(&self) -> Vec<ShardHealth> {
         Vec::new()
     }
+
+    /// This stack's flight recorder (see [`crate::telemetry`]). The
+    /// default is the disabled [`Tracer::noop`] — existing callers pay
+    /// one branch per would-be record and allocate nothing. A `Tracer`
+    /// is an `Arc` handle: the returned clone observes everything the
+    /// stack records.
+    fn telemetry(&self) -> Tracer {
+        Tracer::noop()
+    }
+
+    /// Install a flight recorder on this stack. Implementations thread
+    /// it through their backends (barrier, executor, control plane); the
+    /// default ignores it for stacks without instrumentation.
+    fn set_telemetry(&mut self, tracer: Tracer) {
+        let _ = tracer;
+    }
 }
 
 impl Aggregator for Engine {
@@ -348,6 +365,14 @@ impl Aggregator for Engine {
     fn fast_forward(&mut self, next_round: u64) -> Result<(), AggregatorError> {
         Engine::fast_forward(self, next_round);
         Ok(())
+    }
+
+    fn telemetry(&self) -> Tracer {
+        Engine::tracer(self)
+    }
+
+    fn set_telemetry(&mut self, tracer: Tracer) {
+        Engine::set_tracer(self, tracer);
     }
 }
 
@@ -425,6 +450,14 @@ impl Aggregator for ClusterEngine {
 
     fn shard_health(&self) -> Vec<ShardHealth> {
         ClusterEngine::shard_health(self)
+    }
+
+    fn telemetry(&self) -> Tracer {
+        ClusterEngine::tracer(self)
+    }
+
+    fn set_telemetry(&mut self, tracer: Tracer) {
+        ClusterEngine::set_tracer(self, tracer);
     }
 }
 

@@ -50,6 +50,7 @@ use crate::engine::{
 };
 use crate::metrics::Registry as MetricsRegistry;
 use crate::rng::derive_seed;
+use crate::telemetry::{EventKind, EventRecord, SpanKind, Tracer, SHARD_NONE};
 use crate::transport::channel::{Channel, Loopback};
 use crate::transport::wire::{
     decode_frame, encode_frame, Frame, ShardAssignMsg, ShardOutMsg, ShardPoolMsg,
@@ -129,6 +130,13 @@ pub struct RemoteShardBackend {
     fingerprint: u32,
     retries: u64,
     label: &'static str,
+    /// Flight recorder for frame/retry/reconnect events (noop default).
+    tracer: Tracer,
+    /// Bytes attributed to telemetry frame events since the last
+    /// [`ShardBackend::take_traffic`] — incremented at exactly the
+    /// `record_frame` call sites, so it must equal `traffic.bytes`; the
+    /// debug assert in `take_traffic` is the double-counting tripwire.
+    bytes_attributed: u64,
 }
 
 impl RemoteShardBackend {
@@ -146,6 +154,8 @@ impl RemoteShardBackend {
             fingerprint: config_fingerprint(cfg),
             retries: 0,
             label,
+            tracer: Tracer::noop(),
+            bytes_attributed: 0,
         }
     }
 
@@ -261,6 +271,8 @@ impl RemoteShardBackend {
         if let LinkKind::Tcp { chan, .. } = &mut link.kind {
             *chan = None;
             link.ready.clear();
+            let shard = link.shard;
+            self.tracer.record(EventRecord::new(EventKind::Reconnect, 0).with_shard(shard));
         }
     }
 
@@ -269,10 +281,17 @@ impl RemoteShardBackend {
     /// connect moves nothing, and `bytes_per_user` must not say it did).
     fn transmit(&mut self, i: usize, frame: Vec<u8>) -> Result<(), ShardBackendError> {
         let wire_len = frame.len();
+        let shard = self.links[i].shard;
         let poll = Duration::from_secs_f64(self.tuning.poll_s.max(1e-3));
         match &mut self.links[i].kind {
             LinkKind::Sim { down, up, server } => {
                 self.traffic.record_frame(wire_len, &self.cost);
+                self.bytes_attributed += wire_len as u64;
+                self.tracer.record(
+                    EventRecord::new(EventKind::FrameSent, 0)
+                        .with_shard(shard)
+                        .with_bytes(wire_len as u64),
+                );
                 down.send(frame);
                 // Step the in-memory server: serve whatever survived the
                 // fault injector, queueing replies on the up channel.
@@ -297,6 +316,12 @@ impl RemoteShardBackend {
                 }
                 if let Some(c) = chan {
                     self.traffic.record_frame(wire_len, &self.cost);
+                    self.bytes_attributed += wire_len as u64;
+                    self.tracer.record(
+                        EventRecord::new(EventKind::FrameSent, 0)
+                            .with_shard(shard)
+                            .with_bytes(wire_len as u64),
+                    );
                     c.send(frame);
                     if c.is_dead() {
                         *chan = None;
@@ -337,6 +362,12 @@ impl RemoteShardBackend {
             match got {
                 Some((_t, bytes)) => {
                     self.traffic.record_frame(bytes.len(), &self.cost);
+                    self.bytes_attributed += bytes.len() as u64;
+                    self.tracer.record(
+                        EventRecord::new(EventKind::FrameReceived, 0)
+                            .with_shard(self.links[i].shard)
+                            .with_bytes(bytes.len() as u64),
+                    );
                     match decode_frame(&bytes) {
                         Ok((f, used)) if used == bytes.len() => return Ok(Some(f)),
                         // Corrupt frame: skip it; the retry path owns
@@ -430,6 +461,8 @@ impl RemoteShardBackend {
                     }
                     self.pace_retry(i, attempt_start);
                     self.retries += 1;
+                    self.tracer
+                        .record(EventRecord::new(EventKind::Retry, 0).with_shard(shard_id));
                     if self.link_is_down(i) {
                         self.reset_link(i);
                     }
@@ -559,6 +592,7 @@ impl RemoteShardBackend {
                 p.attempts += 1;
                 attempt_start = Instant::now();
                 self.retries += 1;
+                self.tracer.record(EventRecord::new(EventKind::Retry, round).with_shard(shard));
                 // A merely-slow shard keeps its connection (and its
                 // in-progress execution); only a down link is rebuilt.
                 if self.link_is_down(p.link) {
@@ -602,7 +636,21 @@ impl ShardBackend for RemoteShardBackend {
     }
 
     fn take_traffic(&mut self) -> TrafficStats {
-        std::mem::take(&mut self.traffic)
+        let traffic = std::mem::take(&mut self.traffic);
+        // Reconciliation tripwire (see `bytes_attributed`): a new
+        // `record_frame` call site without its telemetry event — or a
+        // double-charged frame — trips this in debug builds and in the
+        // trace-sim gate.
+        debug_assert_eq!(
+            self.bytes_attributed, traffic.bytes,
+            "telemetry byte attribution must equal TrafficStats frame bytes"
+        );
+        self.bytes_attributed = 0;
+        traffic
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     fn retries(&self) -> u64 {
@@ -636,6 +684,9 @@ pub struct ClusterEngine {
     metrics: MetricsRegistry,
     last_retries: u64,
     last_takeovers: u64,
+    /// Flight recorder (disabled by default); installed on the backend
+    /// too, so frame/retry/takeover events land in the same ring.
+    tracer: Tracer,
 }
 
 impl ClusterEngine {
@@ -653,6 +704,7 @@ impl ClusterEngine {
             metrics: MetricsRegistry::new(),
             last_retries: 0,
             last_takeovers: 0,
+            tracer: Tracer::noop(),
             cfg,
         }
     }
@@ -674,6 +726,19 @@ impl ClusterEngine {
 
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.metrics
+    }
+
+    /// Install a flight recorder on this engine AND its backend (frame,
+    /// retry, and takeover events share the round/phase spans' ring).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.backend.set_tracer(tracer.clone());
+        self.tracer = tracer;
+    }
+
+    /// Handle to the installed flight recorder (noop unless
+    /// [`ClusterEngine::set_tracer`] was called).
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
     }
 
     pub fn rounds_run(&self) -> u64 {
@@ -777,6 +842,7 @@ impl ClusterEngine {
         let m = self.cfg.plan.num_messages;
         let round = self.rounds_run;
         let t0 = Instant::now();
+        let _round_span = self.tracer.span(SpanKind::Round, "round", round, SHARD_NONE);
         let ranges = self.round_ranges(round)?;
         let round_seed = derive_seed(self.shuffle_seed, round);
         let client_round_seeds: Vec<u64> =
@@ -804,8 +870,12 @@ impl ClusterEngine {
             })
             .collect();
 
+        let barrier_span = self.tracer.span(SpanKind::Phase, "barrier", round, SHARD_NONE);
         let outs = self.backend.run_shards(work)?;
+        drop(barrier_span);
+        let merge_span = self.tracer.span(SpanKind::Phase, "merge", round, SHARD_NONE);
         let estimates = self.merge(round, &ranges, outs)?;
+        drop(merge_span);
         self.rounds_run += 1;
 
         // Client uplink accounting identical to the in-process engine,
@@ -816,6 +886,11 @@ impl ClusterEngine {
         for _ in 0..n {
             traffic.record_batch(d * m, bytes, &cost);
         }
+        self.tracer.record(
+            EventRecord::new(EventKind::ClientUplink, round)
+                .with_bytes((n * d * m * bytes) as u64)
+                .with_count(n as u64),
+        );
         traffic.merge(&self.backend.take_traffic());
 
         let wall = t0.elapsed().as_secs_f64();
@@ -871,6 +946,7 @@ impl ClusterEngine {
         let m = self.cfg.plan.num_messages;
         let round = self.rounds_run;
         let t0 = Instant::now();
+        let _round_span = self.tracer.span(SpanKind::Round, "round", round, SHARD_NONE);
         let ranges = self.round_ranges(round)?;
         let round_seed = derive_seed(self.shuffle_seed, round);
         let work: Vec<ShardRoundWork> = ranges
@@ -890,8 +966,12 @@ impl ClusterEngine {
             })
             .collect();
 
+        let barrier_span = self.tracer.span(SpanKind::Phase, "barrier", round, SHARD_NONE);
         let outs = self.backend.run_shards(work)?;
+        drop(barrier_span);
+        let merge_span = self.tracer.span(SpanKind::Phase, "merge", round, SHARD_NONE);
         let estimates = self.merge(round, &ranges, outs)?;
+        drop(merge_span);
         self.rounds_run += 1;
 
         let cost = CostModel::default();
@@ -900,6 +980,11 @@ impl ClusterEngine {
         for _ in 0..participants {
             traffic.record_batch(d * m, bytes, &cost);
         }
+        self.tracer.record(
+            EventRecord::new(EventKind::ClientUplink, round)
+                .with_bytes((participants * d * m * bytes) as u64)
+                .with_count(participants as u64),
+        );
         traffic.merge(&self.backend.take_traffic());
 
         let wall = t0.elapsed().as_secs_f64();
@@ -1043,6 +1128,29 @@ mod tests {
         // 2 shards × (assign + ready + work + out) = 8 extra messages
         assert_eq!(cluster_traffic.messages, engine_traffic.messages + 8);
         assert!(cluster_traffic.bytes_per_user(n) > engine_traffic.bytes_per_user(n));
+    }
+
+    /// The reconciliation gate in unit form: with a tracer installed,
+    /// every frame byte the backend charges to [`TrafficStats`] is
+    /// attributed to exactly one FrameSent/FrameReceived event, and the
+    /// client-uplink event carries the `record_batch` total — so
+    /// telemetry byte attribution equals the round's traffic bytes with
+    /// no double counting (the debug assert in `take_traffic` checks the
+    /// backend half of the same identity).
+    #[test]
+    fn telemetry_byte_attribution_reconciles_with_traffic() {
+        use crate::telemetry::attributed_bytes;
+        let (n, d, seed) = (8usize, 4usize, 3u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let cfg = EngineConfig::new(small_plan(n), d).with_shards(2);
+        let mut cluster =
+            ClusterEngine::new(cfg.clone(), seed, Box::new(RemoteShardBackend::loopback(&cfg)));
+        cluster.set_tracer(Tracer::new(4096));
+        let result = cluster.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let trace = cluster.tracer().snapshot();
+        assert_eq!(trace.open_spans, 0, "every span must close by round end");
+        assert_eq!(attributed_bytes(&trace.events), result.traffic.bytes);
     }
 
     #[test]

@@ -28,6 +28,7 @@
 
 use crate::cluster::{RemoteShardBackend, ShardAttempt};
 use crate::engine::{ranges_tile, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork};
+use crate::telemetry::{EventKind, EventRecord, SpanKind, Tracer};
 use crate::transport::wire::ShardOutMsg;
 use crate::transport::TrafficStats;
 
@@ -76,13 +77,24 @@ pub struct ElasticController {
     /// Next virtual shard id suffix — never reused, so a stale takeover
     /// placement on a server can never match later work.
     virt_next: u32,
+    /// Flight recorder for takeover scopes (noop default; shared with the
+    /// inner backend's frame/retry events via [`ShardBackend::set_tracer`]).
+    tracer: Tracer,
 }
 
 impl ElasticController {
     pub fn new(inner: RemoteShardBackend, policy: Box<dyn RebalancePolicy>) -> Self {
         let tuning = ElasticTuning::default();
         let directory = ShardDirectory::new(inner.link_count(), tuning.ewma_alpha);
-        ElasticController { inner, directory, policy, tuning, takeovers: 0, virt_next: 0 }
+        ElasticController {
+            inner,
+            directory,
+            policy,
+            tuning,
+            takeovers: 0,
+            virt_next: 0,
+            tracer: Tracer::noop(),
+        }
     }
 
     pub fn with_tuning(mut self, tuning: ElasticTuning) -> Self {
@@ -108,6 +120,14 @@ impl ElasticController {
         let (round, shard) = (lost.round(), lost.shard());
         let (lo, hi) = (lost.lo(), lost.lo() + lost.span());
         self.takeovers += 1;
+        // Recovery scope + event: the count is the instance span being
+        // re-scattered — sizes and ids only, per the telemetry trust rule.
+        let _takeover_span = self.tracer.span(SpanKind::Recovery, "takeover", round, shard);
+        self.tracer.record(
+            EventRecord::new(EventKind::Takeover, round)
+                .with_shard(shard)
+                .with_count((hi - lo) as u64),
+        );
         let mut missing: Vec<(u32, u32)> = vec![(lo, hi)];
         // (slice lo, output) pieces, stitched back together at the end.
         let mut pieces: Vec<(u32, ShardOutMsg)> = Vec::new();
@@ -247,6 +267,11 @@ impl ShardBackend for ElasticController {
 
     fn take_traffic(&mut self) -> TrafficStats {
         self.inner.take_traffic()
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.inner.set_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 
     fn retries(&self) -> u64 {

@@ -30,6 +30,7 @@ use crate::engine::{
 };
 use crate::rng::derive_seed;
 use crate::storage::{Locator, RoundJournal, Store, MERGED_SHARD};
+use crate::telemetry::{EventKind, EventRecord, SpanKind, Tracer, SHARD_NONE};
 use crate::transport::channel::Channel;
 use crate::transport::streaming::{StreamConfig, StreamOutcome, StreamingRound};
 use crate::transport::wire::{
@@ -149,7 +150,8 @@ impl DurableCoordinator {
     /// [`Locator::RoundJournal`] slot. Use [`DurableCoordinator::recover`]
     /// after a crash.
     pub fn create(agg: Box<dyn Aggregator>, seed: u64, store: &Store) -> Result<Self> {
-        let journal = RoundJournal::create(store.path(&Locator::RoundJournal))?;
+        let mut journal = RoundJournal::create(store.path(&Locator::RoundJournal))?;
+        journal.set_tracer(agg.telemetry());
         Ok(DurableCoordinator { agg, seed, journal, pending: None })
     }
 
@@ -169,6 +171,12 @@ impl DurableCoordinator {
     ) -> Result<(Self, RecoveryReport)> {
         let (mut journal, frames, truncated) =
             RoundJournal::open(store.path(&Locator::RoundJournal))?;
+        journal.set_tracer(agg.telemetry());
+        agg.telemetry().record(
+            EventRecord::new(EventKind::JournalReplay, 0)
+                .with_count(frames.len() as u64)
+                .with_bytes(truncated),
+        );
         let fnv = config_fingerprint(agg.config());
         let mut report = RecoveryReport { truncated_bytes: truncated, ..Default::default() };
 
@@ -250,7 +258,18 @@ impl DurableCoordinator {
                 // rather than guess.
                 report.abandoned_round = Some(scan.round);
             } else if !scan.works.is_empty() {
-                Self::resume_encode_round(&mut agg, &mut journal, scan, &mut report)?;
+                // Re-execution runs under the replay flag: every span and
+                // event it emits is marked, so a recovered round's trace is
+                // distinguishable from — but skeleton-identical to — the
+                // uninterrupted run's.
+                let tracer = agg.telemetry();
+                let round = scan.round;
+                tracer.set_replay(true);
+                let span = tracer.span(SpanKind::Recovery, "recover", round, SHARD_NONE);
+                let res = Self::resume_encode_round(&mut agg, &mut journal, scan, &mut report);
+                drop(span);
+                tracer.set_replay(false);
+                res?;
             } else {
                 // Streaming round: manifest (and possibly accepted client
                 // frames) without a commit. Stage it for resume — the
@@ -316,7 +335,8 @@ impl DurableCoordinator {
             estimates.copy_from_slice(&merged.estimates);
             skipped = works.len();
         } else {
-            let exec = ShardExecutor::new(agg.config());
+            let mut exec = ShardExecutor::new(agg.config());
+            exec.set_tracer(agg.telemetry());
             for w in &works {
                 let (lo, span) = (w.lo() as usize, w.span() as usize);
                 if let Some(out) = scan.outs.get(&w.shard()) {
@@ -380,6 +400,13 @@ impl DurableCoordinator {
     /// Bytes of complete records currently journaled.
     pub fn journal_len_bytes(&self) -> u64 {
         self.journal.len_bytes()
+    }
+
+    /// Install a flight recorder on the wrapped stack AND the journal, so
+    /// round/phase spans and journal append/commit events share one ring.
+    pub fn set_telemetry(&mut self, tracer: Tracer) {
+        self.agg.set_telemetry(tracer.clone());
+        self.journal.set_tracer(tracer);
     }
 
     /// Unwrap the stack (drops the journal handle; the file stays).
@@ -754,6 +781,59 @@ mod tests {
         let (_, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
         assert_eq!(report.committed_rounds, 2);
         assert!(report.resumed_round.is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn recovered_round_replays_the_same_span_skeleton() {
+        // The trace-sim recovery gate in unit form: a crash-recovered
+        // round re-executes exactly the compute/phase spans the
+        // uninterrupted run emitted (same names, rounds, shards), with
+        // every recovered span replay-marked.
+        use crate::telemetry::{span_skeleton, Tracer};
+        let (n, d, seed) = (10usize, 5usize, 19u64);
+        let cfg = small_cfg(n, d, 2);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+
+        // Uninterrupted reference trace.
+        let mut plain = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let live_tracer = Tracer::new(4096);
+        plain.set_telemetry(live_tracer.clone());
+        plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let live = live_tracer.snapshot();
+        assert!(live.spans.iter().all(|s| !s.replay), "live spans are unmarked");
+
+        // The same round, crashed right after the write-ahead barrier.
+        let root = tmp_root("trace_skeleton");
+        let store = Store::new(&root).unwrap();
+        let agg = AggregatorBuilder::new(cfg.clone(), seed).build().unwrap();
+        let mut dur = DurableCoordinator::create(agg, seed, &store).unwrap();
+        dur.run_round(&inputs, &seeds).unwrap();
+        drop(dur);
+        let path = store.path(&Locator::RoundJournal);
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = frame_spans(&bytes)
+            .iter()
+            .filter(|(_, _, f)| matches!(f, Frame::ShardWork(_)))
+            .map(|&(_, end, _)| end)
+            .max()
+            .unwrap();
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+
+        let mut agg = AggregatorBuilder::new(cfg, seed).build().unwrap();
+        let replay_tracer = Tracer::new(4096);
+        agg.set_telemetry(replay_tracer.clone());
+        let (_, report) = DurableCoordinator::recover(agg, seed, &store).unwrap();
+        assert_eq!(report.resumed_round, Some(0));
+        let recovered = replay_tracer.snapshot();
+        assert_eq!(recovered.open_spans, 0, "recovery closes every span");
+        assert_eq!(
+            span_skeleton(&recovered.spans),
+            span_skeleton(&live.spans),
+            "recovery must re-execute exactly the live round's compute spans"
+        );
+        assert!(recovered.spans.iter().all(|s| s.replay), "recovered spans are replay-marked");
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -30,6 +30,7 @@ use crate::encoder::CloakEncoder;
 use crate::params::ProtocolPlan;
 use crate::rng::derive_seed;
 use crate::shuffler::{mixnet::Mixnet, Shuffler};
+use crate::telemetry::{SpanKind, Tracer};
 use crate::transport::wire::{Frame, ShardOutMsg, ShardPoolMsg, ShardWorkMsg, WireError};
 use crate::transport::TrafficStats;
 use crate::util::pool::ThreadPool;
@@ -280,6 +281,14 @@ pub trait ShardBackend {
         0
     }
 
+    /// Install a flight recorder (see [`crate::telemetry`]) — backends
+    /// thread it into their executors and emit wire/retry events against
+    /// it. The default drops it: a backend without instrumentation is
+    /// simply silent in traces.
+    fn set_tracer(&mut self, tracer: Tracer) {
+        let _ = tracer;
+    }
+
     /// Label for reports and benches ("inprocess", "loopback", "tcp", …).
     fn label(&self) -> &'static str;
 }
@@ -300,6 +309,8 @@ pub struct ShardExecutor {
     /// Full-cohort analyzer (plan.n) for the encode path; the pool path
     /// renormalizes per work unit over its `participants`.
     analyzer: Analyzer,
+    /// Flight recorder for per-work-unit compute spans (noop default).
+    tracer: Tracer,
 }
 
 impl ShardExecutor {
@@ -315,7 +326,16 @@ impl ShardExecutor {
             encoder,
             prerandomizer,
             analyzer,
+            tracer: Tracer::noop(),
         }
+    }
+
+    /// Install a flight recorder: every executed work unit records a
+    /// `shard_compute` span (plus encode/shuffle/analyze phases on the
+    /// encode path) — the same skeleton `Engine`'s in-process shards emit,
+    /// so a recovered round's trace matches the live round's.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     pub fn plan(&self) -> &ProtocolPlan {
@@ -370,12 +390,17 @@ impl ShardExecutor {
             });
         }
         let t0 = Instant::now();
+        // Same span skeleton as Engine's dispatch closure (work_unit +
+        // encode/shuffle/analyze phases), so recovery re-execution traces
+        // compare equal to the live round (`telemetry::span_skeleton`).
+        let _unit = self.tracer.span(SpanKind::WorkUnit, "shard_compute", w.round, w.shard);
         let mut buf = vec![0u64; span * n * m];
         let inputs = RoundInput::Range { values: &w.values, lo, clients: n };
         let enc = &self.encoder;
         let pre = &self.prerandomizer;
         let seeds_ref: &[u64] = &w.client_round_seeds;
         let wps = workers.max(1);
+        let encode_span = self.tracer.span(SpanKind::Phase, "encode", w.round, w.shard);
         // Same two intra-shard encode splits as Engine's shard workers —
         // invisible in the results, they only buy wall-clock.
         if wps > 1 && span > 1 {
@@ -417,15 +442,20 @@ impl ShardExecutor {
         } else {
             encode_block(enc, pre, &inputs, seeds_ref, lo, n, m, &mut buf);
         }
+        drop(encode_span);
         // The privacy boundary: every instance pool is permuted before
         // anything below reads it, exactly as in the in-process shard.
+        let shuffle_span = self.tracer.span(SpanKind::Phase, "shuffle", w.round, w.shard);
         for jj in 0..span {
             let mut net = Mixnet::honest(derive_seed(w.shard_seed, jj as u64), self.hops);
             net.shuffle(&mut buf[jj * n * m..(jj + 1) * n * m]);
         }
+        drop(shuffle_span);
+        let analyze_span = self.tracer.span(SpanKind::Phase, "analyze", w.round, w.shard);
         let estimates: Vec<f64> = (0..span)
             .map(|jj| self.analyzer.analyze(&buf[jj * n * m..(jj + 1) * n * m]))
             .collect();
+        drop(analyze_span);
         Ok(ShardOutMsg {
             round: w.round,
             shard: w.shard,
@@ -473,6 +503,10 @@ impl ShardExecutor {
             });
         }
         let t0 = Instant::now();
+        // Matches Engine::run_streaming_core's dispatch closure: one
+        // work_unit span per shard (shuffle/analyze interleave per
+        // instance on this path, so there are no phase sub-spans).
+        let _unit = self.tracer.span(SpanKind::WorkUnit, "shard_compute", w.round, w.shard);
         let ana = Analyzer::new(self.plan.modulus, self.plan.scale, participants);
         // One per-instance scratch reused across the span (not a clone of
         // the whole pool): copy in, shuffle in place, analyze. The work
@@ -546,6 +580,10 @@ impl ShardBackend for InProcessBackend {
         outs.into_iter()
             .collect::<Result<Vec<_>, _>>()
             .map_err(ShardBackendError::from)
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.exec.set_tracer(tracer);
     }
 
     fn label(&self) -> &'static str {

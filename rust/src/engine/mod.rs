@@ -117,6 +117,7 @@ use crate::metrics::Registry as MetricsRegistry;
 use crate::params::{NeighborNotion, ProtocolPlan};
 use crate::rng::{derive_seed, ChaCha20Rng};
 use crate::shuffler::{mixnet::Mixnet, Shuffler};
+use crate::telemetry::{EventKind, EventRecord, SpanKind, Tracer, SHARD_NONE};
 use crate::transport::{CostModel, Envelope, TrafficStats};
 use crate::util::pool::ThreadPool;
 
@@ -379,6 +380,8 @@ pub struct Engine {
     metrics: MetricsRegistry,
     rounds_run: u64,
     shuffle_seed: u64,
+    /// Flight recorder (disabled by default — see [`crate::telemetry`]).
+    tracer: Tracer,
 }
 
 impl Engine {
@@ -400,6 +403,7 @@ impl Engine {
             metrics: MetricsRegistry::new(),
             rounds_run: 0,
             shuffle_seed: derive_seed(seed, SHUFFLE_SEED_TAG),
+            tracer: Tracer::noop(),
         }
     }
 
@@ -414,6 +418,17 @@ impl Engine {
 
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.metrics
+    }
+
+    /// Install a flight recorder; round/phase/work-unit spans and uplink
+    /// events record into it from the next round on.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// A handle to this engine's flight recorder (cheap `Arc` clone).
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
     }
 
     pub fn rounds_run(&self) -> u64 {
@@ -546,6 +561,8 @@ impl Engine {
         let round = self.rounds_run;
         self.rounds_run += 1;
         let t0 = Instant::now();
+        let tracer = &self.tracer;
+        let _round_span = tracer.span(SpanKind::Round, "round", round, SHARD_NONE);
 
         // Renormalized analyzer: thresholds over the surviving cohort.
         let ana = Analyzer::new(modulus, self.cfg.plan.scale, participants);
@@ -571,6 +588,10 @@ impl Engine {
             .collect();
         let get = &get_pool;
         let outs: Vec<Vec<f64>> = pool.dispatch(s_eff, |s| {
+            // KEEP IN SYNC with backend::ShardExecutor::execute_pool — the
+            // span skeleton (work_unit "shard_compute" per shard) must
+            // match so recovery replay reproduces a live streaming trace.
+            let _unit = tracer.span(SpanKind::WorkUnit, "shard_compute", round, s as u32);
             let (lo, hi) = ranges_ref[s];
             let scratch: &mut [u64] =
                 slots[s].lock().unwrap().take().expect("streaming scratch taken once per shard");
@@ -595,6 +616,11 @@ impl Engine {
         for _ in 0..participants {
             traffic.record_batch(d * m, bytes, &cost);
         }
+        tracer.record(
+            EventRecord::new(EventKind::ClientUplink, round)
+                .with_bytes((participants * d * m * bytes) as u64)
+                .with_count(participants as u64),
+        );
         let wall = t0.elapsed().as_secs_f64();
         self.metrics.counter("engine.rounds").inc();
         self.metrics.counter("engine.streaming_rounds").inc();
@@ -636,6 +662,8 @@ impl Engine {
         let round = self.rounds_run;
         self.rounds_run += 1;
         let t0 = Instant::now();
+        let tracer = &self.tracer;
+        let _round_span = tracer.span(SpanKind::Round, "round", round, SHARD_NONE);
 
         let s_eff = self.shards.min(d).max(1);
         let ranges = shard_ranges(d, s_eff);
@@ -678,15 +706,20 @@ impl Engine {
         // capture the executor deliberately lacks. Any change to the
         // split/shuffle/analyze sequence here must land there too — the
         // cross-backend bit-identity tests (engine::backend and
-        // tests/cluster_integration.rs) are the tripwire.
+        // tests/cluster_integration.rs) are the tripwire. The span
+        // skeleton (work_unit + encode/shuffle/analyze phases per shard)
+        // must also match, so a journal-replayed round reproduces a live
+        // round's trace (`telemetry::span_skeleton`).
         let outs: Vec<ShardOut> = pool.dispatch(s_eff, |s| {
             let shard_t0 = Instant::now();
+            let _unit = tracer.span(SpanKind::WorkUnit, "shard_compute", round, s as u32);
             let (lo, hi) = ranges_ref[s];
             let span = hi - lo;
             let buf: &mut [u64] =
                 slots[s].lock().unwrap().take().expect("shard region taken once per round");
 
             // --- encode + pre-randomize (client side) -------------------
+            let encode_span = tracer.span(SpanKind::Phase, "encode", round, s as u32);
             if wps > 1 && span > 1 {
                 // wide shard: split the instance range across workers
                 let block = span.div_ceil(wps);
@@ -724,6 +757,7 @@ impl Engine {
             } else {
                 encode_block(&enc, pre, inputs, seeds_ref, lo, n, m, buf);
             }
+            drop(encode_span);
 
             // --- client views (the server-visible pre-shuffle messages) --
             let views = capture_views.then(|| {
@@ -740,15 +774,19 @@ impl Engine {
             });
 
             // --- shuffle: the privacy boundary ---------------------------
+            let shuffle_span = tracer.span(SpanKind::Phase, "shuffle", round, s as u32);
             let shard_seed = derive_seed(round_seed, s as u64);
             for (jj, inst) in buf.chunks_exact_mut(n * m).enumerate() {
                 let mut net = Mixnet::honest(derive_seed(shard_seed, jj as u64), hops);
                 net.shuffle(inst);
             }
+            drop(shuffle_span);
 
             // --- analyze --------------------------------------------------
+            let analyze_span = tracer.span(SpanKind::Phase, "analyze", round, s as u32);
             let estimates: Vec<f64> =
                 (0..span).map(|jj| ana.analyze(&buf[jj * n * m..(jj + 1) * n * m])).collect();
+            drop(analyze_span);
 
             ShardOut { estimates, views, wall_ns: shard_t0.elapsed().as_nanos() as u64 }
         });
@@ -777,6 +815,11 @@ impl Engine {
         for _ in 0..n {
             traffic.record_batch(d * m, bytes, &cost);
         }
+        tracer.record(
+            EventRecord::new(EventKind::ClientUplink, round)
+                .with_bytes((n * d * m * bytes) as u64)
+                .with_count(n as u64),
+        );
 
         let wall = t0.elapsed().as_secs_f64();
         self.metrics.counter("engine.rounds").inc();

@@ -403,6 +403,17 @@ impl<'a, O: GradOracle> FlDriver<'a, O> {
         self.server.step(&mean_grad);
         self.accountant.spend(DpBudget::new(self.cfg.eps_round, self.cfg.delta_round));
         let spent = self.accountant.best(self.cfg.delta_round);
+        // Per-FedAvg-round rollup: participants and cumulative privacy
+        // spend — never gradients or share values (the telemetry trust
+        // rule; epsilon is public protocol state, not client data).
+        self.agg.telemetry().record(
+            crate::telemetry::EventRecord::new(
+                crate::telemetry::EventKind::FlRound,
+                result.round_id,
+            )
+            .with_count(result.participants as u64)
+            .with_value(spent.epsilon),
+        );
         let log = RoundLog {
             round,
             mean_loss: loss_sum / self.cfg.clients as f32,

@@ -22,7 +22,10 @@
 //!   of lost ranges), the [`storage`] layer (append-only round journal +
 //!   locator-keyed checkpoint store — a crashed coordinator replays the
 //!   log and resumes mid-round bit-identically, see
-//!   [`coordinator::durable`]), parameter planner
+//!   [`coordinator::durable`]), the [`telemetry`] flight recorder
+//!   (bounded-ring structured spans/events threaded through every stack,
+//!   JSONL export, per-round reports — records sizes/timings/ids only,
+//!   never share values, pool contents, or seeds), parameter planner
 //!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
@@ -66,6 +69,7 @@ pub mod runtime;
 pub mod shuffler;
 pub mod sketch;
 pub mod storage;
+pub mod telemetry;
 pub mod transport;
 pub mod util;
 
@@ -92,6 +96,7 @@ pub mod prelude {
     pub use crate::privacy::accountant::PrivacyAccountant;
     pub use crate::rng::{ChaCha20Rng, Rng, SeedableRng};
     pub use crate::shuffler::{FisherYates, Shuffler};
+    pub use crate::telemetry::Tracer;
     pub use crate::transport::{
         Channel, Loopback, SimNet, SimNetConfig, StreamConfig, StreamingRound,
     };

@@ -25,6 +25,13 @@
 //!                   journal, every resume gate-checked bit-identical to
 //!                   the uninterrupted run; a checkpointed FedAvg campaign
 //!                   survives a coordinator death; benchkit JSON out
+//!   trace-sim     — observability: a flight recorder traces a lossy
+//!                   elastic streamed round and a crash-recovered round;
+//!                   the trace itself is gate-checked (every span closed,
+//!                   event-attributed bytes equal TrafficStats, recovery
+//!                   replay reproduces the live span skeleton, JSONL
+//!                   export survives the fixed-registry privacy scan);
+//!                   benchkit JSON with quantiles + RoundReports out
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -35,6 +42,7 @@
 //!   cloak-agg elastic-sim --n 48 --d 16 --shards 4 --net tcp --policy proportional
 //!   cloak-agg lossy-cluster-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 //!   cloak-agg crash-recovery-sim --n 24 --d 8 --seed 7
+//!   cloak-agg trace-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -46,7 +54,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim|trace-sim> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -61,7 +69,9 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --seed --out
   lossy-cluster-sim: --n --d --loss --dup --shards --quorum --deadline
                  --seed --out
-  crash-recovery-sim: --n --d --shards (0=sweep 1,4) --seed --out";
+  crash-recovery-sim: --n --d --shards (0=sweep 1,4) --seed --out
+  trace-sim:     --n --d --loss --dup --shards --quorum --deadline
+                 --seed --out";
 
 fn main() {
     if let Err(e) = run() {
@@ -84,6 +94,7 @@ fn run() -> Result<()> {
             "elastic-sim",
             "lossy-cluster-sim",
             "crash-recovery-sim",
+            "trace-sim",
         ],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
@@ -101,6 +112,7 @@ fn run() -> Result<()> {
         "elastic-sim" => cmd_elastic_sim(&args),
         "lossy-cluster-sim" => cmd_lossy_cluster_sim(&args),
         "crash-recovery-sim" => cmd_crash_recovery_sim(&args),
+        "trace-sim" => cmd_trace_sim(&args),
         _ => unreachable!(),
     }
 }
@@ -1275,6 +1287,296 @@ fn cmd_crash_recovery_sim(args: &Args) -> Result<()> {
         );
         ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
     }
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Observability end-to-end: the flight recorder is installed on every
+/// stack the facade can build, and the trace itself is the thing under
+/// test. Gate A streams one lossy cohort through the local, cluster and
+/// elastic stacks with a tracer attached: every span must close, admit
+/// events must equal survivors, and the bytes attributed by frame/uplink
+/// events must equal the round's `TrafficStats` to the byte — with the
+/// elastic stack additionally required to show its in-round takeover as
+/// a recovery span plus takeover event. Gate B kills a durable
+/// coordinator at the write-ahead barrier and requires the recovered
+/// round's trace to replay the uninterrupted run's span skeleton
+/// exactly, every span replay-marked. Gate C round-trips both traces
+/// through the JSONL export and the crate's own parser, whose fixed
+/// span/event registries are the structural no-private-data guarantee
+/// (sizes, timings, ids, outcomes — never shares, pools or seeds). Ends
+/// with a tracing-off/on timed sweep whose benchkit JSON carries latency
+/// quantiles and per-round `RoundReport`s in its extras; the CI smoke
+/// step keys on the "trace gate:" lines and the final "benchkit JSON
+/// OK" line.
+fn cmd_trace_sim(args: &Args) -> Result<()> {
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::cluster::ClusterTuning;
+    use cloak_agg::control::{ElasticTuning, Proportional};
+    use cloak_agg::coordinator::durable::DurableCoordinator;
+    use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::storage::{Locator, Store};
+    use cloak_agg::telemetry::{
+        attributed_bytes, round_reports, span_skeleton, EventKind, SpanKind, TraceExport, Tracer,
+    };
+    use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+    use cloak_agg::transport::wire::{decode_frame, Frame};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::error::Context as _;
+    use cloak_agg::util::json::Json;
+
+    let n = args.get_usize("n", 96)?;
+    let d = args.get_usize("d", 8)?;
+    let loss = args.get_f64("loss", 0.1)?;
+    let dup = args.get_f64("dup", 0.02)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_u64("seed", 42)?;
+    let deadline = args.get_f64("deadline", 1.0)?;
+    let quorum = args.get_usize("quorum", (n / 4).max(1))?;
+    let out = args.get_str("out", "BENCH_trace_sim.json");
+    ensure!(n >= 4, "--n must be >= 4");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!(shards >= 2, "--shards must be >= 2 (the elastic stack needs a survivor)");
+    ensure!((0.0..1.0).contains(&loss), "--loss must be in [0, 1)");
+    ensure!((0.0..1.0).contains(&dup), "--dup must be in [0, 1)");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let cfg = EngineConfig::new(plan.clone(), d).with_shards(shards);
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let no_drops = vec![false; n];
+    let stream_cfg = StreamConfig::new(n).with_quorum(quorum).with_deadline(deadline);
+
+    let build_stack = |kind: &str| -> Result<Box<dyn Aggregator>> {
+        let builder = AggregatorBuilder::new(cfg.clone(), seed);
+        Ok(match kind {
+            "local" => builder.local().build()?,
+            "loopback" => builder.loopback().build()?,
+            // Shard 1's link goes silent after its handshake, so the
+            // elastic trace must show the in-round takeover.
+            "elastic" => builder
+                .over_channels(|s| {
+                    let down: Box<dyn Channel> = if s == 1 {
+                        Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+                    } else {
+                        Box::new(Loopback::new())
+                    };
+                    (down, Box::new(Loopback::new()) as _)
+                })
+                .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+                .elastic(Box::new(Proportional::default()))
+                .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+                .build()?,
+            other => bail!("unknown backend '{other}'"),
+        })
+    };
+
+    // --- gate A: traced lossy stream, bytes reconcile on every stack -----
+    let backends = ["local", "loopback", "elastic"];
+    let mut table = Table::new(
+        &format!("trace-sim: n={n} d={d} loss={loss} dup={dup} S={shards}"),
+        &["backend", "spans", "events", "admits", "attributed B", "traffic B"],
+    );
+    let mut want: Option<Vec<f64>> = None;
+    let mut elastic_trace: Option<TraceExport> = None;
+    for kind in backends {
+        let mut stack = build_stack(kind)?;
+        stack.set_telemetry(Tracer::new(1 << 16));
+        let mut net = SimNet::new(
+            SimNetConfig::new(derive_seed(seed, 0)).with_loss(loss).with_duplicate(dup),
+        );
+        send_cohort(stack.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+        let outcome = StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)?;
+        let trace = stack.telemetry().snapshot();
+        ensure!(trace.open_spans == 0, "{kind}: every span must close by round end");
+        ensure!(
+            trace.dropped_spans == 0 && trace.dropped_events == 0,
+            "{kind}: the ring must hold one streamed round"
+        );
+        let attributed = attributed_bytes(&trace.events);
+        ensure!(
+            attributed == outcome.result.traffic.bytes,
+            "{kind}: telemetry attributed {attributed} B, TrafficStats counted {} B",
+            outcome.result.traffic.bytes
+        );
+        let admits = trace.events.iter().filter(|e| matches!(e.kind, EventKind::Admit)).count();
+        ensure!(
+            admits == outcome.result.participants,
+            "{kind}: {admits} admit events for {} survivors",
+            outcome.result.participants
+        );
+        ensure!(
+            trace.spans.iter().any(|s| matches!(s.kind, SpanKind::Round)),
+            "{kind}: missing the round envelope span"
+        );
+        table.row(&[
+            kind.to_string(),
+            trace.spans.len().to_string(),
+            trace.events.len().to_string(),
+            admits.to_string(),
+            attributed.to_string(),
+            outcome.result.traffic.bytes.to_string(),
+        ]);
+        match &want {
+            None => {
+                want = Some(outcome.result.estimates.clone());
+            }
+            Some(estimates) => {
+                ensure!(
+                    &outcome.result.estimates == estimates,
+                    "{kind}: tracing must not perturb the round"
+                );
+            }
+        }
+        if kind == "elastic" {
+            ensure!(stack.shard_takeovers() >= 1, "elastic: the dead shard must cost a takeover");
+            ensure!(
+                trace.events.iter().any(|e| matches!(e.kind, EventKind::Takeover)),
+                "elastic: the takeover must be visible as an event"
+            );
+            ensure!(
+                trace.spans.iter().any(|s| matches!(s.kind, SpanKind::Recovery)),
+                "elastic: the takeover must be visible as a recovery span"
+            );
+            elastic_trace = Some(trace);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "trace gate: every span closed and event-attributed bytes matched TrafficStats \
+         across {backends:?} at S={shards}"
+    );
+
+    // --- gate B: recovery replay reproduces the live span skeleton -------
+    let mut live = build_stack("local")?;
+    live.set_telemetry(Tracer::new(1 << 16));
+    let want_round = live.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+    let live_trace = live.telemetry().snapshot();
+    ensure!(
+        live_trace.spans.iter().all(|s| !s.replay),
+        "live spans must not carry the replay mark"
+    );
+
+    let mut root = std::env::temp_dir();
+    root.push(format!("cloak_tracesim_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Store::new(&root)?;
+    let mut dur = DurableCoordinator::create(build_stack("local")?, seed, &store)?;
+    let got = dur.run_round(&inputs, &seeds)?;
+    ensure!(got.estimates == want_round.estimates, "journaling perturbed the round");
+    drop(dur);
+
+    let path = store.path(&Locator::RoundJournal);
+    let clean = std::fs::read(&path)?;
+    let (mut off, mut cut) = (0usize, 0usize);
+    while off < clean.len() {
+        let (f, used) = decode_frame(&clean[off..]).expect("clean journal prefix");
+        off += used;
+        if matches!(f, Frame::ShardWork(_)) {
+            cut = off;
+        }
+    }
+    ensure!(cut > 0, "journal holds no work units");
+    std::fs::write(&path, &clean[..cut])?; // die at the write-ahead barrier
+
+    let mut fresh = build_stack("local")?;
+    fresh.set_telemetry(Tracer::new(1 << 16));
+    let (dur, report) = DurableCoordinator::recover(fresh, seed, &store)?;
+    ensure!(report.resumed_round == Some(0), "recovery must resume round 0");
+    let resumed = report.resumed_estimates.context("no resumed estimates")?;
+    ensure!(
+        resumed.estimates == want_round.estimates,
+        "recovery diverged from the uninterrupted run"
+    );
+    let recovered = dur.aggregator().telemetry().snapshot();
+    ensure!(recovered.open_spans == 0, "recovery must close every span");
+    ensure!(
+        span_skeleton(&recovered.spans) == span_skeleton(&live_trace.spans),
+        "the replayed trace must reproduce the live span skeleton"
+    );
+    ensure!(
+        !recovered.spans.is_empty() && recovered.spans.iter().all(|s| s.replay),
+        "every recovered span must carry the replay mark"
+    );
+    drop(dur);
+    let _ = std::fs::remove_dir_all(&root);
+    println!(
+        "trace gate: recovery replayed the live span skeleton ({} spans, all replay-marked)",
+        recovered.spans.len()
+    );
+
+    // --- gate C: JSONL round-trip through the fixed registries -----------
+    let elastic_trace = elastic_trace.context("elastic trace missing")?;
+    let mut lines = 0usize;
+    for (tag, trace) in [("elastic", &elastic_trace), ("recovered", &recovered)] {
+        let jsonl = trace.to_jsonl();
+        let parsed = match TraceExport::parse_jsonl(&jsonl) {
+            Ok(parsed) => parsed,
+            Err(e) => bail!("{tag}: JSONL failed the registry scan: {e}"),
+        };
+        ensure!(
+            parsed.spans.len() == trace.spans.len() && parsed.events.len() == trace.events.len(),
+            "{tag}: JSONL round-trip lost records"
+        );
+        lines += jsonl.lines().filter(|l| !l.trim().is_empty()).count();
+    }
+    println!(
+        "trace gate: JSONL export round-tripped the registry scan ({lines} lines, \
+         numeric-only payloads)"
+    );
+
+    // --- timed sweep: what the flight recorder costs ---------------------
+    let mut bench = Bench::new("trace_sim");
+    let mut bare = build_stack("local")?;
+    let name = format!("round n={n} d={d} S={shards} tracing=off");
+    bench.run_sharded(&name, (n * d * m) as f64, shards, || {
+        bare.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("bare round").estimates[0]
+    });
+    let mut traced = build_stack("local")?;
+    traced.set_telemetry(Tracer::new(1 << 16));
+    let name = format!("round n={n} d={d} S={shards} tracing=on");
+    bench.run_sharded(&name, (n * d * m) as f64, shards, || {
+        traced.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("round").estimates[0]
+    });
+    let reports = round_reports(&traced.telemetry().snapshot());
+    ensure!(!reports.is_empty(), "traced rounds must yield RoundReports");
+    bench.attach("metrics", traced.metrics().to_json());
+    bench.attach("round_reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser -------
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("trace_sim"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(cases.len() == 2, "expected 2 cases, found {}", cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    match json.at(&["extras", "round_reports"]) {
+        Some(Json::Arr(reports)) => ensure!(!reports.is_empty(), "empty round_reports extra"),
+        _ => bail!("benchkit JSON in {out} is missing the round_reports extra"),
+    }
+    ensure!(
+        json.at(&["extras", "metrics", "histograms"]).is_some(),
+        "benchkit JSON in {out} is missing the latency quantiles extra"
+    );
     println!("benchkit JSON OK: {out} ({} cases)", cases.len());
     Ok(())
 }

@@ -67,6 +67,12 @@ impl Histogram {
         }
     }
 
+    /// The p50/p95/p99 upper-bound triple every surfaced histogram
+    /// reports (benchkit JSON, [`Registry::to_json`], `render`).
+    pub fn quantiles(&self) -> [u64; 3] {
+        [self.quantile_ns(0.5), self.quantile_ns(0.95), self.quantile_ns(0.99)]
+    }
+
     /// Approximate quantile from the bucket histogram (upper bucket edge).
     pub fn quantile_ns(&self, q: f64) -> u64 {
         let total = self.count();
@@ -119,15 +125,41 @@ impl Registry {
             out.push_str(&format!("counter {name} {}\n", c.get()));
         }
         for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            let [p50, _, p99] = h.quantiles();
             out.push_str(&format!(
-                "histogram {name} count={} mean={:.0}ns p50<={}ns p99<={}ns\n",
+                "histogram {name} count={} mean={:.0}ns p50<={p50}ns p99<={p99}ns\n",
                 h.count(),
                 h.mean_ns(),
-                h.quantile_ns(0.5),
-                h.quantile_ns(0.99),
             ));
         }
         out
+    }
+
+    /// All metrics as one JSON object — counters verbatim, histograms as
+    /// count/mean plus the p50/p95/p99 triple. This is the shape benchkit
+    /// embeds under a case's `extras`, so bench JSON carries latency
+    /// quantiles alongside the measured walls.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut root = BTreeMap::new();
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut histograms = BTreeMap::new();
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            let [p50, p95, p99] = h.quantiles();
+            let mut fields = BTreeMap::new();
+            fields.insert("count".to_string(), Json::Num(h.count() as f64));
+            fields.insert("mean_ns".to_string(), Json::Num(h.mean_ns()));
+            fields.insert("p50_ns".to_string(), Json::Num(p50 as f64));
+            fields.insert("p95_ns".to_string(), Json::Num(p95 as f64));
+            fields.insert("p99_ns".to_string(), Json::Num(p99 as f64));
+            histograms.insert(name.clone(), Json::Obj(fields));
+        }
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(root)
     }
 }
 
@@ -161,6 +193,28 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_ns(0.5), 0);
         assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn quantile_triple_is_ordered_and_exported() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        let [p50, p95, p99] = h.quantiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        let r = Registry::new();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            r.histogram("lat").record_ns(ns);
+        }
+        r.counter("rounds").add(2);
+        let j = r.to_json();
+        assert_eq!(j.at(&["counters", "rounds"]).and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(
+            j.at(&["histograms", "lat", "p95_ns"]).and_then(|v| v.as_u64()),
+            Some(p95),
+            "exported quantiles match the histogram's"
+        );
     }
 
     #[test]

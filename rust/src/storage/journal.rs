@@ -21,6 +21,7 @@ use std::fs::OpenOptions;
 use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 
+use crate::telemetry::{EventKind, EventRecord, Tracer};
 use crate::transport::wire::{decode_frame, encode_frame, Frame};
 use crate::util::error::{Context as _, Result};
 
@@ -30,6 +31,10 @@ pub struct RoundJournal {
     file: std::fs::File,
     path: PathBuf,
     bytes: u64,
+    /// Flight recorder for append/commit events (noop default — the
+    /// durable coordinator installs the aggregator's tracer). Events
+    /// carry record sizes and round ids only, never record contents.
+    tracer: Tracer,
 }
 
 impl RoundJournal {
@@ -44,7 +49,7 @@ impl RoundJournal {
             .truncate(true)
             .open(&path)
             .with_context(|| format!("creating journal {}", path.display()))?;
-        Ok(RoundJournal { file, path, bytes: 0 })
+        Ok(RoundJournal { file, path, bytes: 0, tracer: Tracer::noop() })
     }
 
     /// Open (or create) the journal at `path`, replaying every complete
@@ -80,7 +85,14 @@ impl RoundJournal {
             file.set_len(off as u64).context("truncating torn journal tail")?;
         }
         file.seek(SeekFrom::Start(off as u64)).context("seeking journal end")?;
-        Ok((RoundJournal { file, path, bytes: off as u64 }, frames, dropped))
+        let journal = RoundJournal { file, path, bytes: off as u64, tracer: Tracer::noop() };
+        Ok((journal, frames, dropped))
+    }
+
+    /// Install a flight recorder: subsequent appends emit
+    /// JournalAppend/JournalCommit events (sizes and round ids only).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Append one record. `Commit` records fsync before returning (the
@@ -91,6 +103,13 @@ impl RoundJournal {
             .write_all(&bytes)
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         self.bytes += bytes.len() as u64;
+        let kind = if matches!(frame, Frame::Commit { .. }) {
+            EventKind::JournalCommit
+        } else {
+            EventKind::JournalAppend
+        };
+        self.tracer
+            .record(EventRecord::new(kind, frame_round(frame)).with_bytes(bytes.len() as u64));
         if matches!(frame, Frame::Commit { .. }) {
             self.sync()?;
         }
@@ -102,7 +121,7 @@ impl RoundJournal {
     /// Rejects bytes that are not exactly one well-formed frame, so a bug
     /// in the caller can never poison the log.
     pub fn append_raw(&mut self, bytes: &[u8]) -> Result<()> {
-        let (_, used) = decode_frame(bytes).context("append_raw: not a valid frame")?;
+        let (frame, used) = decode_frame(bytes).context("append_raw: not a valid frame")?;
         crate::ensure!(
             used == bytes.len(),
             "append_raw: {} trailing bytes after one frame",
@@ -112,6 +131,10 @@ impl RoundJournal {
             .write_all(bytes)
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         self.bytes += bytes.len() as u64;
+        self.tracer.record(
+            EventRecord::new(EventKind::JournalAppend, frame_round(&frame))
+                .with_bytes(bytes.len() as u64),
+        );
         Ok(())
     }
 
@@ -130,6 +153,22 @@ impl RoundJournal {
     /// Bytes of complete records currently in the journal.
     pub fn len_bytes(&self) -> u64 {
         self.bytes
+    }
+}
+
+/// Round id a record belongs to, for telemetry attribution (0 for the
+/// few control frames that carry none).
+fn frame_round(frame: &Frame) -> u64 {
+    match frame {
+        Frame::Hello { round, .. }
+        | Frame::Contribute { round, .. }
+        | Frame::ContributeBatch { round, .. }
+        | Frame::Drop { round, .. }
+        | Frame::Commit { round, .. } => *round,
+        Frame::ShardOut(m) => m.round,
+        Frame::ShardWork(m) => m.round,
+        Frame::ShardPool(m) => m.round,
+        Frame::ShardAssign(_) | Frame::ShardReady(_) | Frame::ShardRetire(_) => 0,
     }
 }
 

@@ -1,0 +1,973 @@
+//! Flight recorder: dependency-free structured tracing for every stack.
+//!
+//! A [`Tracer`] hands out RAII [`Span`]s (round, phase, shard, work-unit
+//! and recovery scopes) and records typed [`EventRecord`]s (frames with
+//! byte counts, retries, takeovers, journal appends, admissions, drops,
+//! deadlines) into a bounded in-memory ring — a *flight recorder*: cheap
+//! enough to leave on, bounded so a hot loop can never exhaust memory
+//! (overflow increments a drop counter instead of growing), and
+//! exportable as JSONL through [`crate::util::json`] for offline
+//! diagnosis. `trace-sim` in the CLI runs a lossy elastic round against
+//! it and self-validates the invariants (every span closed, byte
+//! attribution equal to [`TrafficStats`](crate::transport::TrafficStats)
+//! totals, recovery replay reproducing the live span skeleton).
+//!
+//! Every layer threads the same tracer: `Engine` / `ClusterEngine` open
+//! round and phase spans, `ShardExecutor` opens per-work-unit compute
+//! spans, `RemoteShardBackend` emits frame/retry/reconnect events,
+//! `ElasticController` emits takeover events, `StreamingRound` emits
+//! admission/drop/deadline events, `RoundJournal` emits append/commit
+//! events and `FlDriver` emits one per-FedAvg-round rollup including the
+//! privacy budget spent. Stacks expose it via
+//! [`Aggregator::telemetry`](crate::aggregator::Aggregator::telemetry);
+//! the default is [`Tracer::noop`], so untraced callers pay one branch.
+//!
+//! # Trust model: no private data, structurally
+//!
+//! The mixnet is the privacy boundary; a trace that leaked share values,
+//! pool residues or seeds would tunnel straight through it. Telemetry
+//! therefore records **sizes, timings, ids and outcomes — never share
+//! values, pool contents, or seeds**. The rule is enforced by shape, not
+//! discipline: an [`EventRecord`] has only fixed numeric fields (ids,
+//! byte counts, an f64 for public rollups like epsilon spent), a
+//! [`SpanRecord`]'s `name` is a `&'static str` drawn from the fixed
+//! registry [`SPAN_NAMES`], and neither carries arrays, blobs, or free
+//! strings a payload could ride in. [`TraceExport::parse_jsonl`] rejects
+//! unknown kinds and names, and the unit tests scan exported lines
+//! against the exact key allowlist — a new field must pass review here.
+//!
+//! All u64 values exported are expected to stay below 2^53 so the
+//! f64-backed [`Json`] number type round-trips them exactly (nanosecond
+//! timestamps fit for ~104 days of process uptime; ids and byte counts
+//! are far smaller).
+
+#![deny(clippy::redundant_clone)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{num, obj, Json};
+
+/// `shard` value for records not attributable to one shard.
+pub const SHARD_NONE: u32 = u32::MAX;
+
+/// `client` value for records not attributable to one client.
+pub const CLIENT_NONE: u32 = u32::MAX;
+
+/// Default flight-recorder capacity (records of each type).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// What a [`Span`] scopes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One whole round on one stack.
+    Round,
+    /// One phase inside a round (encode, shuffle, analyze, barrier, merge).
+    Phase,
+    /// One shard's scope (reserved for shard-server-side tracing).
+    Shard,
+    /// One work unit's compute on whichever host executed it.
+    WorkUnit,
+    /// A recovery scope: takeover re-scatter or journal replay.
+    Recovery,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::Phase => "phase",
+            SpanKind::Shard => "shard",
+            SpanKind::WorkUnit => "work_unit",
+            SpanKind::Recovery => "recovery",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "round" => SpanKind::Round,
+            "phase" => SpanKind::Phase,
+            "shard" => SpanKind::Shard,
+            "work_unit" => SpanKind::WorkUnit,
+            "recovery" => SpanKind::Recovery,
+            _ => return None,
+        })
+    }
+}
+
+/// The fixed span-name registry — part of the trust rule: names are
+/// static identifiers, never formatted from data.
+pub const SPAN_NAMES: [&str; 9] = [
+    "round",
+    "shard_compute",
+    "encode",
+    "shuffle",
+    "analyze",
+    "barrier",
+    "merge",
+    "takeover",
+    "recover",
+];
+
+/// A typed telemetry event. All payloads are numeric by construction —
+/// see the module docs' trust rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A coordinator→shard wire frame handed to a link (`bytes`).
+    FrameSent,
+    /// A shard→coordinator wire frame received (`bytes`).
+    FrameReceived,
+    /// One round's client uplink total (`bytes`, `count` = clients).
+    ClientUplink,
+    /// A straggler/handshake resend (`count` = 1 per resend).
+    Retry,
+    /// A dead link dropped its connection state for rebuild.
+    Reconnect,
+    /// A lost range re-scattered to survivors (`count` = slices).
+    Takeover,
+    /// A journal record appended (`bytes` = record length).
+    JournalAppend,
+    /// A journal commit record appended + fsynced (`bytes`).
+    JournalCommit,
+    /// Recovery replayed the journal (`count` = frames, `bytes` = torn
+    /// tail truncated).
+    JournalReplay,
+    /// A streaming contribution accepted (`client`).
+    Admit,
+    /// A client recorded as dropped (`client`, or `count` at close).
+    Drop,
+    /// Frames past the round deadline (`count`).
+    Deadline,
+    /// Frames rejected at ingestion — malformed or stale (`count`).
+    Reject,
+    /// One FedAvg round rollup (`count` = participants, `value` =
+    /// cumulative epsilon spent — a public accounting quantity).
+    FlRound,
+}
+
+impl EventKind {
+    /// Every kind, for generators and exhaustive tests.
+    pub const ALL: [EventKind; 14] = [
+        EventKind::FrameSent,
+        EventKind::FrameReceived,
+        EventKind::ClientUplink,
+        EventKind::Retry,
+        EventKind::Reconnect,
+        EventKind::Takeover,
+        EventKind::JournalAppend,
+        EventKind::JournalCommit,
+        EventKind::JournalReplay,
+        EventKind::Admit,
+        EventKind::Drop,
+        EventKind::Deadline,
+        EventKind::Reject,
+        EventKind::FlRound,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::FrameSent => "frame_sent",
+            EventKind::FrameReceived => "frame_received",
+            EventKind::ClientUplink => "client_uplink",
+            EventKind::Retry => "retry",
+            EventKind::Reconnect => "reconnect",
+            EventKind::Takeover => "takeover",
+            EventKind::JournalAppend => "journal_append",
+            EventKind::JournalCommit => "journal_commit",
+            EventKind::JournalReplay => "journal_replay",
+            EventKind::Admit => "admit",
+            EventKind::Drop => "drop",
+            EventKind::Deadline => "deadline",
+            EventKind::Reject => "reject",
+            EventKind::FlRound => "fl_round",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<EventKind> {
+        EventKind::ALL.into_iter().find(|k| k.as_str() == s)
+    }
+}
+
+/// One closed span, as stored in the ring and exported.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// Monotone id (1-based, per tracer).
+    pub id: u64,
+    pub kind: SpanKind,
+    /// A name from [`SPAN_NAMES`] — static by construction.
+    pub name: &'static str,
+    pub round: u64,
+    /// Shard id, or [`SHARD_NONE`].
+    pub shard: u32,
+    /// Nanoseconds since the tracer's epoch.
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// True when recorded during journal replay / recovery.
+    pub replay: bool,
+}
+
+impl SpanRecord {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// One typed event, as stored in the ring and exported. Fields the kind
+/// does not use stay at their neutral defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventRecord {
+    /// Nanoseconds since the tracer's epoch (stamped by
+    /// [`Tracer::record`]).
+    pub ts_ns: u64,
+    pub kind: EventKind,
+    pub round: u64,
+    /// Shard id, or [`SHARD_NONE`].
+    pub shard: u32,
+    /// Client id, or [`CLIENT_NONE`].
+    pub client: u32,
+    /// Byte count (wire frames, journal records, uplink totals).
+    pub bytes: u64,
+    /// Cardinality (clients in an uplink, frames replayed, slices…).
+    pub count: u64,
+    /// The one f64 payload — public rollups only (epsilon spent).
+    pub value: f64,
+    /// True when recorded during journal replay / recovery.
+    pub replay: bool,
+}
+
+impl EventRecord {
+    pub fn new(kind: EventKind, round: u64) -> Self {
+        EventRecord {
+            ts_ns: 0,
+            kind,
+            round,
+            shard: SHARD_NONE,
+            client: CLIENT_NONE,
+            bytes: 0,
+            count: 0,
+            value: 0.0,
+            replay: false,
+        }
+    }
+
+    pub fn with_shard(mut self, shard: u32) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    pub fn with_client(mut self, client: u32) -> Self {
+        self.client = client;
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: u64) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_count(mut self, count: u64) -> Self {
+        self.count = count;
+        self
+    }
+
+    pub fn with_value(mut self, value: f64) -> Self {
+        self.value = value;
+        self
+    }
+}
+
+/// The bounded record store. One mutex guards both vectors; span opens
+/// touch only atomics, so the lock is taken once per span close and once
+/// per event.
+struct Ring {
+    spans: Vec<SpanRecord>,
+    events: Vec<EventRecord>,
+    dropped_spans: u64,
+    dropped_events: u64,
+}
+
+struct Inner {
+    enabled: bool,
+    capacity: usize,
+    epoch: Instant,
+    next_id: AtomicU64,
+    replay: AtomicBool,
+    open: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+/// The flight recorder handle — cheap to clone (an `Arc`), `Send + Sync`,
+/// safe to use from shard worker threads.
+#[derive(Clone)]
+pub struct Tracer(Arc<Inner>);
+
+impl Tracer {
+    /// A recorder bounded at `capacity` spans and `capacity` events;
+    /// `capacity == 0` is the disabled recorder.
+    pub fn new(capacity: usize) -> Self {
+        Tracer(Arc::new(Inner {
+            enabled: capacity > 0,
+            capacity,
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(0),
+            replay: AtomicBool::new(false),
+            open: AtomicU64::new(0),
+            ring: Mutex::new(Ring {
+                spans: Vec::new(),
+                events: Vec::new(),
+                dropped_spans: 0,
+                dropped_events: 0,
+            }),
+        }))
+    }
+
+    /// The disabled recorder every stack starts with: spans are inert,
+    /// events vanish, nothing allocates.
+    pub fn noop() -> Self {
+        Tracer::new(0)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.enabled
+    }
+
+    /// Two handles to the same recorder?
+    pub fn same_recorder(&self, other: &Tracer) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+
+    /// Mark subsequently-recorded spans/events as replayed (recovery).
+    pub fn set_replay(&self, on: bool) {
+        self.0.replay.store(on, Ordering::Relaxed);
+    }
+
+    pub fn replaying(&self) -> bool {
+        self.0.replay.load(Ordering::Relaxed)
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.0.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span; it records itself into the ring when dropped.
+    pub fn span(&self, kind: SpanKind, name: &'static str, round: u64, shard: u32) -> Span {
+        if !self.0.enabled {
+            return Span {
+                tracer: self.clone(),
+                id: 0,
+                kind,
+                name,
+                round,
+                shard,
+                start_ns: 0,
+                replay: false,
+                active: false,
+            };
+        }
+        self.0.open.fetch_add(1, Ordering::Relaxed);
+        Span {
+            id: self.0.next_id.fetch_add(1, Ordering::Relaxed) + 1,
+            kind,
+            name,
+            round,
+            shard,
+            start_ns: self.now_ns(),
+            replay: self.replaying(),
+            active: true,
+            tracer: self.clone(),
+        }
+    }
+
+    /// Record one event (timestamp and replay flag stamped here).
+    pub fn record(&self, mut ev: EventRecord) {
+        if !self.0.enabled {
+            return;
+        }
+        ev.ts_ns = self.now_ns();
+        ev.replay = ev.replay || self.replaying();
+        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        if ring.events.len() < self.0.capacity {
+            ring.events.push(ev);
+        } else {
+            ring.dropped_events += 1;
+        }
+    }
+
+    fn push_span(&self, rec: SpanRecord) {
+        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        if ring.spans.len() < self.0.capacity {
+            ring.spans.push(rec);
+        } else {
+            ring.dropped_spans += 1;
+        }
+    }
+
+    /// Spans currently open (opened, not yet dropped).
+    pub fn open_spans(&self) -> u64 {
+        self.0.open.load(Ordering::Relaxed)
+    }
+
+    /// Copy out everything recorded so far.
+    pub fn snapshot(&self) -> TraceExport {
+        let ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        TraceExport {
+            spans: ring.spans.clone(),
+            events: ring.events.clone(),
+            dropped_spans: ring.dropped_spans,
+            dropped_events: ring.dropped_events,
+            open_spans: self.open_spans(),
+        }
+    }
+
+    /// Clear recorded spans/events (drop counters included). Open-span
+    /// accounting is untouched.
+    pub fn reset(&self) {
+        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        ring.spans.clear();
+        ring.events.clear();
+        ring.dropped_spans = 0;
+        ring.dropped_events = 0;
+    }
+}
+
+/// RAII span guard: records on drop. Inert when the tracer is disabled.
+pub struct Span {
+    tracer: Tracer,
+    id: u64,
+    kind: SpanKind,
+    name: &'static str,
+    round: u64,
+    shard: u32,
+    start_ns: u64,
+    replay: bool,
+    active: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let rec = SpanRecord {
+            id: self.id,
+            kind: self.kind,
+            name: self.name,
+            round: self.round,
+            shard: self.shard,
+            start_ns: self.start_ns,
+            end_ns: self.tracer.now_ns(),
+            replay: self.replay,
+        };
+        self.tracer.push_span(rec);
+        self.tracer.0.open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A copied-out trace: what [`Tracer::snapshot`] returns and the JSONL
+/// codec round-trips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceExport {
+    pub spans: Vec<SpanRecord>,
+    pub events: Vec<EventRecord>,
+    pub dropped_spans: u64,
+    pub dropped_events: u64,
+    pub open_spans: u64,
+}
+
+impl TraceExport {
+    /// One compact JSON object per line: spans (`"t":"span"`) then events
+    /// (`"t":"event"`). Integers are written as integers, so everything
+    /// below 2^53 round-trips exactly through [`Json`]'s f64 numbers.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&span_line(s));
+            out.push('\n');
+        }
+        for e in &self.events {
+            out.push_str(&event_line(e));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Inverse of [`TraceExport::to_jsonl`]. Unknown kinds or span names
+    /// are errors — the trust rule's registry check. Drop counters and
+    /// open-span counts are not serialized; they parse back as zero.
+    pub fn parse_jsonl(text: &str) -> Result<TraceExport, String> {
+        let mut spans = Vec::new();
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            match j.get("t").and_then(Json::as_str) {
+                Some("span") => spans.push(span_from_json(&j).map_err(|e| {
+                    format!("line {}: {e}", i + 1)
+                })?),
+                Some("event") => events.push(event_from_json(&j).map_err(|e| {
+                    format!("line {}: {e}", i + 1)
+                })?),
+                _ => return Err(format!("line {}: record type must be span or event", i + 1)),
+            }
+        }
+        Ok(TraceExport { spans, events, dropped_spans: 0, dropped_events: 0, open_spans: 0 })
+    }
+}
+
+fn span_line(s: &SpanRecord) -> String {
+    format!(
+        "{{\"t\":\"span\",\"id\":{},\"kind\":\"{}\",\"name\":\"{}\",\"round\":{},\"shard\":{},\
+         \"start_ns\":{},\"end_ns\":{},\"replay\":{}}}",
+        s.id,
+        s.kind.as_str(),
+        s.name,
+        s.round,
+        s.shard,
+        s.start_ns,
+        s.end_ns,
+        s.replay
+    )
+}
+
+fn event_line(e: &EventRecord) -> String {
+    format!(
+        "{{\"t\":\"event\",\"ts_ns\":{},\"kind\":\"{}\",\"round\":{},\"shard\":{},\"client\":{},\
+         \"bytes\":{},\"count\":{},\"value\":{},\"replay\":{}}}",
+        e.ts_ns,
+        e.kind.as_str(),
+        e.round,
+        e.shard,
+        e.client,
+        e.bytes,
+        e.count,
+        e.value,
+        e.replay
+    )
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing u64 field '{key}'"))
+}
+
+fn field_u32(j: &Json, key: &str) -> Result<u32, String> {
+    let v = field_u64(j, key)?;
+    u32::try_from(v).map_err(|_| format!("field '{key}' exceeds u32"))
+}
+
+fn field_bool(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(format!("missing bool field '{key}'")),
+    }
+}
+
+fn span_from_json(j: &Json) -> Result<SpanRecord, String> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .and_then(SpanKind::from_label)
+        .ok_or("unknown span kind")?;
+    let name_raw = j.get("name").and_then(Json::as_str).ok_or("missing span name")?;
+    let name = SPAN_NAMES
+        .into_iter()
+        .find(|&n| n == name_raw)
+        .ok_or_else(|| format!("span name '{name_raw}' not in registry"))?;
+    Ok(SpanRecord {
+        id: field_u64(j, "id")?,
+        kind,
+        name,
+        round: field_u64(j, "round")?,
+        shard: field_u32(j, "shard")?,
+        start_ns: field_u64(j, "start_ns")?,
+        end_ns: field_u64(j, "end_ns")?,
+        replay: field_bool(j, "replay")?,
+    })
+}
+
+fn event_from_json(j: &Json) -> Result<EventRecord, String> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .and_then(EventKind::from_label)
+        .ok_or("unknown event kind")?;
+    Ok(EventRecord {
+        ts_ns: field_u64(j, "ts_ns")?,
+        kind,
+        round: field_u64(j, "round")?,
+        shard: field_u32(j, "shard")?,
+        client: field_u32(j, "client")?,
+        bytes: field_u64(j, "bytes")?,
+        count: field_u64(j, "count")?,
+        value: j.get("value").and_then(Json::as_f64).ok_or("missing f64 field 'value'")?,
+        replay: field_bool(j, "replay")?,
+    })
+}
+
+/// The structural fingerprint recovery must reproduce: the sorted
+/// multiset of `kind/name/round/shard` keys over **WorkUnit and Phase**
+/// spans only. Round and Recovery spans are envelope scopes that
+/// legitimately differ between a live run and a journal replay (the
+/// replay has a `recover` span and no `round` span); the compute
+/// skeleton — which work ran, over which shard tiling, through which
+/// phases — must be identical for the replay to be trustworthy.
+pub fn span_skeleton(spans: &[SpanRecord]) -> Vec<String> {
+    let mut keys: Vec<String> = spans
+        .iter()
+        .filter(|s| matches!(s.kind, SpanKind::WorkUnit | SpanKind::Phase))
+        .map(|s| format!("{}/{}/r{}/s{}", s.kind.as_str(), s.name, s.round, s.shard))
+        .collect();
+    keys.sort();
+    keys
+}
+
+/// Total bytes telemetry attributes to data movement: wire frames in both
+/// directions plus client uplink. On a traced round this equals the
+/// round's [`TrafficStats::bytes`](crate::transport::TrafficStats) total
+/// — events are emitted at exactly the `record_frame` / `record_batch`
+/// call sites, and `trace-sim` gates the equality.
+pub fn attributed_bytes(events: &[EventRecord]) -> u64 {
+    events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.kind,
+                EventKind::FrameSent | EventKind::FrameReceived | EventKind::ClientUplink
+            )
+        })
+        .map(|e| e.bytes)
+        .sum()
+}
+
+/// Per-round rollup derived from a trace: phase wall breakdown, byte
+/// attribution, retries/takeovers, journal volume.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundReport {
+    pub round: u64,
+    /// Wall of the round's `Round` span (max when several stacks traced
+    /// the same id into one recorder).
+    pub wall_ns: u64,
+    pub encode_ns: u64,
+    pub shuffle_ns: u64,
+    pub analyze_ns: u64,
+    pub barrier_ns: u64,
+    pub merge_ns: u64,
+    /// Client uplink bytes ([`EventKind::ClientUplink`]).
+    pub bytes_up: u64,
+    /// Coordinator↔shard wire bytes (frames sent + received).
+    pub bytes_wire: u64,
+    pub retries: u64,
+    pub takeovers: u64,
+    pub journal_bytes: u64,
+    /// Streaming admissions (0 on non-streaming rounds).
+    pub participants: u64,
+}
+
+impl RoundReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("round", num(self.round as f64)),
+            ("wall_ns", num(self.wall_ns as f64)),
+            ("encode_ns", num(self.encode_ns as f64)),
+            ("shuffle_ns", num(self.shuffle_ns as f64)),
+            ("analyze_ns", num(self.analyze_ns as f64)),
+            ("barrier_ns", num(self.barrier_ns as f64)),
+            ("merge_ns", num(self.merge_ns as f64)),
+            ("bytes_up", num(self.bytes_up as f64)),
+            ("bytes_wire", num(self.bytes_wire as f64)),
+            ("retries", num(self.retries as f64)),
+            ("takeovers", num(self.takeovers as f64)),
+            ("journal_bytes", num(self.journal_bytes as f64)),
+            ("participants", num(self.participants as f64)),
+        ])
+    }
+}
+
+/// Roll a trace up into one [`RoundReport`] per round id, ascending.
+/// Events that carry no round context (e.g. wire frames observed outside
+/// a round) attribute to round 0.
+pub fn round_reports(export: &TraceExport) -> Vec<RoundReport> {
+    use std::collections::BTreeMap;
+    let mut by_round: BTreeMap<u64, RoundReport> = BTreeMap::new();
+    for s in &export.spans {
+        let r = by_round.entry(s.round).or_default();
+        r.round = s.round;
+        let dur = s.duration_ns();
+        match (s.kind, s.name) {
+            (SpanKind::Round, _) => r.wall_ns = r.wall_ns.max(dur),
+            (SpanKind::Phase, "encode") => r.encode_ns += dur,
+            (SpanKind::Phase, "shuffle") => r.shuffle_ns += dur,
+            (SpanKind::Phase, "analyze") => r.analyze_ns += dur,
+            (SpanKind::Phase, "barrier") => r.barrier_ns += dur,
+            (SpanKind::Phase, "merge") => r.merge_ns += dur,
+            _ => {}
+        }
+    }
+    for e in &export.events {
+        let r = by_round.entry(e.round).or_default();
+        r.round = e.round;
+        match e.kind {
+            EventKind::ClientUplink => r.bytes_up += e.bytes,
+            EventKind::FrameSent | EventKind::FrameReceived => r.bytes_wire += e.bytes,
+            EventKind::Retry => r.retries += e.count.max(1),
+            EventKind::Takeover => r.takeovers += e.count.max(1),
+            EventKind::JournalAppend | EventKind::JournalCommit => r.journal_bytes += e.bytes,
+            EventKind::Admit => r.participants += e.count.max(1),
+            _ => {}
+        }
+    }
+    by_round.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn noop_tracer_records_nothing() {
+        let t = Tracer::noop();
+        assert!(!t.is_enabled());
+        {
+            let _s = t.span(SpanKind::Round, "round", 0, SHARD_NONE);
+            t.record(EventRecord::new(EventKind::Retry, 0));
+        }
+        let snap = t.snapshot();
+        assert!(snap.spans.is_empty());
+        assert!(snap.events.is_empty());
+        assert_eq!(snap.open_spans, 0);
+    }
+
+    #[test]
+    fn spans_close_and_jsonl_round_trips() {
+        let t = Tracer::new(64);
+        {
+            let _round = t.span(SpanKind::Round, "round", 3, SHARD_NONE);
+            let _unit = t.span(SpanKind::WorkUnit, "shard_compute", 3, 1);
+            assert_eq!(t.open_spans(), 2);
+            t.record(EventRecord::new(EventKind::FrameSent, 3).with_shard(1).with_bytes(120));
+            t.record(
+                EventRecord::new(EventKind::FlRound, 3).with_count(9).with_value(0.25),
+            );
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.open_spans, 0, "RAII must close every span");
+        assert_eq!(snap.spans.len(), 2);
+        assert_eq!(snap.events.len(), 2);
+        assert!(snap.spans.iter().all(|s| s.end_ns >= s.start_ns));
+        let back = TraceExport::parse_jsonl(&snap.to_jsonl()).unwrap();
+        assert_eq!(back.spans, snap.spans);
+        assert_eq!(back.events, snap.events);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new(2);
+        for i in 0..5 {
+            t.record(EventRecord::new(EventKind::Retry, i));
+            let _s = t.span(SpanKind::Phase, "encode", i, 0);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.events.len(), 2);
+        assert_eq!(snap.dropped_events, 3);
+        assert_eq!(snap.spans.len(), 2);
+        assert_eq!(snap.dropped_spans, 3);
+        assert_eq!(snap.open_spans, 0, "dropped spans still close");
+    }
+
+    #[test]
+    fn replay_flag_marks_records() {
+        let t = Tracer::new(16);
+        t.set_replay(true);
+        {
+            let _s = t.span(SpanKind::WorkUnit, "shard_compute", 0, 0);
+            t.record(EventRecord::new(EventKind::JournalReplay, 0).with_count(7));
+        }
+        t.set_replay(false);
+        t.record(EventRecord::new(EventKind::Retry, 1));
+        let snap = t.snapshot();
+        assert!(snap.spans[0].replay);
+        assert!(snap.events[0].replay);
+        assert!(!snap.events[1].replay);
+    }
+
+    #[test]
+    fn skeleton_filters_to_compute_spans_and_sorts() {
+        let t = Tracer::new(64);
+        {
+            let _round = t.span(SpanKind::Round, "round", 0, SHARD_NONE);
+            let _rec = t.span(SpanKind::Recovery, "recover", 0, SHARD_NONE);
+            let _u1 = t.span(SpanKind::WorkUnit, "shard_compute", 0, 1);
+            let _u0 = t.span(SpanKind::WorkUnit, "shard_compute", 0, 0);
+            let _p = t.span(SpanKind::Phase, "encode", 0, 0);
+        }
+        let sk = span_skeleton(&t.snapshot().spans);
+        assert_eq!(
+            sk,
+            vec![
+                "phase/encode/r0/s0".to_string(),
+                "work_unit/shard_compute/r0/s0".to_string(),
+                "work_unit/shard_compute/r0/s1".to_string(),
+            ],
+            "round/recovery envelopes are excluded; order is canonical"
+        );
+    }
+
+    #[test]
+    fn attributed_bytes_sums_only_data_movement() {
+        let events = vec![
+            EventRecord::new(EventKind::FrameSent, 0).with_bytes(100),
+            EventRecord::new(EventKind::FrameReceived, 0).with_bytes(40),
+            EventRecord::new(EventKind::ClientUplink, 0).with_bytes(1000),
+            EventRecord::new(EventKind::JournalAppend, 0).with_bytes(999),
+            EventRecord::new(EventKind::Retry, 0).with_bytes(5),
+        ];
+        assert_eq!(attributed_bytes(&events), 1140);
+    }
+
+    #[test]
+    fn round_reports_aggregate_per_round() {
+        let t = Tracer::new(64);
+        {
+            let _r0 = t.span(SpanKind::Round, "round", 0, SHARD_NONE);
+            let _p = t.span(SpanKind::Phase, "shuffle", 0, 0);
+            t.record(EventRecord::new(EventKind::ClientUplink, 0).with_bytes(500).with_count(5));
+            t.record(EventRecord::new(EventKind::FrameSent, 0).with_bytes(64));
+            t.record(EventRecord::new(EventKind::Retry, 0));
+            t.record(EventRecord::new(EventKind::JournalCommit, 1).with_bytes(32));
+            t.record(EventRecord::new(EventKind::Takeover, 1).with_count(2));
+        }
+        let reports = round_reports(&t.snapshot());
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].round, 0);
+        assert_eq!(reports[0].bytes_up, 500);
+        assert_eq!(reports[0].bytes_wire, 64);
+        assert_eq!(reports[0].retries, 1);
+        assert!(reports[0].wall_ns >= reports[0].shuffle_ns);
+        assert_eq!(reports[1].round, 1);
+        assert_eq!(reports[1].journal_bytes, 32);
+        assert_eq!(reports[1].takeovers, 2);
+        let j = reports[0].to_json();
+        assert_eq!(j.get("bytes_up").and_then(Json::as_u64), Some(500));
+    }
+
+    #[test]
+    fn trust_rule_export_is_numeric_only() {
+        // Structural enforcement check: every exported line's keys come
+        // from the fixed allowlist, and the only string-valued fields are
+        // the record type, the kind, and a registry span name. A field
+        // that could carry share values, pool residues or seeds (arrays,
+        // free-form strings) cannot appear without failing this scan.
+        let t = Tracer::new(256);
+        {
+            let _spans: Vec<Span> = SPAN_NAMES
+                .iter()
+                .map(|&n| t.span(SpanKind::Phase, n, 1, 2))
+                .collect();
+            for k in EventKind::ALL {
+                t.record(
+                    EventRecord::new(k, 1)
+                        .with_shard(0)
+                        .with_client(3)
+                        .with_bytes(10)
+                        .with_count(2)
+                        .with_value(0.5),
+                );
+            }
+        }
+        let jsonl = t.snapshot().to_jsonl();
+        let span_keys =
+            ["t", "id", "kind", "name", "round", "shard", "start_ns", "end_ns", "replay"];
+        let event_keys =
+            ["t", "ts_ns", "kind", "round", "shard", "client", "bytes", "count", "value", "replay"];
+        for line in jsonl.lines() {
+            let j = Json::parse(line).unwrap();
+            let m = match &j {
+                Json::Obj(m) => m,
+                _ => panic!("every record is an object"),
+            };
+            let allow: &[&str] = if j.get("t").and_then(Json::as_str) == Some("span") {
+                &span_keys
+            } else {
+                &event_keys
+            };
+            for (k, v) in m {
+                assert!(allow.contains(&k.as_str()), "unexpected trace field '{k}'");
+                match v {
+                    Json::Str(s) => {
+                        let ok = k.as_str() == "t" && (s == "span" || s == "event")
+                            || k.as_str() == "kind"
+                                && (SpanKind::from_label(s).is_some()
+                                    || EventKind::from_label(s).is_some())
+                            || k.as_str() == "name" && SPAN_NAMES.contains(&s.as_str());
+                        assert!(ok, "string field '{k}'='{s}' outside the fixed registries");
+                    }
+                    Json::Num(_) | Json::Bool(_) => {}
+                    _ => panic!("field '{k}' is not a scalar — trust rule violation"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_jsonl_round_trip() {
+        // Satellite: Event/Span JSONL round-trips through util::json for
+        // arbitrary in-range records (u64s bounded below 2^53 — the
+        // documented exactness envelope of f64-backed Json numbers).
+        const MAX_EXACT: u64 = 1 << 53;
+        forall("telemetry jsonl roundtrip", 200, |g| {
+            let kind = EventKind::ALL[g.usize_in(0, EventKind::ALL.len() - 1)];
+            let ev = EventRecord {
+                ts_ns: g.u64_below(MAX_EXACT),
+                kind,
+                round: g.u64_below(MAX_EXACT),
+                shard: g.u64_below(1 << 32) as u32,
+                client: g.u64_below(1 << 32) as u32,
+                bytes: g.u64_below(MAX_EXACT),
+                count: g.u64_below(MAX_EXACT),
+                value: g.f64_unit(),
+                replay: g.bool(0.5),
+            };
+            let name = SPAN_NAMES[g.usize_in(0, SPAN_NAMES.len() - 1)];
+            let kinds = [
+                SpanKind::Round,
+                SpanKind::Phase,
+                SpanKind::Shard,
+                SpanKind::WorkUnit,
+                SpanKind::Recovery,
+            ];
+            let sp = SpanRecord {
+                id: g.u64_below(MAX_EXACT),
+                kind: kinds[g.usize_in(0, kinds.len() - 1)],
+                name,
+                round: g.u64_below(MAX_EXACT),
+                shard: g.u64_below(1 << 32) as u32,
+                start_ns: g.u64_below(MAX_EXACT),
+                end_ns: g.u64_below(MAX_EXACT),
+                replay: g.bool(0.5),
+            };
+            let export = TraceExport {
+                spans: vec![sp],
+                events: vec![ev],
+                dropped_spans: 0,
+                dropped_events: 0,
+                open_spans: 0,
+            };
+            let back = TraceExport::parse_jsonl(&export.to_jsonl()).unwrap();
+            assert_eq!(back, export);
+        });
+    }
+
+    #[test]
+    fn parse_rejects_unregistered_names_and_kinds() {
+        let bad_name = "{\"t\":\"span\",\"id\":1,\"kind\":\"phase\",\"name\":\"exfil\",\
+                        \"round\":0,\"shard\":0,\"start_ns\":0,\"end_ns\":1,\"replay\":false}";
+        assert!(TraceExport::parse_jsonl(bad_name).is_err());
+        let bad_kind = "{\"t\":\"event\",\"ts_ns\":0,\"kind\":\"shares\",\"round\":0,\
+                        \"shard\":0,\"client\":0,\"bytes\":0,\"count\":0,\"value\":0,\
+                        \"replay\":false}";
+        assert!(TraceExport::parse_jsonl(bad_kind).is_err());
+    }
+}

@@ -32,6 +32,16 @@ impl CostModel {
 }
 
 /// Running traffic counters for one component (user fleet, shuffler, server).
+///
+/// Reconciliation invariant with the [`telemetry`](crate::telemetry)
+/// flight recorder: every call site that charges `bytes` here on the
+/// cluster round path also emits exactly one telemetry event carrying
+/// the same byte count (FrameSent/FrameReceived at `record_frame` sites,
+/// one ClientUplink rollup for the `record_batch` uplink loop), so
+/// [`telemetry::attributed_bytes`](crate::telemetry::attributed_bytes)
+/// over a round's events equals the round's `traffic.bytes` — each byte
+/// counted once on each side, never twice. `RemoteShardBackend` keeps a
+/// debug assert on this identity; the `trace-sim` CLI gates on it.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TrafficStats {
     pub messages: u64,

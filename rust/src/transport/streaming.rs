@@ -35,6 +35,7 @@ use crate::aggregator::{Aggregator, AggregatorError};
 use crate::coordinator::batcher::{Batcher, ClientBatch, CollectError};
 use crate::coordinator::round::{RoundError, RoundState};
 use crate::engine::{ClientSeeds, EngineError, RoundInput, RoundResult};
+use crate::telemetry::{EventKind, EventRecord, Tracer};
 use crate::transport::channel::Channel;
 use crate::transport::wire::{decode_frame, encode_frame, Frame};
 use crate::util::pool::BoundedQueue;
@@ -174,6 +175,9 @@ struct Ingest<'a> {
     dups: usize,
     malformed: usize,
     stale: usize,
+    /// The aggregator's flight recorder (noop unless one was installed):
+    /// per-client admit/drop events, plus close-time rejection rollups.
+    tracer: Tracer,
 }
 
 impl Ingest<'_> {
@@ -221,6 +225,10 @@ impl Ingest<'_> {
                     }
                     self.state.record_contribution(batch.client_stream)?;
                     self.contributed[idx] = true;
+                    self.tracer.record(
+                        EventRecord::new(EventKind::Admit, self.round)
+                            .with_client(batch.client_stream),
+                    );
                     sender.push(batch);
                 }
                 Frame::ContributeBatch { round, per_client, clients, shares } => {
@@ -254,6 +262,9 @@ impl Ingest<'_> {
                         }
                         self.state.record_contribution(client)?;
                         self.contributed[idx] = true;
+                        self.tracer.record(
+                            EventRecord::new(EventKind::Admit, self.round).with_client(client),
+                        );
                         sender.push(ClientBatch {
                             client_stream: client,
                             shares: block.to_vec(),
@@ -276,6 +287,8 @@ impl Ingest<'_> {
                     }
                     self.state.record_drop(client)?;
                     self.dropped[idx] = true;
+                    self.tracer
+                        .record(EventRecord::new(EventKind::Drop, self.round).with_client(client));
                 }
                 // Control frames (round lifecycle and the cluster's
                 // coordinator↔shard plane) carry no contribution payload.
@@ -319,6 +332,7 @@ impl StreamingRound {
         let round = engine.next_round();
         let expected = cfg.expected;
 
+        let tracer = engine.telemetry();
         let mut state = RoundState::new(round, expected);
         state.begin_collect()?;
         let mut ing = Ingest {
@@ -334,6 +348,7 @@ impl StreamingRound {
             dups: 0,
             malformed: 0,
             stale: 0,
+            tracer: tracer.clone(),
         };
 
         let batcher = Batcher::new(cfg.batch_capacity.max(1));
@@ -359,7 +374,21 @@ impl StreamingRound {
             if !ing.contributed[idx] && !ing.dropped[idx] {
                 ing.state.record_drop(idx as u32)?;
                 ing.dropped[idx] = true;
+                tracer.record(EventRecord::new(EventKind::Drop, round).with_client(idx as u32));
             }
+        }
+
+        // Close-time rollups: one Deadline event covering every late
+        // frame, one Reject covering malformed + stale — counts only, no
+        // payload data (the trust rule).
+        if ing.late > 0 {
+            tracer.record(EventRecord::new(EventKind::Deadline, round).with_count(ing.late as u64));
+        }
+        if ing.malformed + ing.stale > 0 {
+            tracer.record(
+                EventRecord::new(EventKind::Reject, round)
+                    .with_count((ing.malformed + ing.stale) as u64),
+            );
         }
 
         let participants = ing.state.participants();

@@ -47,6 +47,9 @@ pub struct Bench {
     window: Duration,
     samples: usize,
     results: Vec<Measurement>,
+    /// Named JSON blocks attached to the report (metrics-registry
+    /// quantiles, telemetry round reports, …) — emitted under `extras`.
+    extras: Vec<(String, Json)>,
 }
 
 impl Bench {
@@ -59,7 +62,15 @@ impl Bench {
             window: if quick { Duration::from_millis(50) } else { Duration::from_millis(400) },
             samples: if quick { 5 } else { 15 },
             results: Vec::new(),
+            extras: Vec::new(),
         }
+    }
+
+    /// Attach a named JSON block to the report — it lands under `extras`
+    /// in [`Bench::to_json`]. Used to ship metrics-registry histogram
+    /// quantiles and telemetry round reports alongside the timings.
+    pub fn attach(&mut self, name: &str, value: Json) {
+        self.extras.push((name.to_string(), value));
     }
 
     pub fn with_window(mut self, warmup: Duration, window: Duration, samples: usize) -> Self {
@@ -174,11 +185,17 @@ impl Bench {
             ("arch", s(std::env::consts::ARCH)),
             ("cpus", num(cpus as f64)),
         ]);
-        obj(vec![
+        let mut root = vec![
             ("group", s(&self.group)),
             ("cases", Json::Arr(cases)),
             ("machine", machine),
-        ])
+        ];
+        let extras: Vec<(&str, Json)> =
+            self.extras.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        if !extras.is_empty() {
+            root.push(("extras", obj(extras)));
+        }
+        obj(root)
     }
 
     /// Write the JSON report to `path` (conventionally `BENCH_<group>.json`).
@@ -304,6 +321,23 @@ mod tests {
         assert_eq!(machine.get("arch").and_then(|v| v.as_str()), Some(std::env::consts::ARCH));
         assert!(machine.get("cpus").and_then(|v| v.as_u64()).unwrap() >= 1);
         // and the document round-trips through the JSON parser
+        let text = j.to_string_pretty();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn attached_extras_land_in_json() {
+        let mut b = Bench::new("extras").with_window(
+            Duration::from_millis(2),
+            Duration::from_millis(4),
+            2,
+        );
+        b.run("case", || std::hint::black_box(1u64));
+        let bare = b.to_json();
+        assert!(bare.get("extras").is_none(), "no extras block unless attached");
+        b.attach("metrics", obj(vec![("rounds", num(3.0))]));
+        let j = b.to_json();
+        assert_eq!(j.at(&["extras", "metrics", "rounds"]).and_then(|v| v.as_u64()), Some(3));
         let text = j.to_string_pretty();
         assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
     }
