@@ -95,6 +95,7 @@ use crate::engine::{
     ShardBackendError, ShardHealth,
 };
 use crate::metrics::Registry as MetricsRegistry;
+use crate::obsv::{ObsAggregator, SloPolicy};
 use crate::telemetry::Tracer;
 use crate::transport::channel::Channel;
 
@@ -292,6 +293,14 @@ pub trait Aggregator {
     /// default ignores it for stacks without instrumentation.
     fn set_telemetry(&mut self, tracer: Tracer) {
         let _ = tracer;
+    }
+
+    /// The live ops plane's scrape address
+    /// (`/metrics` + `/health` + `/trace`, see [`crate::obsv`]), when
+    /// one is attached via [`AggregatorBuilder::ops_listen`] — `None` on
+    /// bare stacks. The resolved port when the plane was bound on `:0`.
+    fn ops_addr(&self) -> Option<std::net::SocketAddr> {
+        None
     }
 }
 
@@ -499,6 +508,12 @@ pub struct AggregatorBuilder {
     /// tuning alone never turns a stack elastic.
     elastic_tuning: ElasticTuning,
     expect_fnv: Option<u32>,
+    /// Listen address for the live ops plane; `None` keeps the stack
+    /// bare.
+    ops: Option<String>,
+    /// Applied only when [`AggregatorBuilder::ops_listen`] attached the
+    /// plane — the default policy never fires.
+    ops_policy: SloPolicy,
 }
 
 impl AggregatorBuilder {
@@ -513,6 +528,8 @@ impl AggregatorBuilder {
             elastic: None,
             elastic_tuning: ElasticTuning::default(),
             expect_fnv: None,
+            ops: None,
+            ops_policy: SloPolicy::default(),
         }
     }
 
@@ -591,10 +608,37 @@ impl AggregatorBuilder {
         self
     }
 
+    /// Attach the live ops plane ([`crate::obsv`]): a scrape endpoint
+    /// (`/metrics`, `/health`, `/trace`) bound on `listen`, a live trace
+    /// subscriber, and the SLO watchdog. Use `"127.0.0.1:0"` for an
+    /// ephemeral port and discover it via [`Aggregator::ops_addr`].
+    /// Works on every topology; installs a flight recorder if the stack
+    /// has none.
+    pub fn ops_listen(mut self, listen: impl Into<String>) -> Self {
+        self.ops = Some(listen.into());
+        self
+    }
+
+    /// SLO budgets for the ops plane's watchdog. Inert unless
+    /// [`AggregatorBuilder::ops_listen`] also attaches the plane.
+    pub fn ops_policy(mut self, policy: SloPolicy) -> Self {
+        self.ops_policy = policy;
+        self
+    }
+
     /// Assemble the stack.
     pub fn build(self) -> Result<Box<dyn Aggregator>, AggregatorError> {
-        let AggregatorBuilder { cfg, seed, topology, tuning, elastic, elastic_tuning, expect_fnv } =
-            self;
+        let AggregatorBuilder {
+            cfg,
+            seed,
+            topology,
+            tuning,
+            elastic,
+            elastic_tuning,
+            expect_fnv,
+            ops,
+            ops_policy,
+        } = self;
         if let Some(want) = expect_fnv {
             let got = config_fingerprint(&cfg);
             if got != want {
@@ -619,24 +663,44 @@ impl AggregatorBuilder {
                 });
             }
         }
-        let remote = match topology {
-            Topology::Local => return Ok(Box::new(Engine::new(cfg, seed))),
-            Topology::InProcess => return Ok(Box::new(ClusterEngine::in_process(cfg, seed))),
-            Topology::Loopback => RemoteShardBackend::loopback(&cfg),
-            Topology::Tcp(addrs) => RemoteShardBackend::over_tcp(&cfg, &addrs)?,
-            Topology::Channels(make) => RemoteShardBackend::over_channels(&cfg, make),
-        };
-        let remote = match tuning {
-            Some(t) => remote.with_tuning(t),
-            None => remote,
-        };
-        let backend: Box<dyn crate::engine::ShardBackend> = match elastic {
-            Some(policy) => {
-                Box::new(ElasticController::new(remote, policy).with_tuning(elastic_tuning))
+        let stack: Box<dyn Aggregator> = match topology {
+            Topology::Local => Box::new(Engine::new(cfg, seed)),
+            Topology::InProcess => Box::new(ClusterEngine::in_process(cfg, seed)),
+            wire => {
+                let remote = match wire {
+                    Topology::Loopback => RemoteShardBackend::loopback(&cfg),
+                    Topology::Tcp(addrs) => RemoteShardBackend::over_tcp(&cfg, &addrs)?,
+                    Topology::Channels(make) => RemoteShardBackend::over_channels(&cfg, make),
+                    Topology::Local | Topology::InProcess => {
+                        unreachable!("no-wire topologies matched above")
+                    }
+                };
+                let remote = match tuning {
+                    Some(t) => remote.with_tuning(t),
+                    None => remote,
+                };
+                let backend: Box<dyn crate::engine::ShardBackend> = match elastic {
+                    Some(policy) => Box::new(
+                        ElasticController::new(remote, policy).with_tuning(elastic_tuning),
+                    ),
+                    None => Box::new(remote),
+                };
+                Box::new(ClusterEngine::new(cfg, seed, backend))
             }
-            None => Box::new(remote),
         };
-        Ok(Box::new(ClusterEngine::new(cfg, seed, backend)))
+        // The ops plane decorates any finished stack — same frontends,
+        // plus a scrape endpoint.
+        match ops {
+            None => Ok(stack),
+            Some(listen) => {
+                let wrapped = ObsAggregator::wrap(stack, &listen, ops_policy).map_err(|e| {
+                    AggregatorError::Backend(ShardBackendError::Io(format!(
+                        "ops endpoint bind on {listen}: {e}"
+                    )))
+                })?;
+                Ok(Box::new(wrapped))
+            }
+        }
     }
 }
 
@@ -804,6 +868,33 @@ mod tests {
         assert_eq!(elastic.shard_takeovers(), 1);
         assert!(!elastic.shard_health()[1].alive, "victim parked in the health view");
         assert_eq!(elastic.backend_label(), "elastic");
+    }
+
+    #[test]
+    fn ops_plane_is_opt_in_and_survives_every_topology() {
+        // Bare stacks advertise no scrape address…
+        let bare = AggregatorBuilder::new(small_cfg(6, 3, 2), 1).loopback().build().unwrap();
+        assert!(bare.ops_addr().is_none());
+        // …and ops_listen attaches one on local and elastic alike,
+        // without perturbing the round's estimates.
+        let (n, d, seed) = (8usize, 4usize, 13u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut want = None;
+        let makes: [fn(EngineConfig, u64) -> AggregatorBuilder; 2] = [
+            |cfg, seed| AggregatorBuilder::new(cfg, seed).local(),
+            |cfg, seed| AggregatorBuilder::new(cfg, seed).loopback().elastic(Box::new(EvenSplit)),
+        ];
+        for make in makes {
+            let mut agg =
+                make(small_cfg(n, d, 2), seed).ops_listen("127.0.0.1:0").build().unwrap();
+            assert!(agg.ops_addr().is_some(), "{}", agg.backend_label());
+            let r = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+            match &want {
+                None => want = Some(r.estimates),
+                Some(w) => assert_eq!(&r.estimates, w, "{}", agg.backend_label()),
+            }
+        }
     }
 
     #[test]

@@ -45,8 +45,8 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{
     ranges_tile, validate_pools, validate_pools_flat, ClientSeeds, EngineConfig,
-    InProcessBackend, RoundInput, RoundResult, ShardBackend, ShardBackendError, ShardHealth,
-    ShardRoundWork, SHUFFLE_SEED_TAG,
+    InProcessBackend, ReconcileReport, RoundInput, RoundResult, ShardBackend,
+    ShardBackendError, ShardHealth, ShardRoundWork, SHUFFLE_SEED_TAG,
 };
 use crate::metrics::Registry as MetricsRegistry;
 use crate::rng::derive_seed;
@@ -635,18 +635,23 @@ impl ShardBackend for RemoteShardBackend {
         Ok(outs)
     }
 
-    fn take_traffic(&mut self) -> TrafficStats {
+    fn take_traffic(&mut self) -> (TrafficStats, ReconcileReport) {
         let traffic = std::mem::take(&mut self.traffic);
-        // Reconciliation tripwire (see `bytes_attributed`): a new
-        // `record_frame` call site without its telemetry event — or a
-        // double-charged frame — trips this in debug builds and in the
-        // trace-sim gate.
-        debug_assert_eq!(
-            self.bytes_attributed, traffic.bytes,
-            "telemetry byte attribution must equal TrafficStats frame bytes"
+        // Reconciliation (see `bytes_attributed`): a new `record_frame`
+        // call site without its telemetry event — or a double-charged
+        // frame — makes the report's delta nonzero. The report travels to
+        // the caller so RELEASE builds surface the drift on `/metrics`;
+        // the debug assert keeps the loud early tripwire for tests.
+        let report = ReconcileReport::new(traffic.bytes, self.bytes_attributed);
+        debug_assert!(
+            report.reconciled(),
+            "telemetry byte attribution must equal TrafficStats frame bytes \
+             (attributed {} vs traffic {})",
+            report.attributed_bytes,
+            report.traffic_bytes
         );
         self.bytes_attributed = 0;
-        traffic
+        (traffic, report)
     }
 
     fn set_tracer(&mut self, tracer: Tracer) {
@@ -891,7 +896,9 @@ impl ClusterEngine {
                 .with_bytes((n * d * m * bytes) as u64)
                 .with_count(n as u64),
         );
-        traffic.merge(&self.backend.take_traffic());
+        let (shard_traffic, reconcile) = self.backend.take_traffic();
+        traffic.merge(&shard_traffic);
+        self.record_reconcile(&reconcile);
 
         let wall = t0.elapsed().as_secs_f64();
         self.record_round_metrics(n * d * m, wall, false);
@@ -985,7 +992,9 @@ impl ClusterEngine {
                 .with_bytes((participants * d * m * bytes) as u64)
                 .with_count(participants as u64),
         );
-        traffic.merge(&self.backend.take_traffic());
+        let (shard_traffic, reconcile) = self.backend.take_traffic();
+        traffic.merge(&shard_traffic);
+        self.record_reconcile(&reconcile);
 
         let wall = t0.elapsed().as_secs_f64();
         self.record_round_metrics(participants * d * m, wall, true);
@@ -1044,6 +1053,17 @@ impl ClusterEngine {
             self.metrics.histogram("cluster.shard_seconds").record_ns(o.wall_ns);
         }
         Ok(estimates)
+    }
+
+    /// Surface the byte-attribution reconciliation on the registry (and
+    /// so on the ops plane's `/metrics`): both accountings as running
+    /// totals plus the cumulative drift — `cluster.reconcile.delta_bytes`
+    /// staying at 0 IS the release-build health check the old debug-only
+    /// assert could not provide.
+    fn record_reconcile(&mut self, report: &ReconcileReport) {
+        self.metrics.counter("cluster.reconcile.traffic_bytes").add(report.traffic_bytes);
+        self.metrics.counter("cluster.reconcile.attributed_bytes").add(report.attributed_bytes);
+        self.metrics.counter("cluster.reconcile.delta_bytes").add(report.delta());
     }
 
     fn record_round_metrics(&mut self, messages: usize, wall: f64, streaming: bool) {
@@ -1151,6 +1171,26 @@ mod tests {
         let trace = cluster.tracer().snapshot();
         assert_eq!(trace.open_spans, 0, "every span must close by round end");
         assert_eq!(attributed_bytes(&trace.events), result.traffic.bytes);
+        // Satellite: the reconciliation is no longer debug-only — the
+        // returned ReconcileReport lands on the registry, delta 0.
+        let wire = cluster.metrics().counter("cluster.reconcile.traffic_bytes").get();
+        let attributed = cluster.metrics().counter("cluster.reconcile.attributed_bytes").get();
+        assert!(wire > 0, "a loopback cluster round crosses the wire");
+        assert_eq!(wire, attributed);
+        assert_eq!(cluster.metrics().counter("cluster.reconcile.delta_bytes").get(), 0);
+    }
+
+    /// A drifted accounting must surface in release builds: a backend
+    /// whose attribution disagrees with TrafficStats yields a nonzero
+    /// delta counter instead of a silently skipped debug assert.
+    #[test]
+    fn reconcile_report_surfaces_drift() {
+        let report = ReconcileReport::new(100, 60);
+        assert!(!report.reconciled());
+        assert_eq!(report.delta(), 40);
+        let report = ReconcileReport::new(60, 100);
+        assert_eq!(report.delta(), 40, "drift is absolute in either direction");
+        assert!(ReconcileReport::default().reconciled(), "no wire, nothing to drift");
     }
 
     #[test]

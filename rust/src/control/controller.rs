@@ -27,7 +27,9 @@
 //! separate probe protocol, no probe/true-traffic divergence.
 
 use crate::cluster::{RemoteShardBackend, ShardAttempt};
-use crate::engine::{ranges_tile, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork};
+use crate::engine::{
+    ranges_tile, ReconcileReport, ShardBackend, ShardBackendError, ShardHealth, ShardRoundWork,
+};
 use crate::telemetry::{EventKind, EventRecord, SpanKind, Tracer};
 use crate::transport::wire::ShardOutMsg;
 use crate::transport::TrafficStats;
@@ -265,7 +267,7 @@ impl ShardBackend for ElasticController {
         self.directory.snapshot()
     }
 
-    fn take_traffic(&mut self) -> TrafficStats {
+    fn take_traffic(&mut self) -> (TrafficStats, ReconcileReport) {
         self.inner.take_traffic()
     }
 

@@ -237,6 +237,36 @@ impl Default for ShardHealth {
     }
 }
 
+/// The `bytes_attributed == TrafficStats` reconciliation, returned by
+/// [`ShardBackend::take_traffic`] so *release* builds can expose the
+/// delta (the flight recorder's byte attribution must equal the traffic
+/// accountant's frame bytes — a drift means an `EventKind::FrameSent`/
+/// `FrameReceived` emission site fell out of sync with `record_frame`).
+/// A trivial (0, 0) report is reconciled by definition — backends with
+/// no wire have nothing to drift.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReconcileReport {
+    /// What [`TrafficStats`] counted across the wire.
+    pub traffic_bytes: u64,
+    /// What telemetry events attributed at the same call sites.
+    pub attributed_bytes: u64,
+}
+
+impl ReconcileReport {
+    pub fn new(traffic_bytes: u64, attributed_bytes: u64) -> Self {
+        ReconcileReport { traffic_bytes, attributed_bytes }
+    }
+
+    /// Absolute drift between the two accountings (0 when healthy).
+    pub fn delta(&self) -> u64 {
+        self.traffic_bytes.abs_diff(self.attributed_bytes)
+    }
+
+    pub fn reconciled(&self) -> bool {
+        self.delta() == 0
+    }
+}
+
 /// Where one round's shard work runs.
 pub trait ShardBackend {
     /// Execute the round's per-shard work units, returning one
@@ -266,9 +296,13 @@ pub trait ShardBackend {
     }
 
     /// Coordinator↔shard wire traffic since the last call (zero for
-    /// in-process backends — nothing crosses a wire).
-    fn take_traffic(&mut self) -> TrafficStats {
-        TrafficStats::default()
+    /// in-process backends — nothing crosses a wire), paired with the
+    /// reconciliation between that accounting and telemetry's
+    /// event-attributed bytes. Release builds surface the
+    /// [`ReconcileReport`] on `/metrics` instead of silently skipping
+    /// the old debug-only assert.
+    fn take_traffic(&mut self) -> (TrafficStats, ReconcileReport) {
+        (TrafficStats::default(), ReconcileReport::default())
     }
 
     /// Work resends performed so far (straggler/retry telemetry).

@@ -123,8 +123,8 @@ use crate::util::pool::ThreadPool;
 
 pub use arena::PoolArena;
 pub use backend::{
-    InProcessBackend, ShardBackend, ShardBackendError, ShardExecutor, ShardHealth,
-    ShardRoundWork,
+    InProcessBackend, ReconcileReport, ShardBackend, ShardBackendError, ShardExecutor,
+    ShardHealth, ShardRoundWork,
 };
 
 /// Stream tag splitting the engine's master seed into the shuffle-seed

@@ -25,7 +25,11 @@
 //!   [`coordinator::durable`]), the [`telemetry`] flight recorder
 //!   (bounded-ring structured spans/events threaded through every stack,
 //!   JSONL export, per-round reports — records sizes/timings/ids only,
-//!   never share values, pool contents, or seeds), parameter planner
+//!   never share values, pool contents, or seeds), the [`obsv`] live ops
+//!   plane (opt-in `std::net` scrape endpoint serving `/metrics`,
+//!   `/health` and a live `/trace` tail off bounded never-blocking
+//!   subscribers, with an SLO watchdog judging every round against
+//!   deploy-time budgets), parameter planner
 //!   for Theorems 1–2, privacy accountant,
 //!   baselines (Cheu et al., Balle et al., Bonawitz et al., local/central
 //!   DP), and linear-sketch analytics built on secure aggregation (§1.2).
@@ -60,6 +64,7 @@ pub mod encoder;
 pub mod engine;
 pub mod fl;
 pub mod metrics;
+pub mod obsv;
 pub mod params;
 pub mod pipeline;
 pub mod privacy;
@@ -91,6 +96,7 @@ pub mod prelude {
     pub use crate::encoder::prerandomizer::PreRandomizer;
     pub use crate::encoder::CloakEncoder;
     pub use crate::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+    pub use crate::obsv::{SloKind, SloPolicy};
     pub use crate::params::{NeighborNotion, ProtocolPlan};
     pub use crate::pipeline::Pipeline;
     pub use crate::privacy::accountant::PrivacyAccountant;

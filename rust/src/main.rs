@@ -32,6 +32,17 @@
 //!                   replay reproduces the live span skeleton, JSONL
 //!                   export survives the fixed-registry privacy scan);
 //!                   benchkit JSON with quantiles + RoundReports out
+//!   ops-sim       — live ops plane: local, cluster and elastic stacks
+//!                   run lossy streamed rounds with the scrape endpoint
+//!                   attached; /metrics, /health and /trace are scraped
+//!                   MID-round over real HTTP and gate-checked (byte
+//!                   counters reconcile exactly with TrafficStats, the
+//!                   scripted shard death surfaces as a takeover alert on
+//!                   /health, every /trace line passes the fixed-registry
+//!                   scan); benchkit JSON with a bytes/user baseline out
+//!   trace-scan    — screen a captured /trace tail (JSONL file) through
+//!                   the fixed span/event registries; exits nonzero on
+//!                   any line the registries reject
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -39,10 +50,13 @@
 //!   cloak-agg plan --n 100000 --eps 0.5 --delta 1e-8
 //!   cloak-agg transport-sim --n 256 --d 8 --loss 0.1 --seed 7
 //!   cloak-agg cluster-sim --n 64 --d 16 --shards 4 --net tcp --seed 7
+//!   cloak-agg cluster-sim --net loopback --ops 127.0.0.1:9642 --ops-linger 20
 //!   cloak-agg elastic-sim --n 48 --d 16 --shards 4 --net tcp --policy proportional
 //!   cloak-agg lossy-cluster-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 //!   cloak-agg crash-recovery-sim --n 24 --d 8 --seed 7
 //!   cloak-agg trace-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
+//!   cloak-agg ops-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
+//!   cloak-agg trace-scan --file /tmp/trace_tail.jsonl
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -54,7 +68,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim|trace-sim> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim|trace-sim|ops-sim|trace-scan> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -63,7 +77,9 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --deadline --seed --out
   cluster-sim:   --n --d --shards (0=sweep) --net (tcp|sim|loopback|inprocess)
                  --loss (sim net only) --batch (ContributeBatch coalescing,
-                 0=off) --seed --out
+                 0=off) --ops (host:port, attach the live scrape endpoint)
+                 --ops-linger (seconds to keep serving after the run)
+                 --seed --out
   elastic-sim:   --n --d --shards --rounds --kill (dies BY this round)
                  --policy (static|even|proportional) --net (tcp|sim)
                  --seed --out
@@ -71,7 +87,10 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --seed --out
   crash-recovery-sim: --n --d --shards (0=sweep 1,4) --seed --out
   trace-sim:     --n --d --loss --dup --shards --quorum --deadline
-                 --seed --out";
+                 --seed --out
+  ops-sim:       --n --d --loss --dup --shards --quorum --deadline
+                 --seed --out
+  trace-scan:    --file (JSONL /trace capture to screen)";
 
 fn main() {
     if let Err(e) = run() {
@@ -95,11 +114,13 @@ fn run() -> Result<()> {
             "lossy-cluster-sim",
             "crash-recovery-sim",
             "trace-sim",
+            "ops-sim",
+            "trace-scan",
         ],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
             "loss", "dup", "shards", "quorum", "deadline", "out", "net", "policy", "kill",
-            "batch",
+            "batch", "ops", "ops-linger", "file",
         ],
     )?;
     match args.command.as_str() {
@@ -113,6 +134,8 @@ fn run() -> Result<()> {
         "lossy-cluster-sim" => cmd_lossy_cluster_sim(&args),
         "crash-recovery-sim" => cmd_crash_recovery_sim(&args),
         "trace-sim" => cmd_trace_sim(&args),
+        "ops-sim" => cmd_ops_sim(&args),
+        "trace-scan" => cmd_trace_scan(&args),
         _ => unreachable!(),
     }
 }
@@ -527,6 +550,46 @@ fn cmd_cluster_sim(args: &Args) -> Result<()> {
         ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
     }
     println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+
+    // --- optional live ops plane: run with the scrape endpoint attached,
+    // self-scrape all three endpoints, then keep serving so an external
+    // scraper (the CI smoke step's curl) can hit the same live server.
+    let ops = args.get_str("ops", "");
+    if !ops.is_empty() {
+        use cloak_agg::obsv::http_get;
+        let linger = args.get_usize("ops-linger", 0)?;
+        let s = *sweep.last().unwrap();
+        let cfg = EngineConfig::new(plan.clone(), d).with_shards(s);
+        let mut stack =
+            AggregatorBuilder::new(cfg, seed).loopback().ops_listen(ops.as_str()).build()?;
+        let addr = stack.ops_addr().expect("ops plane must expose its address");
+        println!("ops plane listening on http://{addr}");
+        stack.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+        stack.run_round(&RoundInput::Vectors(&inputs), &seeds)?;
+        let (code, metrics) = http_get(addr, "/metrics")?;
+        ensure!(code == 200, "/metrics returned {code}");
+        ensure!(
+            metrics.contains("cloak_cluster_reconcile_delta_bytes 0"),
+            "/metrics must show exact byte reconciliation:\n{metrics}"
+        );
+        let (code, health) = http_get(addr, "/health")?;
+        ensure!(code == 200, "/health returned {code}");
+        let h = Json::parse(&health)?;
+        ensure!(
+            h.get("ok") == Some(&Json::Bool(true)),
+            "/health must report ok on a clean run:\n{health}"
+        );
+        let (code, trace) = http_get(addr, "/trace")?;
+        ensure!(code == 200, "/trace returned {code}");
+        if let Err(e) = cloak_agg::telemetry::TraceExport::parse_jsonl(&trace) {
+            bail!("/trace failed the registry scan: {e}");
+        }
+        println!("ops self-scrape OK: /metrics /health /trace on {addr}");
+        if linger > 0 {
+            println!("ops linger: serving http://{addr} for {linger}s");
+            std::thread::sleep(std::time::Duration::from_secs(linger as u64));
+        }
+    }
     Ok(())
 }
 
@@ -1579,6 +1642,325 @@ fn cmd_trace_sim(args: &Args) -> Result<()> {
     );
     println!("benchkit JSON OK: {out} ({} cases)", cases.len());
     Ok(())
+}
+
+/// Live ops plane end-to-end: the local, cluster and elastic stacks run
+/// the SAME lossy streamed cohort with the scrape endpoint attached, and
+/// the endpoints themselves are the thing under test. Per stack: round 1
+/// streams normally; round 2 is scraped MID-round over real HTTP — the
+/// cohort is sent and in flight when `/metrics`, `/health` and `/trace`
+/// must all answer — then driven to completion. Final gates: the
+/// `/metrics` byte counters reconcile exactly with `TrafficStats`
+/// (`cluster.reconcile.delta_bytes == 0` on wire stacks, trace-attributed
+/// bytes equal the rounds' traffic on every stack), the elastic stack's
+/// scripted shard death surfaces as a `takeover_budget` SLO alert on
+/// `/health` (and a `slo_breach` line on `/trace`), every `/trace` line
+/// passes the fixed-registry scan, and the ops plane never perturbs the
+/// estimates (bit-identity across stacks). Ends with an ops-off/on timed
+/// sweep whose benchkit JSON carries the measured bytes/user baseline,
+/// which is then read back through [`SloPolicy::bytes_budget_from_bench`]
+/// — the committed-baseline loop the watchdog budgets against. The CI
+/// smoke step keys on the "ops gate:" lines and the final "benchkit JSON
+/// OK" line.
+fn cmd_ops_sim(args: &Args) -> Result<()> {
+    use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+    use cloak_agg::cluster::ClusterTuning;
+    use cloak_agg::control::{ElasticTuning, Proportional};
+    use cloak_agg::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+    use cloak_agg::obsv::{http_get, SloPolicy};
+    use cloak_agg::rng::derive_seed;
+    use cloak_agg::telemetry::{round_reports, TraceExport, Tracer};
+    use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+    use cloak_agg::transport::streaming::{send_cohort, StreamConfig, StreamingRound};
+    use cloak_agg::util::benchkit::Bench;
+    use cloak_agg::util::error::Context as _;
+    use cloak_agg::util::json::{num, Json};
+
+    let n = args.get_usize("n", 96)?;
+    let d = args.get_usize("d", 8)?;
+    let loss = args.get_f64("loss", 0.1)?;
+    let dup = args.get_f64("dup", 0.02)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_u64("seed", 42)?;
+    let deadline = args.get_f64("deadline", 1.0)?;
+    let quorum = args.get_usize("quorum", (n / 4).max(1))?;
+    let out = args.get_str("out", "BENCH_ops_sim.json");
+    ensure!(n >= 4, "--n must be >= 4");
+    ensure!(d >= 1, "--d must be >= 1");
+    ensure!(shards >= 2, "--shards must be >= 2 (the elastic stack needs a survivor)");
+    ensure!((0.0..1.0).contains(&loss), "--loss must be in [0, 1)");
+    ensure!((0.0..1.0).contains(&dup), "--dup must be in [0, 1)");
+
+    let plan = ProtocolPlan::exact_secure_agg(n, 100, 8);
+    let m = plan.num_messages;
+    let cfg = EngineConfig::new(plan.clone(), d).with_shards(shards);
+    let mut rng = SplitMix64::seed_from_u64(seed);
+    let inputs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.gen_f64()).collect()).collect();
+    let seeds = DerivedClientSeeds::new(seed);
+    let no_drops = vec![false; n];
+    let stream_cfg = StreamConfig::new(n).with_quorum(quorum).with_deadline(deadline);
+    let client_net = |round: u64| {
+        SimNet::new(
+            SimNetConfig::new(derive_seed(seed, round)).with_loss(loss).with_duplicate(dup),
+        )
+    };
+
+    // --- baseline: the cohort's measured uplink bytes/user, budgeted with
+    // 1.5x slack — the same number the bench JSON commits below, so a
+    // deployer's policy and the recorded baseline stay one quantity.
+    let bytes_per_user = {
+        let mut probe = AggregatorBuilder::new(cfg.clone(), seed).local().build()?;
+        probe.set_telemetry(Tracer::new(1 << 16));
+        let mut net = client_net(0);
+        send_cohort(probe.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+        StreamingRound::drive(probe.as_mut(), &mut net, &stream_cfg)?;
+        let reports = round_reports(&probe.telemetry().snapshot());
+        let r = reports
+            .iter()
+            .find(|r| r.participants > 0)
+            .context("the probe round produced no streamed RoundReport")?;
+        r.bytes_up as f64 / r.participants as f64
+    };
+    let policy = SloPolicy {
+        max_takeovers: 0,
+        max_bytes_per_user: bytes_per_user * 1.5,
+        ..SloPolicy::default()
+    };
+
+    let build_stack = |kind: &str| -> Result<Box<dyn Aggregator>> {
+        let builder = AggregatorBuilder::new(cfg.clone(), seed)
+            .ops_listen("127.0.0.1:0")
+            .ops_policy(policy);
+        Ok(match kind {
+            "local" => builder.local().build()?,
+            "loopback" => builder.loopback().build()?,
+            // Shard 1's link goes silent after its handshake: the takeover
+            // must trip the zero-takeover SLO budget above.
+            "elastic" => builder
+                .over_channels(|s| {
+                    let down: Box<dyn Channel> = if s == 1 {
+                        Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+                    } else {
+                        Box::new(Loopback::new())
+                    };
+                    (down, Box::new(Loopback::new()) as _)
+                })
+                .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+                .elastic(Box::new(Proportional::default()))
+                .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+                .build()?,
+            other => bail!("unknown backend '{other}'"),
+        })
+    };
+
+    let backends = ["local", "loopback", "elastic"];
+    let mut table = Table::new(
+        &format!("ops-sim: n={n} d={d} loss={loss} dup={dup} S={shards}"),
+        &["backend", "survivors", "traffic B", "alerts", "trace lines"],
+    );
+    let mut want: Option<(Vec<f64>, Vec<f64>)> = None;
+    let mut scan_lines = 0usize;
+    for kind in backends {
+        let mut stack = build_stack(kind)?;
+        let addr = stack.ops_addr().context("ops plane must expose its address")?;
+
+        // Round 1: a plain lossy streamed round.
+        let mut net = client_net(0);
+        send_cohort(stack.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+        let r1 = StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)?;
+
+        // Round 2, scraped MID-round: the cohort is sent and in flight
+        // when all three endpoints must answer over real HTTP.
+        let mut net = client_net(1);
+        send_cohort(stack.as_ref(), &seeds, &RoundInput::Vectors(&inputs), &no_drops, &mut net)?;
+        let (code, mid_metrics) = http_get(addr, "/metrics")?;
+        ensure!(
+            code == 200 && mid_metrics.contains("cloak_obsv_publish_count"),
+            "{kind}: mid-round /metrics scrape failed (HTTP {code})"
+        );
+        let (code, mid_health) = http_get(addr, "/health")?;
+        ensure!(code == 200, "{kind}: mid-round /health returned {code}");
+        let mh = Json::parse(&mid_health)?;
+        ensure!(
+            mh.get("backend").and_then(Json::as_str) == Some(stack.backend_label()),
+            "{kind}: /health names the wrong backend:\n{mid_health}"
+        );
+        ensure!(
+            mh.get("rounds_run").and_then(Json::as_u64) == Some(1),
+            "{kind}: mid-round /health must show exactly one finished round:\n{mid_health}"
+        );
+        let (code, mid_trace) = http_get(addr, "/trace?n=64")?;
+        ensure!(code == 200 && !mid_trace.is_empty(), "{kind}: mid-round /trace returned {code}");
+        if let Err(e) = TraceExport::parse_jsonl(&mid_trace) {
+            bail!("{kind}: mid-round /trace failed the registry scan: {e}");
+        }
+        let r2 = StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)?;
+
+        // Final scrapes: byte reconciliation, health verdict, full tail.
+        let (_, metrics) = http_get(addr, "/metrics")?;
+        let counter = |name: &str| -> u64 {
+            metrics
+                .lines()
+                .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse().ok()))
+                .unwrap_or(0)
+        };
+        let total_traffic = r1.result.traffic.bytes + r2.result.traffic.bytes;
+        let attributed = counter("cloak_obsv_trace_attributed_bytes ");
+        ensure!(
+            attributed == total_traffic,
+            "{kind}: /metrics attributed {attributed} B, TrafficStats counted {total_traffic} B"
+        );
+        if kind != "local" {
+            let t = counter("cloak_cluster_reconcile_traffic_bytes ");
+            let a = counter("cloak_cluster_reconcile_attributed_bytes ");
+            let delta = counter("cloak_cluster_reconcile_delta_bytes ");
+            ensure!(
+                t > 0 && t == a && delta == 0,
+                "{kind}: reconcile drift on /metrics: traffic {t} attributed {a} delta {delta}"
+            );
+        }
+        let (_, health) = http_get(addr, "/health")?;
+        let h = Json::parse(&health)?;
+        let alert_count = match h.get("alerts") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => 0,
+        };
+        if kind == "elastic" {
+            ensure!(stack.shard_takeovers() >= 1, "elastic: the dead shard must cost a takeover");
+            ensure!(
+                h.get("ok") == Some(&Json::Bool(false)),
+                "elastic: a breached SLO must fail /health:\n{health}"
+            );
+            let takeover_alert = matches!(h.get("alerts"), Some(Json::Arr(a)) if a
+                .iter()
+                .any(|al| al.get("rule").and_then(Json::as_str) == Some("takeover_budget")));
+            ensure!(
+                takeover_alert,
+                "elastic: the shard death must surface as a takeover alert on /health:\n{health}"
+            );
+            let parked = matches!(h.get("shard_health"), Some(Json::Arr(a)) if a
+                .iter()
+                .any(|sh| sh.get("alive") == Some(&Json::Bool(false))));
+            ensure!(parked, "elastic: the victim must be parked in the /health scoreboard");
+        } else {
+            ensure!(
+                h.get("ok") == Some(&Json::Bool(true)) && alert_count == 0,
+                "{kind}: a clean stack must be healthy:\n{health}"
+            );
+        }
+        let (_, trace) = http_get(addr, "/trace")?;
+        if let Err(e) = TraceExport::parse_jsonl(&trace) {
+            bail!("{kind}: /trace failed the registry scan: {e}");
+        }
+        if kind == "elastic" {
+            ensure!(
+                trace.contains("\"kind\":\"slo_breach\""),
+                "elastic: the SLO breach must be visible on /trace"
+            );
+        }
+        let lines = trace.lines().filter(|l| !l.trim().is_empty()).count();
+        scan_lines += lines;
+        table.row(&[
+            kind.to_string(),
+            r2.result.participants.to_string(),
+            total_traffic.to_string(),
+            alert_count.to_string(),
+            lines.to_string(),
+        ]);
+        match &want {
+            None => want = Some((r1.result.estimates.clone(), r2.result.estimates.clone())),
+            Some((w1, w2)) => ensure!(
+                &r1.result.estimates == w1 && &r2.result.estimates == w2,
+                "{kind}: the ops plane must not perturb the rounds"
+            ),
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "ops gate: mid-round /metrics + /health + /trace scrapes answered over live HTTP \
+         on {backends:?} at S={shards}"
+    );
+    println!("ops gate: /metrics byte counters reconciled exactly with TrafficStats (delta 0)");
+    println!("ops gate: scripted shard death surfaced as a takeover alert on /health");
+    println!("ops gate: every /trace line passed the fixed-registry scan ({scan_lines} lines)");
+
+    // --- timed: what the ops plane costs on the round path ----------------
+    let mut bench = Bench::new("ops_sim");
+    let mut bare = AggregatorBuilder::new(cfg.clone(), seed).local().build()?;
+    let name = format!("round n={n} d={d} S={shards} ops=off");
+    bench.run_sharded(&name, (n * d * m) as f64, shards, || {
+        bare.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("bare round").estimates[0]
+    });
+    let mut opsed = AggregatorBuilder::new(cfg.clone(), seed)
+        .local()
+        .ops_listen("127.0.0.1:0")
+        .build()?;
+    let name = format!("round n={n} d={d} S={shards} ops=on");
+    bench.run_sharded(&name, (n * d * m) as f64, shards, || {
+        opsed.run_round(&RoundInput::Vectors(&inputs), &seeds).expect("ops round").estimates[0]
+    });
+    bench.attach("bytes_per_user", num(bytes_per_user));
+    bench.attach("slo_bytes_budget", num(bytes_per_user * 1.5));
+    bench.report();
+    bench.write_json(&out)?;
+
+    // --- validate the emitted benchkit JSON with the crate's parser, and
+    // close the baseline loop: the committed report must hand the policy
+    // back the exact bytes/user the run measured.
+    let text = std::fs::read_to_string(&out)?;
+    let json = Json::parse(&text)?;
+    ensure!(
+        json.get("group").and_then(|g| g.as_str()) == Some("ops_sim"),
+        "bad benchkit group in {out}"
+    );
+    let cases = match json.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => bail!("benchkit JSON in {out} has no cases array"),
+    };
+    ensure!(cases.len() == 2, "expected 2 cases, found {}", cases.len());
+    for c in cases {
+        ensure!(
+            c.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "case without positive mean_ns in {out}"
+        );
+        ensure!(c.get("shards").and_then(|v| v.as_u64()).is_some(), "case without shards axis");
+    }
+    let baseline = SloPolicy::bytes_budget_from_bench(&json)
+        .context("the bench JSON carries no bytes_per_user baseline")?;
+    ensure!(
+        (baseline - bytes_per_user).abs() < 1e-6,
+        "baseline drifted through {out}: committed {baseline}, measured {bytes_per_user}"
+    );
+    println!("ops gate: bytes/user baseline {baseline:.1} B round-tripped through {out}");
+    println!("benchkit JSON OK: {out} ({} cases)", cases.len());
+    Ok(())
+}
+
+/// Screen a captured `/trace` tail (one JSON object per line) through
+/// the crate's fixed span/event registries — the same structural
+/// no-private-data scan the exporters enforce. Exits nonzero on any line
+/// the registries reject; the CI smoke step pipes a live scrape through
+/// this.
+fn cmd_trace_scan(args: &Args) -> Result<()> {
+    use cloak_agg::telemetry::TraceExport;
+
+    let file = args.get_str("file", "");
+    ensure!(!file.is_empty(), "--file is required");
+    let text = std::fs::read_to_string(&file)?;
+    let lines = text.lines().filter(|l| !l.trim().is_empty()).count();
+    ensure!(lines > 0, "{file} holds no trace lines");
+    match TraceExport::parse_jsonl(&text) {
+        Ok(parsed) => {
+            println!(
+                "trace scan OK: {file} ({lines} lines, {} spans, {} events)",
+                parsed.spans.len(),
+                parsed.events.len()
+            );
+            Ok(())
+        }
+        Err(e) => bail!("{file} failed the registry scan: {e}"),
+    }
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

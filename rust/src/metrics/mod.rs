@@ -68,9 +68,30 @@ impl Histogram {
     }
 
     /// The p50/p95/p99 upper-bound triple every surfaced histogram
-    /// reports (benchkit JSON, [`Registry::to_json`], `render`).
+    /// reports (benchkit JSON, [`Registry::to_json`], `render`). An
+    /// empty histogram reports `[0, 0, 0]` — callers that need to tell
+    /// "no samples" from "all sub-nanosecond" use [`try_quantiles`].
+    ///
+    /// [`try_quantiles`]: Histogram::try_quantiles
     pub fn quantiles(&self) -> [u64; 3] {
-        [self.quantile_ns(0.5), self.quantile_ns(0.95), self.quantile_ns(0.99)]
+        match self.try_quantiles() {
+            Some(q) => [q.p50_ns, q.p95_ns, q.p99_ns],
+            None => [0; 3],
+        }
+    }
+
+    /// Typed quantile triple, `None` for an empty histogram. With a
+    /// single sample all three quantiles collapse to that sample's upper
+    /// bucket edge (the histogram only knows buckets, not raw values).
+    pub fn try_quantiles(&self) -> Option<Quantiles> {
+        if self.count() == 0 {
+            return None;
+        }
+        Some(Quantiles {
+            p50_ns: self.quantile_ns(0.5),
+            p95_ns: self.quantile_ns(0.95),
+            p99_ns: self.quantile_ns(0.99),
+        })
     }
 
     /// Approximate quantile from the bucket histogram (upper bucket edge).
@@ -89,6 +110,25 @@ impl Histogram {
         }
         u64::MAX
     }
+}
+
+/// A histogram's p50/p95/p99 upper-bound triple. Only produced for
+/// non-empty histograms ([`Histogram::try_quantiles`]), so a consumer can
+/// never confuse "no data" with a measured zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Quantiles {
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// One histogram's exported state ([`Registry::histograms_snapshot`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    /// `None` when the histogram has no samples yet.
+    pub quantiles: Option<Quantiles>,
 }
 
 /// Named metrics registry shared across components.
@@ -116,6 +156,36 @@ impl Registry {
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut m = self.inner.histograms.lock().unwrap();
         m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::default())).clone()
+    }
+
+    /// Name-sorted counter values — the iteration surface external
+    /// renderers (the `/metrics` scrape endpoint) build on.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect()
+    }
+
+    /// Name-sorted histogram snapshots (count, mean, typed quantiles).
+    pub fn histograms_snapshot(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| {
+                let snap = HistogramSnapshot {
+                    count: h.count(),
+                    mean_ns: h.mean_ns(),
+                    quantiles: h.try_quantiles(),
+                };
+                (name.clone(), snap)
+            })
+            .collect()
     }
 
     /// Render all metrics as a text block (the CLI's `metrics` output).
@@ -193,6 +263,42 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_ns(0.5), 0);
         assert_eq!(h.mean_ns(), 0.0);
+        // Satellite: the empty histogram is a typed empty result, not a
+        // garbage triple — and the untyped surface stays all-zero.
+        assert_eq!(h.try_quantiles(), None);
+        assert_eq!(h.quantiles(), [0, 0, 0]);
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles() {
+        // One sample: every quantile is that sample's upper bucket edge
+        // (100 ns lands in the 64..128 bucket, edge 128).
+        let h = Histogram::default();
+        h.record_ns(100);
+        let q = h.try_quantiles().expect("one sample is not empty");
+        assert_eq!(q, Quantiles { p50_ns: 128, p95_ns: 128, p99_ns: 128 });
+        assert_eq!(h.quantiles(), [128, 128, 128]);
+    }
+
+    #[test]
+    fn registry_snapshots_expose_counters_and_histograms() {
+        let r = Registry::new();
+        r.counter("b").add(2);
+        r.counter("a").inc();
+        r.histogram("lat").record_ns(100);
+        r.histogram("empty"); // registered, never recorded
+        assert_eq!(
+            r.counters_snapshot(),
+            vec![("a".to_string(), 1), ("b".to_string(), 2)],
+            "name-sorted"
+        );
+        let hs = r.histograms_snapshot();
+        assert_eq!(hs.len(), 2);
+        assert_eq!(hs[0].0, "empty");
+        assert_eq!(hs[0].1.quantiles, None, "empty histogram exports typed-empty");
+        assert_eq!(hs[1].0, "lat");
+        assert_eq!(hs[1].1.count, 1);
+        assert_eq!(hs[1].1.quantiles, Some(Quantiles { p50_ns: 128, p95_ns: 128, p99_ns: 128 }));
     }
 
     #[test]

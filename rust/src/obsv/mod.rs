@@ -1,0 +1,606 @@
+//! The live ops plane: a scrape endpoint, streaming trace subscribers
+//! and an SLO watchdog over the flight recorder.
+//!
+//! [`crate::telemetry`] gave every stack a flight recorder you can
+//! snapshot *after* the fact; this module makes the same signals
+//! observable *while* rounds run, without adding a single dependency or
+//! touching the protocol hot path:
+//!
+//! ```text
+//!   aggregation stack (local / loopback / tcp / elastic)
+//!        │ spans + events             │ counters + histograms
+//!        ▼                            ▼
+//!   Tracer ──subscribe()──► TraceSubscriber      metrics::Registry
+//!        │                       │ (bounded, drop-oldest)  │ (Arc-shared)
+//!        │ snapshot()            ▼                         │
+//!        ▼                  trace tail ◄─── drain ───┐     │
+//!   Watchdog (SloPolicy) ──► SloAlerts               │     │
+//!        │                       │                   │     │
+//!        ▼                       ▼                   ▼     ▼
+//!   ObsAggregator::publish ──► ObsShared ◄─────── ObsServer thread
+//!                                              GET /metrics /health /trace
+//! ```
+//!
+//! [`ObsAggregator`] decorates any [`Aggregator`]: it installs (or
+//! adopts) the stack's [`Tracer`], attaches a bounded [`TraceSubscriber`]
+//! and, after every round, publishes — drains the subscriber into the
+//! `/trace` tail, re-renders the `/health` scoreboard, mirrors trace
+//! rollups into monotone registry counters, and runs the [`Watchdog`]'s
+//! per-round SLO rules. [`ObsServer`] is a one-thread `std::net` HTTP
+//! responder over that shared state; [`http_get`] is the matching
+//! one-shot scrape client the sims and CI gates use.
+//!
+//! # Trust model
+//!
+//! The ops plane widens *reachability*, not the privacy boundary — a
+//! scraper on the ops port learns strictly less than the coordinator
+//! operator already could:
+//!
+//! * `/trace` serves exactly the lines the telemetry layer's fixed
+//!   registry already screens: static span names, enum event kinds, and
+//!   numeric payloads (sizes, timings, ids, outcomes). Shares, pool
+//!   contents and seeds are unrepresentable in that schema, so the live
+//!   tap cannot leak what the ring could not store. Subscribers are
+//!   bounded and drop-oldest; a slow scraper loses history (counted in
+//!   `dropped_records`), never blocks a round.
+//! * `/metrics` renders [`Registry`] counters and histogram quantiles —
+//!   operational aggregates by construction.
+//! * `/health` is liveness, EWMA latency, failure/takeover counts,
+//!   journal commit lag and SLO alerts — all public operational
+//!   quantities (rates, counts, latencies).
+//! * The endpoint is **opt-in** ([`AggregatorBuilder::ops_listen`]) and
+//!   binds wherever the deployer points it; like the coordinator↔shard
+//!   links, anything beyond loopback needs transport encryption and
+//!   authentication from the deployment (out of scope here, flagged in
+//!   [`crate::cluster`]'s trust notes).
+//!
+//! [`AggregatorBuilder::ops_listen`]: crate::aggregator::AggregatorBuilder::ops_listen
+
+#![deny(clippy::redundant_clone)]
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+
+use crate::aggregator::{Aggregator, AggregatorError};
+use crate::engine::{ClientSeeds, ClientView, EngineConfig, RoundInput, RoundResult, ShardHealth};
+use crate::metrics::Registry;
+use crate::telemetry::{
+    attributed_bytes, EventKind, EventRecord, TraceExport, TraceSubscriber, Tracer,
+    DEFAULT_CAPACITY,
+};
+use crate::util::json::{num, obj, s, Json};
+
+mod server;
+mod watchdog;
+
+pub use server::{http_get, ObsServer};
+pub use watchdog::{SloAlert, SloKind, SloPolicy, Watchdog};
+
+/// Bound on both the `/trace` tail and the live subscriber queue. At
+/// ~120 bytes a line this caps the ops plane's memory near half a
+/// megabyte while holding several rounds of a busy cluster trace.
+pub const TAIL_CAPACITY: usize = 4096;
+
+/// What the server thread and the publishing aggregator share. Every
+/// field is independently locked; no lock is ever held across I/O or a
+/// round.
+pub(crate) struct ObsShared {
+    registry: Registry,
+    /// Replaced wholesale when `set_telemetry` installs a new recorder.
+    sub: Mutex<TraceSubscriber>,
+    tail: Mutex<VecDeque<String>>,
+    /// Last-published `/health` document (JSON text).
+    health: Mutex<String>,
+}
+
+impl ObsShared {
+    /// Move every line the subscriber buffered into the bounded tail.
+    fn drain_tail(&self) {
+        let lines = self.sub.lock().expect("obsv subscriber poisoned").drain();
+        if lines.is_empty() {
+            return;
+        }
+        let mut tail = self.tail.lock().expect("obsv tail poisoned");
+        for line in lines {
+            if tail.len() == TAIL_CAPACITY {
+                tail.pop_front();
+            }
+            tail.push_back(line);
+        }
+    }
+
+    /// The `/trace` body: the last `last` tail lines (all when `None`),
+    /// pulled fresh from the subscriber so a mid-round scrape sees
+    /// records the recorder emitted moments ago.
+    pub(crate) fn trace_text(&self, last: Option<usize>) -> String {
+        self.drain_tail();
+        let tail = self.tail.lock().expect("obsv tail poisoned");
+        let skip = last.map_or(0, |n| tail.len().saturating_sub(n));
+        let mut out = String::new();
+        for line in tail.iter().skip(skip) {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The `/metrics` body: the registry in Prometheus text exposition,
+    /// plus the live subscriber drop counter.
+    pub(crate) fn metrics_text(&self) -> String {
+        let mut out = prometheus_text(&self.registry);
+        let dropped = self.sub.lock().expect("obsv subscriber poisoned").dropped_records();
+        out.push_str("# TYPE cloak_obsv_subscriber_dropped_records counter\n");
+        let _ = writeln!(out, "cloak_obsv_subscriber_dropped_records {dropped}");
+        out
+    }
+
+    pub(crate) fn health_text(&self) -> String {
+        self.health.lock().expect("obsv health poisoned").clone()
+    }
+}
+
+/// Map a dotted registry name onto the Prometheus charset.
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// Render a [`Registry`] as Prometheus text exposition: counters
+/// verbatim, histograms as a `_count` counter plus a quantile summary
+/// (p50/p95/p99 upper bounds) and a `_mean_ns` gauge. Histograms with no
+/// samples export only their zero `_count` — typed-empty, never a fake
+/// zero latency.
+pub fn prometheus_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in registry.counters_snapshot() {
+        let n = sanitize(&name);
+        let _ = writeln!(out, "# TYPE cloak_{n} counter");
+        let _ = writeln!(out, "cloak_{n} {v}");
+    }
+    for (name, h) in registry.histograms_snapshot() {
+        let n = sanitize(&name);
+        let _ = writeln!(out, "# TYPE cloak_{n}_count counter");
+        let _ = writeln!(out, "cloak_{n}_count {}", h.count);
+        if let Some(q) = h.quantiles {
+            let _ = writeln!(out, "# TYPE cloak_{n}_ns summary");
+            let _ = writeln!(out, "cloak_{n}_ns{{quantile=\"0.5\"}} {}", q.p50_ns);
+            let _ = writeln!(out, "cloak_{n}_ns{{quantile=\"0.95\"}} {}", q.p95_ns);
+            let _ = writeln!(out, "cloak_{n}_ns{{quantile=\"0.99\"}} {}", q.p99_ns);
+            let _ = writeln!(out, "# TYPE cloak_{n}_mean_ns gauge");
+            let _ = writeln!(out, "cloak_{n}_mean_ns {}", h.mean_ns);
+        }
+    }
+    out
+}
+
+/// The ops-plane decorator: any [`Aggregator`] plus a scrape endpoint, a
+/// live trace tail and the SLO watchdog. Built by
+/// [`AggregatorBuilder::ops_listen`] — frontends keep holding a plain
+/// `Box<dyn Aggregator>` and discover the plane via
+/// [`Aggregator::ops_addr`].
+///
+/// [`AggregatorBuilder::ops_listen`]: crate::aggregator::AggregatorBuilder::ops_listen
+pub struct ObsAggregator {
+    inner: Box<dyn Aggregator>,
+    shared: Arc<ObsShared>,
+    server: ObsServer,
+    watchdog: Watchdog,
+    tracer: Tracer,
+    /// Publish baselines for the monotone counter mirrors (registry
+    /// counters only add; trace rollups are absolute).
+    published_attributed: u64,
+    published_dropped: u64,
+}
+
+impl ObsAggregator {
+    /// Wrap `inner`, binding the scrape endpoint on `listen` (use
+    /// `"127.0.0.1:0"` for an ephemeral port). Adopts the stack's
+    /// existing enabled [`Tracer`], or installs a fresh one at
+    /// [`DEFAULT_CAPACITY`] — the ops plane is useless over a noop
+    /// recorder.
+    pub fn wrap(
+        mut inner: Box<dyn Aggregator>,
+        listen: &str,
+        policy: SloPolicy,
+    ) -> std::io::Result<ObsAggregator> {
+        let tracer = {
+            let t = inner.telemetry();
+            if t.is_enabled() {
+                t
+            } else {
+                let t = Tracer::new(DEFAULT_CAPACITY);
+                inner.set_telemetry(t.clone());
+                t
+            }
+        };
+        let sub = tracer.subscribe(TAIL_CAPACITY);
+        let shared = Arc::new(ObsShared {
+            registry: inner.metrics().clone(),
+            sub: Mutex::new(sub),
+            tail: Mutex::new(VecDeque::new()),
+            health: Mutex::new(String::new()),
+        });
+        let server = ObsServer::start(listen, Arc::clone(&shared))?;
+        let mut me = ObsAggregator {
+            inner,
+            shared,
+            server,
+            watchdog: Watchdog::new(policy),
+            tracer,
+            published_attributed: 0,
+            published_dropped: 0,
+        };
+        // Seed /health so a scrape before the first round sees a
+        // well-formed board instead of an empty body.
+        me.publish();
+        Ok(me)
+    }
+
+    /// The bound scrape address.
+    pub fn addr(&self) -> SocketAddr {
+        self.server.addr()
+    }
+
+    /// Alerts raised so far (also on `/health` and, as
+    /// [`EventKind::SloBreach`] records, on `/trace`).
+    pub fn alerts(&self) -> &[SloAlert] {
+        self.watchdog.alerts()
+    }
+
+    /// One publish cycle: judge new rounds, mirror trace rollups into
+    /// counters, refresh the tail and the health board. Runs after every
+    /// round (success or failure — breaches matter most on bad rounds).
+    fn publish(&mut self) {
+        let snap = self.tracer.snapshot();
+        let fresh = self.watchdog.evaluate(&snap);
+        for a in &fresh {
+            // The breach record is numeric-only by construction: the rule
+            // travels as its fixed id, the magnitude as `value`.
+            self.tracer.record(
+                EventRecord::new(EventKind::SloBreach, a.round)
+                    .with_count(a.kind.rule_id())
+                    .with_value(a.observed),
+            );
+        }
+        if !fresh.is_empty() {
+            self.inner.metrics().counter("obsv.slo.breaches").add(fresh.len() as u64);
+        }
+        let attributed = attributed_bytes(&snap.events);
+        self.inner
+            .metrics()
+            .counter("obsv.trace.attributed_bytes")
+            .add(attributed.saturating_sub(self.published_attributed));
+        self.published_attributed = self.published_attributed.max(attributed);
+        let dropped = self.tracer.subscriber_dropped_records();
+        self.inner
+            .metrics()
+            .counter("obsv.trace.dropped_records")
+            .add(dropped.saturating_sub(self.published_dropped));
+        self.published_dropped = self.published_dropped.max(dropped);
+        self.inner.metrics().counter("obsv.publish.count").inc();
+        self.shared.drain_tail();
+        let health = self.render_health(&snap);
+        *self.shared.health.lock().expect("obsv health poisoned") = health;
+    }
+
+    /// The `/health` document: stack identity, per-shard scoreboard,
+    /// journal commit lag, and the alert history.
+    fn render_health(&self, snap: &TraceExport) -> String {
+        let health = self.inner.shard_health();
+        let shards: Vec<Json> = health
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                obj(vec![
+                    ("shard", num(i as f64)),
+                    ("alive", Json::Bool(h.alive)),
+                    ("latency_ewma_s", num(h.latency_ewma_s)),
+                    ("consecutive_failures", num(f64::from(h.consecutive_failures))),
+                    ("failures", num(h.failures as f64)),
+                    ("rounds_ok", num(h.rounds_ok as f64)),
+                    ("takeovers_absorbed", num(h.takeovers_absorbed as f64)),
+                ])
+            })
+            .collect();
+        let mut commits = 0u64;
+        let mut last_commit_round = 0u64;
+        let mut last_fsync_ns = 0u64;
+        for e in &snap.events {
+            if e.kind == EventKind::JournalCommit && !e.replay {
+                commits += 1;
+                if e.round >= last_commit_round {
+                    last_commit_round = e.round;
+                    last_fsync_ns = e.value as u64;
+                }
+            }
+        }
+        let rounds_run = self.inner.rounds_run();
+        // Rounds finished but not yet committed; 0 on journal-less
+        // stacks (nothing is behind when nothing is durable).
+        let commit_lag = if commits > 0 {
+            rounds_run.saturating_sub(last_commit_round + 1)
+        } else {
+            0
+        };
+        let journal = obj(vec![
+            ("commits", num(commits as f64)),
+            ("last_commit_round", num(last_commit_round as f64)),
+            ("commit_lag_rounds", num(commit_lag as f64)),
+            ("last_fsync_ns", num(last_fsync_ns as f64)),
+        ]);
+        let alerts: Vec<Json> = self.watchdog.alerts().iter().map(SloAlert::to_json).collect();
+        let ok = alerts.is_empty() && health.iter().all(|h| h.alive);
+        let mut text = obj(vec![
+            ("ok", Json::Bool(ok)),
+            ("backend", s(self.inner.backend_label())),
+            ("rounds_run", num(rounds_run as f64)),
+            ("next_round", num(self.inner.next_round() as f64)),
+            ("shards", num(self.inner.shards() as f64)),
+            ("retries", num(self.inner.shard_retries() as f64)),
+            ("takeovers", num(self.inner.shard_takeovers() as f64)),
+            ("shard_health", Json::Arr(shards)),
+            ("journal", journal),
+            ("alerts", Json::Arr(alerts)),
+        ])
+        .to_string_pretty();
+        text.push('\n');
+        text
+    }
+}
+
+impl Aggregator for ObsAggregator {
+    fn config(&self) -> &EngineConfig {
+        self.inner.config()
+    }
+
+    fn next_round(&self) -> u64 {
+        self.inner.next_round()
+    }
+
+    fn rounds_run(&self) -> u64 {
+        self.inner.rounds_run()
+    }
+
+    fn shards(&self) -> usize {
+        self.inner.shards()
+    }
+
+    fn metrics(&self) -> &Registry {
+        self.inner.metrics()
+    }
+
+    fn backend_label(&self) -> &'static str {
+        self.inner.backend_label()
+    }
+
+    fn encode_client_shares(
+        &self,
+        round: u64,
+        client: u32,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<Vec<u64>, AggregatorError> {
+        self.inner.encode_client_shares(round, client, inputs, seeds)
+    }
+
+    fn run_round(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<RoundResult, AggregatorError> {
+        let r = self.inner.run_round(inputs, seeds);
+        self.publish();
+        r
+    }
+
+    fn run_round_with_views(
+        &mut self,
+        inputs: &RoundInput<'_>,
+        seeds: &dyn ClientSeeds,
+    ) -> Result<(RoundResult, Vec<ClientView>), AggregatorError> {
+        let r = self.inner.run_round_with_views(inputs, seeds);
+        self.publish();
+        r
+    }
+
+    fn run_round_streaming(
+        &mut self,
+        pools: &[Vec<u64>],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        let r = self.inner.run_round_streaming(pools, participants);
+        self.publish();
+        r
+    }
+
+    fn run_round_streaming_flat(
+        &mut self,
+        flat: &[u64],
+        participants: usize,
+    ) -> Result<RoundResult, AggregatorError> {
+        let r = self.inner.run_round_streaming_flat(flat, participants);
+        self.publish();
+        r
+    }
+
+    fn fast_forward(&mut self, next_round: u64) -> Result<(), AggregatorError> {
+        let r = self.inner.fast_forward(next_round);
+        self.publish();
+        r
+    }
+
+    fn shard_retries(&self) -> u64 {
+        self.inner.shard_retries()
+    }
+
+    fn shard_takeovers(&self) -> u64 {
+        self.inner.shard_takeovers()
+    }
+
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        self.inner.shard_health()
+    }
+
+    fn telemetry(&self) -> Tracer {
+        self.tracer.clone()
+    }
+
+    fn set_telemetry(&mut self, tracer: Tracer) {
+        self.inner.set_telemetry(tracer.clone());
+        *self.shared.sub.lock().expect("obsv subscriber poisoned") =
+            tracer.subscribe(TAIL_CAPACITY);
+        self.tracer = tracer;
+        // The new recorder's rollups restart from zero; so do the
+        // baselines, keeping the counter mirrors monotone.
+        self.published_attributed = 0;
+        self.published_dropped = 0;
+    }
+
+    fn ops_addr(&self) -> Option<SocketAddr> {
+        Some(self.server.addr())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregator::AggregatorBuilder;
+    use crate::engine::{DerivedClientSeeds, EngineConfig, RoundInput};
+    use crate::params::ProtocolPlan;
+    use crate::telemetry::SpanKind;
+
+    fn small_cfg(n: usize, d: usize) -> EngineConfig {
+        EngineConfig::new(ProtocolPlan::exact_secure_agg(n, 100, 8), d).with_shards(2)
+    }
+
+    fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn prometheus_rendering_sanitizes_and_types_every_family() {
+        let r = Registry::new();
+        r.counter("cluster.reconcile.delta_bytes").add(3);
+        r.histogram("round.wall").record_ns(100);
+        r.histogram("round.empty"); // registered, never sampled
+        let text = prometheus_text(&r);
+        assert!(text.contains("# TYPE cloak_cluster_reconcile_delta_bytes counter\n"));
+        assert!(text.contains("cloak_cluster_reconcile_delta_bytes 3\n"));
+        assert!(text.contains("cloak_round_wall_count 1\n"));
+        assert!(text.contains("cloak_round_wall_ns{quantile=\"0.5\"} 128\n"));
+        assert!(text.contains("cloak_round_wall_ns{quantile=\"0.99\"} 128\n"));
+        // Typed-empty: the unsampled histogram exports its zero count and
+        // no quantile lines at all.
+        assert!(text.contains("cloak_round_empty_count 0\n"));
+        assert!(!text.contains("cloak_round_empty_ns{"), "{text}");
+        assert!(!text.contains('.'), "metric names must be sanitized");
+    }
+
+    #[test]
+    fn server_serves_all_three_endpoints_and_404s_the_rest() {
+        let tracer = Tracer::new(64);
+        let sub = tracer.subscribe(TAIL_CAPACITY);
+        let registry = Registry::new();
+        registry.counter("obsv.test").add(7);
+        let shared = Arc::new(ObsShared {
+            registry,
+            sub: Mutex::new(sub),
+            tail: Mutex::new(VecDeque::new()),
+            health: Mutex::new("{\"ok\": true}\n".to_string()),
+        });
+        let server = ObsServer::start("127.0.0.1:0", Arc::clone(&shared)).unwrap();
+        for round in 0..3 {
+            tracer.record(EventRecord::new(EventKind::Retry, round).with_count(1));
+        }
+        let (code, body) = http_get(server.addr(), "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("cloak_obsv_test 7\n"), "{body}");
+        assert!(body.contains("cloak_obsv_subscriber_dropped_records 0\n"));
+        let (code, body) = http_get(server.addr(), "/health").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "{\"ok\": true}\n");
+        // The tail is pulled live — records made after start are served,
+        // and ?n= trims to the newest.
+        let (code, body) = http_get(server.addr(), "/trace?n=2").unwrap();
+        assert_eq!(code, 200);
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2, "{body}");
+        let parsed = TraceExport::parse_jsonl(&body).unwrap();
+        assert_eq!(parsed.events.len(), 2);
+        assert_eq!(parsed.events[0].round, 1, "oldest of the kept two");
+        let (code, _) = http_get(server.addr(), "/shares").unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn wrapped_stack_publishes_after_rounds_and_keeps_bit_identity() {
+        let (n, d, seed) = (8usize, 4usize, 5u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut plain =
+            AggregatorBuilder::new(small_cfg(n, d), seed).loopback().build().unwrap();
+        let want = plain.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let mut agg = AggregatorBuilder::new(small_cfg(n, d), seed)
+            .loopback()
+            .ops_listen("127.0.0.1:0")
+            .build()
+            .unwrap();
+        let addr = agg.ops_addr().expect("ops plane must expose its address");
+        let got = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(got.estimates, want.estimates, "the ops plane must not perturb rounds");
+        let (code, metrics) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(metrics.contains("cloak_obsv_publish_count 2\n"), "wrap + round\n{metrics}");
+        assert!(metrics.contains("cloak_obsv_trace_attributed_bytes "));
+        let (code, health) = http_get(addr, "/health").unwrap();
+        assert_eq!(code, 200);
+        let h = Json::parse(&health).unwrap();
+        assert_eq!(h.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(h.get("backend").and_then(Json::as_str), Some("loopback"));
+        assert_eq!(h.get("rounds_run").and_then(Json::as_u64), Some(1));
+        let (code, trace) = http_get(addr, "/trace").unwrap();
+        assert_eq!(code, 200);
+        let parsed = TraceExport::parse_jsonl(&trace).unwrap();
+        assert!(parsed.spans.iter().any(|sp| sp.kind == SpanKind::Round));
+        assert!(parsed.events.iter().any(|e| e.kind == EventKind::FrameSent));
+    }
+
+    #[test]
+    fn breach_reaches_health_board_and_trace_tail() {
+        let (n, d, seed) = (6usize, 3usize, 3u64);
+        let inputs = inputs_for(n, d);
+        let seeds = DerivedClientSeeds::new(seed);
+        let mut agg = AggregatorBuilder::new(small_cfg(n, d), seed)
+            .loopback()
+            .ops_listen("127.0.0.1:0")
+            .ops_policy(SloPolicy { max_deadline_miss_rate: 0.0, ..SloPolicy::default() })
+            .build()
+            .unwrap();
+        // Simulate deadline misses on the round about to run; the round's
+        // spans give the watchdog a round to judge them under.
+        agg.telemetry().record(
+            EventRecord::new(EventKind::Deadline, agg.next_round()).with_count(3),
+        );
+        agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let addr = agg.ops_addr().unwrap();
+        let (_, health) = http_get(addr, "/health").unwrap();
+        let h = Json::parse(&health).unwrap();
+        assert_eq!(h.get("ok"), Some(&Json::Bool(false)), "{health}");
+        let alerts = match h.get("alerts") {
+            Some(Json::Arr(a)) => a.clone(),
+            other => panic!("alerts missing: {other:?}"),
+        };
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].get("rule").and_then(Json::as_str), Some("deadline_miss_rate"));
+        let (_, trace) = http_get(addr, "/trace").unwrap();
+        assert!(trace.contains("\"kind\":\"slo_breach\""), "{trace}");
+        let parsed = TraceExport::parse_jsonl(&trace).unwrap();
+        let breach = parsed.events.iter().find(|e| e.kind == EventKind::SloBreach).unwrap();
+        assert_eq!(breach.count, SloKind::DeadlineMissRate.rule_id());
+        let (_, metrics) = http_get(addr, "/metrics").unwrap();
+        assert!(metrics.contains("cloak_obsv_slo_breaches 1\n"), "{metrics}");
+    }
+}

@@ -1,0 +1,169 @@
+//! The scrape endpoint: a minimal, dependency-free HTTP/1.1 text server
+//! over `std::net`, plus the matching one-shot client the sims and CI
+//! gates use to scrape it.
+//!
+//! One background thread polls a non-blocking listener and answers one
+//! `GET` per connection — `/metrics` (Prometheus text exposition),
+//! `/health` (JSON scoreboard) and `/trace` (JSONL tail), all rendered
+//! from the shared [`ObsShared`] state the wrapping
+//! [`ObsAggregator`](crate::obsv::ObsAggregator) publishes into. The
+//! server never touches the aggregation stack itself: everything it can
+//! serve has already passed the trace screen or is a metrics/health
+//! rollup, so a scrape can race a round freely without observing shares.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::ObsShared;
+
+/// How long the accept loop sleeps between polls. Scrapes are human/CI
+/// cadence — single-digit milliseconds of accept latency is invisible.
+const ACCEPT_TICK: Duration = Duration::from_millis(2);
+
+/// Per-connection socket budget: a scrape either completes quickly or
+/// the connection is dropped — the ops plane must never hold a thread
+/// hostage to a stalled client.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Largest request head we accept; a plain `GET /trace?n=100` is < 100
+/// bytes, so anything bigger is not a scraper.
+const MAX_REQUEST_BYTES: usize = 4096;
+
+/// The live scrape endpoint. Owns its listener thread; dropping the
+/// server stops and joins it.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `shared`. Returns once the socket is bound, so
+    /// [`ObsServer::addr`] is immediately scrape-able.
+    pub(crate) fn start(listen: &str, shared: Arc<ObsShared>) -> std::io::Result<ObsServer> {
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cloak-obs".into())
+            .spawn(move || serve(listener, shared, stop2))?;
+        Ok(ObsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address — the resolved port when constructed with `:0`.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve(listener: TcpListener, shared: Arc<ObsShared>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // One request per connection; errors only lose that
+                // scrape, never the server.
+                let _ = handle(stream, &shared);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_TICK),
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, shared: &ObsShared) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 512];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_REQUEST_BYTES {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut parts = text.split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    let (path, query) = target.split_once('?').unwrap_or((target, ""));
+    match path {
+        "/" => respond(
+            &mut stream,
+            "200 OK",
+            "text/plain",
+            "cloak-agg ops plane: /metrics /health /trace[?n=K]\n",
+        ),
+        "/metrics" => {
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &shared.metrics_text())
+        }
+        "/health" => respond(&mut stream, "200 OK", "application/json", &shared.health_text()),
+        "/trace" => {
+            let n = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("n="))
+                .and_then(|v| v.parse::<usize>().ok());
+            respond(&mut stream, "200 OK", "application/x-ndjson", &shared.trace_text(n))
+        }
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "unknown path\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// One-shot scrape client for the sims, tests and CI gates: `GET path`
+/// against `addr`, returning `(status_code, body)`.
+pub fn http_get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: ops\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidData, "malformed status line"))?;
+    let body = match raw.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}

@@ -1,0 +1,351 @@
+//! The SLO watchdog: per-round budget rules evaluated over the flight
+//! recorder's rollups.
+//!
+//! The watchdog never looks at protocol data — its whole input is the
+//! [`TraceExport`] the [`Tracer`](crate::telemetry::Tracer) already
+//! screens down to sizes, timings, ids and outcomes. Each rule compares
+//! one public operational quantity from a round against a budget in
+//! [`SloPolicy`]; a breached budget becomes a typed [`SloAlert`] (surfaced
+//! on `/health`) and a screened [`EventKind::SloBreach`] record (surfaced
+//! on `/trace` and in every downstream export). Rounds are evaluated
+//! exactly once: the watchdog remembers the newest round id it has judged
+//! and re-running `evaluate` over a grown trace only considers rounds
+//! past it, so alerts never duplicate across publishes.
+
+use crate::telemetry::{round_reports, EventKind, TraceExport};
+use crate::util::json::{num, obj, s, Json};
+
+/// Which SLO rule fired. Each rule carries a fixed numeric id — the
+/// `count` payload of the [`EventKind::SloBreach`] record it emits, so a
+/// breach survives the numeric-only trace screen without a free-form
+/// string field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloKind {
+    /// Deadline-missed frames per participant exceeded
+    /// [`SloPolicy::max_deadline_miss_rate`].
+    DeadlineMissRate,
+    /// Work resends per participant exceeded
+    /// [`SloPolicy::max_retry_rate`].
+    RetryRate,
+    /// In-round takeovers exceeded [`SloPolicy::max_takeovers`].
+    TakeoverBudget,
+    /// Client uplink bytes per participant exceeded
+    /// [`SloPolicy::max_bytes_per_user`].
+    BytesPerUser,
+    /// A journal commit fsync exceeded [`SloPolicy::max_fsync_ns`].
+    FsyncLatency,
+}
+
+impl SloKind {
+    /// Every rule, for exhaustive tests and renderers.
+    pub const ALL: [SloKind; 5] = [
+        SloKind::DeadlineMissRate,
+        SloKind::RetryRate,
+        SloKind::TakeoverBudget,
+        SloKind::BytesPerUser,
+        SloKind::FsyncLatency,
+    ];
+
+    /// The fixed wire id carried as the breach event's `count`. Stable
+    /// across releases — downstream dashboards key on it.
+    pub fn rule_id(self) -> u64 {
+        match self {
+            SloKind::DeadlineMissRate => 1,
+            SloKind::RetryRate => 2,
+            SloKind::TakeoverBudget => 3,
+            SloKind::BytesPerUser => 4,
+            SloKind::FsyncLatency => 5,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloKind::DeadlineMissRate => "deadline_miss_rate",
+            SloKind::RetryRate => "retry_rate",
+            SloKind::TakeoverBudget => "takeover_budget",
+            SloKind::BytesPerUser => "bytes_per_user",
+            SloKind::FsyncLatency => "fsync_latency",
+        }
+    }
+
+    pub fn from_rule_id(id: u64) -> Option<SloKind> {
+        SloKind::ALL.into_iter().find(|k| k.rule_id() == id)
+    }
+}
+
+/// Per-round SLO budgets. The default is "never fires" — every budget at
+/// its neutral maximum — so wiring the ops plane into a stack changes
+/// nothing until a deployer opts into limits.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Budget for deadline-missed frames per participant
+    /// ([`EventKind::Deadline`] counts over the round's admissions).
+    pub max_deadline_miss_rate: f64,
+    /// Budget for work resends per participant.
+    pub max_retry_rate: f64,
+    /// Budget for in-round lost-range takeovers.
+    pub max_takeovers: u64,
+    /// Budget for client uplink bytes per participant — typically seeded
+    /// from a committed bench baseline via
+    /// [`SloPolicy::bytes_budget_from_bench`] plus slack.
+    pub max_bytes_per_user: f64,
+    /// Budget for a single journal commit's fsync wall, in nanoseconds.
+    pub max_fsync_ns: u64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            max_deadline_miss_rate: f64::INFINITY,
+            max_retry_rate: f64::INFINITY,
+            max_takeovers: u64::MAX,
+            max_bytes_per_user: f64::INFINITY,
+            max_fsync_ns: u64::MAX,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// Pull a bytes-per-user baseline out of a committed benchkit report
+    /// (`BENCH_*.json`): the largest numeric `bytes_per_user` field found
+    /// anywhere in the document, or `None` when the report carries none.
+    /// Callers typically multiply by a slack factor before budgeting.
+    pub fn bytes_budget_from_bench(report: &Json) -> Option<f64> {
+        fn scan(j: &Json, best: &mut Option<f64>) {
+            match j {
+                Json::Obj(m) => {
+                    for (k, v) in m {
+                        if k == "bytes_per_user" {
+                            if let Some(x) = v.as_f64() {
+                                *best = Some(best.map_or(x, |b: f64| b.max(x)));
+                            }
+                        }
+                        scan(v, best);
+                    }
+                }
+                Json::Arr(a) => a.iter().for_each(|v| scan(v, best)),
+                _ => {}
+            }
+        }
+        let mut best = None;
+        scan(report, &mut best);
+        best
+    }
+}
+
+/// One breached budget: which rule, on which round, observed vs budget.
+/// Everything here is a public operational quantity — rates, counts and
+/// latencies only.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloAlert {
+    pub kind: SloKind,
+    pub round: u64,
+    pub observed: f64,
+    pub budget: f64,
+}
+
+impl SloAlert {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rule", s(self.kind.as_str())),
+            ("rule_id", num(self.kind.rule_id() as f64)),
+            ("round", num(self.round as f64)),
+            ("observed", num(self.observed)),
+            ("budget", num(self.budget)),
+        ])
+    }
+}
+
+/// Per-round aggregates the watchdog needs that [`round_reports`] does
+/// not carry: deadline misses, ingestion rejects, and the slowest commit
+/// fsync of the round.
+#[derive(Clone, Copy, Debug, Default)]
+struct RoundExtras {
+    deadline_misses: u64,
+    rejects: u64,
+    max_fsync_ns: u64,
+}
+
+/// Evaluates [`SloPolicy`] rules over every newly completed round in a
+/// trace, accumulating [`SloAlert`]s. Stateful so the same recorder can
+/// be re-snapshotted after each round without re-alerting old rounds.
+pub struct Watchdog {
+    policy: SloPolicy,
+    /// Newest round id already judged; rounds at or below it are skipped.
+    evaluated_through: Option<u64>,
+    alerts: Vec<SloAlert>,
+}
+
+impl Watchdog {
+    pub fn new(policy: SloPolicy) -> Self {
+        Watchdog { policy, evaluated_through: None, alerts: Vec::new() }
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Every alert raised so far, oldest first.
+    pub fn alerts(&self) -> &[SloAlert] {
+        &self.alerts
+    }
+
+    /// Judge every round in `export` newer than the last call's newest,
+    /// returning only the alerts raised by THIS call (the full history
+    /// stays on [`Watchdog::alerts`]).
+    pub fn evaluate(&mut self, export: &TraceExport) -> Vec<SloAlert> {
+        use std::collections::BTreeMap;
+        let mut extras: BTreeMap<u64, RoundExtras> = BTreeMap::new();
+        for e in &export.events {
+            let x = extras.entry(e.round).or_default();
+            match e.kind {
+                EventKind::Deadline => x.deadline_misses += e.count.max(1),
+                EventKind::Reject => x.rejects += e.count.max(1),
+                EventKind::JournalCommit => x.max_fsync_ns = x.max_fsync_ns.max(e.value as u64),
+                _ => {}
+            }
+        }
+        let mut fresh = Vec::new();
+        for r in round_reports(export) {
+            if self.evaluated_through.is_some_and(|t| r.round <= t) {
+                continue;
+            }
+            self.evaluated_through = Some(r.round);
+            let x = extras.get(&r.round).copied().unwrap_or_default();
+            // Rates denominate over streaming admissions; a round with no
+            // admissions (full-cohort simulation path) denominates over 1
+            // so absolute counts still gate.
+            let per = r.participants.max(1) as f64;
+            let p = &self.policy;
+            let mut raise = |kind: SloKind, observed: f64, budget: f64| {
+                fresh.push(SloAlert { kind, round: r.round, observed, budget });
+            };
+            let miss_rate = x.deadline_misses as f64 / per;
+            if miss_rate > p.max_deadline_miss_rate {
+                raise(SloKind::DeadlineMissRate, miss_rate, p.max_deadline_miss_rate);
+            }
+            let retry_rate = r.retries as f64 / per;
+            if retry_rate > p.max_retry_rate {
+                raise(SloKind::RetryRate, retry_rate, p.max_retry_rate);
+            }
+            if r.takeovers > p.max_takeovers {
+                raise(SloKind::TakeoverBudget, r.takeovers as f64, p.max_takeovers as f64);
+            }
+            if r.participants > 0 {
+                let bpu = r.bytes_up as f64 / r.participants as f64;
+                if bpu > p.max_bytes_per_user {
+                    raise(SloKind::BytesPerUser, bpu, p.max_bytes_per_user);
+                }
+            }
+            if x.max_fsync_ns > p.max_fsync_ns {
+                raise(SloKind::FsyncLatency, x.max_fsync_ns as f64, p.max_fsync_ns as f64);
+            }
+        }
+        self.alerts.extend_from_slice(&fresh);
+        fresh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{EventRecord, SpanKind, SpanRecord};
+
+    fn round_span(round: u64, wall_ns: u64) -> SpanRecord {
+        SpanRecord {
+            id: round + 1,
+            kind: SpanKind::Round,
+            name: "round",
+            round,
+            shard: u32::MAX,
+            start_ns: 0,
+            end_ns: wall_ns,
+            replay: false,
+        }
+    }
+
+    fn lossy_round(round: u64) -> Vec<EventRecord> {
+        vec![
+            EventRecord::new(EventKind::Admit, round).with_count(10),
+            EventRecord::new(EventKind::ClientUplink, round).with_bytes(4_000).with_count(10),
+            EventRecord::new(EventKind::Retry, round).with_count(3),
+            EventRecord::new(EventKind::Deadline, round).with_count(5),
+            EventRecord::new(EventKind::Takeover, round).with_count(1),
+            EventRecord::new(EventKind::JournalCommit, round).with_bytes(64).with_value(9e6),
+        ]
+    }
+
+    fn export(rounds: &[u64]) -> TraceExport {
+        TraceExport {
+            spans: rounds.iter().map(|&r| round_span(r, 1_000)).collect(),
+            events: rounds.iter().flat_map(|&r| lossy_round(r)).collect(),
+            dropped_spans: 0,
+            dropped_events: 0,
+            open_spans: 0,
+        }
+    }
+
+    #[test]
+    fn default_policy_never_fires() {
+        let mut w = Watchdog::new(SloPolicy::default());
+        assert!(w.evaluate(&export(&[0, 1, 2])).is_empty());
+        assert!(w.alerts().is_empty());
+    }
+
+    #[test]
+    fn every_rule_fires_with_the_right_id_and_magnitudes() {
+        let mut w = Watchdog::new(SloPolicy {
+            max_deadline_miss_rate: 0.25, // observed 5/10 = 0.5
+            max_retry_rate: 0.1,          // observed 3/10 = 0.3
+            max_takeovers: 0,             // observed 1
+            max_bytes_per_user: 300.0,    // observed 400
+            max_fsync_ns: 1_000_000,      // observed 9e6
+        });
+        let fresh = w.evaluate(&export(&[4]));
+        assert_eq!(fresh.len(), SloKind::ALL.len(), "{fresh:?}");
+        for (alert, kind) in fresh.iter().zip(SloKind::ALL) {
+            assert_eq!(alert.kind, kind);
+            assert_eq!(alert.round, 4);
+            assert!(alert.observed > alert.budget, "{alert:?}");
+            assert_eq!(SloKind::from_rule_id(alert.kind.rule_id()), Some(kind));
+        }
+        let seen: Vec<f64> = fresh.iter().map(|a| a.observed).collect();
+        assert_eq!(seen, vec![0.5, 0.3, 1.0, 400.0, 9e6]);
+    }
+
+    #[test]
+    fn rounds_are_judged_exactly_once_across_growing_snapshots() {
+        let mut w = Watchdog::new(SloPolicy { max_takeovers: 0, ..SloPolicy::default() });
+        assert_eq!(w.evaluate(&export(&[0])).len(), 1);
+        // Re-publishing the same trace raises nothing new…
+        assert_eq!(w.evaluate(&export(&[0])).len(), 0);
+        // …and a grown trace only judges the new round.
+        let fresh = w.evaluate(&export(&[0, 1]));
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].round, 1);
+        assert_eq!(w.alerts().len(), 2, "history accumulates");
+    }
+
+    #[test]
+    fn bytes_budget_reads_a_bench_baseline() {
+        let report = Json::parse(
+            r#"{"group":"g","cases":[{"name":"a","extras":{"bytes_per_user":512}},
+                {"name":"b","extras":{"bytes_per_user":768}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(SloPolicy::bytes_budget_from_bench(&report), Some(768.0));
+        assert_eq!(
+            SloPolicy::bytes_budget_from_bench(&Json::parse("{}").unwrap()),
+            None
+        );
+    }
+
+    #[test]
+    fn alert_json_is_numeric_plus_fixed_rule_label() {
+        let a = SloAlert { kind: SloKind::BytesPerUser, round: 7, observed: 9.5, budget: 8.0 };
+        let j = a.to_json();
+        assert_eq!(j.get("rule").and_then(Json::as_str), Some("bytes_per_user"));
+        assert_eq!(j.get("rule_id").and_then(Json::as_u64), Some(4));
+        assert_eq!(j.get("round").and_then(Json::as_u64), Some(7));
+    }
+}

@@ -96,22 +96,30 @@ impl RoundJournal {
     }
 
     /// Append one record. `Commit` records fsync before returning (the
-    /// round-done barrier); everything else is a buffered write.
+    /// round-done barrier); everything else is a buffered write. The
+    /// commit's telemetry event carries the measured fsync wall in
+    /// `value` (nanoseconds — a public latency, the SLO watchdog's
+    /// journal-health signal).
     pub fn append(&mut self, frame: &Frame) -> Result<()> {
         let bytes = encode_frame(frame);
         self.file
             .write_all(&bytes)
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         self.bytes += bytes.len() as u64;
-        let kind = if matches!(frame, Frame::Commit { .. }) {
-            EventKind::JournalCommit
-        } else {
-            EventKind::JournalAppend
-        };
-        self.tracer
-            .record(EventRecord::new(kind, frame_round(frame)).with_bytes(bytes.len() as u64));
         if matches!(frame, Frame::Commit { .. }) {
+            let t0 = std::time::Instant::now();
             self.sync()?;
+            let fsync_ns = t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64;
+            self.tracer.record(
+                EventRecord::new(EventKind::JournalCommit, frame_round(frame))
+                    .with_bytes(bytes.len() as u64)
+                    .with_value(fsync_ns as f64),
+            );
+        } else {
+            self.tracer.record(
+                EventRecord::new(EventKind::JournalAppend, frame_round(frame))
+                    .with_bytes(bytes.len() as u64),
+            );
         }
         Ok(())
     }

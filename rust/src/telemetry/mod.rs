@@ -12,6 +12,13 @@
 //! attribution equal to [`TrafficStats`](crate::transport::TrafficStats)
 //! totals, recovery replay reproducing the live span skeleton).
 //!
+//! For *live* visibility the tracer also fans records out to bounded
+//! [`TraceSubscriber`] taps ([`Tracer::subscribe`]): each span close and
+//! event is pushed as the same screened JSONL line the ring export would
+//! emit. The recording path never blocks on a slow subscriber — a full
+//! queue drops its oldest line and bumps a monotone drop counter (which
+//! the [`crate::obsv`] ops plane exports on `/metrics`).
+//!
 //! Every layer threads the same tracer: `Engine` / `ClusterEngine` open
 //! round and phase spans, `ShardExecutor` opens per-work-unit compute
 //! spans, `RemoteShardBackend` emits frame/retry/reconnect events,
@@ -43,7 +50,8 @@
 
 #![deny(clippy::redundant_clone)]
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -144,11 +152,15 @@ pub enum EventKind {
     /// One FedAvg round rollup (`count` = participants, `value` =
     /// cumulative epsilon spent — a public accounting quantity).
     FlRound,
+    /// The SLO watchdog flagged a breached budget (`count` = rule id from
+    /// [`crate::obsv::SloKind`], `value` = observed magnitude — rates,
+    /// counts and latencies only, all public operational quantities).
+    SloBreach,
 }
 
 impl EventKind {
     /// Every kind, for generators and exhaustive tests.
-    pub const ALL: [EventKind; 14] = [
+    pub const ALL: [EventKind; 15] = [
         EventKind::FrameSent,
         EventKind::FrameReceived,
         EventKind::ClientUplink,
@@ -163,6 +175,7 @@ impl EventKind {
         EventKind::Deadline,
         EventKind::Reject,
         EventKind::FlRound,
+        EventKind::SloBreach,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -181,6 +194,7 @@ impl EventKind {
             EventKind::Deadline => "deadline",
             EventKind::Reject => "reject",
             EventKind::FlRound => "fl_round",
+            EventKind::SloBreach => "slo_breach",
         }
     }
 
@@ -295,6 +309,61 @@ struct Inner {
     replay: AtomicBool,
     open: AtomicU64,
     ring: Mutex<Ring>,
+    /// Live-stream taps. `sub_count` mirrors `subs.len()` so the
+    /// no-subscriber hot path pays one relaxed load, no lock.
+    subs: Mutex<Vec<Arc<SubInner>>>,
+    sub_count: AtomicUsize,
+}
+
+/// One subscriber's bounded line queue. The publisher only ever
+/// push_back/pop_fronts under the lock — a subscriber slow to *drain*
+/// loses its oldest lines (counted), it never stalls the recording path.
+struct SubInner {
+    capacity: usize,
+    queue: Mutex<VecDeque<String>>,
+    dropped: AtomicU64,
+}
+
+impl SubInner {
+    fn push(&self, line: &str) {
+        let mut q = self.queue.lock().expect("trace subscriber queue poisoned");
+        if q.len() == self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(line.to_string());
+    }
+}
+
+/// A live tap on a [`Tracer`]: every span close and event lands here as
+/// the SAME screened JSONL line [`TraceExport::to_jsonl`] would emit, so
+/// a streamed line passes the fixed-registry scan by construction. The
+/// queue is bounded; overflow drops the OLDEST line (a live tail wants
+/// the newest) and bumps a monotone [`TraceSubscriber::dropped_records`]
+/// counter.
+#[derive(Clone)]
+pub struct TraceSubscriber(Arc<SubInner>);
+
+impl TraceSubscriber {
+    /// Take every queued line, oldest first.
+    pub fn drain(&self) -> Vec<String> {
+        let mut q = self.0.queue.lock().expect("trace subscriber queue poisoned");
+        q.drain(..).collect()
+    }
+
+    /// Lines dropped to overflow since subscription — monotone.
+    pub fn dropped_records(&self) -> u64 {
+        self.0.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Lines currently queued.
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().expect("trace subscriber queue poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// The flight recorder handle — cheap to clone (an `Arc`), `Send + Sync`,
@@ -319,6 +388,8 @@ impl Tracer {
                 dropped_spans: 0,
                 dropped_events: 0,
             }),
+            subs: Mutex::new(Vec::new()),
+            sub_count: AtomicUsize::new(0),
         }))
     }
 
@@ -386,6 +457,9 @@ impl Tracer {
         }
         ev.ts_ns = self.now_ns();
         ev.replay = ev.replay || self.replaying();
+        if self.0.sub_count.load(Ordering::Relaxed) > 0 {
+            self.fan_out(&event_line(&ev));
+        }
         let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
         if ring.events.len() < self.0.capacity {
             ring.events.push(ev);
@@ -395,12 +469,46 @@ impl Tracer {
     }
 
     fn push_span(&self, rec: SpanRecord) {
+        if self.0.sub_count.load(Ordering::Relaxed) > 0 {
+            self.fan_out(&span_line(&rec));
+        }
         let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
         if ring.spans.len() < self.0.capacity {
             ring.spans.push(rec);
         } else {
             ring.dropped_spans += 1;
         }
+    }
+
+    /// Hand the line to every subscriber. Subscribers see records even
+    /// when the ring is full — the live stream outlives the recorder's
+    /// bound, that is its point.
+    fn fan_out(&self, line: &str) {
+        let subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        for sub in subs.iter() {
+            sub.push(line);
+        }
+    }
+
+    /// Attach a live tap bounded at `capacity` lines (min 1). See
+    /// [`TraceSubscriber`] for the overflow contract.
+    pub fn subscribe(&self, capacity: usize) -> TraceSubscriber {
+        let sub = Arc::new(SubInner {
+            capacity: capacity.max(1),
+            queue: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        });
+        let mut subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        subs.push(Arc::clone(&sub));
+        self.0.sub_count.store(subs.len(), Ordering::Relaxed);
+        TraceSubscriber(sub)
+    }
+
+    /// Lines dropped across all subscribers (monotone — detach never
+    /// resets it within a subscriber's lifetime).
+    pub fn subscriber_dropped_records(&self) -> u64 {
+        let subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        subs.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
     }
 
     /// Spans currently open (opened, not yet dropped).
@@ -775,6 +883,73 @@ mod tests {
         assert_eq!(snap.spans.len(), 2);
         assert_eq!(snap.dropped_spans, 3);
         assert_eq!(snap.open_spans, 0, "dropped spans still close");
+    }
+
+    #[test]
+    fn subscriber_streams_screened_lines() {
+        // Every line a subscriber sees must be exactly what the ring
+        // export would emit — so it passes the fixed-registry scan by
+        // construction.
+        let t = Tracer::new(64);
+        let sub = t.subscribe(64);
+        {
+            let _s = t.span(SpanKind::Round, "round", 2, SHARD_NONE);
+            t.record(EventRecord::new(EventKind::Admit, 2).with_client(7));
+            t.record(EventRecord::new(EventKind::SloBreach, 2).with_count(1).with_value(0.5));
+        }
+        let lines = sub.drain();
+        assert_eq!(lines.len(), 3, "2 events + 1 span close");
+        let back = TraceExport::parse_jsonl(&lines.join("\n")).unwrap();
+        assert_eq!(back.events.len(), 2);
+        assert_eq!(back.events[1].kind, EventKind::SloBreach);
+        assert_eq!(back.spans.len(), 1);
+        assert!(sub.is_empty(), "drain leaves the queue empty");
+        assert_eq!(sub.dropped_records(), 0);
+    }
+
+    #[test]
+    fn slow_subscriber_drops_oldest_and_counts_monotone() {
+        // Backpressure contract: a subscriber that never drains loses its
+        // OLDEST lines (a live tail wants the newest), the drop counter
+        // only grows, and the recording path keeps completing.
+        let t = Tracer::new(1024);
+        let sub = t.subscribe(4);
+        for i in 0..10u64 {
+            t.record(EventRecord::new(EventKind::Retry, i));
+        }
+        assert_eq!(sub.dropped_records(), 6);
+        assert_eq!(t.subscriber_dropped_records(), 6);
+        let lines = sub.drain();
+        assert_eq!(lines.len(), 4);
+        let back = TraceExport::parse_jsonl(&lines.join("\n")).unwrap();
+        let rounds: Vec<u64> = back.events.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![6, 7, 8, 9], "the newest records survive");
+        // More traffic after the overflow: counter stays monotone, the
+        // queue refills from empty.
+        for i in 10..13u64 {
+            t.record(EventRecord::new(EventKind::Retry, i));
+        }
+        assert_eq!(sub.dropped_records(), 6, "no drops while under capacity");
+        assert_eq!(sub.len(), 3);
+        for i in 13..20u64 {
+            t.record(EventRecord::new(EventKind::Retry, i));
+        }
+        assert!(sub.dropped_records() > 6, "drop counter resumes, never resets");
+    }
+
+    #[test]
+    fn subscriber_outlives_the_ring_bound() {
+        // The ring stops at capacity; the live stream must not — records
+        // the flight recorder dropped still reach subscribers.
+        let t = Tracer::new(2);
+        let sub = t.subscribe(64);
+        for i in 0..6u64 {
+            t.record(EventRecord::new(EventKind::Admit, i));
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.events.len(), 2);
+        assert_eq!(snap.dropped_events, 4);
+        assert_eq!(sub.drain().len(), 6, "subscribers see past the ring bound");
     }
 
     #[test]

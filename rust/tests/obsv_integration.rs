@@ -1,0 +1,153 @@
+//! Integration: the live ops plane end-to-end over real HTTP — a
+//! loopback cluster stack with the scrape endpoint attached answers
+//! `/metrics`, `/health` and `/trace` with exactly-reconciled byte
+//! counters and without perturbing the rounds, and an elastic stack's
+//! scripted shard death surfaces as a typed takeover alert on the
+//! health board plus a screened `slo_breach` line on the trace tail.
+//! Pure Rust, loopback sockets only.
+
+use cloak_agg::aggregator::{Aggregator, AggregatorBuilder};
+use cloak_agg::cluster::ClusterTuning;
+use cloak_agg::control::{ElasticTuning, Proportional};
+use cloak_agg::engine::{DerivedClientSeeds, Engine, EngineConfig, RoundInput};
+use cloak_agg::obsv::{http_get, SloPolicy};
+use cloak_agg::params::ProtocolPlan;
+use cloak_agg::telemetry::TraceExport;
+use cloak_agg::transport::channel::{Channel, Loopback, SimNet, SimNetConfig};
+use cloak_agg::util::json::Json;
+
+fn exact_plan(n: usize) -> ProtocolPlan {
+    ProtocolPlan::exact_secure_agg(n, 100, 8)
+}
+
+fn inputs_for(n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| (0..d).map(|j| ((i * 7 + j * 13) % 100) as f64 / 100.0).collect())
+        .collect()
+}
+
+/// Pull one `name value` counter out of a Prometheus text page.
+fn scrape_counter(metrics: &str, name: &str) -> Option<u64> {
+    let prefix = format!("{name} ");
+    metrics.lines().find_map(|l| l.strip_prefix(&prefix).and_then(|v| v.trim().parse().ok()))
+}
+
+#[test]
+fn loopback_stack_scrapes_all_three_endpoints_with_reconciled_bytes() {
+    let (n, d, shards, seed) = (24usize, 6usize, 3usize, 7u64);
+    let cfg = EngineConfig::new(exact_plan(n), d).with_shards(shards);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+
+    let mut want = Engine::new(cfg.clone(), seed);
+    let mut agg = AggregatorBuilder::new(cfg, seed)
+        .loopback()
+        .ops_listen("127.0.0.1:0")
+        .build()
+        .unwrap();
+    let addr = agg.ops_addr().expect("ops plane must expose its bound address");
+
+    for _ in 0..2 {
+        let got = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        let plain = want.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+        assert_eq!(got.estimates, plain.estimates, "the ops plane must not perturb a round");
+    }
+
+    // /metrics: live Prometheus text with exactly-reconciled byte counters.
+    let (code, metrics) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(scrape_counter(&metrics, "cloak_obsv_publish_count"), Some(3)); // seed + 2 rounds
+    let traffic = scrape_counter(&metrics, "cloak_cluster_reconcile_traffic_bytes").unwrap();
+    let attributed = scrape_counter(&metrics, "cloak_cluster_reconcile_attributed_bytes").unwrap();
+    let delta = scrape_counter(&metrics, "cloak_cluster_reconcile_delta_bytes").unwrap();
+    assert!(traffic > 0, "two cluster rounds must move bytes");
+    assert_eq!(traffic, attributed, "every wire byte must be trace-attributed");
+    assert_eq!(delta, 0, "reconciliation drift on the scrape page");
+
+    // /health: a green scoreboard naming the backend, every shard alive.
+    let (code, health) = http_get(addr, "/health").unwrap();
+    assert_eq!(code, 200);
+    let h = Json::parse(&health).unwrap();
+    assert_eq!(h.get("ok"), Some(&Json::Bool(true)), "healthy stack must report ok:\n{health}");
+    assert_eq!(h.get("backend").and_then(Json::as_str), Some("loopback"));
+    assert_eq!(h.get("rounds_run").and_then(Json::as_u64), Some(2));
+    // Health tracking is the elastic control plane's job: a plain
+    // backend publishes an empty scoreboard, not a missing field.
+    match h.get("shard_health") {
+        Some(Json::Arr(rows)) => assert!(rows.is_empty()),
+        other => panic!("missing shard_health scoreboard: {other:?}"),
+    }
+    assert_eq!(h.get("shards").and_then(Json::as_u64), Some(shards as u64));
+    match h.get("alerts") {
+        Some(Json::Arr(alerts)) => assert!(alerts.is_empty(), "clean run raised alerts"),
+        other => panic!("missing alerts array: {other:?}"),
+    }
+
+    // /trace: a non-empty JSONL tail that survives the registry scan.
+    let (code, trace) = http_get(addr, "/trace").unwrap();
+    assert_eq!(code, 200);
+    let parsed = TraceExport::parse_jsonl(&trace).expect("tail must pass the registry scan");
+    assert!(!parsed.spans.is_empty(), "two rounds must leave spans on the tail");
+
+    // Unknown paths stay unknown — the surface is exactly three endpoints.
+    let (code, _) = http_get(addr, "/shares").unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn elastic_shard_death_surfaces_as_takeover_alert_on_health() {
+    let (n, d, shards, seed) = (24usize, 6usize, 4usize, 11u64);
+    let cfg = EngineConfig::new(exact_plan(n), d).with_shards(shards);
+    let inputs = inputs_for(n, d);
+    let seeds = DerivedClientSeeds::new(seed);
+
+    let mut want = Engine::new(cfg.clone(), seed);
+    // Shard 1's inbound link goes silent after its handshake; a
+    // zero-takeover budget makes the in-round takeover an SLO breach.
+    let mut agg = AggregatorBuilder::new(cfg, seed)
+        .over_channels(|s| {
+            let down: Box<dyn Channel> = if s == 1 {
+                Box::new(SimNet::new(SimNetConfig::new(5).with_silent_after(1)))
+            } else {
+                Box::new(Loopback::new())
+            };
+            (down, Box::new(Loopback::new()) as _)
+        })
+        .cluster_tuning(ClusterTuning { max_retries: 1, ..ClusterTuning::default() })
+        .elastic(Box::new(Proportional::default()))
+        .elastic_tuning(ElasticTuning { revive_every: 0, ..ElasticTuning::default() })
+        .ops_listen("127.0.0.1:0")
+        .ops_policy(SloPolicy { max_takeovers: 0, ..SloPolicy::default() })
+        .build()
+        .unwrap();
+    let addr = agg.ops_addr().unwrap();
+
+    let got = agg.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+    let plain = want.run_round(&RoundInput::Vectors(&inputs), &seeds).unwrap();
+    assert_eq!(got.estimates, plain.estimates, "takeover must stay bit-identical");
+    assert!(agg.shard_takeovers() >= 1, "the dead shard must cost a takeover");
+
+    let (code, health) = http_get(addr, "/health").unwrap();
+    assert_eq!(code, 200);
+    let h = Json::parse(&health).unwrap();
+    assert_eq!(h.get("ok"), Some(&Json::Bool(false)), "breached SLO must fail /health:\n{health}");
+    let alert = match h.get("alerts") {
+        Some(Json::Arr(alerts)) => alerts
+            .iter()
+            .find(|a| a.get("rule").and_then(Json::as_str) == Some("takeover_budget"))
+            .unwrap_or_else(|| panic!("no takeover alert on /health:\n{health}"))
+            .clone(),
+        other => panic!("missing alerts array: {other:?}"),
+    };
+    assert!(alert.get("observed").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+    let parked = match h.get("shard_health") {
+        Some(Json::Arr(rows)) => rows.iter().any(|r| r.get("alive") == Some(&Json::Bool(false))),
+        _ => false,
+    };
+    assert!(parked, "the victim must be parked on the scoreboard:\n{health}");
+
+    // The breach is also on the screened trace tail, numeric-only.
+    let (_, trace) = http_get(addr, "/trace").unwrap();
+    TraceExport::parse_jsonl(&trace).expect("tail must pass the registry scan");
+    assert!(trace.contains("\"kind\":\"slo_breach\""), "breach missing from /trace");
+}
