@@ -34,7 +34,7 @@ fn main() {
                 ("balle [4]".into(), p.messages_per_user(), p.message_bits())
             },
             {
-                let p = CloakProtocol::theorem1(n, eps, delta, 3);
+                let p = CloakProtocol::theorem1(n, eps, delta, 3).expect("plan");
                 ("cloak thm1".into(), p.messages_per_user(), p.message_bits())
             },
             {

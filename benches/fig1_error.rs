@@ -36,10 +36,10 @@ fn main() {
     let mut local_errs = Vec::new();
     let mut balle_preds = Vec::new();
     for &n in &ns {
-        let e_cloak1 =
-            mean_abs_error(&mut CloakProtocol::theorem1(n, eps, delta, 1), n, trials, 7);
-        let e_cloak2 =
-            mean_abs_error(&mut CloakProtocol::theorem2(n, eps, delta, 2), n, trials, 7);
+        let mut c1 = CloakProtocol::theorem1(n, eps, delta, 1).expect("plan");
+        let e_cloak1 = mean_abs_error(&mut c1, n, trials, 7);
+        let mut c2 = CloakProtocol::theorem2(n, eps, delta, 2).expect("plan");
+        let e_cloak2 = mean_abs_error(&mut c2, n, trials, 7);
         let e_cheu = mean_abs_error(&mut CheuProtocol::new(n, eps, delta, 3), n, trials, 7);
         let balle = BalleProtocol::new(n, eps, delta, 4);
         balle_preds.push((balle.gamma() * n as f64 / 12.0).sqrt() / (1.0 - balle.gamma()));
@@ -86,7 +86,8 @@ fn main() {
     let mut t2 = Table::new("Thm 1 — error vs eps (n=16000)", &["eps", "measured", "bound"]);
     let mut errs_eps = Vec::new();
     for &e in &[0.25f64, 0.5, 1.0, 2.0, 4.0] {
-        let err = mean_abs_error(&mut CloakProtocol::theorem1(n, e, delta, 8), n, trials, 9);
+        let mut p = CloakProtocol::theorem1(n, e, delta, 8).expect("plan");
+        let err = mean_abs_error(&mut p, n, trials, 9);
         let plan = cloak_agg::params::ProtocolPlan::theorem1(n, e, delta).unwrap();
         errs_eps.push(err);
         t2.row(&[e.to_string(), fmt_f(err), fmt_f(plan.error_bound())]);
@@ -98,7 +99,8 @@ fn main() {
     // ---- series 3: cloak error vs δ -------------------------------------
     let mut t3 = Table::new("Thm 1 — error vs delta (n=16000, eps=1)", &["delta", "measured", "bound"]);
     for &d in &[1e-4f64, 1e-6, 1e-8, 1e-10] {
-        let err = mean_abs_error(&mut CloakProtocol::theorem1(n, 1.0, d, 10), n, trials, 11);
+        let mut p = CloakProtocol::theorem1(n, 1.0, d, 10).expect("plan");
+        let err = mean_abs_error(&mut p, n, trials, 11);
         let plan = cloak_agg::params::ProtocolPlan::theorem1(n, 1.0, d).unwrap();
         t3.row(&[format!("{d:.0e}"), fmt_f(err), fmt_f(plan.error_bound())]);
     }

@@ -51,7 +51,7 @@ fn protocol_comparison() {
     let mut cloak_b = Vec::new();
     let mut bona_b = Vec::new();
     for &n in &ns {
-        let (ct, cb) = measure(&mut CloakProtocol::theorem1(n, 1.0, 1e-6, 1), n);
+        let (ct, cb) = measure(&mut CloakProtocol::theorem1(n, 1.0, 1e-6, 1).expect("plan"), n);
         let (bt, bb) = measure(&mut BonawitzProtocol::new(n, 10 * n as u64, 2), n);
         cloak_t.push(ct);
         bona_t.push(bt);

@@ -88,6 +88,8 @@
 //! assert_eq!(r.estimates.len(), 4);
 //! ```
 
+#![deny(clippy::redundant_clone)]
+
 use crate::cluster::{config_fingerprint, ClusterEngine, ClusterTuning, RemoteShardBackend};
 use crate::control::{ElasticController, ElasticTuning, RebalancePolicy};
 use crate::engine::{

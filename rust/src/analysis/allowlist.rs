@@ -1,0 +1,152 @@
+//! Committed waivers: every deliberate exception to a rule, with the
+//! reason it is sound. A waiver names a rule, a path suffix and a
+//! *needle* — a substring of the raw source line (for R4 sites the
+//! `.expect` message doubles as the needle, so the justification lives
+//! in the code and the allowlist stays in sync with it). Matched
+//! findings are reported as waived and do not gate; waivers that match
+//! nothing are reported as stale so they get pruned.
+
+use super::{Finding, RuleId};
+
+/// One allowlisted site.
+pub struct Waiver {
+    pub rule: RuleId,
+    /// Matched against the end of the finding's relative path.
+    pub path_suffix: &'static str,
+    /// Matched against the trimmed raw source line.
+    pub needle: &'static str,
+    /// Why the site is sound — shown in the JSON report.
+    pub reason: &'static str,
+}
+
+impl Waiver {
+    pub fn covers(&self, f: &Finding) -> bool {
+        self.rule == f.rule && f.path.ends_with(self.path_suffix) && f.snippet.contains(self.needle)
+    }
+}
+
+/// The full waiver set. Keep this list short: a new entry needs a reason
+/// a reviewer would accept in place of a typed error path.
+pub const WAIVERS: [Waiver; 12] = [
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "baselines/mod.rs",
+        needle: "expect(\"plan n mismatch\")",
+        reason: "bench trait surface: the harness builds xs with the plan's exact length",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "cluster/coordinator.rs",
+        needle: "expect(\"server count matches layout\")",
+        reason: "the server vec is built from the layout's own count one line above",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "coordinator/durable.rs",
+        needle: "expect(\"matched a work frame\")",
+        reason: "the enclosing match arm accepts exactly the frame shapes from_frame round-trips",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "coordinator/mod.rs",
+        needle: "expect(\"views requested\")",
+        reason: "callers that request views always receive them (optional-materialization API)",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "engine/mod.rs",
+        needle: "expect(\"streaming scratch taken once per shard\")",
+        reason: "each dispatch index takes its scratch slot exactly once per round by construction",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "engine/mod.rs",
+        needle: "expect(\"shard region taken once per round\")",
+        reason: "each dispatch index takes its region exactly once per round by construction",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "engine/mod.rs",
+        needle: "expect(\"views requested\")",
+        reason: "the views option is Some whenever the caller asked for materialized views",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "engine/mod.rs",
+        needle: "expect(\"shard views\")",
+        reason: "guarded by the same views flag the call site checked before entering the loop",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "transport/streaming.rs",
+        needle: "expect(\"collector thread\")",
+        reason: "a panicking collector is a crate bug; a scoped join would re-raise it anyway",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "util/benchkit.rs",
+        needle: "results.last().unwrap()",
+        reason: "a result is pushed on the immediately preceding line",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "util/pool.rs",
+        needle: "expect(\"dispatch slot unfilled\")",
+        reason: "the completion counter proves every slot was written (see the SAFETY comment)",
+    },
+    Waiver {
+        rule: RuleId::R4,
+        path_suffix: "util/proptest_lite.rs",
+        needle: "panic!(",
+        reason: "property-failure reporting is the harness contract (mirrors real proptest)",
+    },
+];
+
+/// Mark findings covered by a waiver (sets `Finding::waiver`).
+pub fn apply(findings: &mut [Finding]) {
+    for f in findings.iter_mut() {
+        if let Some(w) = WAIVERS.iter().find(|w| w.covers(f)) {
+            f.waiver = Some(w.reason);
+        }
+    }
+}
+
+/// Human-readable descriptions of waivers that matched no finding.
+pub fn stale(findings: &[Finding]) -> Vec<String> {
+    WAIVERS
+        .iter()
+        .filter(|w| !findings.iter().any(|f| w.covers(f)))
+        .map(|w| format!("{} {} needle {:?}", w.rule.as_str(), w.path_suffix, w.needle))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    #[test]
+    fn apply_waives_matching_sites_only() {
+        let src = concat!(
+            "fn take(o: Option<u32>) -> u32 {\n",
+            "    o.expect(\"dispatch slot unfilled\")\n",
+            "}\n",
+            "fn other(o: Option<u32>) -> u32 {\n",
+            "    o.unwrap()\n",
+            "}\n",
+        );
+        let files = vec![SourceFile::new("util/pool.rs", src)];
+        let mut found = super::super::rules::run_all(&files);
+        apply(&mut found);
+        let waived: Vec<bool> = found.iter().map(|f| f.waiver.is_some()).collect();
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert_eq!(waived, vec![true, false], "{found:?}");
+    }
+
+    #[test]
+    fn stale_lists_unmatched_waivers() {
+        let all_stale = stale(&[]);
+        assert_eq!(all_stale.len(), WAIVERS.len());
+        assert!(all_stale.iter().all(|s| s.starts_with("R4")));
+    }
+}

@@ -1,0 +1,256 @@
+//! A lightweight Rust lexer — just enough structure for line-level
+//! semantic rules, in the spirit of `util::json`'s hand-rolled parser.
+//!
+//! The lexer does one job: separate *code* from *comments* and *string
+//! literals*, per line. Rules then match on the code channel (where
+//! `.unwrap()` in a doc comment must not count) and inspect the string
+//! channel (where a span name lives). This also makes the analyzer
+//! self-hosting-safe: the rule patterns in `rules.rs` are themselves
+//! string literals, so they vanish from the code channel before the
+//! rules run over the analyzer's own source.
+
+/// One source line after lexing.
+#[derive(Clone, Debug, Default)]
+pub struct LexedLine {
+    /// The line with comments removed and every string/char literal
+    /// collapsed to an empty literal (`""` / `' '`).
+    pub code: String,
+    /// Contents of string literals that *end* on this line (a literal
+    /// spanning lines is attributed to its closing line).
+    pub strings: Vec<String>,
+}
+
+enum Mode {
+    Code,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+/// Lex `text` into per-line code/string channels.
+pub fn lex(text: &str) -> Vec<LexedLine> {
+    let b = text.as_bytes();
+    let mut out: Vec<LexedLine> = Vec::new();
+    let mut cur = LexedLine::default();
+    let mut lit = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::BlockComment(depth) => {
+                if b[i..].starts_with(b"*/") {
+                    i += 2;
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                } else if b[i..].starts_with(b"/*") {
+                    i += 2;
+                    mode = Mode::BlockComment(depth + 1);
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    if b[i + 1] == b'\n' {
+                        // String continuation: the physical line still ends
+                        // here, so flush it to keep line numbers in sync.
+                        out.push(std::mem::take(&mut cur));
+                    } else {
+                        lit.push(b[i + 1] as char);
+                    }
+                    i += 2;
+                } else if c == b'"' {
+                    cur.strings.push(std::mem::take(&mut lit));
+                    cur.code.push_str("\"\"");
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    lit.push(c as char);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let closes = c == b'"'
+                    && b[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes;
+                if closes {
+                    cur.strings.push(std::mem::take(&mut lit));
+                    cur.code.push_str("\"\"");
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    lit.push(c as char);
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                if b[i..].starts_with(b"//") {
+                    // Line comment: drop the rest of the physical line.
+                    while i < b.len() && b[i] != b'\n' {
+                        i += 1;
+                    }
+                } else if b[i..].starts_with(b"/*") {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == b'r' && !prev_is_ident(b, i) && raw_str_hashes(&b[i + 1..]).is_some()
+                {
+                    let hashes = match raw_str_hashes(&b[i + 1..]) {
+                        Some(h) => h,
+                        None => 0,
+                    };
+                    mode = Mode::RawStr(hashes);
+                    i += 2 + hashes; // r, hashes, opening quote
+                } else if c == b'\'' {
+                    // Char literal vs lifetime: a literal is 'x' or '\x'.
+                    if let Some(len) = char_literal_len(&b[i..]) {
+                        cur.code.push_str("' '");
+                        i += len;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c as char);
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// If `rest` (the bytes after an `r`) opens a raw string, the hash count.
+fn raw_str_hashes(rest: &[u8]) -> Option<usize> {
+    let hashes = rest.iter().take_while(|&&c| c == b'#').count();
+    (rest.get(hashes) == Some(&b'"')).then_some(hashes)
+}
+
+/// Byte length of a char literal at the start of `b`, or `None` for a
+/// lifetime / loose quote.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    match b.get(1)? {
+        b'\\' => (b.get(3)? == &b'\'').then_some(4),
+        b'\'' => None,
+        _ => (b.get(2)? == &b'\'').then_some(3),
+    }
+}
+
+/// Identifier tokens in `code` as (byte offset, token) pairs.
+pub fn idents(code: &str) -> Vec<(usize, &str)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i].is_ascii_alphabetic() || b[i] == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            out.push((start, &code[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Per-line mask: `true` where the line sits inside a `#[cfg(test)]`
+/// item (a `mod tests { .. }` block or a single annotated `fn`), tracked
+/// by brace depth over the code channel.
+pub fn test_mask(lines: &[LexedLine]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut skip_until: Option<i64> = None;
+    for (idx, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if skip_until.is_some() {
+            mask[idx] = true;
+        }
+        let squeezed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+        if squeezed.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let opens = code.bytes().filter(|&c| c == b'{').count() as i64;
+        let closes = code.bytes().filter(|&c| c == b'}').count() as i64;
+        let toks = idents(code);
+        let has_mod = toks.iter().any(|(_, t)| *t == "mod");
+        let has_fn = toks.iter().any(|(_, t)| *t == "fn");
+        if pending && skip_until.is_none() && has_mod {
+            skip_until = Some(depth);
+            mask[idx] = true;
+            pending = false;
+        } else if pending && !squeezed.is_empty() && !squeezed.starts_with("#[") {
+            // The attribute landed on a non-mod item (an annotated fn).
+            if has_fn && skip_until.is_none() {
+                skip_until = Some(depth);
+                mask[idx] = true;
+            }
+            pending = false;
+        }
+        depth += opens - closes;
+        if let Some(s) = skip_until {
+            if depth <= s && closes > 0 {
+                skip_until = None;
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_code_channel() {
+        let src =
+            "let x = 1; // trailing .unwrap()\nlet s = \"panic!\"; /* block\n.unwrap() */ let y = 2;";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 3);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(!lines[1].code.contains("panic"));
+        assert_eq!(lines[1].strings, vec!["panic!".to_string()]);
+        assert!(!lines[2].code.contains("unwrap"));
+        assert!(lines[2].code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = "let r = r#\"a \"quoted\" b\"#; let c = '\"'; let lt: &'static str = \"x\";";
+        let lines = lex(src);
+        assert_eq!(lines[0].strings[0], "a \"quoted\" b");
+        assert_eq!(lines[0].strings[1], "x");
+        assert!(lines[0].code.contains("&'static str"));
+    }
+
+    #[test]
+    fn string_continuation_keeps_line_numbers_in_sync() {
+        let src = "let s = \"first part \\\n    second part\";\nlet t = 1;";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1].strings, vec!["first part     second part".to_string()]);
+        assert!(lines[2].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked() {
+        let src =
+            "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn tail() {}";
+        let lines = lex(src);
+        let mask = test_mask(&lines);
+        assert_eq!(mask, vec![false, false, true, true, true, false]);
+    }
+}

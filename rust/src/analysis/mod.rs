@@ -1,0 +1,361 @@
+//! Machine-enforced invariants: a dependency-free static analyzer over
+//! this crate's own source tree (`cargo run --release -- lint`).
+//!
+//! The crate documents several invariants that rustc cannot see — the
+//! analyzer turns them into typed `file:line` diagnostics, in the same
+//! self-hosted spirit as `util::proptest_lite` and `util::json`:
+//!
+//! - **R1 privacy taint** — identifiers from the privacy lexicon
+//!   ([`PRIVACY_LEXICON`]: per-user shares, pairwise pool values, RNG
+//!   seeds) must not reach `Debug`/`Display` impls, format macros
+//!   (`format!`/`println!`/`panic!`/`err!`/…), telemetry event
+//!   constructors, or `util::json` emission. Size projections
+//!   (`.len()`, `.is_empty()`, `.capacity()`) are public by design and
+//!   exempt. This is the static face of the runtime trust rule: the
+//!   observability plane exports counts and timings, never secrets.
+//! - **R2 registry closure** — every span name passed to
+//!   `Tracer::span(SpanKind::…)` must be in
+//!   [`crate::telemetry::SPAN_NAMES`], and every `EventKind::` variant
+//!   mentioned must exist in [`crate::telemetry::EventKind::ALL`]. The
+//!   registries are imported from the crate itself, so the static check
+//!   and the runtime codec cannot drift. `KEEP-IN-SYNC(<key>) begin/end`
+//!   comment blocks must appear at least twice per key with byte-equal
+//!   normalized payloads.
+//! - **R3 wire-tag uniqueness** — the `const TYPE_*` frame tags in
+//!   `transport/wire.rs` must be collision-free and each must appear in
+//!   the module's wire-format doc table (and vice versa).
+//! - **R4 no panics in library paths** — `.unwrap()` / `.expect(` /
+//!   `panic!` / `todo!` are banned outside `#[cfg(test)]` regions and
+//!   the binary surface (`main.rs`, `cli.rs`). Deliberate exceptions
+//!   live in [`allowlist`], each with a written reason.
+//! - **R5 lint scope** — every module root (`rust/src/*/mod.rs`)
+//!   carries `#![deny(clippy::redundant_clone)]`.
+//!
+//! The analyzer never panics and takes no dependencies: [`lexer`] is a
+//! small hand-rolled Rust lexer (code/comment/string channels), and the
+//! rules in [`rules`] are line-level scans over its output. Waivers in
+//! [`allowlist`] are matched against raw source text, so an `.expect`
+//! message doubles as the waiver needle.
+
+#![deny(clippy::redundant_clone)]
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Identifier segments that name secret material. An identifier is
+/// *tainted* when any of its snake_case segments, lowercased, is in this
+/// list (so `user_shares`, `pool_value` and `round_seed` all count).
+pub const PRIVACY_LEXICON: [&str; 6] = ["share", "shares", "pool", "pools", "seed", "seeds"];
+
+/// The rule that produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [RuleId::R1, RuleId::R2, RuleId::R3, RuleId::R4, RuleId::R5];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::R1 => "R1",
+            RuleId::R2 => "R2",
+            RuleId::R3 => "R3",
+            RuleId::R4 => "R4",
+            RuleId::R5 => "R5",
+        }
+    }
+
+    pub fn title(self) -> &'static str {
+        match self {
+            RuleId::R1 => "privacy taint",
+            RuleId::R2 => "registry closure",
+            RuleId::R3 => "wire-tag uniqueness",
+            RuleId::R4 => "no panics in library paths",
+            RuleId::R5 => "lint scope",
+        }
+    }
+}
+
+/// One diagnostic. `waiver` is `Some(reason)` when an [`allowlist`]
+/// entry covers the site; such findings are reported but do not gate.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Path relative to the analyzed root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub detail: String,
+    /// The raw source line, trimmed.
+    pub snippet: String,
+    pub waiver: Option<&'static str>,
+}
+
+/// A lexed source file plus the raw lines the allowlist matches against.
+pub struct SourceFile {
+    pub path: String,
+    pub raw: Vec<String>,
+    pub lexed: Vec<lexer::LexedLine>,
+    /// Per line: inside a `#[cfg(test)]` region.
+    pub mask: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        let lexed = lexer::lex(text);
+        let mask = lexer::test_mask(&lexed);
+        SourceFile {
+            path: path.to_string(),
+            raw: text.lines().map(str::to_string).collect(),
+            lexed,
+            mask,
+        }
+    }
+
+    /// Trimmed raw text of 1-based line `line` (empty when out of range —
+    /// `lex` appends a final line for a trailing newline that `lines()`
+    /// does not produce).
+    pub fn snippet(&self, line: usize) -> String {
+        self.raw.get(line.saturating_sub(1)).map(|s| s.trim().to_string()).unwrap_or_default()
+    }
+}
+
+/// Collects sources, runs every rule, applies the allowlist.
+#[derive(Default)]
+pub struct Analyzer {
+    files: Vec<SourceFile>,
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer::default()
+    }
+
+    pub fn add_source(&mut self, path: &str, text: &str) {
+        self.files.push(SourceFile::new(path, text));
+    }
+
+    /// Run all rules; findings come back sorted by (path, line, rule)
+    /// with allowlisted sites carrying their waiver reason.
+    pub fn finish(self) -> Vec<Finding> {
+        let mut found = rules::run_all(&self.files);
+        allowlist::apply(&mut found);
+        found.sort_by(|a, b| {
+            (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+        });
+        found
+    }
+}
+
+/// A finished lint pass over one tree.
+pub struct LintReport {
+    pub root: String,
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    /// Allowlist entries that matched nothing — stale waivers to prune.
+    pub stale_waivers: Vec<String>,
+}
+
+impl LintReport {
+    /// Findings not covered by the allowlist — these gate.
+    pub fn active(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.waiver.is_none()).collect()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waiver.is_some()).count()
+    }
+
+    /// Human-readable diagnostics: one `path:line [Rn] detail` block per
+    /// active finding, then any stale-waiver warnings.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.active() {
+            out.push_str(&format!(
+                "{}:{} [{}] {}\n    {}\n",
+                f.path,
+                f.line,
+                f.rule.as_str(),
+                f.detail,
+                f.snippet
+            ));
+        }
+        for w in &self.stale_waivers {
+            out.push_str(&format!("warning: stale allowlist waiver matched nothing: {w}\n"));
+        }
+        out
+    }
+
+    /// Machine-readable report in the benchkit JSON house style: one
+    /// object with a `group` discriminator, counts, and typed rows.
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{num, obj, s};
+        let findings: Vec<Json> = self
+            .active()
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("rule", s(f.rule.as_str())),
+                    ("path", s(&f.path)),
+                    ("line", num(f.line as f64)),
+                    ("detail", s(&f.detail)),
+                    ("snippet", s(&f.snippet)),
+                ])
+            })
+            .collect();
+        let waivers: Vec<Json> = self
+            .findings
+            .iter()
+            .filter_map(|f| {
+                f.waiver.map(|reason| {
+                    obj(vec![
+                        ("rule", s(f.rule.as_str())),
+                        ("path", s(&f.path)),
+                        ("line", num(f.line as f64)),
+                        ("reason", s(reason)),
+                    ])
+                })
+            })
+            .collect();
+        let rules: Vec<Json> = RuleId::ALL
+            .iter()
+            .map(|r| obj(vec![("id", s(r.as_str())), ("title", s(r.title()))]))
+            .collect();
+        obj(vec![
+            ("group", s("lint")),
+            ("root", s(&self.root)),
+            ("files", num(self.files as f64)),
+            ("active", num(findings.len() as f64)),
+            ("waived", num(self.waived_count() as f64)),
+            ("rules", Json::Arr(rules)),
+            ("findings", Json::Arr(findings)),
+            ("waivers", Json::Arr(waivers)),
+            ("stale_waivers", Json::Arr(self.stale_waivers.iter().map(|w| s(w)).collect())),
+        ])
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted order).
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let mut paths = Vec::new();
+    walk_rs(root, &mut paths)?;
+    crate::ensure!(!paths.is_empty(), "no .rs files under {}", root.display());
+    let mut az = Analyzer::new();
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().into_owned();
+        az.add_source(&rel, &text);
+    }
+    let findings = az.finish();
+    let stale_waivers = allowlist::stale(&findings);
+    Ok(LintReport { root: root.display().to_string(), files: paths.len(), findings, stale_waivers })
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    let rd = std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for e in rd {
+        entries.push(e.with_context(|| format!("listing {}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Screen exported telemetry JSONL for privacy-lexicon words: every
+/// object key and string value must be free of lexicon segments. The
+/// ops-sim and trace-scan commands run this over real trace bodies, so
+/// the exporter and the static rule R1 share one lexicon.
+pub fn screen_trace_text(label: &str, text: &str) -> Result<()> {
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| crate::err!("{label} line {}: not valid JSON: {e}", i + 1))?;
+        if let Some(word) = first_lexicon_hit(&v) {
+            crate::bail!("{label} line {}: lexicon word {word:?} in exported telemetry", i + 1);
+        }
+    }
+    Ok(())
+}
+
+fn first_lexicon_hit(v: &Json) -> Option<String> {
+    match v {
+        Json::Str(text) => lexicon_segment(text),
+        Json::Arr(items) => items.iter().find_map(first_lexicon_hit),
+        Json::Obj(map) => map
+            .iter()
+            .find_map(|(key, val)| lexicon_segment(key).or_else(|| first_lexicon_hit(val))),
+        _ => None,
+    }
+}
+
+/// The first alphanumeric segment of `text` (split on `_`, whitespace,
+/// punctuation) that is a lexicon word, lowercased.
+fn lexicon_segment(text: &str) -> Option<String> {
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_ascii_alphanumeric() {
+            cur.push(c.to_ascii_lowercase());
+        } else {
+            if PRIVACY_LEXICON.contains(&cur.as_str()) {
+                return Some(cur);
+            }
+            cur.clear();
+        }
+    }
+    if PRIVACY_LEXICON.contains(&cur.as_str()) {
+        return Some(cur);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn screen_accepts_clean_and_rejects_lexicon() {
+        let clean = "{\"t\":\"event\",\"kind\":\"frame_sent\",\"bytes\":12}\n";
+        assert!(screen_trace_text("test", clean).is_ok());
+        let dirty = "{\"t\":\"event\",\"round_seed\":7}\n";
+        let err = screen_trace_text("test", dirty).unwrap_err();
+        assert!(format!("{err}").contains("lexicon"), "{err}");
+        let dirty_val = "{\"note\":\"user shares follow\"}\n";
+        assert!(screen_trace_text("test", dirty_val).is_err());
+        assert!(screen_trace_text("test", "not json\n").is_err());
+    }
+
+    #[test]
+    fn report_json_is_self_consistent() {
+        let mut az = Analyzer::new();
+        az.add_source("good.rs", "pub fn ok() -> u32 {\n    7\n}\n");
+        let findings = az.finish();
+        let report =
+            LintReport { root: "mem".to_string(), files: 1, findings, stale_waivers: Vec::new() };
+        let text = report.to_json().to_string_pretty();
+        let back = Json::parse(&text).expect("lint report must be valid JSON");
+        assert_eq!(back.get("group").and_then(Json::as_str), Some("lint"));
+        assert_eq!(back.get("active").and_then(Json::as_u64), Some(0));
+    }
+}

@@ -1,0 +1,579 @@
+//! The rule set (R1–R5). Each rule is a line-level scan over the lexer's
+//! code/string channels; see the module docs on [`super`] for what each
+//! rule enforces and why. The telemetry registries are imported from
+//! `crate::telemetry`, so R2 checks against the same arrays the runtime
+//! codec uses — the static check cannot drift from the runtime one.
+
+use std::collections::BTreeMap;
+
+use super::{lexer, Finding, RuleId, SourceFile, PRIVACY_LEXICON};
+use crate::telemetry::{EventKind, SPAN_NAMES};
+
+/// Run every rule over every file. Findings come back unsorted and
+/// un-waived; the caller applies the allowlist and sorts.
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        r1_privacy_taint(f, &mut out);
+        r2_registry_closure(f, &mut out);
+        r3_wire_tags(f, &mut out);
+        r4_no_panics(f, &mut out);
+        r5_lint_scope(f, &mut out);
+    }
+    r2_keep_in_sync(files, &mut out);
+    out
+}
+
+fn push(out: &mut Vec<Finding>, rule: RuleId, f: &SourceFile, idx: usize, detail: String) {
+    out.push(Finding {
+        rule,
+        path: f.path.clone(),
+        line: idx + 1,
+        detail,
+        snippet: f.snippet(idx + 1),
+        waiver: None,
+    });
+}
+
+/// `main.rs` / `cli.rs`: the operator-facing binary surface, exempt from
+/// R1 and R4 (it prints estimates on purpose and may exit loudly).
+fn binary_surface(path: &str) -> bool {
+    let base = path.rsplit('/').next().unwrap_or(path);
+    base == "main.rs" || base == "cli.rs"
+}
+
+// ---------------------------------------------------------------- R1 --
+
+const SAFE_PROJECTIONS: [&str; 3] = [".len()", ".is_empty()", ".capacity()"];
+
+const FMT_MACROS: [&str; 11] = [
+    "format", "println", "eprintln", "print", "eprint", "write", "writeln", "panic", "err",
+    "bail", "ensure",
+];
+
+/// Is any snake_case segment of `tok` a privacy-lexicon word? Type names
+/// (uppercase first letter, no underscore) never taint.
+fn tainted(tok: &str) -> bool {
+    let starts_lower = tok.starts_with(|c: char| c.is_ascii_lowercase());
+    if !starts_lower && !tok.contains('_') {
+        return false;
+    }
+    tok.to_ascii_lowercase().split('_').any(|seg| PRIVACY_LEXICON.contains(&seg))
+}
+
+fn has_fmt_macro(code: &str) -> bool {
+    lexer::idents(code).iter().any(|&(pos, tok)| {
+        FMT_MACROS.contains(&tok)
+            && code[pos + tok.len()..]
+                .strip_prefix('!')
+                .map(|r| r.trim_start().starts_with('('))
+                .unwrap_or(false)
+    })
+}
+
+fn telemetry_ctx(code: &str) -> bool {
+    ["EventRecord::new(", ".with_bytes(", ".with_count(", ".with_value("]
+        .iter()
+        .any(|p| code.contains(p))
+}
+
+fn json_ctx(code: &str) -> bool {
+    if ["Json::Str(", "Json::Num(", "Json::Arr("].iter().any(|p| code.contains(p)) {
+        return true;
+    }
+    lexer::idents(code).iter().any(|&(pos, tok)| {
+        (tok == "num" || tok == "obj") && code[pos + tok.len()..].starts_with('(')
+    })
+}
+
+/// Inline `{ident}` / `{ident:spec}` captures in a format string.
+fn fmt_captures(text: &str) -> Vec<String> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == b'{' && i + 1 < b.len() {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            let named = j > start && (b[start].is_ascii_alphabetic() || b[start] == b'_');
+            if named && j < b.len() && (b[j] == b'}' || b[j] == b':') {
+                out.push(text[start..j].to_string());
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn r1_privacy_taint(f: &SourceFile, out: &mut Vec<Finding>) {
+    if binary_surface(&f.path) {
+        return;
+    }
+    // Debug/Display impl regions, tracked by brace depth.
+    let mut in_fmt_impl = vec![false; f.lexed.len()];
+    let mut depth: i64 = 0;
+    let mut until: Option<i64> = None;
+    for (idx, l) in f.lexed.iter().enumerate() {
+        if until.is_some() {
+            in_fmt_impl[idx] = true;
+        }
+        let code = l.code.as_str();
+        let toks: Vec<&str> = lexer::idents(code).iter().map(|&(_, t)| t).collect();
+        let opens = code.bytes().filter(|&c| c == b'{').count() as i64;
+        let closes = code.bytes().filter(|&c| c == b'}').count() as i64;
+        if until.is_none()
+            && toks.contains(&"impl")
+            && toks.contains(&"for")
+            && (toks.contains(&"Debug") || toks.contains(&"Display"))
+        {
+            until = Some(depth);
+            in_fmt_impl[idx] = true;
+        }
+        depth += opens - closes;
+        if let Some(u) = until {
+            if depth <= u && closes > 0 {
+                until = None;
+            }
+        }
+    }
+    for (idx, l) in f.lexed.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        let code = l.code.as_str();
+        let mut ctxs: Vec<&str> = Vec::new();
+        if has_fmt_macro(code) {
+            ctxs.push(if in_fmt_impl[idx] { "a Debug/Display impl" } else { "a format macro" });
+        }
+        if telemetry_ctx(code) {
+            ctxs.push("a telemetry event constructor");
+        }
+        if json_ctx(code) {
+            ctxs.push("util::json emission");
+        }
+        if ctxs.is_empty() {
+            continue;
+        }
+        let mut hits: Vec<String> = Vec::new();
+        for (pos, tok) in lexer::idents(code) {
+            if !tainted(tok) {
+                continue;
+            }
+            let after = &code[pos + tok.len()..];
+            if SAFE_PROJECTIONS.iter().any(|p| after.starts_with(p)) {
+                continue;
+            }
+            if !hits.iter().any(|h| h == tok) {
+                hits.push(tok.to_string());
+            }
+        }
+        for text in &l.strings {
+            for cap in fmt_captures(text) {
+                if tainted(&cap) && !hits.contains(&cap) {
+                    hits.push(cap);
+                }
+            }
+        }
+        hits.sort();
+        for w in hits {
+            push(
+                out,
+                RuleId::R1,
+                f,
+                idx,
+                format!("privacy-lexicon identifier `{w}` reaches {}", ctxs.join(" and ")),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2 --
+
+fn r2_registry_closure(f: &SourceFile, out: &mut Vec<Finding>) {
+    let variants: Vec<String> = EventKind::ALL.iter().map(|k| format!("{k:?}")).collect();
+    let marker = "EventKind::";
+    for (idx, l) in f.lexed.iter().enumerate() {
+        let code = l.code.as_str();
+        let squeezed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+        if squeezed.contains(".span(SpanKind::") || squeezed.contains("span(SpanKind") {
+            for name in &l.strings {
+                if !SPAN_NAMES.contains(&name.as_str()) {
+                    push(
+                        out,
+                        RuleId::R2,
+                        f,
+                        idx,
+                        format!("span name {name:?} is not in telemetry::SPAN_NAMES"),
+                    );
+                }
+            }
+        }
+        let mut search = 0usize;
+        while let Some(p) = code[search..].find(marker) {
+            let at = search + p + marker.len();
+            let rest = &code[at..];
+            let end = rest
+                .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                .unwrap_or(rest.len());
+            let v = &rest[..end];
+            let assoc = v.starts_with(|c: char| c.is_ascii_lowercase());
+            if !v.is_empty() && v != "ALL" && !assoc && !variants.iter().any(|x| x == v) {
+                push(
+                    out,
+                    RuleId::R2,
+                    f,
+                    idx,
+                    format!("event kind variant `{v}` is not in the EventKind registry"),
+                );
+            }
+            search = at;
+        }
+    }
+}
+
+/// `(key, "begin" | "end")` when the raw line carries a sync marker.
+fn sync_marker(line: &str) -> Option<(&str, &str)> {
+    let marker = "KEEP-IN-SYNC(";
+    let p = line.find(marker)?;
+    let rest = &line[p + marker.len()..];
+    let close = rest.find(')')?;
+    let key = &rest[..close];
+    let tag = rest[close + 1..].trim();
+    (tag == "begin" || tag == "end").then_some((key, tag))
+}
+
+/// Payload normalization: leading whitespace, the comment marker and one
+/// following space, and trailing whitespace do not count as drift.
+fn normalize_sync_line(line: &str) -> String {
+    let s = line.trim_start();
+    let s = ["//!", "///", "//"].iter().find_map(|m| s.strip_prefix(m)).unwrap_or(s);
+    let s = s.strip_prefix(' ').unwrap_or(s);
+    s.trim_end().to_string()
+}
+
+fn r2_keep_in_sync(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // key -> [(file index, begin-line index, normalized payload)]
+    let mut blocks: BTreeMap<String, Vec<(usize, usize, Vec<String>)>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        let mut idx = 0usize;
+        while idx < f.raw.len() {
+            let Some((key, tag)) = sync_marker(f.raw[idx].trim()) else {
+                idx += 1;
+                continue;
+            };
+            if tag == "end" {
+                push(out, RuleId::R2, f, idx, format!("sync block `{key}`: end without begin"));
+                idx += 1;
+                continue;
+            }
+            let mut payload = Vec::new();
+            let mut j = idx + 1;
+            let mut closed = false;
+            while j < f.raw.len() {
+                if let Some((k2, t2)) = sync_marker(f.raw[j].trim()) {
+                    if k2 == key && t2 == "end" {
+                        closed = true;
+                    } else {
+                        push(
+                            out,
+                            RuleId::R2,
+                            f,
+                            j,
+                            format!("sync block `{key}`: unexpected nested marker"),
+                        );
+                    }
+                    break;
+                }
+                payload.push(normalize_sync_line(&f.raw[j]));
+                j += 1;
+            }
+            if !closed {
+                push(out, RuleId::R2, f, idx, format!("sync block `{key}`: begin without end"));
+                idx += 1;
+                continue;
+            }
+            blocks.entry(key.to_string()).or_default().push((fi, idx, payload));
+            idx = j + 1;
+        }
+    }
+    for (key, sites) in &blocks {
+        let mut it = sites.iter();
+        let Some(first) = it.next() else { continue };
+        if sites.len() < 2 {
+            let f = &files[first.0];
+            push(
+                out,
+                RuleId::R2,
+                f,
+                first.1,
+                format!("sync block `{key}` appears only once (needs a paired copy)"),
+            );
+            continue;
+        }
+        for site in it {
+            if site.2 != first.2 {
+                let f = &files[site.0];
+                push(
+                    out,
+                    RuleId::R2,
+                    f,
+                    site.1,
+                    format!(
+                        "sync block `{key}` drifted from its copy at {}:{}",
+                        files[first.0].path,
+                        first.1 + 1
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3 --
+
+fn parse_hex_u8(s: &str) -> Option<u8> {
+    let p = s.find("0x")?;
+    let hex: String = s[p + 2..].chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+    u8::from_str_radix(&hex, 16).ok()
+}
+
+fn r3_wire_tags(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.path.ends_with("transport/wire.rs") {
+        return;
+    }
+    let mut tags: Vec<(usize, String, u8)> = Vec::new();
+    for (idx, l) in f.lexed.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        let code = l.code.as_str();
+        let Some(p) = code.find("const TYPE_") else { continue };
+        let rest = &code[p + "const ".len()..];
+        let name_end = rest
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+            .unwrap_or(rest.len());
+        let name = rest[..name_end].to_string();
+        match parse_hex_u8(code) {
+            Some(v) => tags.push((idx, name, v)),
+            None => {
+                push(out, RuleId::R3, f, idx, format!("frame tag {name} has no 0x.. value"));
+            }
+        }
+    }
+    let mut table: Vec<(usize, u8)> = Vec::new();
+    for (idx, line) in f.raw.iter().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("//! |") {
+            if let Some(v) = parse_hex_u8(t) {
+                table.push((idx, v));
+            }
+        }
+    }
+    for (i, (idx, name, v)) in tags.iter().enumerate() {
+        if tags[..i].iter().any(|(_, _, prev)| prev == v) {
+            push(out, RuleId::R3, f, *idx, format!("frame tag {name} reuses value {v:#04X}"));
+        }
+        if !table.iter().any(|(_, tv)| tv == v) {
+            push(
+                out,
+                RuleId::R3,
+                f,
+                *idx,
+                format!("frame tag {name} ({v:#04X}) missing from the wire-format doc table"),
+            );
+        }
+    }
+    for (idx, v) in &table {
+        if !tags.iter().any(|(_, _, tv)| tv == v) {
+            push(
+                out,
+                RuleId::R3,
+                f,
+                *idx,
+                format!("doc-table row {v:#04X} has no matching frame tag constant"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4 --
+
+fn r4_no_panics(f: &SourceFile, out: &mut Vec<Finding>) {
+    if binary_surface(&f.path) {
+        return;
+    }
+    for (idx, l) in f.lexed.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        let code = l.code.as_str();
+        for needle in [".unwrap()", ".expect("] {
+            if code.contains(needle) {
+                push(
+                    out,
+                    RuleId::R4,
+                    f,
+                    idx,
+                    format!("`{needle}` in a library path (return util::error or add a waiver)"),
+                );
+            }
+        }
+        for (pos, tok) in lexer::idents(code) {
+            if tok != "panic" && tok != "todo" {
+                continue;
+            }
+            let bang = code[pos + tok.len()..]
+                .strip_prefix('!')
+                .map(|r| {
+                    let r = r.trim_start();
+                    r.starts_with('(') || r.starts_with('[')
+                })
+                .unwrap_or(false);
+            if bang {
+                push(
+                    out,
+                    RuleId::R4,
+                    f,
+                    idx,
+                    format!("`{tok}!` in a library path (return util::error or add a waiver)"),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5 --
+
+fn r5_lint_scope(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.path.ends_with("/mod.rs") {
+        return;
+    }
+    let want: String =
+        "#![deny(clippy::redundant_clone)]".chars().filter(|c| !c.is_whitespace()).collect();
+    let has = f.lexed.iter().any(|l| {
+        let sq: String = l.code.chars().filter(|c| !c.is_whitespace()).collect();
+        sq.contains(want.as_str())
+    });
+    if !has {
+        push(
+            out,
+            RuleId::R5,
+            f,
+            0,
+            "module root lacks #![deny(clippy::redundant_clone)]".to_string(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SourceFile;
+    use super::*;
+
+    fn findings_for(path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile::new(path, src)];
+        run_all(&files)
+    }
+
+    fn rules_of(found: &[Finding]) -> Vec<RuleId> {
+        found.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r1_flags_lexicon_in_format_macros() {
+        let found = findings_for(
+            "x/lib.rs",
+            "fn f(user_shares: &[u64]) {\n    let t = format!(\"{:?}\", user_shares);\n}\n",
+        );
+        assert!(rules_of(&found).contains(&RuleId::R1), "{found:?}");
+        // Safe projections do not taint.
+        let ok = findings_for(
+            "x/lib.rs",
+            "fn f(user_shares: &[u64]) {\n    println!(\"{}\", user_shares.len());\n}\n",
+        );
+        assert!(!rules_of(&ok).contains(&RuleId::R1), "{ok:?}");
+    }
+
+    #[test]
+    fn r1_flags_inline_captures_and_json() {
+        let found = findings_for(
+            "x/lib.rs",
+            "fn f(round_seed: u64) {\n    let t = format!(\"s={round_seed}\");\n    let _ = t;\n}\n",
+        );
+        assert!(rules_of(&found).contains(&RuleId::R1), "{found:?}");
+        let j = findings_for(
+            "x/lib.rs",
+            "fn f(pool_sum: u64) -> crate::util::json::Json {\n    crate::util::json::num(pool_sum as f64)\n}\n",
+        );
+        assert!(rules_of(&j).contains(&RuleId::R1), "{j:?}");
+    }
+
+    #[test]
+    fn r2_flags_unregistered_span_and_event() {
+        let found = findings_for(
+            "x/lib.rs",
+            "fn f(t: &crate::telemetry::Tracer) {\n    let _s = t.span(SpanKind::Phase, \"warp\", 0, 0);\n}\n",
+        );
+        assert!(rules_of(&found).contains(&RuleId::R2), "{found:?}");
+        let ek = findings_for("x/lib.rs", "fn f() {\n    let _k = EventKind::WarpDrive;\n}\n");
+        assert!(rules_of(&ek).contains(&RuleId::R2), "{ek:?}");
+        let ok = findings_for("x/lib.rs", "fn f() {\n    let _k = EventKind::Retry;\n}\n");
+        assert!(!rules_of(&ok).contains(&RuleId::R2), "{ok:?}");
+    }
+
+    #[test]
+    fn r2_sync_blocks_must_pair_and_match() {
+        let a = "// KEEP-IN-SYNC(k) begin\n// payload\n// KEEP-IN-SYNC(k) end\n";
+        let b_same = "fn g() {}\n// KEEP-IN-SYNC(k) begin\n//  payload\n// KEEP-IN-SYNC(k) end\n";
+        let b_drift = "fn g() {}\n// KEEP-IN-SYNC(k) begin\n// other\n// KEEP-IN-SYNC(k) end\n";
+        let paired = run_all(&[SourceFile::new("a.rs", a), SourceFile::new("b.rs", b_same)]);
+        assert!(!rules_of(&paired).contains(&RuleId::R2), "{paired:?}");
+        let drifted = run_all(&[SourceFile::new("a.rs", a), SourceFile::new("b.rs", b_drift)]);
+        assert!(rules_of(&drifted).contains(&RuleId::R2), "{drifted:?}");
+        let orphan = run_all(&[SourceFile::new("a.rs", a)]);
+        assert!(rules_of(&orphan).contains(&RuleId::R2), "{orphan:?}");
+    }
+
+    #[test]
+    fn r3_flags_duplicate_and_undocumented_tags() {
+        let dup = "//! | 0x01 |\nconst TYPE_A: u8 = 0x01;\nconst TYPE_B: u8 = 0x01;\n";
+        let found = findings_for("transport/wire.rs", dup);
+        let r3: Vec<&Finding> = found.iter().filter(|f| f.rule == RuleId::R3).collect();
+        assert_eq!(r3.len(), 1, "{r3:?}");
+        assert!(r3[0].detail.contains("reuses"), "{r3:?}");
+        let undoc = "//! | 0x01 |\nconst TYPE_A: u8 = 0x01;\nconst TYPE_B: u8 = 0x02;\n";
+        let found = findings_for("transport/wire.rs", undoc);
+        assert_eq!(rules_of(&found), vec![RuleId::R3], "{found:?}");
+        let orphan_row = "//! | 0x01 |\n//! | 0x07 |\nconst TYPE_A: u8 = 0x01;\n";
+        let found = findings_for("transport/wire.rs", orphan_row);
+        assert_eq!(rules_of(&found), vec![RuleId::R3], "{found:?}");
+        // Elsewhere the same source is not R3-checked.
+        let other = findings_for("x/lib.rs", dup);
+        assert!(!rules_of(&other).contains(&RuleId::R3), "{other:?}");
+    }
+
+    #[test]
+    fn r4_flags_library_panics_but_not_tests_or_main() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert!(rules_of(&findings_for("x/lib.rs", src)).contains(&RuleId::R4));
+        assert!(!rules_of(&findings_for("x/main.rs", src)).contains(&RuleId::R4));
+        let test_src = "#[cfg(test)]\nmod t {\n    fn f(o: Option<u32>) { o.unwrap(); }\n}\n";
+        assert!(!rules_of(&findings_for("x/lib.rs", test_src)).contains(&RuleId::R4));
+        let doc_src = "/// Call `.unwrap()` at your peril.\nfn f() {}\n";
+        assert!(!rules_of(&findings_for("x/lib.rs", doc_src)).contains(&RuleId::R4));
+    }
+
+    #[test]
+    fn r5_requires_the_deny_attribute_in_module_roots() {
+        let bare = "pub fn f() {}\n";
+        assert!(rules_of(&findings_for("x/mod.rs", bare)).contains(&RuleId::R5));
+        assert!(!rules_of(&findings_for("x/other.rs", bare)).contains(&RuleId::R5));
+        let ok = "#![deny(clippy::redundant_clone)]\npub fn f() {}\n";
+        assert!(!rules_of(&findings_for("x/mod.rs", ok)).contains(&RuleId::R5));
+    }
+}

@@ -7,6 +7,8 @@
 //! the odd modulus to split the infeasible arc evenly between "wrapped
 //! below 0" (→ 0) and "wrapped above n" (→ n).
 
+#![deny(clippy::redundant_clone)]
+
 use crate::arith::fixed::FixedCodec;
 use crate::arith::modring::ModRing;
 

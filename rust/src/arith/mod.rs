@@ -6,6 +6,8 @@
 //! Pallas kernel path uses a restricted int32-safe profile (N < 2^30); the
 //! planner decides which profile a given (n, ε, δ) fits.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod fixed;
 pub mod modring;
 

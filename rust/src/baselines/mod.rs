@@ -12,6 +12,8 @@
 //! All baselines implement [`AggregationProtocol`], so the Fig. 1 benches
 //! sweep one interface.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod balle;
 pub mod bonawitz;
 pub mod central_dp;
@@ -42,22 +44,32 @@ pub struct CloakProtocol {
 }
 
 impl CloakProtocol {
-    pub fn theorem1(n: usize, eps: f64, delta: f64, seed: u64) -> Self {
-        CloakProtocol {
+    pub fn theorem1(
+        n: usize,
+        eps: f64,
+        delta: f64,
+        seed: u64,
+    ) -> Result<Self, crate::params::PlanError> {
+        Ok(CloakProtocol {
             pipeline: crate::pipeline::Pipeline::new(
-                crate::params::ProtocolPlan::theorem1(n, eps, delta).unwrap(),
+                crate::params::ProtocolPlan::theorem1(n, eps, delta)?,
                 seed,
             ),
-        }
+        })
     }
 
-    pub fn theorem2(n: usize, eps: f64, delta: f64, seed: u64) -> Self {
-        CloakProtocol {
+    pub fn theorem2(
+        n: usize,
+        eps: f64,
+        delta: f64,
+        seed: u64,
+    ) -> Result<Self, crate::params::PlanError> {
+        Ok(CloakProtocol {
             pipeline: crate::pipeline::Pipeline::new(
-                crate::params::ProtocolPlan::theorem2(n, eps, delta).unwrap(),
+                crate::params::ProtocolPlan::theorem2(n, eps, delta)?,
                 seed,
             ),
-        }
+        })
     }
 }
 
@@ -89,7 +101,7 @@ mod tests {
 
     #[test]
     fn cloak_protocol_implements_interface() {
-        let mut p = CloakProtocol::theorem2(50, 1.0, 1e-4, 1);
+        let mut p = CloakProtocol::theorem2(50, 1.0, 1e-4, 1).unwrap();
         let xs = vec![0.5; 50];
         let (est, traffic) = p.aggregate(&xs);
         assert!((est - 25.0).abs() < 0.2);

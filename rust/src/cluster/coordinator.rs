@@ -550,9 +550,18 @@ impl RemoteShardBackend {
             }
             // Zero-copy encode: move the payload into the frame, encode,
             // move it back out — the work stays available for re-slicing.
+            let shard = work.shard();
             let f = work.into_frame();
             let frame = encode_frame(&f);
-            let work = ShardRoundWork::from_frame(f).expect("work frame shape");
+            let work = match ShardRoundWork::from_frame(f) {
+                Some(w) => w,
+                None => {
+                    return Err(ShardBackendError::Merge {
+                        shard,
+                        detail: "work frame did not round-trip its shape".to_string(),
+                    })
+                }
+            };
             pend.push(Pending { link, work, frame, sent: false, attempts: 1 });
         }
 

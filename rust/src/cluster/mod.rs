@@ -86,6 +86,8 @@
 //! [`SimNetConfig::silent_after`]: crate::transport::channel::SimNetConfig::silent_after
 //! [`ShardBackendError::ShardLost`]: crate::engine::ShardBackendError::ShardLost
 
+#![deny(clippy::redundant_clone)]
+
 pub mod coordinator;
 pub mod shard_server;
 pub mod tcp;

@@ -80,7 +80,7 @@ impl TcpChannel {
         if buf.len() < 4 {
             return None;
         }
-        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        let len = crate::util::bytes::le_u32(buf) as usize;
         (buf.len() >= 4 + len).then_some(4 + len)
     }
 }
@@ -118,7 +118,7 @@ impl Channel for TcpChannel {
                 // Reject a hostile/corrupt claimed length as soon as the
                 // header is in — before buffering toward it (the length
                 // prefix is outside the frame checksum).
-                let len = u32::from_le_bytes(self.rbuf[..4].try_into().unwrap()) as usize;
+                let len = crate::util::bytes::le_u32(&self.rbuf) as usize;
                 if len > MAX_FRAME_BYTES {
                     self.dead = true;
                     return None;

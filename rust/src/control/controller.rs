@@ -158,7 +158,15 @@ impl ElasticController {
                 let (slo, shi) = (mlo + a as u32, mlo + b as u32);
                 let virt = TAKEOVER_SHARD_BASE + self.virt_next;
                 self.virt_next += 1;
-                let slice = lost.slice(slo, shi, virt).expect("slice within lost range");
+                let slice = match lost.slice(slo, shi, virt) {
+                    Some(s) => s,
+                    None => {
+                        return Err(ShardBackendError::Merge {
+                            shard,
+                            detail: format!("takeover slice [{slo},{shi}) outside the lost range"),
+                        })
+                    }
+                };
                 placements.push((survivors[k], virt));
                 batch.push((survivors[k], slice));
             }

@@ -83,6 +83,8 @@
 //! DP accounting — the noise is per (client, instance, round), carried in
 //! the shares themselves.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod controller;
 pub mod directory;
 pub mod policy;

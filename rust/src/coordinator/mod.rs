@@ -22,6 +22,8 @@
 //! The same coordinator serves the FL driver (d = padded gradient dim),
 //! the sketch analytics (d = sketch width), and the benches.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod batcher;
 pub mod durable;
 pub mod registry;

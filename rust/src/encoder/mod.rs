@@ -12,6 +12,8 @@
 //!   flat-buffer hot path used by the coordinator and benches (zero
 //!   allocation per user; see EXPERIMENTS.md §Perf).
 
+#![deny(clippy::redundant_clone)]
+
 pub mod prerandomizer;
 
 use crate::arith::fixed::FixedCodec;

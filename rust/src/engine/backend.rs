@@ -424,9 +424,14 @@ impl ShardExecutor {
             });
         }
         let t0 = Instant::now();
-        // Same span skeleton as Engine's dispatch closure (work_unit +
-        // encode/shuffle/analyze phases), so recovery re-execution traces
-        // compare equal to the live round (`telemetry::span_skeleton`).
+        // Same span skeleton as Engine's dispatch closure, so recovery
+        // re-execution traces compare equal to the live round
+        // (`telemetry::span_skeleton`). Machine-checked (lint rule R2):
+        //
+        // KEEP-IN-SYNC(shard-encode-span-set) begin
+        // span skeleton per shard: work_unit "shard_compute", then
+        // phases "encode" -> "shuffle" -> "analyze" in that order.
+        // KEEP-IN-SYNC(shard-encode-span-set) end
         let _unit = self.tracer.span(SpanKind::WorkUnit, "shard_compute", w.round, w.shard);
         let mut buf = vec![0u64; span * n * m];
         let inputs = RoundInput::Range { values: &w.values, lo, clients: n };
@@ -537,9 +542,13 @@ impl ShardExecutor {
             });
         }
         let t0 = Instant::now();
-        // Matches Engine::run_streaming_core's dispatch closure: one
-        // work_unit span per shard (shuffle/analyze interleave per
-        // instance on this path, so there are no phase sub-spans).
+        // Matches Engine::run_streaming_core's dispatch closure.
+        // Machine-checked (lint rule R2):
+        //
+        // KEEP-IN-SYNC(shard-pool-span-set) begin
+        // span skeleton per shard: work_unit "shard_compute" only —
+        // no phase sub-spans (shuffle/analyze interleave per instance).
+        // KEEP-IN-SYNC(shard-pool-span-set) end
         let _unit = self.tracer.span(SpanKind::WorkUnit, "shard_compute", w.round, w.shard);
         let ana = Analyzer::new(self.plan.modulus, self.plan.scale, participants);
         // One per-instance scratch reused across the span (not a clone of

@@ -589,12 +589,18 @@ impl Engine {
         let get = &get_pool;
         let outs: Vec<Vec<f64>> = pool.dispatch(s_eff, |s| {
             // KEEP IN SYNC with backend::ShardExecutor::execute_pool — the
-            // span skeleton (work_unit "shard_compute" per shard) must
-            // match so recovery replay reproduces a live streaming trace.
+            // span skeleton must match so recovery replay reproduces a
+            // live streaming trace. Machine-checked (lint rule R2):
+            //
+            // KEEP-IN-SYNC(shard-pool-span-set) begin
+            // span skeleton per shard: work_unit "shard_compute" only —
+            // no phase sub-spans (shuffle/analyze interleave per instance).
+            // KEEP-IN-SYNC(shard-pool-span-set) end
             let _unit = tracer.span(SpanKind::WorkUnit, "shard_compute", round, s as u32);
             let (lo, hi) = ranges_ref[s];
-            let scratch: &mut [u64] =
-                slots[s].lock().unwrap().take().expect("streaming scratch taken once per shard");
+            let scratch: &mut [u64] = crate::util::sync::lock(&slots[s])
+                .take()
+                .expect("streaming scratch taken once per shard");
             (lo..hi)
                 .map(|j| {
                     scratch.copy_from_slice(get(j));
@@ -706,17 +712,24 @@ impl Engine {
         // capture the executor deliberately lacks. Any change to the
         // split/shuffle/analyze sequence here must land there too — the
         // cross-backend bit-identity tests (engine::backend and
-        // tests/cluster_integration.rs) are the tripwire. The span
-        // skeleton (work_unit + encode/shuffle/analyze phases per shard)
-        // must also match, so a journal-replayed round reproduces a live
-        // round's trace (`telemetry::span_skeleton`).
+        // tests/cluster_integration.rs) are the tripwire. The tagged
+        // block below is machine-checked (lint rule R2): its payload must
+        // be byte-identical at every site carrying the same key, so a
+        // journal-replayed round reproduces a live round's trace
+        // (`telemetry::span_skeleton`).
+        //
+        // KEEP-IN-SYNC(shard-encode-span-set) begin
+        // span skeleton per shard: work_unit "shard_compute", then
+        // phases "encode" -> "shuffle" -> "analyze" in that order.
+        // KEEP-IN-SYNC(shard-encode-span-set) end
         let outs: Vec<ShardOut> = pool.dispatch(s_eff, |s| {
             let shard_t0 = Instant::now();
             let _unit = tracer.span(SpanKind::WorkUnit, "shard_compute", round, s as u32);
             let (lo, hi) = ranges_ref[s];
             let span = hi - lo;
-            let buf: &mut [u64] =
-                slots[s].lock().unwrap().take().expect("shard region taken once per round");
+            let buf: &mut [u64] = crate::util::sync::lock(&slots[s])
+                .take()
+                .expect("shard region taken once per round");
 
             // --- encode + pre-randomize (client side) -------------------
             let encode_span = tracer.span(SpanKind::Phase, "encode", round, s as u32);

@@ -10,6 +10,8 @@
 //! [`crate::privacy::accountant::PrivacyAccountant`] tracks the composed
 //! (ε, δ) budget across rounds.
 
+#![deny(clippy::redundant_clone)]
+
 //! # Multi-host rounds
 //!
 //! The driver is written against the [`Aggregator`] facade: construct it

@@ -38,6 +38,26 @@
 //!   text in `artifacts/` and executed from [`runtime`] via PJRT. Python is
 //!   never on the request path.
 //!
+//! ## Machine-enforced invariants
+//!
+//! Several crate-wide invariants that rustc cannot check are enforced by
+//! the self-hosted static analyzer in [`analysis`], run over this source
+//! tree as `cargo run --release -- lint` (and as a CI gate):
+//!
+//! * **R1** — privacy-lexicon identifiers (per-user shares, pairwise
+//!   pool values, RNG seeds) never reach `Debug`/`Display` impls, format
+//!   macros, telemetry event constructors, or `util::json` emission.
+//! * **R2** — every span name and `EventKind` the code constructs exists
+//!   in the [`telemetry`] registries, and `KEEP-IN-SYNC` comment blocks
+//!   are byte-identical across their copies.
+//! * **R3** — [`transport`] wire frame tags are collision-free and each
+//!   appears in the wire-format doc table.
+//! * **R4** — no `.unwrap()` / `.expect(` / `panic!` / `todo!` in
+//!   library paths; deliberate exceptions carry written waivers in
+//!   [`analysis::allowlist`].
+//! * **R5** — every module root carries
+//!   `#![deny(clippy::redundant_clone)]`.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -53,6 +73,7 @@
 //! ```
 
 pub mod aggregator;
+pub mod analysis;
 pub mod analyzer;
 pub mod arith;
 pub mod baselines;

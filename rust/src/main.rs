@@ -41,8 +41,14 @@
 //!                   /health, every /trace line passes the fixed-registry
 //!                   scan); benchkit JSON with a bytes/user baseline out
 //!   trace-scan    — screen a captured /trace tail (JSONL file) through
-//!                   the fixed span/event registries; exits nonzero on
-//!                   any line the registries reject
+//!                   the fixed span/event registries AND the privacy
+//!                   lexicon; exits nonzero on any line either rejects
+//!   lint          — self-hosted static analysis over rust/src (privacy
+//!                   taint, telemetry-registry closure, wire-tag
+//!                   uniqueness, no library panics, lint scope — rules
+//!                   R1–R5, see the `analysis` module); exits nonzero on
+//!                   any non-allowlisted finding or stale waiver;
+//!                   --json writes a self-validated benchkit-style report
 //!
 //! Examples:
 //!   cloak-agg aggregate --n 1000 --eps 1.0 --delta 1e-6
@@ -57,6 +63,7 @@
 //!   cloak-agg trace-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 //!   cloak-agg ops-sim --n 96 --d 8 --loss 0.1 --shards 4 --seed 7
 //!   cloak-agg trace-scan --file /tmp/trace_tail.jsonl
+//!   cloak-agg lint --root rust/src --json /tmp/lint.json
 
 use cloak_agg::cli::Args;
 use cloak_agg::fl::{data::SyntheticTask, FlConfig, FlDriver};
@@ -68,7 +75,7 @@ use cloak_agg::runtime::Runtime;
 use cloak_agg::util::error::Result;
 use cloak_agg::{bail, ensure};
 
-const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim|trace-sim|ops-sim|trace-scan> [--flag value]...
+const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|cluster-sim|elastic-sim|lossy-cluster-sim|crash-recovery-sim|trace-sim|ops-sim|trace-scan|lint> [--flag value]...
   aggregate:     --n --eps --delta --seed --notion (1|2)
   fl:            --clients --rounds --eps --delta --artifacts --seed
   plan:          --n --eps --delta
@@ -90,7 +97,8 @@ const USAGE: &str = "usage: cloak-agg <aggregate|fl|plan|smoke|transport-sim|clu
                  --seed --out
   ops-sim:       --n --d --loss --dup --shards --quorum --deadline
                  --seed --out
-  trace-scan:    --file (JSONL /trace capture to screen)";
+  trace-scan:    --file (JSONL /trace capture to screen)
+  lint:          --root (source tree, default rust/src) --json (report out)";
 
 fn main() {
     if let Err(e) = run() {
@@ -116,11 +124,12 @@ fn run() -> Result<()> {
             "trace-sim",
             "ops-sim",
             "trace-scan",
+            "lint",
         ],
         &[
             "n", "eps", "delta", "seed", "notion", "clients", "rounds", "artifacts", "d",
             "loss", "dup", "shards", "quorum", "deadline", "out", "net", "policy", "kill",
-            "batch", "ops", "ops-linger", "file",
+            "batch", "ops", "ops-linger", "file", "root", "json",
         ],
     )?;
     match args.command.as_str() {
@@ -136,6 +145,7 @@ fn run() -> Result<()> {
         "trace-sim" => cmd_trace_sim(&args),
         "ops-sim" => cmd_ops_sim(&args),
         "trace-scan" => cmd_trace_scan(&args),
+        "lint" => cmd_lint(&args),
         _ => unreachable!(),
     }
 }
@@ -1795,6 +1805,9 @@ fn cmd_ops_sim(args: &Args) -> Result<()> {
         if let Err(e) = TraceExport::parse_jsonl(&mid_trace) {
             bail!("{kind}: mid-round /trace failed the registry scan: {e}");
         }
+        if let Err(e) = cloak_agg::analysis::screen_trace_text("mid-round /trace", &mid_trace) {
+            bail!("{kind}: {e}");
+        }
         let r2 = StreamingRound::drive(stack.as_mut(), &mut net, &stream_cfg)?;
 
         // Final scrapes: byte reconciliation, health verdict, full tail.
@@ -1853,6 +1866,9 @@ fn cmd_ops_sim(args: &Args) -> Result<()> {
         if let Err(e) = TraceExport::parse_jsonl(&trace) {
             bail!("{kind}: /trace failed the registry scan: {e}");
         }
+        if let Err(e) = cloak_agg::analysis::screen_trace_text("final /trace", &trace) {
+            bail!("{kind}: {e}");
+        }
         if kind == "elastic" {
             ensure!(
                 trace.contains("\"kind\":\"slo_breach\""),
@@ -1884,6 +1900,7 @@ fn cmd_ops_sim(args: &Args) -> Result<()> {
     println!("ops gate: /metrics byte counters reconciled exactly with TrafficStats (delta 0)");
     println!("ops gate: scripted shard death surfaced as a takeover alert on /health");
     println!("ops gate: every /trace line passed the fixed-registry scan ({scan_lines} lines)");
+    println!("ops gate: every /trace body passed the privacy-lexicon screen");
 
     // --- timed: what the ops plane costs on the round path ----------------
     let mut bench = Bench::new("ops_sim");
@@ -1950,10 +1967,12 @@ fn cmd_trace_scan(args: &Args) -> Result<()> {
     let text = std::fs::read_to_string(&file)?;
     let lines = text.lines().filter(|l| !l.trim().is_empty()).count();
     ensure!(lines > 0, "{file} holds no trace lines");
+    cloak_agg::analysis::screen_trace_text(&file, &text)?;
     match TraceExport::parse_jsonl(&text) {
         Ok(parsed) => {
             println!(
-                "trace scan OK: {file} ({lines} lines, {} spans, {} events)",
+                "trace scan OK: {file} ({lines} lines, {} spans, {} events; \
+                 registry + lexicon screens)",
                 parsed.spans.len(),
                 parsed.events.len()
             );
@@ -1961,6 +1980,52 @@ fn cmd_trace_scan(args: &Args) -> Result<()> {
         }
         Err(e) => bail!("{file} failed the registry scan: {e}"),
     }
+}
+
+/// Run the self-hosted static analyzer ([`cloak_agg::analysis`]) over a
+/// source tree and gate on non-allowlisted findings and stale waivers.
+/// `--json` writes the benchkit-style report and re-parses it through
+/// `util::json` as a self-check before trusting it.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use cloak_agg::util::json::Json;
+
+    let root = args.get_str("root", "rust/src");
+    let json_out = args.get_str("json", "");
+    let report = cloak_agg::analysis::run_lint(std::path::Path::new(&root))?;
+    print!("{}", report.render());
+    if !json_out.is_empty() {
+        let text = report.to_json().to_string_pretty();
+        let back = Json::parse(&text)
+            .map_err(|e| cloak_agg::err!("lint report failed its own JSON self-check: {e}"))?;
+        ensure!(
+            back.get("group").and_then(Json::as_str) == Some("lint"),
+            "lint report self-check: wrong group discriminator"
+        );
+        let active_n = back.get("active").and_then(Json::as_u64);
+        ensure!(
+            active_n == Some(report.active().len() as u64),
+            "lint report self-check: active count drifted through serialization"
+        );
+        std::fs::write(&json_out, &text)?;
+        println!("lint JSON OK: {json_out}");
+    }
+    let active = report.active().len();
+    ensure!(
+        active == 0,
+        "lint gate FAILED: {active} non-allowlisted finding(s) over {} files under {root}",
+        report.files
+    );
+    ensure!(
+        report.stale_waivers.is_empty(),
+        "lint gate FAILED: {} stale allowlist waiver(s) — prune analysis/allowlist.rs",
+        report.stale_waivers.len()
+    );
+    println!(
+        "lint gate: 0 non-allowlisted findings ({} waived) over {} files under {root}",
+        report.waived_count(),
+        report.files
+    );
+    Ok(())
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

@@ -2,6 +2,8 @@
 //! coordinator and benches. Lock-free on the hot path (atomics); the
 //! histogram uses fixed log-spaced buckets so recording is one atomic add.
 
+#![deny(clippy::redundant_clone)]
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -149,22 +151,19 @@ impl Registry {
     }
 
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut m = self.inner.counters.lock().unwrap();
+        let mut m = crate::util::sync::lock(&self.inner.counters);
         m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        let mut m = self.inner.histograms.lock().unwrap();
+        let mut m = crate::util::sync::lock(&self.inner.histograms);
         m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::default())).clone()
     }
 
     /// Name-sorted counter values — the iteration surface external
     /// renderers (the `/metrics` scrape endpoint) build on.
     pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
-        self.inner
-            .counters
-            .lock()
-            .unwrap()
+        crate::util::sync::lock(&self.inner.counters)
             .iter()
             .map(|(name, c)| (name.clone(), c.get()))
             .collect()
@@ -172,10 +171,7 @@ impl Registry {
 
     /// Name-sorted histogram snapshots (count, mean, typed quantiles).
     pub fn histograms_snapshot(&self) -> Vec<(String, HistogramSnapshot)> {
-        self.inner
-            .histograms
-            .lock()
-            .unwrap()
+        crate::util::sync::lock(&self.inner.histograms)
             .iter()
             .map(|(name, h)| {
                 let snap = HistogramSnapshot {
@@ -191,10 +187,10 @@ impl Registry {
     /// Render all metrics as a text block (the CLI's `metrics` output).
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+        for (name, c) in crate::util::sync::lock(&self.inner.counters).iter() {
             out.push_str(&format!("counter {name} {}\n", c.get()));
         }
-        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+        for (name, h) in crate::util::sync::lock(&self.inner.histograms).iter() {
             let [p50, _, p99] = h.quantiles();
             out.push_str(&format!(
                 "histogram {name} count={} mean={:.0}ns p50<={p50}ns p99<={p99}ns\n",
@@ -213,11 +209,11 @@ impl Registry {
         use crate::util::json::Json;
         let mut root = BTreeMap::new();
         let mut counters = BTreeMap::new();
-        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+        for (name, c) in crate::util::sync::lock(&self.inner.counters).iter() {
             counters.insert(name.clone(), Json::Num(c.get() as f64));
         }
         let mut histograms = BTreeMap::new();
-        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+        for (name, h) in crate::util::sync::lock(&self.inner.histograms).iter() {
             let [p50, p95, p99] = h.quantiles();
             let mut fields = BTreeMap::new();
             fields.insert("count".to_string(), Json::Num(h.count() as f64));

@@ -98,11 +98,11 @@ pub(crate) struct ObsShared {
 impl ObsShared {
     /// Move every line the subscriber buffered into the bounded tail.
     fn drain_tail(&self) {
-        let lines = self.sub.lock().expect("obsv subscriber poisoned").drain();
+        let lines = crate::util::sync::lock(&self.sub).drain();
         if lines.is_empty() {
             return;
         }
-        let mut tail = self.tail.lock().expect("obsv tail poisoned");
+        let mut tail = crate::util::sync::lock(&self.tail);
         for line in lines {
             if tail.len() == TAIL_CAPACITY {
                 tail.pop_front();
@@ -116,7 +116,7 @@ impl ObsShared {
     /// records the recorder emitted moments ago.
     pub(crate) fn trace_text(&self, last: Option<usize>) -> String {
         self.drain_tail();
-        let tail = self.tail.lock().expect("obsv tail poisoned");
+        let tail = crate::util::sync::lock(&self.tail);
         let skip = last.map_or(0, |n| tail.len().saturating_sub(n));
         let mut out = String::new();
         for line in tail.iter().skip(skip) {
@@ -130,14 +130,14 @@ impl ObsShared {
     /// plus the live subscriber drop counter.
     pub(crate) fn metrics_text(&self) -> String {
         let mut out = prometheus_text(&self.registry);
-        let dropped = self.sub.lock().expect("obsv subscriber poisoned").dropped_records();
+        let dropped = crate::util::sync::lock(&self.sub).dropped_records();
         out.push_str("# TYPE cloak_obsv_subscriber_dropped_records counter\n");
         let _ = writeln!(out, "cloak_obsv_subscriber_dropped_records {dropped}");
         out
     }
 
     pub(crate) fn health_text(&self) -> String {
-        self.health.lock().expect("obsv health poisoned").clone()
+        crate::util::sync::lock(&self.health).clone()
     }
 }
 
@@ -281,7 +281,7 @@ impl ObsAggregator {
         self.inner.metrics().counter("obsv.publish.count").inc();
         self.shared.drain_tail();
         let health = self.render_health(&snap);
-        *self.shared.health.lock().expect("obsv health poisoned") = health;
+        *crate::util::sync::lock(&self.shared.health) = health;
     }
 
     /// The `/health` document: stack identity, per-shard scoreboard,
@@ -448,7 +448,7 @@ impl Aggregator for ObsAggregator {
 
     fn set_telemetry(&mut self, tracer: Tracer) {
         self.inner.set_telemetry(tracer.clone());
-        *self.shared.sub.lock().expect("obsv subscriber poisoned") =
+        *crate::util::sync::lock(&self.shared.sub) =
             tracer.subscribe(TAIL_CAPACITY);
         self.tracer = tracer;
         // The new recorder's rollups restart from zero; so do the

@@ -3,6 +3,8 @@
 //! and the (ε, δ) accountant that composes the per-round guarantee across
 //! federated-learning iterations (§1.2).
 
+#![deny(clippy::redundant_clone)]
+
 pub mod accountant;
 pub mod dlaplace;
 pub mod smoothness;

@@ -2,6 +2,8 @@
 //! example and the bench harnesses print through this so EXPERIMENTS.md
 //! rows and terminal output stay consistent).
 
+#![deny(clippy::redundant_clone)]
+
 /// A simple left-aligned text table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {

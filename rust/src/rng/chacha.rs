@@ -57,11 +57,11 @@ pub fn block_ietf(key: &[u8; 32], counter: u32, nonce: &[u8; 12]) -> [u8; 64] {
     let mut st = [0u32; 16];
     st[..4].copy_from_slice(&SIGMA);
     for i in 0..8 {
-        st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        st[4 + i] = crate::util::bytes::le_u32(&key[4 * i..]);
     }
     st[12] = counter;
     for i in 0..3 {
-        st[13 + i] = u32::from_le_bytes(nonce[4 * i..4 * i + 4].try_into().unwrap());
+        st[13 + i] = crate::util::bytes::le_u32(&nonce[4 * i..]);
     }
     let out = chacha20_block(&st);
     let mut bytes = [0u8; 64];
@@ -161,7 +161,7 @@ impl ChaCha20Rng {
         let mut st = [0u32; 16];
         st[..4].copy_from_slice(&SIGMA);
         for i in 0..8 {
-            st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+            st[4 + i] = crate::util::bytes::le_u32(&key[4 * i..]);
         }
         st[12] = 0;
         st[13] = 0;
@@ -294,7 +294,7 @@ mod tests {
         let mut st = [0u32; 16];
         st[..4].copy_from_slice(&SIGMA);
         for i in 0..8 {
-            st[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+            st[4 + i] = crate::util::bytes::le_u32(&key[4 * i..]);
         }
         st[12] = 41; // counter base
         st[13] = 0;

@@ -13,6 +13,8 @@
 //!
 //! Both implement the minimal [`Rng`] trait used across the crate.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod chacha;
 pub mod splitmix;
 pub mod uniform;

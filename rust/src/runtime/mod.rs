@@ -21,6 +21,8 @@
 //! call time. The integration tests skip when `artifacts/` is absent, so
 //! `cargo test` is green in both configurations.
 
+#![deny(clippy::redundant_clone)]
+
 use std::collections::HashMap;
 use std::path::Path;
 

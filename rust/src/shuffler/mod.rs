@@ -7,6 +7,8 @@
 //! independent permutation (composition of any permutation with a uniform
 //! one is uniform, so one honest hop suffices — tested).
 
+#![deny(clippy::redundant_clone)]
+
 pub mod mixnet;
 
 use crate::rng::Rng;

@@ -65,7 +65,7 @@ impl CountSketch {
         let mut est: Vec<f64> = (0..self.depth)
             .map(|r| (self.cells[self.cell_of(r, item)] * self.sign_of(r, item)) as f64)
             .collect();
-        est.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        est.sort_by(|a, b| a.total_cmp(b));
         let mid = est.len() / 2;
         if est.len() % 2 == 1 {
             est[mid]
@@ -104,7 +104,7 @@ impl CountSketch {
         let mut est: Vec<f64> = (0..self.depth)
             .map(|r| cells[self.cell_of(r, item)] * self.sign_of(r, item) as f64)
             .collect();
-        est.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        est.sort_by(|a, b| a.total_cmp(b));
         let mid = est.len() / 2;
         if est.len() % 2 == 1 {
             est[mid]

@@ -84,7 +84,7 @@ impl HeavyHitters {
             .into_iter()
             .map(|item| (item, self.levels[last].query_cells(&level_cells[last], item)))
             .collect();
-        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out.sort_by(|a, b| b.1.total_cmp(&a.1));
         out
     }
 }

@@ -80,7 +80,7 @@ impl AmsL2Sketch {
                 s.iter().map(|&x| x * x).sum::<f64>() / s.len() as f64
             })
             .collect();
-        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        means.sort_by(|a, b| a.total_cmp(b));
         let mid = means.len() / 2;
         if means.len() % 2 == 1 {
             means[mid]

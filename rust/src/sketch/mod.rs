@@ -16,6 +16,8 @@
 //! by a per-round `cell_cap` before entering the aggregation protocol (the
 //! protocol's domain); decode rescales. See `examples/sketch_analytics.rs`.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod countmin;
 pub mod countsketch;
 pub mod distinct;

@@ -182,7 +182,7 @@ impl CampaignCheckpoint {
         const HEADER: usize = 1 + 8 + 8 + 4 + 8 + 4;
         crate::ensure!(bytes.len() >= HEADER + 4, "checkpoint too short: {} bytes", bytes.len());
         let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let want = crate::util::bytes::le_u32(crc_bytes);
         let got = fnv1a32(body);
         crate::ensure!(got == want, "checkpoint checksum mismatch: {got:#010x} != {want:#010x}");
         let mut r = Reader { b: body, at: 0 };
@@ -232,11 +232,11 @@ impl Reader<'_> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(crate::util::bytes::le_u32(self.take(4)?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(crate::util::bytes::le_u64(self.take(8)?))
     }
 }
 

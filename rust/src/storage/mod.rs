@@ -66,6 +66,8 @@
 //! not see; durability adds no new observer. Checkpoints store model
 //! weights and optimizer state, which the FL server owns in memory anyway.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod journal;
 pub mod locator;
 

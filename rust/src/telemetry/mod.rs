@@ -326,7 +326,7 @@ struct SubInner {
 
 impl SubInner {
     fn push(&self, line: &str) {
-        let mut q = self.queue.lock().expect("trace subscriber queue poisoned");
+        let mut q = crate::util::sync::lock(&self.queue);
         if q.len() == self.capacity {
             q.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -347,7 +347,7 @@ pub struct TraceSubscriber(Arc<SubInner>);
 impl TraceSubscriber {
     /// Take every queued line, oldest first.
     pub fn drain(&self) -> Vec<String> {
-        let mut q = self.0.queue.lock().expect("trace subscriber queue poisoned");
+        let mut q = crate::util::sync::lock(&self.0.queue);
         q.drain(..).collect()
     }
 
@@ -358,7 +358,7 @@ impl TraceSubscriber {
 
     /// Lines currently queued.
     pub fn len(&self) -> usize {
-        self.0.queue.lock().expect("trace subscriber queue poisoned").len()
+        crate::util::sync::lock(&self.0.queue).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -460,7 +460,7 @@ impl Tracer {
         if self.0.sub_count.load(Ordering::Relaxed) > 0 {
             self.fan_out(&event_line(&ev));
         }
-        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        let mut ring = crate::util::sync::lock(&self.0.ring);
         if ring.events.len() < self.0.capacity {
             ring.events.push(ev);
         } else {
@@ -472,7 +472,7 @@ impl Tracer {
         if self.0.sub_count.load(Ordering::Relaxed) > 0 {
             self.fan_out(&span_line(&rec));
         }
-        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        let mut ring = crate::util::sync::lock(&self.0.ring);
         if ring.spans.len() < self.0.capacity {
             ring.spans.push(rec);
         } else {
@@ -484,7 +484,7 @@ impl Tracer {
     /// when the ring is full — the live stream outlives the recorder's
     /// bound, that is its point.
     fn fan_out(&self, line: &str) {
-        let subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        let subs = crate::util::sync::lock(&self.0.subs);
         for sub in subs.iter() {
             sub.push(line);
         }
@@ -498,7 +498,7 @@ impl Tracer {
             queue: Mutex::new(VecDeque::new()),
             dropped: AtomicU64::new(0),
         });
-        let mut subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        let mut subs = crate::util::sync::lock(&self.0.subs);
         subs.push(Arc::clone(&sub));
         self.0.sub_count.store(subs.len(), Ordering::Relaxed);
         TraceSubscriber(sub)
@@ -507,7 +507,7 @@ impl Tracer {
     /// Lines dropped across all subscribers (monotone — detach never
     /// resets it within a subscriber's lifetime).
     pub fn subscriber_dropped_records(&self) -> u64 {
-        let subs = self.0.subs.lock().expect("telemetry subscribers poisoned");
+        let subs = crate::util::sync::lock(&self.0.subs);
         subs.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
     }
 
@@ -518,7 +518,7 @@ impl Tracer {
 
     /// Copy out everything recorded so far.
     pub fn snapshot(&self) -> TraceExport {
-        let ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        let ring = crate::util::sync::lock(&self.0.ring);
         TraceExport {
             spans: ring.spans.clone(),
             events: ring.events.clone(),
@@ -531,7 +531,7 @@ impl Tracer {
     /// Clear recorded spans/events (drop counters included). Open-span
     /// accounting is untouched.
     pub fn reset(&self) {
-        let mut ring = self.0.ring.lock().expect("telemetry ring poisoned");
+        let mut ring = crate::util::sync::lock(&self.0.ring);
         ring.spans.clear();
         ring.events.clear();
         ring.dropped_spans = 0;

@@ -36,6 +36,11 @@
 //! | 0x0A | `ShardRetire` | shard u32                                      |
 //! | 0x0B | `ContributeBatch` | round u64, nclients u32, per_client u32, nclients × client u32, nclients·per_client × share u64 |
 //!
+//! This table is machine-checked: the `lint` subcommand (analysis rule
+//! R3) verifies that every `const TYPE_*` tag below is collision-free
+//! and appears in exactly this table, and that every `0x..` row above
+//! names a live tag — so the doc cannot drift from the codec.
+//!
 //! `ContributeBatch` is the amortized form of `Contribute`: many clients'
 //! complete share blocks ride under **one** header and **one** checksum,
 //! so fixed framing overhead is paid once per batch instead of once per
@@ -301,11 +306,11 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(crate::util::bytes::le_u32(self.take(4)?))
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(crate::util::bytes::le_u64(self.take(8)?))
     }
 
     fn done(&self) -> Result<(), WireError> {
@@ -443,7 +448,7 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
     if bytes.len() < 4 {
         return Err(WireError::Truncated { needed: 4, got: bytes.len() });
     }
-    let len = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    let len = crate::util::bytes::le_u32(bytes);
     // version + type + checksum is the smallest possible body.
     if (len as usize) < 6 {
         return Err(WireError::BadLength(len));
@@ -453,7 +458,7 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
         return Err(WireError::Truncated { needed: total, got: bytes.len() });
     }
     let body = &bytes[4..total - 4];
-    let stored = u32::from_le_bytes(bytes[total - 4..total].try_into().unwrap());
+    let stored = crate::util::bytes::le_u32(&bytes[total - 4..total]);
     let computed = fnv1a32(body);
     if stored != computed {
         return Err(WireError::ChecksumMismatch { expected: stored, got: computed });

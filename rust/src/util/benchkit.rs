@@ -131,7 +131,7 @@ impl Bench {
             per_iter.push(dt / iters_per_sample as f64);
             total_iters += iters_per_sample;
         }
-        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_iter.sort_by(|a, b| a.total_cmp(b));
         let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
         let p50 = percentile(&per_iter, 0.50);
         let p95 = percentile(&per_iter, 0.95);

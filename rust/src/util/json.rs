@@ -336,7 +336,7 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.i += 1;
         }
-        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let txt = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad number"))?;
         txt.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }

@@ -2,11 +2,15 @@
 //! DESIGN.md §3 "Offline substitutions"): a property-test harness, a
 //! micro-benchmark kit, a minimal JSON reader/writer, and a thread pool.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod benchkit;
+pub mod bytes;
 pub mod error;
 pub mod json;
 pub mod pool;
 pub mod proptest_lite;
+pub mod sync;
 
 /// Simple online mean/variance (Welford) used by metrics and benches.
 #[derive(Clone, Debug, Default)]

@@ -133,7 +133,7 @@ impl ThreadPool {
                 let queue = Arc::clone(&queue);
                 let f = &f;
                 scope.spawn(move || loop {
-                    let item = queue.lock().unwrap().pop();
+                    let item = crate::util::sync::lock(&queue).pop();
                     match item {
                         Some((idx, slice)) => f(idx, slice),
                         None => break,
@@ -184,12 +184,12 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push; returns false if the queue was closed.
     pub fn push(&self, item: T) -> bool {
-        let mut buf = self.inner.buf.lock().unwrap();
+        let mut buf = crate::util::sync::lock(&self.inner.buf);
         while buf.len() >= self.inner.cap {
             if self.inner.closed.load(Ordering::Acquire) {
                 return false;
             }
-            buf = self.inner.not_full.wait(buf).unwrap();
+            buf = crate::util::sync::wait(&self.inner.not_full, buf);
         }
         if self.inner.closed.load(Ordering::Acquire) {
             return false;
@@ -202,7 +202,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop; returns None once closed AND drained.
     pub fn pop(&self) -> Option<T> {
-        let mut buf = self.inner.buf.lock().unwrap();
+        let mut buf = crate::util::sync::lock(&self.inner.buf);
         loop {
             if let Some(v) = buf.pop_front() {
                 drop(buf);
@@ -212,7 +212,7 @@ impl<T> BoundedQueue<T> {
             if self.inner.closed.load(Ordering::Acquire) {
                 return None;
             }
-            buf = self.inner.not_empty.wait(buf).unwrap();
+            buf = crate::util::sync::wait(&self.inner.not_empty, buf);
         }
     }
 
@@ -224,7 +224,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.buf.lock().unwrap().len()
+        crate::util::sync::lock(&self.inner.buf).len()
     }
 
     pub fn is_empty(&self) -> bool {

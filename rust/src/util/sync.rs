@@ -1,0 +1,41 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! Every mutex in this crate guards plain data — counters, rings,
+//! queues, dispatch slots — with no invariant that spans a panic
+//! point, so a poisoned lock carries no corruption worth halting for:
+//! the right response is to recover the guard and continue. Routing
+//! all library lock acquisitions through these helpers keeps the hot
+//! path free of `.lock().unwrap()` panics (lint rule R4, see
+//! [`crate::analysis`]) without hiding real errors behind a blanket
+//! waiver.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` until notified, recovering the guard on poison.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+    }
+}

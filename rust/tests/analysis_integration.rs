@@ -1,0 +1,141 @@
+//! Integration tests for the self-hosted static analyzer (`analysis`).
+//!
+//! Two halves: a fixture corpus where each seeded violation must be
+//! caught by the right rule at the right line, and the self-check the CI
+//! lint gate runs — the crate's real source tree must produce zero
+//! non-allowlisted findings and no stale waivers.
+
+use std::path::Path;
+
+use cloak_agg::analysis::{run_lint, Analyzer, Finding, RuleId};
+
+fn rules_of(found: &[Finding]) -> Vec<RuleId> {
+    found.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn r1_flags_lexicon_identifier_in_format_macro() {
+    let mut az = Analyzer::new();
+    az.add_source(
+        "demo/taint.rs",
+        "pub fn dump(user_shares: &[u64]) {\n    println!(\"{:?}\", user_shares);\n}\n",
+    );
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R1], "{found:?}");
+    assert_eq!(found[0].line, 2);
+    assert!(found[0].detail.contains("user_shares"), "{}", found[0].detail);
+    assert!(found[0].waiver.is_none());
+}
+
+#[test]
+fn r2_flags_unregistered_span_name() {
+    let mut az = Analyzer::new();
+    az.add_source(
+        "demo/spans.rs",
+        "pub fn go(tr: &Tracer) {\n    let _g = tr.span(SpanKind::Round, \"bogus_phase\");\n}\n",
+    );
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R2], "{found:?}");
+    assert_eq!(found[0].line, 2);
+    assert!(found[0].detail.contains("bogus_phase"), "{}", found[0].detail);
+}
+
+#[test]
+fn r2_flags_unregistered_event_kind() {
+    let mut az = Analyzer::new();
+    az.add_source("demo/events.rs", "pub fn k() -> EventKind {\n    EventKind::Bogus\n}\n");
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R2], "{found:?}");
+    assert!(found[0].detail.contains("Bogus"), "{}", found[0].detail);
+}
+
+#[test]
+fn r3_flags_duplicate_wire_tag() {
+    let src = concat!(
+        "//! | Tag | Frame |\n",
+        "//! |------|-------|\n",
+        "//! | 0x01 | `Hello` |\n",
+        "//! | 0x02 | `Ack` |\n",
+        "const TYPE_HELLO: u8 = 0x01;\n",
+        "const TYPE_ACK: u8 = 0x02;\n",
+        "const TYPE_DUP: u8 = 0x01;\n",
+    );
+    let mut az = Analyzer::new();
+    az.add_source("transport/wire.rs", src);
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R3], "{found:?}");
+    assert_eq!(found[0].line, 7);
+    assert!(found[0].detail.contains("TYPE_DUP"), "{}", found[0].detail);
+}
+
+#[test]
+fn r2_flags_drifted_keep_in_sync_blocks() {
+    let a = concat!(
+        "// KEEP-IN-SYNC(demo-set) begin\n",
+        "// alpha\n",
+        "// beta\n",
+        "// KEEP-IN-SYNC(demo-set) end\n",
+    );
+    let b = concat!(
+        "// KEEP-IN-SYNC(demo-set) begin\n",
+        "// alpha\n",
+        "// gamma\n",
+        "// KEEP-IN-SYNC(demo-set) end\n",
+    );
+    let mut az = Analyzer::new();
+    az.add_source("demo/a.rs", a);
+    az.add_source("demo/b.rs", b);
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R2], "{found:?}");
+    assert!(found[0].path.ends_with("b.rs"), "{found:?}");
+    assert!(found[0].detail.contains("drifted"), "{}", found[0].detail);
+}
+
+#[test]
+fn r4_flags_library_unwrap_and_r5_flags_missing_deny() {
+    let mut az = Analyzer::new();
+    az.add_source("demo/thing.rs", "pub fn f(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n");
+    az.add_source("demo/mod.rs", "pub mod thing;\n");
+    let found = az.finish();
+    assert_eq!(rules_of(&found), vec![RuleId::R5, RuleId::R4], "{found:?}");
+    assert!(found[1].detail.contains("unwrap"), "{}", found[1].detail);
+}
+
+#[test]
+fn known_good_module_passes_every_rule() {
+    let src = concat!(
+        "#![deny(clippy::redundant_clone)]\n",
+        "use crate::util::error::Result;\n",
+        "pub fn total(xs: &[u64]) -> Result<u64> {\n",
+        "    crate::ensure!(!xs.is_empty(), \"empty input\");\n",
+        "    Ok(xs.iter().sum())\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() {\n",
+        "        assert_eq!(super::total(&[1, 2]).unwrap(), 3);\n",
+        "    }\n",
+        "}\n",
+    );
+    let mut az = Analyzer::new();
+    az.add_source("demo/mod.rs", src);
+    let found = az.finish();
+    assert!(found.is_empty(), "{found:?}");
+}
+
+/// The gate CI runs: the real tree must be clean modulo the committed
+/// allowlist, and every waiver must still match a live site.
+#[test]
+fn real_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = run_lint(&root).expect("lint walk succeeds");
+    assert!(
+        report.active().is_empty(),
+        "non-allowlisted findings:\n{}",
+        report.render()
+    );
+    assert!(report.stale_waivers.is_empty(), "stale waivers: {:?}", report.stale_waivers);
+    assert!(report.waived_count() > 0, "allowlist should cover the known sites");
+    assert!(report.files >= 50, "expected the full tree, saw {} files", report.files);
+}

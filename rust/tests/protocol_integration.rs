@@ -59,8 +59,8 @@ fn all_protocols_agree_on_easy_instance() {
     let xs = vec![0.5; n];
     let truth = 1_000.0;
     let mut protocols: Vec<Box<dyn AggregationProtocol>> = vec![
-        Box::new(CloakProtocol::theorem1(n, 1.0, 1e-6, 1)),
-        Box::new(CloakProtocol::theorem2(n, 1.0, 1e-6, 2)),
+        Box::new(CloakProtocol::theorem1(n, 1.0, 1e-6, 1).unwrap()),
+        Box::new(CloakProtocol::theorem2(n, 1.0, 1e-6, 2).unwrap()),
         Box::new(CheuProtocol::new(n, 1.0, 1e-6, 3)),
         // BalleProtocol is excluded here: at n=2000, δ=1e-6 its blanket
         // probability saturates (γ=1, all-noise — the protocol is simply
@@ -96,7 +96,7 @@ fn fig1_communication_ordering_holds() {
     // Fig. 1's *scaling* ordering: growth from n=10^4 to n=10^6.
     let msgs = |n: usize| -> (f64, f64, f64, f64) {
         (
-            CloakProtocol::theorem1(n, 1.0, 1e-6, 1).messages_per_user(),
+            CloakProtocol::theorem1(n, 1.0, 1e-6, 1).unwrap().messages_per_user(),
             CheuProtocol::new(n, 1.0, 1e-6, 2).messages_per_user(),
             BalleProtocol::new(n, 1.0, 1e-6, 3).messages_per_user(),
             BonawitzProtocol::new(n, 10 * n as u64, 4).messages_per_user(),
